@@ -1,0 +1,44 @@
+//! Checkpoint-burst scenario (paper §1 motivation + Fig 14): an HPC
+//! application alternates computation phases with bursty checkpoint dumps.
+//! A classic burst buffer needs the computation phase to be long enough to
+//! hide its blocking flush; SSDUP+'s two-region pipeline keeps absorbing
+//! new bursts while the previous one drains.
+//!
+//! Run: `cargo run --release --example checkpoint_burst`
+
+use ssdup::server::{simulate, SimConfig, SystemKind};
+use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+use ssdup::workload::Workload;
+
+fn main() {
+    let burst = 1024 * 1024; // 512 MiB checkpoint in sectors
+    println!("two 512 MiB checkpoint bursts, SSD = 50% of the data\n");
+    println!(
+        "{:<8} {:>16} {:>14} {:>8}",
+        "gap s", "orangefs-bb MB/s", "ssdup+ MB/s", "gain"
+    );
+    for gap_s in [0u64, 1, 2, 4, 8] {
+        // each burst is a 16-process random-ish dump (checkpoint shards
+        // land interleaved at the server)
+        let a = ior_spanned(0, IorPattern::SegmentedRandom, 16, burst, burst * 8, DEFAULT_REQ_SECTORS, 1);
+        let b = ior_spanned(0, IorPattern::SegmentedRandom, 16, burst, burst * 8, DEFAULT_REQ_SECTORS, 2);
+        let w = Workload::sequential("checkpoint-bursts", a, gap_s * 1_000_000, b);
+        let mut results = Vec::new();
+        for system in [SystemKind::OrangeFsBB, SystemKind::SsdupPlus] {
+            let cfg = SimConfig::new(system).with_seed(1).with_ssd_mib(256);
+            let r = simulate(&cfg, &w);
+            // app-visible bandwidth, averaged over the two bursts
+            let t = (r.per_app[0].throughput_mbps() + r.per_app[1].throughput_mbps()) / 2.0;
+            results.push(t);
+        }
+        println!(
+            "{:<8} {:>16.1} {:>14.1} {:>7.1}%",
+            gap_s,
+            results[0],
+            results[1],
+            (results[1] / results[0] - 1.0) * 100.0
+        );
+    }
+    println!("\nSSDUP+'s advantage is largest at short gaps (pipeline vs blocking flush).");
+}

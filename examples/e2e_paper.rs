@@ -1,0 +1,108 @@
+//! End-to-end driver: the full three-layer stack on a realistic workload.
+//!
+//! This is the repo's proof that all layers compose:
+//!   L1/L2 — the JAX/Pallas traffic-detection kernels, AOT-lowered to HLO
+//!            text by `make artifacts`;
+//!   runtime — the Rust PJRT client compiles and executes them;
+//!   L3  — the SSDUP+ I/O-node servers run the paper's §4.2.3 mixed
+//!         workload with detection *on the compiled path* (one node uses
+//!         the HLO backend, one the native mirror — their decisions must
+//!         coincide), and we report the paper's headline metrics:
+//!         throughput vs the baselines and SSD bytes saved.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_paper`
+
+use ssdup::detector::hlo::{DetectBackend, HloDetector};
+use ssdup::detector::native::NativeDetector;
+use ssdup::runtime::Runtime;
+use ssdup::server::{simulate, simulate_with_backends, SimConfig, SystemKind};
+use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+use ssdup::workload::Workload;
+
+fn mixed_workload() -> Workload {
+    let gb = 2 * 1024 * 1024; // 1 GiB in sectors
+    Workload::concurrent(
+        "e2e: ior-contiguous x ior-random",
+        ior_spanned(0, IorPattern::SegmentedContiguous, 16, gb, gb * 8, DEFAULT_REQ_SECTORS, 7),
+        ior_spanned(0, IorPattern::SegmentedRandom, 16, gb, gb * 8, DEFAULT_REQ_SECTORS, 8),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== SSDUP+ end-to-end driver ===\n");
+
+    // --- load the AOT artifacts and compile on PJRT -----------------------
+    let rt = Runtime::load_default().map_err(|e| {
+        anyhow::anyhow!("{e}\nhint: run `make artifacts` first")
+    })?;
+    println!("[1/4] PJRT platform: {}; artifacts: {}", rt.platform(), rt.artifacts.dir.display());
+    let det_exec = rt.detector()?;
+    println!(
+        "      compiled detector.hlo.txt (batch={}, nmax={})",
+        det_exec.batch, det_exec.nmax
+    );
+
+    // --- sanity: compiled kernels agree with the native mirror ------------
+    let mut hlo = HloDetector::new(det_exec);
+    let mut native = NativeDetector::default();
+    let probe: Vec<(i32, i32)> = (0..128).map(|i| ((i * 37 % 128) * 512, 512)).collect();
+    let d_hlo = hlo.detect(&probe);
+    let d_nat = DetectBackend::detect(&mut native, &probe);
+    assert_eq!(d_hlo.s, d_nat.s, "HLO and native detectors must agree");
+    println!("[2/4] HLO vs native cross-check: S={} percentage={:.3} OK", d_hlo.s, d_hlo.percentage);
+
+    // --- run the paper's mixed workload with HLO detection on node 0 ------
+    let w = mixed_workload();
+    let cfg = SimConfig::new(SystemKind::SsdupPlus).with_seed(7).with_ssd_mib(1024);
+    let backends: Vec<Box<dyn DetectBackend>> =
+        vec![Box::new(hlo), Box::new(NativeDetector::default())];
+    let t0 = std::time::Instant::now();
+    let plus = simulate_with_backends(&cfg, &w, backends);
+    let wall = t0.elapsed();
+    println!(
+        "[3/4] SSDUP+ (node0=HLO, node1=native): {:.1} MB/s, ssd {:.1}%, {} streams detected, wall {:.2}s",
+        plus.throughput_mbps(),
+        plus.ssd_ratio * 100.0,
+        plus.nodes.iter().map(|n| n.streams).sum::<u64>(),
+        wall.as_secs_f64()
+    );
+
+    // --- headline comparison ----------------------------------------------
+    println!("[4/4] baselines (same workload, same SSD budget):");
+    println!(
+        "      {:<12} {:>10} {:>10} {:>12} {:>10}",
+        "system", "MB/s", "ssd %", "ssd bytes", "pauses s"
+    );
+    let mut bb_bytes = 0u64;
+    for system in [SystemKind::OrangeFs, SystemKind::OrangeFsBB, SystemKind::Ssdup] {
+        let r = simulate(&SimConfig::new(system).with_seed(7).with_ssd_mib(1024), &w);
+        if system == SystemKind::OrangeFsBB {
+            bb_bytes = r.ssd_bytes();
+        }
+        println!(
+            "      {:<12} {:>10.1} {:>9.1}% {:>12} {:>10.1}",
+            r.system,
+            r.throughput_mbps(),
+            r.ssd_ratio * 100.0,
+            r.ssd_bytes(),
+            r.total_flush_pause_us() as f64 / 1e6
+        );
+    }
+    println!(
+        "      {:<12} {:>10.1} {:>9.1}% {:>12} {:>10.1}",
+        plus.system,
+        plus.throughput_mbps(),
+        plus.ssd_ratio * 100.0,
+        plus.ssd_bytes(),
+        plus.total_flush_pause_us() as f64 / 1e6
+    );
+    if bb_bytes > 0 {
+        let saved = 1.0 - plus.ssd_bytes() as f64 / bb_bytes as f64;
+        println!(
+            "\nheadline: SSDUP+ saved {:.1}% of the SSD bytes OrangeFS-BB used (paper: ~50% average)",
+            saved * 100.0
+        );
+    }
+    Ok(())
+}

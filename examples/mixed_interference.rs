@@ -1,0 +1,43 @@
+//! Flush-interference scenario (paper §2.4.2 / Fig 9): two applications —
+//! one sequential, one random — share the I/O nodes while the SSD is too
+//! small to hold the random working set. Shows why *when* you flush
+//! matters: SSDUP flushes the moment a region fills and collides with the
+//! sequential app's direct HDD writes; SSDUP+'s traffic-aware strategy
+//! pauses until the direct traffic ebbs.
+//!
+//! Run: `cargo run --release --example mixed_interference`
+
+use ssdup::server::{simulate, SimConfig, SystemKind};
+use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+use ssdup::workload::Workload;
+
+fn main() {
+    let gb = 2 * 1024 * 1024; // 1 GiB in sectors
+    let w = Workload::concurrent(
+        "checkpointer x analyzer",
+        ior_spanned(0, IorPattern::SegmentedContiguous, 16, gb, gb * 8, DEFAULT_REQ_SECTORS, 3),
+        ior_spanned(0, IorPattern::SegmentedRandom, 16, gb, gb * 8, DEFAULT_REQ_SECTORS, 4),
+    );
+    println!("workload: {} ({} MiB total)\n", w.name, w.total_bytes() >> 20);
+
+    println!(
+        "{:<12} {:>14} {:>14} {:>9} {:>10} {:>9}",
+        "system", "seq app MB/s", "rand app MB/s", "flushes", "pause s", "blocked"
+    );
+    for system in [SystemKind::Ssdup, SystemKind::SsdupPlus] {
+        // SSD sized to half the data so flushing overlaps the writes
+        let cfg = SimConfig::new(system).with_seed(3).with_ssd_mib(512);
+        let r = simulate(&cfg, &w);
+        println!(
+            "{:<12} {:>14.1} {:>14.1} {:>9} {:>10.1} {:>9}",
+            r.system,
+            r.per_app[0].throughput_mbps(),
+            r.per_app[1].throughput_mbps(),
+            r.nodes.iter().map(|n| n.flushes).sum::<u64>(),
+            r.total_flush_pause_us() as f64 / 1e6,
+            r.nodes.iter().map(|n| n.blocked_requests).sum::<u64>(),
+        );
+    }
+    println!("\nSSDUP+ should hold both apps above SSDUP by deferring flushes (paper: +34.85%).");
+}

@@ -1,0 +1,45 @@
+//! Quickstart: simulate one strided IOR workload under all four systems
+//! and print the throughput / SSD-usage comparison — the paper's core
+//! claim in ~30 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ssdup::server::{simulate, SimConfig, SystemKind};
+use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+
+fn main() {
+    // 2 GiB strided IOR over 32 processes (offset span kept at 16 GiB so
+    // the pattern's randomness matches the paper's full-size run)
+    let data_sectors = 4 * 1024 * 1024;
+    let workload = ior_spanned(
+        0,
+        IorPattern::Strided,
+        32,
+        data_sectors,
+        data_sectors * 8,
+        DEFAULT_REQ_SECTORS,
+        42,
+    );
+
+    println!(
+        "workload: {} ({} MiB, {} requests)\n",
+        workload.name,
+        workload.total_bytes() >> 20,
+        workload.total_requests()
+    );
+    println!("{:<12} {:>12} {:>10} {:>10} {:>9}", "system", "MB/s", "ssd %", "random %", "flushes");
+    for system in SystemKind::ALL {
+        let cfg = SimConfig::new(system).with_seed(42);
+        let r = simulate(&cfg, &workload);
+        println!(
+            "{:<12} {:>12.1} {:>9.1}% {:>9.1}% {:>9}",
+            r.system,
+            r.throughput_mbps(),
+            r.ssd_ratio * 100.0,
+            r.mean_percentage * 100.0,
+            r.nodes.iter().map(|n| n.flushes).sum::<u64>(),
+        );
+    }
+    println!("\nSSDUP+ should match OrangeFS-BB's throughput while buffering far less data.");
+}

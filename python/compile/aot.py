@@ -1,0 +1,121 @@
+"""AOT bridge: lower the L2 model to HLO *text* artifacts for the Rust side.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with `return_tuple=True`,
+unwrapped on the Rust side with `to_tuple*`.
+
+Outputs (all under artifacts/):
+  detector.hlo.txt   (S, percentage, seek_cost) = detect(off, size, len)
+  threshold.hlo.txt  (threshold, avgper) = threshold(percent_list, count)
+  manifest.json      shapes + shared constants, validated by
+                     rust/src/runtime/artifacts.rs at load time
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import constants as C
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_detector() -> str:
+    lowered = jax.jit(model.detect).lower(*model.detect_abstract_args())
+    return to_hlo_text(lowered)
+
+
+def lower_threshold() -> str:
+    lowered = jax.jit(model.threshold).lower(*model.threshold_abstract_args())
+    return to_hlo_text(lowered)
+
+
+def manifest() -> dict:
+    return {
+        "version": 1,
+        "batch": C.BATCH,
+        "nmax": C.NMAX,
+        "offset_pad": C.OFFSET_PAD,
+        "percent_list_cap": C.PERCENT_LIST_CAP,
+        "seek_model": {
+            "knee_sectors": C.SEEK_KNEE_SECTORS,
+            "short_base_us": C.SEEK_SHORT_BASE_US,
+            "short_us_per_sector": C.SEEK_SHORT_US_PER_SECTOR,
+            "long_base_us": C.SEEK_LONG_BASE_US,
+            "long_us_per_sector": C.SEEK_LONG_US_PER_SECTOR,
+            "cap_sectors": C.SEEK_CAP_SECTORS,
+        },
+        "artifacts": {
+            "detector": {
+                "file": "detector.hlo.txt",
+                "inputs": [
+                    ["offsets", "s32", [C.BATCH, C.NMAX]],
+                    ["sizes", "s32", [C.BATCH, C.NMAX]],
+                    ["lengths", "s32", [C.BATCH]],
+                ],
+                "outputs": [
+                    ["s", "s32", [C.BATCH]],
+                    ["percentage", "f32", [C.BATCH]],
+                    ["seek_cost_us", "f32", [C.BATCH]],
+                ],
+            },
+            "threshold": {
+                "file": "threshold.hlo.txt",
+                "inputs": [
+                    ["percent_list", "f32", [C.PERCENT_LIST_CAP]],
+                    ["count", "s32", []],
+                ],
+                "outputs": [
+                    ["threshold", "f32", []],
+                    ["avgper", "f32", []],
+                ],
+            },
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias; writes detector HLO there and siblings next to it")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    det = lower_detector()
+    thr = lower_threshold()
+    det_path = os.path.join(out_dir, "detector.hlo.txt")
+    with open(det_path, "w") as f:
+        f.write(det)
+    with open(os.path.join(out_dir, "threshold.hlo.txt"), "w") as f:
+        f.write(thr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest(), f, indent=2)
+    if args.out:
+        # Makefile stamp target compatibility.
+        with open(args.out, "w") as f:
+            f.write(det)
+    print(
+        f"wrote detector ({len(det)} chars), threshold ({len(thr)} chars), "
+        f"manifest to {out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

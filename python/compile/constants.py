@@ -1,0 +1,37 @@
+"""Shared compile-time constants for the SSDUP+ analytics artifacts.
+
+These values are baked into the AOT-lowered HLO and mirrored on the Rust
+side (rust/src/runtime/artifacts.rs reads them back from the manifest that
+aot.py emits next to the artifacts). Offsets and sizes are expressed in
+512-byte sectors as int32: a 16 GiB file spans 33,554,432 sectors, well
+within i32 range, which keeps the kernels free of x64 headaches.
+"""
+
+# Batch of request streams processed per PJRT execute call (L3 pads).
+BATCH: int = 16
+
+# Maximum stream length. The paper's default stream is 128 requests (the
+# CFQ queue depth); the Fig-12 experiment also uses 32 and 512, so the
+# artifact is lowered at the maximum and shorter streams are masked via the
+# per-stream `length` input.
+NMAX: int = 512
+
+# Padding value for offsets beyond `length`: sorts to the end.
+OFFSET_PAD: int = 2**31 - 1
+
+# Seek-cost model (must match rust/src/device/hdd.rs). Piecewise-linear
+# seek time in microseconds as a function of logical gap in sectors:
+#   gap == 0          -> 0 (merged request, no head movement)
+#   0 < gap <= KNEE   -> SHORT_BASE_US + SHORT_US_PER_SECTOR * gap
+#   gap  > KNEE       -> LONG_BASE_US + LONG_US_PER_SECTOR * min(gap, CAP)
+# backwards gaps cost the same as forwards (|gap|).
+SEEK_KNEE_SECTORS: int = 2048  # 1 MiB
+SEEK_SHORT_BASE_US: float = 500.0
+SEEK_SHORT_US_PER_SECTOR: float = 0.15
+SEEK_LONG_BASE_US: float = 1500.0
+SEEK_LONG_US_PER_SECTOR: float = 0.0025
+SEEK_CAP_SECTORS: int = 600_000  # full-stroke clamp (~300 MiB logical)
+
+# PercentList capacity for the adaptive-threshold artifact (L3 masks by
+# `count`). The paper's case study uses a 10-entry history.
+PERCENT_LIST_CAP: int = 64

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: random-factor (paper Eq. 1) over sorted request streams.
+
+The kernel consumes *sorted* per-stream offsets and the co-permuted request
+sizes (sorting lives at L2 where XLA's argsort is already optimal) and
+counts disk-head movements: adjacent pair i contributes RF_i = 0 iff the
+next request starts exactly where the previous one ends.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): streams are tiled
+[BLOCK_B, N] into VMEM via BlockSpec; the body is elementwise compare +
+row reduction on the VPU — single pass, no MXU. `interpret=True` is
+mandatory on this CPU-only image (real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: BATCH=16 streams fit one block; kept as a named constant so
+# the grid generalizes if BATCH grows past VMEM (see DESIGN.md §Perf).
+BLOCK_B = 16
+
+
+def _rf_kernel(off_ref, size_ref, len_ref, s_ref):
+    """Per-block body: gaps -> compare -> masked row-sum."""
+    off = off_ref[...]  # [Bt, N] int32, sorted ascending (pads at end)
+    size = size_ref[...]  # [Bt, N] int32, co-permuted with off
+    lengths = len_ref[...]  # [Bt] int32 valid lengths
+    gaps = off[:, 1:] - off[:, :-1]  # [Bt, N-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, gaps.shape, 1)
+    valid = idx < (lengths[:, None] - 1)
+    rf = jnp.where(valid & (gaps != size[:, :-1]), jnp.int32(1), jnp.int32(0))
+    s_ref[...] = jnp.sum(rf, axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def random_factor(sorted_off, sorted_size, lengths):
+    """S[b] = sum_i RF_i for each stream b (paper Eq. 1).
+
+    sorted_off, sorted_size: int32 [B, N] (B divisible by BLOCK_B);
+    lengths: int32 [B]. Returns int32 [B].
+    """
+    b, n = sorted_off.shape
+    assert b % BLOCK_B == 0, f"batch {b} not a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _rf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(sorted_off, sorted_size, lengths)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracle for the SSDUP+ analytics kernels.
+
+This module is the CORE correctness signal: the Pallas kernels in
+`random_factor.py` / `seek_cost.py` and the full L2 model in `model.py`
+must match these reference implementations bit-for-bit (int outputs) or to
+float tolerance (seek cost), across every shape/pattern pytest sweeps.
+
+Everything operates on int32 offsets/sizes in 512-byte sectors; see
+`compile.constants` for the unit rationale.
+"""
+
+import jax.numpy as jnp
+
+from compile import constants as C
+
+
+def sort_stream(offsets, sizes, lengths):
+    """Sort each stream by offset, masking padded tail entries.
+
+    offsets, sizes: int32 [B, N]; lengths: int32 [B].
+    Returns (sorted_off, sorted_size) where entries at i >= length are
+    OFFSET_PAD / 0 and sorted to the end. This mirrors the sorting step of
+    the paper's §2.2 (Fig. 4): the detector orders the 128-request stream
+    before counting head movements.
+    """
+    n = offsets.shape[1]
+    idx = jnp.arange(n, dtype=jnp.int32)[None, :]
+    valid = idx < lengths[:, None]
+    off_masked = jnp.where(valid, offsets, jnp.int32(C.OFFSET_PAD))
+    size_masked = jnp.where(valid, sizes, jnp.int32(0))
+    order = jnp.argsort(off_masked, axis=1, stable=True)
+    sorted_off = jnp.take_along_axis(off_masked, order, axis=1)
+    sorted_size = jnp.take_along_axis(size_masked, order, axis=1)
+    return sorted_off, sorted_size
+
+
+def random_factor_ref(sorted_off, sorted_size, lengths):
+    """Reference for the random-factor kernel (paper Eq. 1).
+
+    RF_i = 0 when the i+1-th sorted request starts exactly where the i-th
+    ends (offset gap == request size), else 1; S = sum over the first
+    length-1 adjacent pairs. Returns int32 [B].
+    """
+    gaps = sorted_off[:, 1:] - sorted_off[:, :-1]
+    n1 = gaps.shape[1]
+    idx = jnp.arange(n1, dtype=jnp.int32)[None, :]
+    valid = idx < (lengths[:, None] - 1)
+    rf = jnp.where(valid & (gaps != sorted_size[:, :-1]), 1, 0)
+    return jnp.sum(rf, axis=1).astype(jnp.int32)
+
+
+def seek_cost_ref(sorted_off, sorted_size, lengths):
+    """Reference for the seek-cost kernel: estimated microseconds of HDD
+    head movement to serve the sorted stream (piecewise-linear model from
+    `compile.constants`, mirrored by rust/src/device/hdd.rs).
+
+    A pair with gap == size is a merged sequential continuation: zero seek.
+    Returns float32 [B].
+    """
+    gaps = sorted_off[:, 1:] - sorted_off[:, :-1]
+    n1 = gaps.shape[1]
+    idx = jnp.arange(n1, dtype=jnp.int32)[None, :]
+    valid = idx < (lengths[:, None] - 1)
+    seq = gaps == sorted_size[:, :-1]
+    dist = jnp.abs(gaps - sorted_size[:, :-1]).astype(jnp.float32)
+    short = C.SEEK_SHORT_BASE_US + C.SEEK_SHORT_US_PER_SECTOR * dist
+    capped = jnp.minimum(dist, jnp.float32(C.SEEK_CAP_SECTORS))
+    long = C.SEEK_LONG_BASE_US + C.SEEK_LONG_US_PER_SECTOR * capped
+    cost = jnp.where(dist <= C.SEEK_KNEE_SECTORS, short, long)
+    cost = jnp.where(valid & ~seq, cost, 0.0)
+    return jnp.sum(cost, axis=1).astype(jnp.float32)
+
+
+def detect_ref(offsets, sizes, lengths):
+    """Full reference detector: sort + RF + percentage + seek cost.
+
+    percentage = S / (length - 1)   (paper §2.3.1), 0 for length <= 1.
+    """
+    sorted_off, sorted_size = sort_stream(offsets, sizes, lengths)
+    s = random_factor_ref(sorted_off, sorted_size, lengths)
+    denom = jnp.maximum(lengths - 1, 1).astype(jnp.float32)
+    percentage = jnp.where(lengths > 1, s.astype(jnp.float32) / denom, 0.0)
+    cost = seek_cost_ref(sorted_off, sorted_size, lengths)
+    return s, percentage.astype(jnp.float32), cost
+
+
+def threshold_ref(percent_list, count):
+    """Reference adaptive threshold (paper Eq. 2/3).
+
+    percent_list: float32 [K], sorted ascending over the first `count`
+    entries (padding beyond `count` is ignored). Returns (threshold,
+    avgper) as float32 scalars:
+        avgper    = mean(percent_list[:count])
+        threshold = percent_list[floor((1 - avgper) * (count - 1))]
+    """
+    k = percent_list.shape[0]
+    idx = jnp.arange(k, dtype=jnp.int32)
+    valid = idx < count
+    cnt = jnp.maximum(count, 1).astype(jnp.float32)
+    avgper = jnp.sum(jnp.where(valid, percent_list, 0.0)) / cnt
+    sel = jnp.floor((1.0 - avgper) * (count - 1).astype(jnp.float32))
+    sel = jnp.clip(sel.astype(jnp.int32), 0, jnp.maximum(count - 1, 0))
+    threshold = percent_list[sel]
+    return threshold.astype(jnp.float32), avgper.astype(jnp.float32)

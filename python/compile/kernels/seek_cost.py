@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: HDD seek-cost estimate of a sorted request stream.
+
+Same tiling story as `random_factor.py`; the body evaluates the
+piecewise-linear seek model from `compile.constants` (mirrored by
+rust/src/device/hdd.rs) over adjacent sorted pairs and row-reduces. The
+traffic-aware flusher (rust/src/buffer/pipeline.rs) uses this estimate to
+decide whether HDD is currently too busy to absorb a flush.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import constants as C
+
+BLOCK_B = 16
+
+
+def _seek_kernel(off_ref, size_ref, len_ref, cost_ref):
+    off = off_ref[...]  # [Bt, N] int32 sorted
+    size = size_ref[...]  # [Bt, N] int32
+    lengths = len_ref[...]  # [Bt]
+    gaps = off[:, 1:] - off[:, :-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, gaps.shape, 1)
+    valid = idx < (lengths[:, None] - 1)
+    seq = gaps == size[:, :-1]
+    dist = jnp.abs(gaps - size[:, :-1]).astype(jnp.float32)
+    short = C.SEEK_SHORT_BASE_US + C.SEEK_SHORT_US_PER_SECTOR * dist
+    capped = jnp.minimum(dist, jnp.float32(C.SEEK_CAP_SECTORS))
+    long = C.SEEK_LONG_BASE_US + C.SEEK_LONG_US_PER_SECTOR * capped
+    cost = jnp.where(dist <= C.SEEK_KNEE_SECTORS, short, long)
+    cost = jnp.where(valid & ~seq, cost, 0.0)
+    cost_ref[...] = jnp.sum(cost, axis=1, dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def seek_cost(sorted_off, sorted_size, lengths):
+    """Estimated microseconds of head movement per stream. float32 [B]."""
+    b, n = sorted_off.shape
+    assert b % BLOCK_B == 0, f"batch {b} not a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        _seek_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(sorted_off, sorted_size, lengths)

@@ -1,0 +1,77 @@
+"""L2 JAX model: the SSDUP+ traffic-detection compute graph.
+
+Two exported computations, each AOT-lowered by `aot.py` to one fused HLO
+module the Rust coordinator executes via PJRT:
+
+* `detect(offsets, sizes, lengths)` — the per-stream analytics of paper
+  §2.2/§2.3.1: mask padding, argsort offsets (stable), co-permute sizes,
+  then the Pallas kernels compute the random-factor sum S (Eq. 1) and the
+  HDD seek-cost estimate; percentage = S / (length-1).
+* `threshold(percent_list, count)` — the adaptive threshold of Eq. 2/3
+  over a sorted PercentList.
+
+Shapes are static (BATCH x NMAX with per-stream `length` masking) so a
+single artifact serves every stream length the paper uses (32/128/512,
+Fig. 12). Everything here is build-time only; Rust never imports Python.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import constants as C
+from compile.kernels.random_factor import random_factor
+from compile.kernels.seek_cost import seek_cost
+
+
+def detect(offsets, sizes, lengths):
+    """Batch traffic detection. Returns (S, percentage, seek_cost_us).
+
+    offsets, sizes: int32 [BATCH, NMAX] in 512-byte sectors.
+    lengths: int32 [BATCH]; entries at i >= length are ignored.
+    """
+    n = offsets.shape[1]
+    idx = jnp.arange(n, dtype=jnp.int32)[None, :]
+    valid = idx < lengths[:, None]
+    off_masked = jnp.where(valid, offsets, jnp.int32(C.OFFSET_PAD))
+    size_masked = jnp.where(valid, sizes, jnp.int32(0))
+    order = jnp.argsort(off_masked, axis=1, stable=True)
+    sorted_off = jnp.take_along_axis(off_masked, order, axis=1)
+    sorted_size = jnp.take_along_axis(size_masked, order, axis=1)
+
+    s = random_factor(sorted_off, sorted_size, lengths)
+    denom = jnp.maximum(lengths - 1, 1).astype(jnp.float32)
+    percentage = jnp.where(lengths > 1, s.astype(jnp.float32) / denom, 0.0)
+    cost = seek_cost(sorted_off, sorted_size, lengths)
+    return s, percentage.astype(jnp.float32), cost
+
+
+def threshold(percent_list, count):
+    """Adaptive threshold selection (paper Eq. 2/3).
+
+    percent_list: float32 [PERCENT_LIST_CAP], ascending over [:count].
+    count: int32 scalar. Returns (threshold, avgper) float32 scalars.
+    """
+    k = percent_list.shape[0]
+    idx = jnp.arange(k, dtype=jnp.int32)
+    valid = idx < count
+    cnt = jnp.maximum(count, 1).astype(jnp.float32)
+    avgper = jnp.sum(jnp.where(valid, percent_list, 0.0)) / cnt
+    sel = jnp.floor((1.0 - avgper) * (count - 1).astype(jnp.float32))
+    sel = jnp.clip(sel.astype(jnp.int32), 0, jnp.maximum(count - 1, 0))
+    return percent_list[sel].astype(jnp.float32), avgper.astype(jnp.float32)
+
+
+def detect_abstract_args():
+    """ShapeDtypeStructs matching what the Rust runtime feeds `detect`."""
+    return (
+        jax.ShapeDtypeStruct((C.BATCH, C.NMAX), jnp.int32),
+        jax.ShapeDtypeStruct((C.BATCH, C.NMAX), jnp.int32),
+        jax.ShapeDtypeStruct((C.BATCH,), jnp.int32),
+    )
+
+
+def threshold_abstract_args():
+    return (
+        jax.ShapeDtypeStruct((C.PERCENT_LIST_CAP,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )

@@ -1,0 +1,86 @@
+"""Access-pattern generators for kernel tests.
+
+Miniature versions of the paper's §2.2 workload patterns, emitting
+(offsets, sizes) in 512-byte sectors for a single request stream. The Rust
+side has full generators under rust/src/workload/; these exist only to
+exercise the kernels with realistic shapes.
+"""
+
+import numpy as np
+
+REQ_SECTORS = 512  # 256 KB requests, the paper's default
+
+
+def segmented_contiguous(n, procs=1, req=REQ_SECTORS, seed=0):
+    """Each process writes its own contiguous segment; requests from the
+    processes interleave round-robin (the arrival order the server sees)."""
+    rng = np.random.default_rng(seed)
+    per = n // procs
+    offs = []
+    segment = per * req * 4  # segments spaced apart
+    cursors = [p * segment for p in range(procs)]
+    for i in range(n):
+        p = i % procs
+        offs.append(cursors[p])
+        cursors[p] += req
+    offs = np.asarray(offs, dtype=np.int64)
+    jitter = rng.integers(0, 1, size=n)  # placeholder for determinism
+    return (offs + jitter).astype(np.int32), np.full(n, req, np.int32)
+
+
+def segmented_random(n, file_sectors=2**25, req=REQ_SECTORS, seed=0):
+    rng = np.random.default_rng(seed)
+    slots = file_sectors // req
+    offs = rng.choice(slots, size=n, replace=False) * req
+    return offs.astype(np.int32), np.full(n, req, np.int32)
+
+
+def strided(n, procs=16, req=REQ_SECTORS, seed=0):
+    """Iteration i, process j accesses offset (i * procs + j) * req; arrival
+    order is per-iteration with a random permutation of processes."""
+    rng = np.random.default_rng(seed)
+    offs = []
+    i = 0
+    while len(offs) < n:
+        order = rng.permutation(procs)
+        for j in order:
+            offs.append((i * procs + int(j)) * req)
+            if len(offs) == n:
+                break
+        i += 1
+    return np.asarray(offs, dtype=np.int32), np.full(n, req, np.int32)
+
+
+def mixed(n, seed=0):
+    """Half segmented-contiguous, half segmented-random, interleaved —
+    the two-application mixed load of Fig. 3d/5d."""
+    rng = np.random.default_rng(seed)
+    a_off, a_sz = segmented_contiguous(n // 2, procs=4, seed=seed)
+    b_off, b_sz = segmented_random(n - n // 2, seed=seed + 1)
+    offs = np.empty(n, np.int32)
+    szs = np.empty(n, np.int32)
+    ia = ib = 0
+    for k in range(n):
+        take_a = (rng.random() < 0.5 and ia < len(a_off)) or ib >= len(b_off)
+        if take_a:
+            offs[k], szs[k] = a_off[ia], a_sz[ia]
+            ia += 1
+        else:
+            # shift the random app's offsets into a disjoint file region
+            offs[k], szs[k] = b_off[ib] // 2 + 2**27, b_sz[ib]
+            ib += 1
+    return offs, szs
+
+
+def pad_batch(streams, nmax, batch):
+    """Pack a list of (offsets, sizes) streams into padded [batch, nmax]
+    arrays + lengths, mirroring rust/src/detector/hlo.rs marshalling."""
+    offsets = np.zeros((batch, nmax), np.int32)
+    sizes = np.zeros((batch, nmax), np.int32)
+    lengths = np.zeros((batch,), np.int32)
+    for i, (o, s) in enumerate(streams):
+        ln = len(o)
+        offsets[i, :ln] = o
+        sizes[i, :ln] = s
+        lengths[i] = ln
+    return offsets, sizes, lengths

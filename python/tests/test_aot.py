@@ -1,0 +1,63 @@
+"""AOT path: lowering produces parseable HLO text with the right interface,
+and the manifest matches the constants the Rust runtime validates."""
+
+import json
+
+import pytest
+
+from compile import aot, constants as C
+
+
+@pytest.fixture(scope="module")
+def detector_hlo():
+    return aot.lower_detector()
+
+
+@pytest.fixture(scope="module")
+def threshold_hlo():
+    return aot.lower_threshold()
+
+
+def test_detector_hlo_is_text(detector_hlo):
+    assert detector_hlo.startswith("HloModule")
+    # tuple-return with three leaves: s32[16], f32[16], f32[16]
+    assert f"s32[{C.BATCH}]" in detector_hlo
+    assert f"f32[{C.BATCH}]" in detector_hlo
+    # input shapes present
+    assert f"s32[{C.BATCH},{C.NMAX}]" in detector_hlo
+
+
+def test_detector_hlo_contains_sort_and_reduce(detector_hlo):
+    """The fused module must contain the argsort and the row reductions —
+    i.e. L2 didn't silently constant-fold or drop the kernels."""
+    assert "sort" in detector_hlo
+    assert "reduce" in detector_hlo
+
+
+def test_threshold_hlo_is_text(threshold_hlo):
+    assert threshold_hlo.startswith("HloModule")
+    assert f"f32[{C.PERCENT_LIST_CAP}]" in threshold_hlo
+
+
+def test_no_custom_calls(detector_hlo, threshold_hlo):
+    """interpret=True Pallas must lower to plain HLO — a custom-call would
+    be a Mosaic op the Rust CPU PJRT client cannot execute."""
+    assert "custom-call" not in detector_hlo
+    assert "custom-call" not in threshold_hlo
+
+
+def test_manifest_round_trip():
+    m = aot.manifest()
+    s = json.dumps(m)
+    back = json.loads(s)
+    assert back["batch"] == C.BATCH
+    assert back["nmax"] == C.NMAX
+    assert back["artifacts"]["detector"]["file"] == "detector.hlo.txt"
+    seek = back["seek_model"]
+    assert seek["knee_sectors"] == C.SEEK_KNEE_SECTORS
+    assert seek["cap_sectors"] == C.SEEK_CAP_SECTORS
+
+
+def test_hlo_deterministic(detector_hlo):
+    """Same lowering twice -> identical text (artifact caching soundness)."""
+    assert aot.lower_detector() == detector_hlo

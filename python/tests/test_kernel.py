@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps stream shapes, lengths, and offset/size contents;
+pattern-specific cases pin the paper's qualitative claims (contiguous -> 0,
+fully random -> N-1, strided in between).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import constants as C
+from compile.kernels import ref
+from compile.kernels.random_factor import random_factor
+from compile.kernels.seek_cost import seek_cost
+
+from tests import patterns
+
+
+def _sorted_batch(offsets, sizes, lengths):
+    so, ss = ref.sort_stream(jnp.asarray(offsets), jnp.asarray(sizes), jnp.asarray(lengths))
+    return so, ss, jnp.asarray(lengths)
+
+
+def _random_case(rng, batch, nmax):
+    offsets = rng.integers(0, 2**24, size=(batch, nmax)).astype(np.int32)
+    sizes = rng.integers(1, 4096, size=(batch, nmax)).astype(np.int32)
+    lengths = rng.integers(0, nmax + 1, size=(batch,)).astype(np.int32)
+    return offsets, sizes, lengths
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nmax=st.sampled_from([8, 32, 128, 512]))
+def test_random_factor_matches_ref(seed, nmax):
+    rng = np.random.default_rng(seed)
+    offsets, sizes, lengths = _random_case(rng, C.BATCH, nmax)
+    so, ss, ln = _sorted_batch(offsets, sizes, lengths)
+    got = random_factor(so, ss, ln)
+    want = ref.random_factor_ref(so, ss, ln)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nmax=st.sampled_from([8, 32, 128, 512]))
+def test_seek_cost_matches_ref(seed, nmax):
+    rng = np.random.default_rng(seed)
+    offsets, sizes, lengths = _random_case(rng, C.BATCH, nmax)
+    so, ss, ln = _sorted_batch(offsets, sizes, lengths)
+    got = seek_cost(so, ss, ln)
+    want = ref.seek_cost_ref(so, ss, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_factor_bounds(seed):
+    """0 <= S <= length-1 always (paper: max 127 movements for 128 reqs)."""
+    rng = np.random.default_rng(seed)
+    offsets, sizes, lengths = _random_case(rng, C.BATCH, 128)
+    so, ss, ln = _sorted_batch(offsets, sizes, lengths)
+    s = np.asarray(random_factor(so, ss, ln))
+    assert (s >= 0).all()
+    assert (s <= np.maximum(lengths - 1, 0)).all()
+
+
+def test_contiguous_stream_has_zero_rf():
+    """A perfectly contiguous stream needs no head movement (S = 0), even
+    when requests arrive out of order — sorting recovers sequentiality."""
+    n = 128
+    req = 512
+    offs = np.arange(n, dtype=np.int32) * req
+    rng = np.random.default_rng(7)
+    perm = rng.permutation(n)
+    streams = [(offs[perm], np.full(n, req, np.int32))] * C.BATCH
+    o, s, ln = patterns.pad_batch(streams, C.NMAX, C.BATCH)
+    so, ss, lnj = _sorted_batch(o, s, ln)
+    np.testing.assert_array_equal(np.asarray(random_factor(so, ss, lnj)), 0)
+    np.testing.assert_allclose(np.asarray(seek_cost(so, ss, lnj)), 0.0)
+
+
+def test_fully_random_stream_has_max_rf():
+    """Sparse random offsets: every adjacent sorted pair is a seek."""
+    n = 128
+    o_np, s_np = patterns.segmented_random(n, seed=3)
+    o, s, ln = patterns.pad_batch([(o_np, s_np)] * C.BATCH, C.NMAX, C.BATCH)
+    so, ss, lnj = _sorted_batch(o, s, ln)
+    s_out = np.asarray(random_factor(so, ss, lnj))
+    # offsets are distinct multiples of req with gaps > req almost surely
+    assert (s_out == n - 1).all()
+
+
+@pytest.mark.parametrize(
+    "gen,kwargs,lo,hi",
+    [
+        (patterns.segmented_contiguous, {"procs": 16}, 0.0, 0.25),
+        (patterns.strided, {"procs": 16}, 0.0, 0.6),
+        (patterns.segmented_random, {}, 0.95, 1.0),
+    ],
+)
+def test_pattern_random_percentage_bands(gen, kwargs, lo, hi):
+    """Qualitative §2.2 claim: contiguous < strided < random randomness."""
+    n = 128
+    o_np, s_np = gen(n, seed=11, **kwargs)
+    o, s, ln = patterns.pad_batch([(o_np, s_np)] * C.BATCH, C.NMAX, C.BATCH)
+    so, ss, lnj = _sorted_batch(o, s, ln)
+    s_out = np.asarray(random_factor(so, ss, lnj))[0]
+    pct = s_out / (n - 1)
+    assert lo <= pct <= hi, f"percentage {pct} outside [{lo}, {hi}]"
+
+
+def test_empty_and_single_request_streams():
+    """length 0 and 1 must contribute S = 0 and cost 0 (no adjacent pair)."""
+    o = np.zeros((C.BATCH, 16), np.int32)
+    s = np.full((C.BATCH, 16), 8, np.int32)
+    ln = np.array([0, 1] * (C.BATCH // 2), np.int32)
+    so, ss, lnj = _sorted_batch(o, s, ln)
+    np.testing.assert_array_equal(np.asarray(random_factor(so, ss, lnj)), 0)
+    np.testing.assert_allclose(np.asarray(seek_cost(so, ss, lnj)), 0.0)
+
+
+def test_seek_cost_piecewise_knee():
+    """One short gap and one long gap hit the two seek-model branches."""
+    req = 8
+    # stream: [0, req) then a gap landing exactly on the knee, then far away
+    offs = np.array([0, req + C.SEEK_KNEE_SECTORS, 10**7], np.int32)
+    sizes = np.full(3, req, np.int32)
+    streams = [(offs, sizes)] * C.BATCH
+    o, s, ln = patterns.pad_batch(streams, 16, C.BATCH)
+    so, ss, lnj = _sorted_batch(o, s, ln)
+    got = float(np.asarray(seek_cost(so, ss, lnj))[0])
+    # first pair: |gap - size| = knee -> short branch (boundary inclusive)
+    short = C.SEEK_SHORT_BASE_US + C.SEEK_SHORT_US_PER_SECTOR * C.SEEK_KNEE_SECTORS
+    d2 = 10**7 - (req + C.SEEK_KNEE_SECTORS) - req
+    long = C.SEEK_LONG_BASE_US + C.SEEK_LONG_US_PER_SECTOR * min(d2, C.SEEK_CAP_SECTORS)
+    np.testing.assert_allclose(got, short + long, rtol=1e-6)

@@ -1,0 +1,111 @@
+"""L2 correctness: the full detect/threshold models vs the oracle, plus
+golden cases pinned to the paper's numbers."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import constants as C
+from compile import model
+from compile.kernels import ref
+
+from tests import patterns
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_detect_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    offsets = rng.integers(0, 2**24, size=(C.BATCH, C.NMAX)).astype(np.int32)
+    sizes = rng.integers(1, 4096, size=(C.BATCH, C.NMAX)).astype(np.int32)
+    lengths = rng.integers(0, C.NMAX + 1, size=(C.BATCH,)).astype(np.int32)
+    s, pct, cost = model.detect(jnp.asarray(offsets), jnp.asarray(sizes), jnp.asarray(lengths))
+    s_r, pct_r, cost_r = ref.detect_ref(jnp.asarray(offsets), jnp.asarray(sizes), jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_allclose(np.asarray(pct), np.asarray(pct_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cost), np.asarray(cost_r), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    count=st.integers(1, C.PERCENT_LIST_CAP),
+)
+def test_threshold_matches_ref(seed, count):
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.random(count)).astype(np.float32)
+    plist = np.zeros(C.PERCENT_LIST_CAP, np.float32)
+    plist[:count] = vals
+    thr, avg = model.threshold(jnp.asarray(plist), jnp.int32(count))
+    thr_r, avg_r = ref.threshold_ref(jnp.asarray(plist), jnp.int32(count))
+    np.testing.assert_allclose(float(thr), float(thr_r), rtol=1e-6)
+    np.testing.assert_allclose(float(avg), float(avg_r), rtol=1e-6)
+    # the selected threshold must be an element of the live list
+    assert float(thr) in [float(v) for v in vals]
+
+
+def test_threshold_monotone_in_randomness():
+    """Low-randomness history -> high-index (permissive) threshold;
+    high-randomness history -> low-index (aggressive) threshold (§2.3.2)."""
+    low = np.sort(np.linspace(0.05, 0.2, 10)).astype(np.float32)
+    high = np.sort(np.linspace(0.8, 0.95, 10)).astype(np.float32)
+    pl_low = np.zeros(C.PERCENT_LIST_CAP, np.float32)
+    pl_low[:10] = low
+    pl_high = np.zeros(C.PERCENT_LIST_CAP, np.float32)
+    pl_high[:10] = high
+    thr_low, _ = model.threshold(jnp.asarray(pl_low), jnp.int32(10))
+    thr_high, _ = model.threshold(jnp.asarray(pl_high), jnp.int32(10))
+    # permissive = near the top of the low list; aggressive = near bottom
+    assert float(thr_low) >= low[7]
+    assert float(thr_high) <= high[2]
+
+
+def test_paper_case_study_percentlist():
+    """§2.3.2 case study: feed the 10 recorded percentages through Eq. 2/3.
+
+    The paper reports thresholds mixing floor/round behaviour; we pin the
+    literal Eq. 2 (floor) results and check the qualitative claim — the
+    threshold tracks the percentage distribution and the high-percentage
+    streams (.6299/.6062/.622/.6771...) end up above it.
+    """
+    seq = [0.3937, 0.5433, 0.5905, 0.6299, 0.6062, 0.5826, 0.622, 0.622, 0.622, 0.6771]
+    live = []
+    thresholds = []
+    for p in seq:
+        live.append(p)
+        live.sort()
+        plist = np.zeros(C.PERCENT_LIST_CAP, np.float32)
+        plist[: len(live)] = np.asarray(live, np.float32)
+        thr, avg = model.threshold(jnp.asarray(plist), jnp.int32(len(live)))
+        thresholds.append(float(thr))
+        assert min(live) - 1e-6 <= float(thr) <= max(live) + 1e-6
+        np.testing.assert_allclose(float(avg), np.mean(live), rtol=1e-5)
+    # thresholds stay in the paper's reported band [0.39, 0.61]
+    assert all(0.39 <= t <= 0.61 for t in thresholds)
+    final = thresholds[-1]
+    above = [p for p in seq if p > final]
+    # the clearly-random streams are classified above the final threshold
+    assert set([0.6299, 0.6771]) <= set(above)
+
+
+def test_detect_on_paper_patterns_sorted_rp():
+    """§2.2/Fig 5 golden bands: RP(contig) ~= 11%, RP(random) = 100%,
+    RP(strided) ~= 45% — we assert the bands, not the exact testbed values,
+    because arrival interleavings differ."""
+    n = 128
+    cases = {
+        "contig": (patterns.segmented_contiguous(n, procs=16, seed=5), (0.0, 0.25)),
+        "random": (patterns.segmented_random(n, seed=5), (0.98, 1.0)),
+        "strided": (patterns.strided(n, procs=16, seed=5), (0.0, 0.6)),
+        "mixed": (patterns.mixed(n, seed=5), (0.4, 1.0)),
+    }
+    streams = [v[0] for v in cases.values()]
+    o, s, ln = patterns.pad_batch(streams + [streams[0]] * (C.BATCH - len(streams)), C.NMAX, C.BATCH)
+    _, pct, _ = model.detect(jnp.asarray(o), jnp.asarray(s), jnp.asarray(ln))
+    pct = np.asarray(pct)
+    for i, (name, (_, (lo, hi))) in enumerate(cases.items()):
+        assert lo <= pct[i] <= hi, f"{name}: {pct[i]} not in [{lo},{hi}]"
+    # ordering claim: random > mixed > contiguous
+    assert pct[1] > pct[3] > pct[0]

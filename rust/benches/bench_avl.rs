@@ -1,0 +1,70 @@
+//! AVL buffer-metadata benchmarks (paper §2.5 / Table 1 "AVL cost").
+//!
+//! Compares the arena AVL against the hash-map alternative the paper
+//! rejects (O(1) insert but needs an O(n log n) sort at flush time).
+
+use std::collections::HashMap;
+
+use ssdup::buffer::AvlTree;
+use ssdup::util::benchkit::{bb, section, Bench};
+use ssdup::util::prng::Prng;
+
+fn keys(n: usize, seed: u64) -> Vec<i64> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|_| rng.gen_range(1 << 40) as i64).collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    section("insert (random keys)");
+    for n in [1_000usize, 16_384, 163_840] {
+        // 163840 nodes = the paper's 40 GB / 256 KB accounting
+        let name = format!("avl/insert-{n}");
+        if Bench::should_run(&name) {
+            let ks = keys(n, 3);
+            b.run(&name, n as f64, || {
+                let mut t = AvlTree::with_capacity(n);
+                for &k in &ks {
+                    t.insert(k, (k, 512i32));
+                }
+                bb(t.len())
+            });
+        }
+    }
+
+    section("flush-order traversal: AVL in-order vs hash + sort");
+    let n = 65_536;
+    let ks = keys(n, 5);
+    if Bench::should_run("avl/in-order-traversal") {
+        let mut t = AvlTree::with_capacity(n);
+        for &k in &ks {
+            t.insert(k, (k, 512i32));
+        }
+        b.run("avl/in-order-traversal", n as f64, || bb(t.in_order().count()));
+    }
+    if Bench::should_run("hashmap/collect-and-sort") {
+        let mut m = HashMap::with_capacity(n);
+        for &k in &ks {
+            m.insert(k, (k, 512i32));
+        }
+        b.run("hashmap/collect-and-sort", n as f64, || {
+            let mut v: Vec<_> = m.keys().copied().collect();
+            v.sort_unstable();
+            bb(v.len())
+        });
+    }
+
+    section("mixed lookup");
+    if Bench::should_run("avl/get") {
+        let mut t = AvlTree::with_capacity(n);
+        for &k in &ks {
+            t.insert(k, k);
+        }
+        let mut i = 0;
+        b.run("avl/get", 1.0, || {
+            i = (i + 1) % ks.len();
+            bb(t.get(ks[i]))
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! Detector hot-path benchmarks: native mirror vs AOT/PJRT backend.
+//!
+//! The L3 §Perf target: detection must be negligible next to device time
+//! (Table 1: <1% of run time). The HLO path amortizes over batches of 16
+//! streams per execute call.
+
+use ssdup::detector::native::NativeDetector;
+use ssdup::device::SeekModel;
+use ssdup::runtime::{ArtifactSet, Runtime};
+use ssdup::util::benchkit::{bb, section, Bench};
+use ssdup::util::prng::Prng;
+
+fn streams(n: usize, len: usize, seed: u64) -> Vec<Vec<(i32, i32)>> {
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| (rng.gen_range(1 << 26) as i32, 512)).collect())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    section("native detector (sort + RF + seek cost)");
+    let mut det = NativeDetector::new(SeekModel::default());
+    for len in [32usize, 128, 512] {
+        let name = format!("native/stream-{len}");
+        if Bench::should_run(&name) {
+            let ss = streams(64, len, 7);
+            let mut i = 0;
+            b.run(&name, len as f64, || {
+                i = (i + 1) % ss.len();
+                bb(det.detect(&ss[i]))
+            });
+        }
+    }
+
+    section("PJRT (HLO) detector — compiled JAX/Pallas artifact");
+    match ArtifactSet::load_default().and_then(Runtime::load) {
+        Ok(rt) => {
+            let exec = rt.detector().expect("compile");
+            // single stream padded into a batch (worst amortization)
+            if Bench::should_run("hlo/stream-128-single") {
+                let ss = streams(1, 128, 9);
+                let refs: Vec<&[(i32, i32)]> = ss.iter().map(|v| v.as_slice()).collect();
+                b.run("hlo/stream-128-single", 128.0, || bb(exec.run_batch(&refs).unwrap()));
+            }
+            // full batch of 16 streams (the intended §Perf shape)
+            if Bench::should_run("hlo/stream-128-batch16") {
+                let ss = streams(16, 128, 11);
+                let refs: Vec<&[(i32, i32)]> = ss.iter().map(|v| v.as_slice()).collect();
+                b.run("hlo/stream-128-batch16", 16.0 * 128.0, || {
+                    bb(exec.run_batch(&refs).unwrap())
+                });
+            }
+            if Bench::should_run("hlo/threshold") {
+                let thr = rt.threshold().expect("compile");
+                let list: Vec<f32> = (0..64).map(|i| i as f32 / 64.0).collect();
+                b.run("hlo/threshold", 1.0, || bb(thr.run(&list).unwrap()));
+            }
+        }
+        Err(e) => eprintln!("skipping HLO benches: {e} (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,67 @@
+//! End-to-end simulator hot path: events/second and request throughput of
+//! the full SSDUP+ server loop — the §Perf L3 metric. The simulator *is*
+//! the production coordinator here, so its event rate bounds how fast the
+//! benchmark harness can sweep the paper's parameter space.
+
+use ssdup::server::{simulate, SimConfig, SystemKind};
+use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::util::benchkit::{bb, section, Bench};
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+use ssdup::workload::Workload;
+
+fn workload(kind: IorPattern, sectors: i64) -> Workload {
+    ior_spanned(0, kind, 16, sectors, sectors * 8, DEFAULT_REQ_SECTORS, 11)
+}
+
+fn main() {
+    let mut b = Bench::new().slow();
+
+    section("full simulation (256 MiB workload, 2 nodes)");
+    let sectors = 512 * 1024;
+    for (name, system) in [
+        ("sim/orangefs-contig", SystemKind::OrangeFs),
+        ("sim/ssdup+-contig", SystemKind::SsdupPlus),
+    ] {
+        if Bench::should_run(name) {
+            let w = workload(IorPattern::SegmentedContiguous, sectors);
+            let reqs = w.total_requests() as f64;
+            b.run(name, reqs, || {
+                bb(simulate(&SimConfig::new(system).with_seed(1), &w).events)
+            });
+        }
+    }
+    for (name, system) in [
+        ("sim/orangefs-random", SystemKind::OrangeFs),
+        ("sim/ssdup+-random", SystemKind::SsdupPlus),
+        ("sim/ssdup+-random-small-ssd", SystemKind::SsdupPlus),
+    ] {
+        if Bench::should_run(name) {
+            let w = workload(IorPattern::SegmentedRandom, sectors);
+            let reqs = w.total_requests() as f64;
+            let small = name.ends_with("small-ssd");
+            b.run(name, reqs, || {
+                let mut cfg = SimConfig::new(system).with_seed(1);
+                if small {
+                    cfg = cfg.with_ssd_mib(64);
+                }
+                bb(simulate(&cfg, &w).events)
+            });
+        }
+    }
+
+    section("events/second (simulator engine efficiency)");
+    if Bench::should_run("sim/event-rate") {
+        let w = workload(IorPattern::SegmentedRandom, sectors);
+        let r = simulate(&SimConfig::new(SystemKind::SsdupPlus).with_seed(1), &w);
+        let t0 = std::time::Instant::now();
+        let r2 = simulate(&SimConfig::new(SystemKind::SsdupPlus).with_seed(1), &w);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "sim/event-rate: {:.2} M events/s ({} events in {:.3}s; deterministic: {})",
+            r2.events as f64 / dt / 1e6,
+            r2.events,
+            dt,
+            r.events == r2.events
+        );
+    }
+}

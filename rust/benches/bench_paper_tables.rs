@@ -1,0 +1,30 @@
+//! Regenerate every paper table/figure as a benchmark run: each experiment
+//! is timed end-to-end at the default scale. This is the `cargo bench`
+//! entry point for deliverable (d) — the printed tables are the paper's
+//! rows/series (see EXPERIMENTS.md for the paper-vs-measured comparison).
+
+use ssdup::experiments::{all_ids, run, Scale};
+use ssdup::util::benchkit::section;
+
+fn main() {
+    let scale = if std::env::var("SSDUP_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+        Scale::quick()
+    } else {
+        Scale::default()
+    };
+    println!("experiment suite at scale 1/{} (16 GB file simulates as {} MiB)\n", scale.factor, (scale.gb16() * 512) >> 20);
+    let mut total = 0.0;
+    for id in all_ids() {
+        if !ssdup::util::benchkit::Bench::should_run(id) {
+            continue;
+        }
+        section(id);
+        let t0 = std::time::Instant::now();
+        let rep = run(id, scale).expect("registered experiment");
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        rep.print();
+        println!("[{id} regenerated in {dt:.2}s]");
+    }
+    println!("\nfull paper evaluation regenerated in {total:.1}s");
+}

@@ -1,0 +1,58 @@
+//! Log-structured SSD append allocator (paper §2.5).
+//!
+//! Random writes are appended at the tail of the buffered file region so
+//! the SSD only ever sees sequential writes (avoiding write amplification);
+//! the AVL tree records where each original offset landed.
+
+/// Monotone append cursor over a region's sector space.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AppendLog {
+    cursor: i64,
+}
+
+impl AppendLog {
+    pub fn new() -> Self {
+        Self { cursor: 0 }
+    }
+
+    /// Allocate `sectors` at the tail; returns the SSD-relative offset.
+    pub fn append(&mut self, sectors: i64) -> i64 {
+        debug_assert!(sectors > 0);
+        let at = self.cursor;
+        self.cursor += sectors;
+        at
+    }
+
+    /// Sectors consumed so far.
+    pub fn used(&self) -> i64 {
+        self.cursor
+    }
+
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appends_are_dense_and_monotone() {
+        let mut log = AppendLog::new();
+        let a = log.append(512);
+        let b = log.append(128);
+        let c = log.append(1);
+        assert_eq!((a, b, c), (0, 512, 640));
+        assert_eq!(log.used(), 641);
+    }
+
+    #[test]
+    fn reset_rewinds() {
+        let mut log = AppendLog::new();
+        log.append(100);
+        log.reset();
+        assert_eq!(log.used(), 0);
+        assert_eq!(log.append(5), 0);
+    }
+}

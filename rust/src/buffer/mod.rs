@@ -1,0 +1,12 @@
+//! SSD buffer management: log-structured appends, AVL metadata, and the
+//! two-region flush pipeline (paper §2.4–2.5).
+
+pub mod avl;
+pub mod log;
+pub mod pipeline;
+pub mod region;
+
+pub use avl::AvlTree;
+pub use log::AppendLog;
+pub use pipeline::{BufferOutcome, FlushStrategy, Pipeline};
+pub use region::{BufferedExtent, FlushExtent, Region};

@@ -1,0 +1,284 @@
+//! Two-region pipelined SSD buffer + flushing strategies (paper §2.4).
+//!
+//! The SSD is split into two equal regions: one receives writes while the
+//! other flushes, so data buffering and flushing overlap without having to
+//! predict computation-phase durations (Eq. 4–7 analysis). The *flush
+//! strategy* decides when a full region may start (or continue) flushing:
+//!
+//! * `Immediate` — SSDUP: flush as soon as a region fills.
+//! * `TrafficAware` — SSDUP+: pause flushing while the current traffic's
+//!   random percentage is low (most writes are then going directly to
+//!   HDD, and a concurrent flush would interfere — §2.4.2).
+//! * OrangeFS-BB is modeled in `baseline/` as a single region covering the
+//!   whole SSD with blocking flush.
+
+use crate::buffer::region::{FlushExtent, Region};
+
+/// When a full region is allowed to flush.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FlushStrategy {
+    /// start immediately when a region fills (SSDUP)
+    Immediate,
+    /// pause while current random percentage < `pause_below` and direct
+    /// HDD traffic is present (SSDUP+ traffic-aware strategy)
+    TrafficAware { pause_below: f32 },
+}
+
+impl FlushStrategy {
+    /// May a flush chunk be issued right now?
+    ///
+    /// `current_percentage` is the detector's randomness estimate of the
+    /// most recent request stream; `hdd_direct_active` reports whether any
+    /// direct-to-HDD writes are queued or in flight; `drained` reports
+    /// whether the producing applications have finished (then flushing
+    /// must proceed regardless — the paper's third flush completes after
+    /// the IOR instances finish writing).
+    pub fn allow_flush(
+        &self,
+        current_percentage: f32,
+        hdd_direct_active: bool,
+        drained: bool,
+    ) -> bool {
+        match *self {
+            FlushStrategy::Immediate => true,
+            FlushStrategy::TrafficAware { pause_below } => {
+                if drained || !hdd_direct_active {
+                    true
+                } else {
+                    current_percentage >= pause_below
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of trying to buffer one request into the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufferOutcome {
+    /// buffered into the active region at this SSD offset
+    Buffered { region: usize, ssd_offset: i64 },
+    /// buffered, and the active region is now switching: the previously
+    /// active region became full and should start flushing
+    BufferedAndFull { region: usize, ssd_offset: i64, flush_region: usize },
+    /// both regions unavailable — request must wait (the paper: "the
+    /// system waits until a region becomes empty")
+    Blocked,
+}
+
+/// Two-region pipeline state machine.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    regions: [Region; 2],
+    active: usize,
+    /// region currently being flushed (at most one at a time: both halves
+    /// share the one SSD and the one HDD)
+    flushing: Option<usize>,
+    /// regions that filled up and wait for the flusher
+    pub flush_pending: Vec<usize>,
+    // stats
+    pub flushes_started: u64,
+    pub blocked_events: u64,
+}
+
+impl Pipeline {
+    /// `total_capacity_sectors` is the whole SSD budget; each region gets
+    /// half (paper §2.4.1).
+    pub fn new(total_capacity_sectors: i64) -> Self {
+        assert!(total_capacity_sectors >= 2);
+        let half = total_capacity_sectors / 2;
+        Self {
+            regions: [Region::new(half), Region::new(half)],
+            active: 0,
+            flushing: None,
+            flush_pending: Vec::new(),
+            flushes_started: 0,
+            blocked_events: 0,
+        }
+    }
+
+    pub fn active_region(&self) -> usize {
+        self.active
+    }
+
+    pub fn flushing_region(&self) -> Option<usize> {
+        self.flushing
+    }
+
+    pub fn region(&self, i: usize) -> &Region {
+        &self.regions[i]
+    }
+
+    pub fn used_sectors(&self) -> i64 {
+        self.regions.iter().map(|r| r.used()).sum()
+    }
+
+    /// Try to buffer a request of `size` sectors for `file` at
+    /// `orig_offset`. Implements the §2.4.1 region switch.
+    pub fn buffer(&mut self, file: u32, orig_offset: i64, size: i64) -> BufferOutcome {
+        let a = self.active;
+        if let Some(ssd_offset) = self.regions[a].buffer(file, orig_offset, size) {
+            return BufferOutcome::Buffered { region: a, ssd_offset };
+        }
+        // active region full: try the other one if it is empty (flushed)
+        let b = 1 - a;
+        let other_free = self.regions[b].is_empty() && self.flushing != Some(b);
+        if other_free {
+            self.active = b;
+            if let Some(ssd_offset) = self.regions[b].buffer(file, orig_offset, size) {
+                self.flush_pending.push(a);
+                return BufferOutcome::BufferedAndFull { region: b, ssd_offset, flush_region: a };
+            }
+        }
+        self.blocked_events += 1;
+        BufferOutcome::Blocked
+    }
+
+    /// Next region waiting to flush, if the flusher is idle.
+    pub fn next_flush(&mut self) -> Option<usize> {
+        if self.flushing.is_some() {
+            return None;
+        }
+        if self.flush_pending.is_empty() {
+            return None;
+        }
+        let r = self.flush_pending.remove(0);
+        self.flushing = Some(r);
+        self.flushes_started += 1;
+        Some(r)
+    }
+
+    /// Force the active region into the flush queue (end-of-run drain).
+    pub fn enqueue_residual_flush(&mut self) -> bool {
+        let a = self.active;
+        if !self.regions[a].is_empty() && !self.flush_pending.contains(&a) && self.flushing != Some(a) {
+            self.flush_pending.push(a);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drain the flushing region's metadata into ordered flush extents.
+    pub fn drain_flushing(&mut self) -> Vec<FlushExtent> {
+        let r = self.flushing.expect("drain without active flush");
+        self.regions[r].drain_for_flush()
+    }
+
+    /// The flusher finished writing the drained extents to HDD.
+    pub fn flush_done(&mut self) {
+        assert!(self.flushing.is_some(), "flush_done without flush");
+        self.flushing = None;
+    }
+
+    /// Is any buffered data left anywhere?
+    pub fn dirty(&self) -> bool {
+        self.flushing.is_some()
+            || !self.flush_pending.is_empty()
+            || self.regions.iter().any(|r| !r.is_empty())
+    }
+
+    pub fn metadata_bytes(&self) -> usize {
+        self.regions.iter().map(|r| r.metadata_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pl(total: i64) -> Pipeline {
+        Pipeline::new(total)
+    }
+
+    #[test]
+    fn fills_active_then_switches() {
+        let mut p = pl(2000); // two regions of 1000
+        for i in 0..2 {
+            match p.buffer(1, i * 500, 500) {
+                BufferOutcome::Buffered { region: 0, .. } => {}
+                o => panic!("unexpected {o:?}"),
+            }
+        }
+        // region 0 now full; next buffer lands in region 1 and queues 0
+        match p.buffer(1, 5000, 500) {
+            BufferOutcome::BufferedAndFull { region: 1, flush_region: 0, .. } => {}
+            o => panic!("unexpected {o:?}"),
+        }
+        assert_eq!(p.active_region(), 1);
+        assert_eq!(p.next_flush(), Some(0));
+        assert_eq!(p.next_flush(), None, "only one flush at a time");
+    }
+
+    #[test]
+    fn blocks_when_both_regions_unavailable() {
+        let mut p = pl(2000);
+        p.buffer(1, 0, 1000); // fill region 0
+        p.buffer(1, 2000, 1000); // switch, fill region 1
+        let started = p.next_flush();
+        assert_eq!(started, Some(0));
+        // region 0 is flushing (not yet drained/done), region 1 full
+        assert_eq!(p.buffer(1, 9000, 10), BufferOutcome::Blocked);
+        assert_eq!(p.blocked_events, 1);
+        // complete the flush; region 0 empty again
+        let extents = p.drain_flushing();
+        assert!(!extents.is_empty());
+        p.flush_done();
+        match p.buffer(1, 9000, 10) {
+            BufferOutcome::BufferedAndFull { region: 0, flush_region: 1, .. } => {}
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    #[test]
+    fn pipeline_conservation_of_bytes() {
+        let mut p = pl(4000);
+        let mut buffered = 0i64;
+        let mut flushed = 0i64;
+        let mut off = 0i64;
+        for _ in 0..40 {
+            match p.buffer(2, off, 100) {
+                BufferOutcome::Buffered { .. } => buffered += 100,
+                BufferOutcome::BufferedAndFull { .. } => buffered += 100,
+                BufferOutcome::Blocked => {
+                    if p.next_flush().is_some() {
+                        flushed += p.drain_flushing().iter().map(|e| e.size).sum::<i64>();
+                        p.flush_done();
+                    }
+                    continue;
+                }
+            }
+            off += 100;
+        }
+        p.enqueue_residual_flush();
+        while p.next_flush().is_some() {
+            flushed += p.drain_flushing().iter().map(|e| e.size).sum::<i64>();
+            p.flush_done();
+        }
+        // note: active region may still hold data if it wasn't enqueued
+        assert_eq!(buffered, flushed + p.used_sectors());
+    }
+
+    #[test]
+    fn traffic_aware_strategy_pauses_and_resumes() {
+        let s = FlushStrategy::TrafficAware { pause_below: 0.5 };
+        assert!(!s.allow_flush(0.2, true, false), "low randomness + direct traffic -> pause");
+        assert!(s.allow_flush(0.8, true, false), "high randomness -> flush");
+        assert!(s.allow_flush(0.2, false, false), "no direct traffic -> flush");
+        assert!(s.allow_flush(0.0, true, true), "drained -> always flush");
+        let imm = FlushStrategy::Immediate;
+        assert!(imm.allow_flush(0.0, true, false), "SSDUP never pauses");
+    }
+
+    #[test]
+    fn residual_flush_only_once() {
+        let mut p = pl(2000);
+        p.buffer(1, 0, 10);
+        assert!(p.enqueue_residual_flush());
+        assert!(!p.enqueue_residual_flush(), "no duplicate enqueue");
+        assert!(p.dirty());
+        p.next_flush().unwrap();
+        p.drain_flushing();
+        p.flush_done();
+        assert!(!p.dirty());
+    }
+}

@@ -1,0 +1,69 @@
+//! HLO-backed detector: routes stream detection through the AOT-compiled
+//! JAX/Pallas module via PJRT. This is the production request path of the
+//! three-layer architecture; the native backend mirrors it for the
+//! simulator hot loop and for environments without artifacts.
+
+use anyhow::Result;
+
+use crate::runtime::xla_exec::DetectorExec;
+use crate::types::Detection;
+
+/// Detection backend abstraction so the server can swap native/HLO.
+pub trait DetectBackend {
+    fn detect(&mut self, reqs: &[(i32, i32)]) -> Detection;
+    fn name(&self) -> &'static str;
+}
+
+impl DetectBackend for crate::detector::native::NativeDetector {
+    fn detect(&mut self, reqs: &[(i32, i32)]) -> Detection {
+        crate::detector::native::NativeDetector::detect(self, reqs)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT-backed detector. Single streams are padded into the compiled
+/// batch; use [`HloDetector::detect_many`] to amortize the execute call
+/// over up to `batch` streams (the §Perf-preferred shape).
+pub struct HloDetector {
+    exec: DetectorExec,
+    pub executions: u64,
+    pub streams_detected: u64,
+}
+
+impl HloDetector {
+    pub fn new(exec: DetectorExec) -> Self {
+        Self { exec, executions: 0, streams_detected: 0 }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.exec.batch
+    }
+
+    pub fn detect_many(&mut self, streams: &[Vec<(i32, i32)>]) -> Result<Vec<Detection>> {
+        self.executions += streams.len().div_ceil(self.exec.batch) as u64;
+        self.streams_detected += streams.len() as u64;
+        self.exec.run_all(streams)
+    }
+}
+
+impl DetectBackend for HloDetector {
+    fn detect(&mut self, reqs: &[(i32, i32)]) -> Detection {
+        if reqs.len() <= 1 {
+            return Detection { s: 0, percentage: 0.0, seek_cost_us: 0.0 };
+        }
+        self.executions += 1;
+        self.streams_detected += 1;
+        self.exec
+            .run_batch(&[reqs])
+            .expect("PJRT detector execution failed")
+            .pop()
+            .expect("one detection per stream")
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+}

@@ -1,0 +1,18 @@
+//! Random-access detection (paper §2.2).
+//!
+//! Requests are grouped into fixed-length streams; each completed stream
+//! is sorted by offset and scored with the *random factor* metric. Two
+//! interchangeable backends compute the score:
+//!
+//! * [`native`] — pure-Rust mirror of the math (used by the simulator hot
+//!   loop and as a fallback when artifacts are absent);
+//! * [`hlo`] — the AOT-compiled JAX/Pallas module executed via PJRT
+//!   (the three-layer architecture's L1/L2). Integration tests assert the
+//!   two agree bit-for-bit on S and to float tolerance on the rest.
+
+pub mod hlo;
+pub mod native;
+pub mod stream;
+
+pub use native::detect_stream;
+pub use stream::{StreamGrouper, StreamRecord};

@@ -1,0 +1,130 @@
+//! Request-stream grouping (paper §2.1/§2.3.1).
+//!
+//! The server groups arriving write requests into blocks of `stream_len`
+//! (default 128, matching the CFQ queue depth; reconfigure when the queue
+//! size changes — Fig 12). Grouping is server-wide across applications:
+//! the whole point of server-side detection is seeing the mixed load.
+
+use crate::types::Request;
+
+/// A completed request stream ready for detection.
+#[derive(Clone, Debug)]
+pub struct StreamRecord {
+    /// (offset, size) pairs in sectors, arrival order
+    pub reqs: Vec<(i32, i32)>,
+    /// distinct applications that contributed
+    pub apps: u32,
+}
+
+/// Groups requests into fixed-length streams.
+#[derive(Clone, Debug)]
+pub struct StreamGrouper {
+    stream_len: usize,
+    buf: Vec<(i32, i32)>,
+    app_mask: u64,
+    pub streams_emitted: u64,
+}
+
+impl StreamGrouper {
+    pub fn new(stream_len: usize) -> Self {
+        assert!(stream_len >= 2, "stream length must be >= 2");
+        Self { stream_len, buf: Vec::with_capacity(stream_len), app_mask: 0, streams_emitted: 0 }
+    }
+
+    pub fn stream_len(&self) -> usize {
+        self.stream_len
+    }
+
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Add a request; returns the completed stream when the block fills.
+    pub fn push(&mut self, req: &Request) -> Option<StreamRecord> {
+        self.push_parts(req.app, req.offset, req.size)
+    }
+
+    /// Add a request by raw (app, offset, size) — the server feeds the
+    /// post-striping *disk* address here, not the logical file offset.
+    pub fn push_parts(&mut self, app: u16, offset: i32, size: i32) -> Option<StreamRecord> {
+        self.buf.push((offset, size));
+        self.app_mask |= 1u64 << (app as u64 % 64);
+        if self.buf.len() == self.stream_len {
+            Some(self.take())
+        } else {
+            None
+        }
+    }
+
+    /// Flush an incomplete tail block (end of run).
+    pub fn flush_partial(&mut self) -> Option<StreamRecord> {
+        if self.buf.len() < 2 {
+            self.buf.clear();
+            self.app_mask = 0;
+            return None;
+        }
+        Some(self.take())
+    }
+
+    fn take(&mut self) -> StreamRecord {
+        self.streams_emitted += 1;
+        let apps = self.app_mask.count_ones();
+        self.app_mask = 0;
+        StreamRecord { reqs: std::mem::replace(&mut self.buf, Vec::with_capacity(self.stream_len)), apps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(app: u16, offset: i32) -> Request {
+        Request { app, proc_id: 0, file: 1, offset, size: 512 }
+    }
+
+    #[test]
+    fn emits_exactly_at_stream_len() {
+        let mut g = StreamGrouper::new(4);
+        assert!(g.push(&req(0, 0)).is_none());
+        assert!(g.push(&req(0, 512)).is_none());
+        assert!(g.push(&req(0, 1024)).is_none());
+        let s = g.push(&req(0, 1536)).expect("stream complete");
+        assert_eq!(s.reqs.len(), 4);
+        assert_eq!(g.pending(), 0);
+        assert_eq!(g.streams_emitted, 1);
+    }
+
+    #[test]
+    fn counts_contributing_apps() {
+        let mut g = StreamGrouper::new(3);
+        g.push(&req(1, 0));
+        g.push(&req(2, 512));
+        let s = g.push(&req(1, 1024)).unwrap();
+        assert_eq!(s.apps, 2);
+        // mask resets for next stream
+        g.push(&req(3, 0));
+        g.push(&req(3, 1));
+        let s2 = g.push(&req(3, 2)).unwrap();
+        assert_eq!(s2.apps, 1);
+    }
+
+    #[test]
+    fn partial_flush_needs_two_requests() {
+        let mut g = StreamGrouper::new(128);
+        g.push(&req(0, 0));
+        assert!(g.flush_partial().is_none(), "singleton dropped");
+        g.push(&req(0, 0));
+        g.push(&req(0, 512));
+        let s = g.flush_partial().unwrap();
+        assert_eq!(s.reqs.len(), 2);
+    }
+
+    #[test]
+    fn preserves_arrival_order() {
+        let mut g = StreamGrouper::new(3);
+        g.push(&req(0, 30));
+        g.push(&req(0, 10));
+        let s = g.push(&req(0, 20)).unwrap();
+        assert_eq!(s.reqs.iter().map(|r| r.0).collect::<Vec<_>>(), vec![30, 10, 20]);
+    }
+}

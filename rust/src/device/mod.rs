@@ -1,0 +1,15 @@
+//! Simulated storage devices (DESIGN.md §Substitutions).
+//!
+//! The paper's evaluation runs on a real SATA HDD + Intel DC S3520 SSD;
+//! these models reproduce the *cost structure* every SSDUP+ mechanism
+//! exploits: seeks proportional to sorted-offset gaps (HDD), an elevator
+//! queue that merges adjacent requests (CFQ), near-zero seek plus
+//! append-friendly writes (SSD).
+
+pub mod hdd;
+pub mod seek;
+pub mod ssd;
+
+pub use hdd::{Hdd, HddConfig};
+pub use seek::SeekModel;
+pub use ssd::{Ssd, SsdConfig};

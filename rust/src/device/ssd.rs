@@ -1,0 +1,214 @@
+//! SSD model: near-zero seek, append-friendly writes, write-amplification
+//! penalty for random (non-append) writes when the device fills up —
+//! the §2.5 motivation for SSDUP+'s log-structured buffering.
+
+use crate::types::{sectors_to_bytes, Usec};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SsdConfig {
+    /// sequential/append write bandwidth, MB/s (Intel DC S3520-class)
+    pub write_mbps: f64,
+    /// read bandwidth (flush path reads the buffered data back), MB/s
+    pub read_mbps: f64,
+    /// per-request overhead, us (NOOP scheduler: no reordering, tiny cost)
+    pub per_io_us: f64,
+    /// multiplier >= 1 applied to *non-append* writes: write amplification
+    /// when the FTL must garbage-collect (paper §2.5, RIPQ [27])
+    pub random_write_amp: f64,
+}
+
+impl Default for SsdConfig {
+    fn default() -> Self {
+        Self { write_mbps: 380.0, read_mbps: 450.0, per_io_us: 8.0, random_write_amp: 2.2 }
+    }
+}
+
+/// One in-flight SSD operation's completion descriptor.
+#[derive(Clone, Debug)]
+pub struct SsdDispatch<T> {
+    pub done_at: Usec,
+    pub tags: Vec<T>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    AppendWrite,
+    RandomWrite,
+    Read,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct QueuedIo<T> {
+    sectors: i64,
+    op: Op,
+    tag: T,
+}
+
+/// Simulated SSD (NOOP queue: FIFO service, batched while busy).
+pub struct Ssd<T> {
+    pub cfg: SsdConfig,
+    busy: bool,
+    queue: std::collections::VecDeque<QueuedIo<T>>,
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    pub total_busy_us: f64,
+}
+
+impl<T: Copy> Ssd<T> {
+    pub fn new(cfg: SsdConfig) -> Self {
+        Self {
+            cfg,
+            busy: false,
+            queue: std::collections::VecDeque::new(),
+            bytes_written: 0,
+            bytes_read: 0,
+            total_busy_us: 0.0,
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.busy
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Log-structured append (SSDUP+ buffering path).
+    pub fn enqueue_append(&mut self, sectors: i64, tag: T) {
+        debug_assert!(sectors > 0);
+        self.queue.push_back(QueuedIo { sectors, op: Op::AppendWrite, tag });
+    }
+
+    /// In-place / random write (what a non-log-structured buffer does).
+    pub fn enqueue_random_write(&mut self, sectors: i64, tag: T) {
+        debug_assert!(sectors > 0);
+        self.queue.push_back(QueuedIo { sectors, op: Op::RandomWrite, tag });
+    }
+
+    /// Read buffered data back (flush path).
+    pub fn enqueue_read(&mut self, sectors: i64, tag: T) {
+        debug_assert!(sectors > 0);
+        self.queue.push_back(QueuedIo { sectors, op: Op::Read, tag });
+    }
+
+    /// FIFO batch dispatch of everything queued (NOOP semantics).
+    pub fn try_dispatch(&mut self, now: Usec) -> Option<SsdDispatch<T>> {
+        if self.busy || self.queue.is_empty() {
+            return None;
+        }
+        let mut service_us = 0.0;
+        let mut tags = Vec::with_capacity(self.queue.len());
+        for io in self.queue.drain(..) {
+            let bytes = sectors_to_bytes(io.sectors);
+            let us = match io.op {
+                Op::AppendWrite => {
+                    self.bytes_written += bytes;
+                    bytes as f64 / self.cfg.write_mbps
+                }
+                Op::RandomWrite => {
+                    self.bytes_written += bytes;
+                    bytes as f64 / self.cfg.write_mbps * self.cfg.random_write_amp
+                }
+                Op::Read => {
+                    self.bytes_read += bytes;
+                    bytes as f64 / self.cfg.read_mbps
+                }
+            };
+            service_us += us + self.cfg.per_io_us;
+            tags.push(io.tag);
+        }
+        self.busy = true;
+        self.total_busy_us += service_us;
+        Some(SsdDispatch { done_at: now + service_us.ceil() as Usec, tags })
+    }
+
+    pub fn complete(&mut self) {
+        debug_assert!(self.busy, "complete() without dispatch");
+        self.busy = false;
+    }
+
+    pub fn achieved_write_mbps(&self) -> f64 {
+        if self.total_busy_us == 0.0 {
+            0.0
+        } else {
+            self.bytes_written as f64 / self.total_busy_us
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_faster_than_random_write() {
+        let mut a = Ssd::<u32>::new(SsdConfig::default());
+        let mut r = Ssd::<u32>::new(SsdConfig::default());
+        for i in 0..64 {
+            a.enqueue_append(512, i);
+            r.enqueue_random_write(512, i);
+        }
+        let da = a.try_dispatch(0).unwrap();
+        let dr = r.try_dispatch(0).unwrap();
+        assert!(
+            (dr.done_at as f64) > (da.done_at as f64) * 1.8,
+            "write-amp should make random writes ~2.2x slower: {} vs {}",
+            dr.done_at,
+            da.done_at
+        );
+    }
+
+    #[test]
+    fn ssd_much_faster_than_hdd_for_random() {
+        use crate::device::hdd::{Hdd, HddConfig};
+        let mut ssd = Ssd::<u32>::new(SsdConfig::default());
+        let mut hdd = Hdd::<u32>::new(HddConfig::default());
+        let mut lba = 0i64;
+        for i in 0..64 {
+            lba += 3_000_000;
+            ssd.enqueue_append(512, i);
+            hdd.enqueue(lba, 512, 0, i);
+        }
+        let ds = ssd.try_dispatch(0).unwrap();
+        ssd.complete();
+        let mut now = 0;
+        loop {
+            if let Some(d) = hdd.try_dispatch(now) {
+                now = d.done_at;
+                hdd.complete();
+            } else if let Some(dl) = hdd.idle_deadline() {
+                now = dl;
+            } else {
+                break;
+            }
+        }
+        assert!(
+            hdd.total_busy_us > ds.done_at as f64 * 5.0,
+            "random HDD ({}) should dwarf SSD append ({})",
+            hdd.total_busy_us,
+            ds.done_at
+        );
+    }
+
+    #[test]
+    fn busy_until_complete() {
+        let mut s = Ssd::<u8>::new(SsdConfig::default());
+        s.enqueue_append(512, 1);
+        let d = s.try_dispatch(0).unwrap();
+        s.enqueue_append(512, 2);
+        assert!(s.try_dispatch(1).is_none());
+        s.complete();
+        assert!(s.try_dispatch(d.done_at).is_some());
+    }
+
+    #[test]
+    fn read_throughput_accounted() {
+        let mut s = Ssd::<u8>::new(SsdConfig::default());
+        s.enqueue_read(2048, 0);
+        let d = s.try_dispatch(0).unwrap();
+        s.complete();
+        assert_eq!(s.bytes_read, 2048 * 512);
+        assert!(d.done_at > 0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Shared experiment infrastructure: report formatting, scaling, arrival
+//! synthesis, and the standard paper workload sizes.
+
+use crate::server::{simulate, SimConfig, SimResult, SystemKind};
+use crate::types::DEFAULT_REQ_SECTORS;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::workload::Workload;
+
+/// Experiment scaling: paper sizes divided by `factor` (sim time control;
+/// shapes are scale-invariant because the SSD capacity scales alongside).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub factor: u64,
+    pub seed: u64,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        // /8: 16 GB files simulate as 2 GB — ~8k requests per instance,
+        // enough streams for detection statistics at every process count.
+        Self { factor: 8, seed: 0x55D0 }
+    }
+}
+
+impl Scale {
+    pub fn quick() -> Self {
+        Self { factor: 64, seed: 0x55D0 }
+    }
+
+    /// 16 GB (the paper's shared IOR file) scaled, in sectors.
+    pub fn gb16(&self) -> i64 {
+        (16 * 1024 * 1024 * 1024 / 512) / self.factor as i64
+    }
+
+    pub fn gb8(&self) -> i64 {
+        self.gb16() / 2
+    }
+
+    pub fn gb2(&self) -> i64 {
+        self.gb16() / 8
+    }
+
+    /// An SSD capacity quoted by the paper (in MiB), scaled.
+    pub fn ssd_mib(&self, paper_mib: u64) -> u64 {
+        (paper_mib / self.factor).max(8)
+    }
+}
+
+/// A reproduced table/figure.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub id: &'static str,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+    pub data: Json,
+}
+
+impl Report {
+    pub fn new(id: &'static str, title: &str) -> Self {
+        Self {
+            id,
+            title: title.to_string(),
+            columns: vec![],
+            rows: vec![],
+            notes: vec![],
+            data: Json::Null,
+        }
+    }
+
+    pub fn columns(&mut self, cols: &[&str]) -> &mut Self {
+        self.columns = cols.iter().map(|c| c.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, n: &str) -> &mut Self {
+        self.notes.push(n.to_string());
+        self
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i >= widths.len() {
+                    widths.push(cell.len());
+                } else {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(hdr.join("  ").len()));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Run one workload under one system with standard config knobs.
+pub fn run_system(system: SystemKind, workload: &Workload, scale: Scale, tweak: impl FnOnce(&mut SimConfig)) -> SimResult {
+    let mut cfg = SimConfig::new(system).with_seed(scale.seed);
+    tweak(&mut cfg);
+    simulate(&cfg, workload)
+}
+
+/// Synthesize the *server arrival order* of a workload's requests without
+/// running the full simulation: processes issue round-robin with seeded
+/// jitter-driven skips. Used by the offset-trace experiments (Fig 3/5/7),
+/// which analyze arrival patterns rather than timing.
+pub fn synthesize_arrival(workload: &Workload, seed: u64) -> Vec<(i32, i32)> {
+    let mut cursors: Vec<usize> = vec![0; workload.processes.len()];
+    let mut rng = Prng::new(seed);
+    let total = workload.total_requests();
+    let mut out = Vec::with_capacity(total);
+    let mut live: Vec<usize> = (0..workload.processes.len()).collect();
+    while !live.is_empty() {
+        // each round, processes fire in a jittered order and some lag a
+        // round behind (network/CPU scatter) — without the lag, strided
+        // rounds arrive perfectly aligned and sort back to contiguous,
+        // which no real server ever sees
+        let mut order = live.clone();
+        rng.shuffle(&mut order);
+        let mut emitted = false;
+        for p in order {
+            if rng.chance(0.35) {
+                continue; // this process lags this round
+            }
+            let wl = &workload.processes[p];
+            if cursors[p] < wl.reqs.len() {
+                let r = wl.reqs[cursors[p]];
+                out.push((r.offset, r.size));
+                cursors[p] += 1;
+                emitted = true;
+            }
+        }
+        if !emitted {
+            // guarantee progress
+            let p = live[rng.range(0, live.len())];
+            let r = workload.processes[p].reqs[cursors[p]];
+            out.push((r.offset, r.size));
+            cursors[p] += 1;
+        }
+        live.retain(|&p| cursors[p] < workload.processes[p].reqs.len());
+    }
+    out
+}
+
+/// Request size in sectors used across experiments (256 KB).
+pub const REQ: i32 = DEFAULT_REQ_SECTORS;
+
+/// Scaled IOR workload whose *offset span* stays at the paper's unscaled
+/// file size (randomness is then scale-invariant; see
+/// `segmented_random_spanned`).
+pub fn ior_w(
+    app: u16,
+    pattern: crate::workload::ior::IorPattern,
+    procs: u32,
+    scaled_sectors: i64,
+    scale: Scale,
+    seed_off: u64,
+) -> Workload {
+    crate::workload::ior::ior_spanned(
+        app,
+        pattern,
+        procs,
+        scaled_sectors,
+        scaled_sectors * scale.factor as i64,
+        REQ,
+        scale.seed + seed_off,
+    )
+}
+
+/// Format helpers.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ior::{ior, IorPattern};
+
+    #[test]
+    fn scale_math() {
+        let s = Scale { factor: 8, seed: 0 };
+        assert_eq!(s.gb16(), 4 * 1024 * 1024);
+        assert_eq!(s.gb8(), 2 * 1024 * 1024);
+        assert_eq!(s.ssd_mib(8192), 1024);
+    }
+
+    #[test]
+    fn report_renders_aligned() {
+        let mut r = Report::new("figX", "test");
+        r.columns(&["a", "long-column"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.note("hello");
+        let s = r.render();
+        assert!(s.contains("figX"));
+        assert!(s.contains("long-column"));
+        assert!(s.contains("note: hello"));
+    }
+
+    #[test]
+    fn synthesized_arrival_is_complete_and_deterministic() {
+        let w = ior(0, IorPattern::Strided, 8, 65536, REQ, 1);
+        let a = synthesize_arrival(&w, 9);
+        let b = synthesize_arrival(&w, 9);
+        assert_eq!(a.len(), w.total_requests());
+        assert_eq!(a, b);
+        let c = synthesize_arrival(&w, 10);
+        assert_ne!(a, c, "different seed, different interleaving");
+    }
+}

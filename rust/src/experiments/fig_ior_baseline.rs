@@ -1,0 +1,72 @@
+//! Fig 2 + Fig 6: native-OrangeFS IOR characterization.
+//!
+//! Fig 2 — throughput of segmented-contiguous / segmented-random / strided
+//! IOR as the process count grows (4..128): contiguous and strided rise
+//! then fall (CFQ merge window saturates), random stays flat and low.
+//!
+//! Fig 6 — strided IOR: throughput decreases while the detector's random
+//! percentage increases with the process count (the inverse correlation
+//! that justifies percentage-driven redirection).
+
+use crate::experiments::common::{f1, ior_w, pct, run_system, Report, Scale};
+use crate::server::SystemKind;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::workload::ior::IorPattern;
+
+pub fn fig2(scale: Scale) -> Report {
+    let mut rep = Report::new("fig2", "IOR throughput vs process count, native OrangeFS");
+    rep.columns(&["procs", "seg-contiguous MB/s", "strided MB/s", "seg-random MB/s"]);
+    let mut data = Vec::new();
+    for procs in [4u32, 8, 16, 32, 64, 128] {
+        let mut cells = vec![procs.to_string()];
+        let mut obj = vec![("procs", Json::from(procs as u64))];
+        for (key, pattern) in [
+            ("contig", IorPattern::SegmentedContiguous),
+            ("strided", IorPattern::Strided),
+            ("random", IorPattern::SegmentedRandom),
+        ] {
+            let w = ior_w(0, pattern, procs, scale.gb16(), scale, 0);
+            let r = run_system(SystemKind::OrangeFs, &w, scale, |_| {});
+            cells.push(f1(r.throughput_mbps()));
+            obj.push((key, Json::Num(r.throughput_mbps())));
+        }
+        // keep column order contig, strided, random
+        let c = cells.remove(2);
+        cells.insert(2, c);
+        rep.row(cells);
+        data.push(Json::obj(obj));
+    }
+    rep.note("paper: contiguous 218->150 MB/s, strided 164->107, random ~95 flat");
+    rep.data = Json::Arr(data);
+    rep
+}
+
+pub fn fig6(scale: Scale) -> Report {
+    let mut rep = Report::new(
+        "fig6",
+        "strided IOR: throughput vs random percentage as processes grow (OrangeFS)",
+    );
+    rep.columns(&["procs", "throughput MB/s", "random %"]);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut data = Vec::new();
+    for procs in [8u32, 16, 32, 64, 128] {
+        let w = ior_w(0, IorPattern::Strided, procs, scale.gb16(), scale, 0);
+        let r = run_system(SystemKind::OrangeFs, &w, scale, |_| {});
+        rep.row(vec![procs.to_string(), f1(r.throughput_mbps()), pct(r.mean_percentage)]);
+        xs.push(r.mean_percentage);
+        ys.push(r.throughput_mbps());
+        data.push(Json::obj(vec![
+            ("procs", Json::from(procs as u64)),
+            ("mbps", Json::Num(r.throughput_mbps())),
+            ("random_pct", Json::Num(r.mean_percentage)),
+        ]));
+    }
+    let corr = stats::pearson(&xs, &ys);
+    rep.note(&format!(
+        "paper: RP 7/15/28/46/71%, throughput 208->133 MB/s; inverse correlation. measured r = {corr:.3}"
+    ));
+    rep.data = Json::Arr(data);
+    rep
+}

@@ -1,0 +1,48 @@
+//! Experiment registry: one entry per paper table/figure (DESIGN.md's
+//! experiment index). `ssdup exp <id>` regenerates any of them.
+
+pub mod ablations;
+pub mod common;
+pub mod fig_adaptive;
+pub mod fig_flush;
+pub mod fig_ior_baseline;
+pub mod fig_limited_ssd;
+pub mod fig_main;
+pub mod fig_offsets;
+pub mod fig_other_benchmarks;
+pub mod table_overhead;
+
+pub use common::{Report, Scale};
+
+/// All experiment ids, in paper order.
+pub fn all_ids() -> Vec<&'static str> {
+    vec![
+        "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig11", "fig12", "fig13",
+        "fig14", "fig15", "fig16", "table1", "ablation-log", "ablation-pipeline",
+        "ablation-threshold",
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, scale: Scale) -> Option<Report> {
+    Some(match id {
+        "fig2" => fig_ior_baseline::fig2(scale),
+        "fig3" => fig_offsets::fig3(scale),
+        "fig5" => fig_offsets::fig5(scale),
+        "fig6" => fig_ior_baseline::fig6(scale),
+        "fig7" => fig_adaptive::fig7(scale),
+        "fig8" => fig_adaptive::fig8(scale),
+        "fig9" => fig_flush::fig9(scale),
+        "fig11" => fig_main::fig11(scale),
+        "fig12" => fig_main::fig12(scale),
+        "fig13" => fig_limited_ssd::fig13(scale),
+        "fig14" => fig_limited_ssd::fig14(scale),
+        "fig15" => fig_other_benchmarks::fig15(scale),
+        "fig16" => fig_other_benchmarks::fig16(scale),
+        "table1" => table_overhead::table1(scale),
+        "ablation-log" => ablations::ablation_log(scale),
+        "ablation-pipeline" => ablations::ablation_pipeline(scale),
+        "ablation-threshold" => ablations::ablation_threshold(scale),
+        _ => return None,
+    })
+}

@@ -1,0 +1,12 @@
+//! OrangeFS-like parallel-file-system substrate.
+//!
+//! Files are striped round-robin across I/O nodes (OrangeFS default stripe
+//! 64 KB); each node owns an HDD + SSD pair and runs its own SSDUP+
+//! instance (the paper: "SSDUP+ resides in each I/O node... SSDUP+ in
+//! different I/O nodes does not need to communicate with each other").
+
+pub mod layout;
+pub mod striping;
+
+pub use layout::FileTable;
+pub use striping::{StripeLayout, SubRequest};

@@ -1,0 +1,32 @@
+//! # SSDUP+ — traffic-aware SSD burst buffer (paper reproduction)
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *Optimizing the SSD
+//! Burst Buffer by Traffic Detection* (Shi et al.). The Rust layer (L3)
+//! hosts the paper's coordination contribution — request-stream detection,
+//! adaptive redirection, two-region pipelined flushing, AVL-tree buffer
+//! metadata — plus every substrate the evaluation needs (simulated
+//! HDD/SSD, an OrangeFS-like striping layer, workload generators, a
+//! deterministic DES engine). The per-stream analytics execute as an
+//! AOT-compiled XLA module authored in JAX/Pallas (see `python/compile/`);
+//! Python never runs on the request path.
+//!
+//! Start at [`server`] for the SSDUP+ I/O-node implementation, or
+//! [`experiments`] for the paper's tables and figures.
+
+pub mod device;
+pub mod fs;
+pub mod sim;
+pub mod types;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+pub mod buffer;
+pub mod detector;
+pub mod redirector;
+pub mod runtime;
+pub mod server;
+pub mod workload;
+pub mod experiments;

@@ -1,0 +1,180 @@
+//! `ssdup` — CLI for the SSDUP+ reproduction.
+//!
+//! Subcommands:
+//!   exp <id>|all   regenerate a paper table/figure (see `ssdup list`)
+//!   list           list experiment ids
+//!   run            run one simulation (system/pattern/procs flags)
+//!   runtime-info   verify artifacts + PJRT round-trip
+//!   version        print version
+
+use ssdup::experiments::{self, Scale};
+use ssdup::server::{simulate, SimConfig, SystemKind};
+use ssdup::util::cli::Args;
+use ssdup::util::json::Json;
+use ssdup::util::threadpool::ThreadPool;
+use ssdup::workload::ior::{ior, IorPattern};
+
+const VALUE_OPTS: &[&str] = &[
+    "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
+    "queue",
+];
+
+fn main() {
+    let args = match Args::from_env(VALUE_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand() {
+        Some("exp") => cmd_exp(&args),
+        Some("list") => {
+            for id in experiments::all_ids() {
+                println!("{id}");
+            }
+            0
+        }
+        Some("run") => cmd_run(&args),
+        Some("runtime-info") => cmd_runtime_info(),
+        Some("version") => {
+            println!("ssdup {}", ssdup::version());
+            0
+        }
+        _ => {
+            eprintln!(
+                "usage: ssdup <exp|list|run|runtime-info|version> [flags]\n\
+                 \n\
+                 ssdup exp all [--scale 8] [--seed N] [--json out.json]\n\
+                 ssdup exp fig11 --scale 4\n\
+                 ssdup run --system ssdup+ --pattern strided --procs 32 --size-mib 2048\n"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn scale_from(args: &Args) -> Scale {
+    let mut s = Scale::default();
+    s.factor = args.get_parse("scale", s.factor).unwrap_or(s.factor);
+    s.seed = args.get_parse("seed", s.seed).unwrap_or(s.seed);
+    s
+}
+
+fn cmd_exp(args: &Args) -> i32 {
+    let scale = scale_from(args);
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let ids: Vec<&str> = if which == "all" {
+        experiments::all_ids()
+    } else {
+        match experiments::all_ids().into_iter().find(|&i| i == which) {
+            Some(i) => vec![i],
+            None => {
+                eprintln!("unknown experiment '{which}' (see `ssdup list`)");
+                return 2;
+            }
+        }
+    };
+    // experiments are independent: fan out across cores
+    let pool = ThreadPool::default_size();
+    let reports = pool.map(ids.clone(), move |id| {
+        let t0 = std::time::Instant::now();
+        let rep = experiments::run(id, scale).expect("registered id");
+        (rep, t0.elapsed())
+    });
+    let mut json_out = Vec::new();
+    for (rep, dt) in &reports {
+        rep.print();
+        println!("({} ran in {:.1}s)\n", rep.id, dt.as_secs_f64());
+        json_out.push(Json::obj(vec![
+            ("id", Json::from(rep.id)),
+            ("title", Json::from(rep.title.clone())),
+            ("data", rep.data.clone()),
+        ]));
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, Json::Arr(json_out).to_string()).expect("write json");
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let system: SystemKind = match args.get_or("system", "ssdup+").parse() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let pattern = match args.get_or("pattern", "strided") {
+        "contig" | "segmented-contiguous" => IorPattern::SegmentedContiguous,
+        "random" | "segmented-random" => IorPattern::SegmentedRandom,
+        "strided" => IorPattern::Strided,
+        other => {
+            eprintln!("unknown pattern '{other}'");
+            return 2;
+        }
+    };
+    let procs: u32 = args.get_parse("procs", 32).unwrap_or(32);
+    let size_mib: u64 = args.get_parse("size-mib", 2048).unwrap_or(2048);
+    let req_kb: i32 = args.get_parse("req-kb", 256).unwrap_or(256);
+    let seed: u64 = args.get_parse("seed", 7).unwrap_or(7);
+    let total_sectors = (size_mib * 1024 * 1024 / 512) as i64;
+    let w = ior(0, pattern, procs, total_sectors, req_kb * 2, seed);
+
+    let mut cfg = SimConfig::new(system).with_seed(seed);
+    if let Some(mib) = args.get("ssd-mib") {
+        cfg = cfg.with_ssd_mib(mib.parse().unwrap_or(8192));
+    }
+    if let Some(q) = args.get("queue") {
+        cfg = cfg.with_queue_size(q.parse().unwrap_or(128));
+    }
+    let r = simulate(&cfg, &w);
+    println!("{}", r.summary());
+    for a in &r.per_app {
+        println!(
+            "  app {}: {:.2} MB/s ({} MiB in {:.2}s)",
+            a.app,
+            a.throughput_mbps(),
+            a.bytes / (1 << 20),
+            (a.end_us.saturating_sub(a.start_us)) as f64 / 1e6
+        );
+    }
+    for (i, n) in r.nodes.iter().enumerate() {
+        println!(
+            "  node {i}: hdd {} MiB ({} seeks), ssd {} MiB buffered, {} flushes, {} blocked",
+            n.hdd_bytes / (1 << 20),
+            n.hdd_seeks,
+            n.ssd_bytes_buffered / (1 << 20),
+            n.flushes,
+            n.blocked_requests
+        );
+    }
+    0
+}
+
+fn cmd_runtime_info() -> i32 {
+    match ssdup::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            println!("artifacts: {}", rt.artifacts.dir.display());
+            println!("platform:  {}", rt.platform());
+            let det = rt.detector().expect("compile detector");
+            let streams: Vec<Vec<(i32, i32)>> = vec![
+                (0..128).map(|i| (i * 512, 512)).collect(),
+                (0..128).map(|i| (i * 9973, 512)).collect(),
+            ];
+            let out = det.run_all(&streams).expect("execute");
+            println!(
+                "detector:  batch={} nmax={} | contiguous S={} random S={}",
+                det.batch, det.nmax, out[0].s, out[1].s
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("runtime unavailable: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Data redirection (paper §2.3): decide, per request stream, whether the
+//! *next* stream's requests go to SSD or HDD.
+
+pub mod adaptive;
+pub mod policy;
+pub mod watermark;
+
+pub use adaptive::PercentList;
+pub use policy::{AdaptivePolicy, AlwaysHdd, AlwaysSsd, RoutePolicy, WatermarkPolicy};
+pub use watermark::Watermark;

@@ -1,0 +1,66 @@
+//! Static high/low-water-mark thresholds — SSDUP's (ICS'17) scheme, kept
+//! as the baseline the adaptive algorithm is evaluated against.
+
+/// Hysteresis pair: above `high` -> random (SSD); below `low` ->
+/// sequential (HDD); in between -> keep the current direction.
+#[derive(Clone, Copy, Debug)]
+pub struct Watermark {
+    pub high: f32,
+    pub low: f32,
+}
+
+impl Default for Watermark {
+    fn default() -> Self {
+        // the paper's prototype values: 45% / 30%
+        Self { high: 0.45, low: 0.30 }
+    }
+}
+
+impl Watermark {
+    pub fn new(high: f32, low: f32) -> Self {
+        assert!(low <= high, "low {low} > high {high}");
+        Self { high, low }
+    }
+
+    /// Decide given the current direction (true = SSD).
+    pub fn decide(&self, percentage: f32, currently_ssd: bool) -> bool {
+        if percentage > self.high {
+            true
+        } else if percentage < self.low {
+            false
+        } else {
+            currently_ssd
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switches_above_high() {
+        let w = Watermark::default();
+        assert!(w.decide(0.5, false));
+        assert!(w.decide(0.46, false));
+    }
+
+    #[test]
+    fn switches_below_low() {
+        let w = Watermark::default();
+        assert!(!w.decide(0.2, true));
+    }
+
+    #[test]
+    fn hysteresis_band_keeps_direction() {
+        let w = Watermark::default();
+        assert!(w.decide(0.4, true), "stay SSD inside band");
+        assert!(!w.decide(0.4, false), "stay HDD inside band");
+    }
+
+    #[test]
+    #[should_panic(expected = "low")]
+    fn rejects_inverted_marks() {
+        Watermark::new(0.2, 0.8);
+    }
+}

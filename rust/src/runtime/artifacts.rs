@@ -1,0 +1,152 @@
+//! Artifact discovery + manifest validation.
+//!
+//! `make artifacts` writes `artifacts/{detector,threshold}.hlo.txt` plus
+//! `manifest.json`. At load time we cross-check the manifest's baked-in
+//! constants (batch/nmax/seek model) against this build's `SeekModel` so
+//! the Rust mirror and the compiled kernels cannot drift apart silently.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::seek::SeekModel;
+use crate::util::json::Json;
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub nmax: usize,
+    pub offset_pad: i32,
+    pub percent_list_cap: usize,
+    pub seek: SeekModel,
+}
+
+/// Paths + manifest for one artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub detector_hlo: PathBuf,
+    pub threshold_hlo: PathBuf,
+    pub manifest: Manifest,
+}
+
+/// Default artifact directory: `$SSDUP_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("SSDUP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("manifest.json parse")?;
+        let get_i = |path: &[&str]| -> Result<i64> {
+            v.at(path)
+                .and_then(Json::as_i64)
+                .with_context(|| format!("manifest missing int {path:?}"))
+        };
+        let get_f = |path: &[&str]| -> Result<f64> {
+            v.at(path)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("manifest missing num {path:?}"))
+        };
+        Ok(Manifest {
+            batch: get_i(&["batch"])? as usize,
+            nmax: get_i(&["nmax"])? as usize,
+            offset_pad: get_i(&["offset_pad"])? as i32,
+            percent_list_cap: get_i(&["percent_list_cap"])? as usize,
+            seek: SeekModel {
+                knee_sectors: get_i(&["seek_model", "knee_sectors"])?,
+                short_base_us: get_f(&["seek_model", "short_base_us"])?,
+                short_us_per_sector: get_f(&["seek_model", "short_us_per_sector"])?,
+                long_base_us: get_f(&["seek_model", "long_base_us"])?,
+                long_us_per_sector: get_f(&["seek_model", "long_us_per_sector"])?,
+                cap_sectors: get_i(&["seek_model", "cap_sectors"])?,
+            },
+        })
+    }
+
+    /// Fail fast if the compiled kernels' constants differ from this
+    /// build's native mirror.
+    pub fn validate_against(&self, native: &SeekModel) -> Result<()> {
+        if self.seek != *native {
+            bail!(
+                "artifact seek model {:?} != native seek model {:?}; \
+                 re-run `make artifacts` after changing constants",
+                self.seek,
+                native
+            );
+        }
+        Ok(())
+    }
+}
+
+impl ArtifactSet {
+    /// Load and validate the artifact set under `dir`.
+    pub fn load(dir: &Path) -> Result<ArtifactSet> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        manifest.validate_against(&SeekModel::default())?;
+        let detector_hlo = dir.join("detector.hlo.txt");
+        let threshold_hlo = dir.join("threshold.hlo.txt");
+        for p in [&detector_hlo, &threshold_hlo] {
+            if !p.exists() {
+                bail!("missing artifact {} (run `make artifacts`)", p.display());
+            }
+        }
+        Ok(ArtifactSet { dir: dir.to_path_buf(), detector_hlo, threshold_hlo, manifest })
+    }
+
+    pub fn load_default() -> Result<ArtifactSet> {
+        Self::load(&default_dir())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"{
+      "version": 1, "batch": 16, "nmax": 512, "offset_pad": 2147483647,
+      "percent_list_cap": 64,
+      "seek_model": {"knee_sectors": 2048, "short_base_us": 500.0,
+        "short_us_per_sector": 0.15, "long_base_us": 1500.0,
+        "long_us_per_sector": 0.0025, "cap_sectors": 600000}
+    }"#;
+
+    #[test]
+    fn parses_good_manifest() {
+        let m = Manifest::parse(GOOD).unwrap();
+        assert_eq!(m.batch, 16);
+        assert_eq!(m.nmax, 512);
+        assert_eq!(m.offset_pad, i32::MAX);
+        assert_eq!(m.seek, SeekModel::default());
+        m.validate_against(&SeekModel::default()).unwrap();
+    }
+
+    #[test]
+    fn rejects_drifted_seek_model() {
+        let bad = GOOD.replace("\"knee_sectors\": 2048", "\"knee_sectors\": 4096");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate_against(&SeekModel::default()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"batch": 16}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn load_reports_missing_files() {
+        let tmp = std::env::temp_dir().join(format!("ssdup-art-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), GOOD).unwrap();
+        let err = ArtifactSet::load(&tmp).unwrap_err();
+        assert!(err.to_string().contains("missing artifact"), "{err}");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from Rust. Python never runs here — the HLO text is
+//! compiled once at startup by the in-process XLA CPU client.
+
+pub mod artifacts;
+pub mod xla_exec;
+
+pub use artifacts::{ArtifactSet, Manifest};
+pub use xla_exec::{DetectorExec, Runtime, ThresholdExec};

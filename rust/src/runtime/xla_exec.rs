@@ -1,0 +1,139 @@
+//! XLA/PJRT execution wrappers (adapted from /opt/xla-example/load_hlo).
+//!
+//! One `Runtime` owns the PJRT CPU client; each artifact compiles once
+//! into a `PjRtLoadedExecutable` and is then executed from the request
+//! path with no Python anywhere. Input literals are marshalled from
+//! reusable flat buffers (see §Perf in DESIGN.md).
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifacts::ArtifactSet;
+use crate::types::Detection;
+
+/// PJRT client + compiled artifact executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts: ArtifactSet,
+}
+
+impl Runtime {
+    /// Compile all artifacts on the CPU PJRT client.
+    pub fn load(artifacts: ArtifactSet) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, artifacts })
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(ArtifactSet::load_default()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compile {}", path.display()))
+    }
+
+    pub fn detector(&self) -> Result<DetectorExec> {
+        let exe = self.compile(&self.artifacts.detector_hlo)?;
+        Ok(DetectorExec {
+            exe,
+            batch: self.artifacts.manifest.batch,
+            nmax: self.artifacts.manifest.nmax,
+            offset_pad: self.artifacts.manifest.offset_pad,
+        })
+    }
+
+    pub fn threshold(&self) -> Result<ThresholdExec> {
+        let exe = self.compile(&self.artifacts.threshold_hlo)?;
+        Ok(ThresholdExec { exe, cap: self.artifacts.manifest.percent_list_cap })
+    }
+}
+
+/// Compiled `detect(offsets, sizes, lengths)` module.
+pub struct DetectorExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub nmax: usize,
+    offset_pad: i32,
+}
+
+impl DetectorExec {
+    /// Detect up to `batch` streams in one PJRT execution. Streams longer
+    /// than `nmax` are rejected (lower the stream length or re-lower the
+    /// artifact). Returns one `Detection` per input stream.
+    pub fn run_batch(&self, streams: &[&[(i32, i32)]]) -> Result<Vec<Detection>> {
+        if streams.len() > self.batch {
+            bail!("batch {} > compiled batch {}", streams.len(), self.batch);
+        }
+        let b = self.batch;
+        let n = self.nmax;
+        let mut offsets = vec![self.offset_pad; b * n];
+        let mut sizes = vec![0i32; b * n];
+        let mut lengths = vec![0i32; b];
+        for (i, s) in streams.iter().enumerate() {
+            if s.len() > n {
+                bail!("stream length {} > compiled nmax {}", s.len(), n);
+            }
+            for (j, &(off, size)) in s.iter().enumerate() {
+                offsets[i * n + j] = off;
+                sizes[i * n + j] = size;
+            }
+            lengths[i] = s.len() as i32;
+        }
+        let off_lit = xla::Literal::vec1(&offsets).reshape(&[b as i64, n as i64])?;
+        let size_lit = xla::Literal::vec1(&sizes).reshape(&[b as i64, n as i64])?;
+        let len_lit = xla::Literal::vec1(&lengths);
+        let result = self.exe.execute::<xla::Literal>(&[off_lit, size_lit, len_lit])?[0][0]
+            .to_literal_sync()?;
+        let (s_lit, pct_lit, cost_lit) = result.to_tuple3()?;
+        let s = s_lit.to_vec::<i32>()?;
+        let pct = pct_lit.to_vec::<f32>()?;
+        let cost = cost_lit.to_vec::<f32>()?;
+        Ok(streams
+            .iter()
+            .enumerate()
+            .map(|(i, _)| Detection { s: s[i], percentage: pct[i], seek_cost_us: cost[i] })
+            .collect())
+    }
+
+    /// Detect a flat list of streams, chunking into compiled batches.
+    pub fn run_all(&self, streams: &[Vec<(i32, i32)>]) -> Result<Vec<Detection>> {
+        let mut out = Vec::with_capacity(streams.len());
+        for chunk in streams.chunks(self.batch) {
+            let refs: Vec<&[(i32, i32)]> = chunk.iter().map(|v| v.as_slice()).collect();
+            out.extend(self.run_batch(&refs)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Compiled `threshold(percent_list, count)` module.
+pub struct ThresholdExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub cap: usize,
+}
+
+impl ThresholdExec {
+    /// `sorted` must be ascending; returns (threshold, avgper).
+    pub fn run(&self, sorted: &[f32]) -> Result<(f32, f32)> {
+        if sorted.is_empty() {
+            bail!("empty percent list");
+        }
+        if sorted.len() > self.cap {
+            bail!("percent list {} > compiled cap {}", sorted.len(), self.cap);
+        }
+        let mut plist = vec![0f32; self.cap];
+        plist[..sorted.len()].copy_from_slice(sorted);
+        let p_lit = xla::Literal::vec1(&plist);
+        let c_lit = xla::Literal::scalar(sorted.len() as i32);
+        let result =
+            self.exe.execute::<xla::Literal>(&[p_lit, c_lit])?[0][0].to_literal_sync()?;
+        let (thr, avg) = result.to_tuple2()?;
+        Ok((thr.to_vec::<f32>()?[0], avg.to_vec::<f32>()?[0]))
+    }
+}

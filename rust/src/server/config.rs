@@ -1,0 +1,154 @@
+//! Simulation / server configuration.
+
+use crate::device::{HddConfig, SsdConfig};
+use crate::types::mib_to_sectors;
+
+/// Which of the paper's four systems the I/O nodes run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    /// native OrangeFS: every write to HDD
+    OrangeFs,
+    /// OrangeFS-BB: every write to SSD; single region; while the full SSD
+    /// flushes, new writes fall back to HDD (§4.2.3 analysis)
+    OrangeFsBB,
+    /// SSDUP (ICS'17): static 45/30 water marks, immediate flushing
+    Ssdup,
+    /// SSDUP+: adaptive threshold + traffic-aware pipelined flushing
+    SsdupPlus,
+}
+
+impl SystemKind {
+    pub const ALL: [SystemKind; 4] =
+        [SystemKind::OrangeFs, SystemKind::OrangeFsBB, SystemKind::Ssdup, SystemKind::SsdupPlus];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::OrangeFs => "orangefs",
+            SystemKind::OrangeFsBB => "orangefs-bb",
+            SystemKind::Ssdup => "ssdup",
+            SystemKind::SsdupPlus => "ssdup+",
+        }
+    }
+
+    pub fn uses_ssd(&self) -> bool {
+        !matches!(self, SystemKind::OrangeFs)
+    }
+}
+
+impl std::str::FromStr for SystemKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "orangefs" | "native" => Ok(SystemKind::OrangeFs),
+            "orangefs-bb" | "bb" => Ok(SystemKind::OrangeFsBB),
+            "ssdup" => Ok(SystemKind::Ssdup),
+            "ssdup+" | "ssdupplus" | "ssdup-plus" => Ok(SystemKind::SsdupPlus),
+            other => Err(format!("unknown system '{other}'")),
+        }
+    }
+}
+
+/// Full simulation configuration (defaults mirror the paper's testbed:
+/// 2 I/O nodes, 64 KB stripes, CFQ depth 128, 240 GB SSD — effectively
+/// unconstrained unless an experiment shrinks it).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub system: SystemKind,
+    pub nodes: usize,
+    pub stripe_sectors: i32,
+    pub stream_len: usize,
+    pub hdd: HddConfig,
+    pub ssd: SsdConfig,
+    /// per-node SSD buffer capacity in sectors
+    pub ssd_capacity_sectors: i64,
+    /// one-way network latency per sub-request, us
+    pub net_us: u64,
+    /// per-node NIC ingest bandwidth, MB/s (the paper's testbed is
+    /// Gigabit Ethernet: ~117 MB/s per I/O node — this is what caps
+    /// OrangeFS-BB at ~220 MB/s aggregate in Fig 11)
+    pub nic_mbps: f64,
+    /// outstanding requests per process (async MPI-IO depth)
+    pub io_depth: usize,
+    /// mean exponential think/jitter time per request issue, us
+    pub jitter_us: f64,
+    /// requests per I/O burst (0 = no compute phases); every burst_len
+    /// requests a process pauses ~burst_gap_us (compute/I-O alternation)
+    pub burst_len: u64,
+    pub burst_gap_us: f64,
+    /// traffic-aware flush pause threshold (SSDUP+ only)
+    pub pause_below: f32,
+    /// re-check interval while a flush is paused, us
+    pub flush_check_us: u64,
+    /// max flush extents enqueued in the HDD queue at once
+    pub flush_inflight: usize,
+    /// adaptive PercentList history size
+    pub history: usize,
+    /// override SSDUP's 45/30 water marks with one degenerate threshold
+    /// (ablation-threshold experiment)
+    pub static_threshold: Option<f32>,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn new(system: SystemKind) -> Self {
+        Self {
+            system,
+            nodes: 2,
+            stripe_sectors: 128,
+            stream_len: 128,
+            hdd: HddConfig::default(),
+            ssd: SsdConfig::default(),
+            ssd_capacity_sectors: mib_to_sectors(240 * 1024), // 240 GB
+            net_us: 1000,
+            nic_mbps: 117.0,
+            io_depth: 8,
+            jitter_us: 2000.0,
+            burst_len: 64,
+            burst_gap_us: 150_000.0,
+            pause_below: 0.45,
+            flush_check_us: 100_000,
+            flush_inflight: 12,
+            history: 64,
+            static_threshold: None,
+            seed: 0x55D0_u64,
+        }
+    }
+
+    /// Limit the per-node SSD capacity (Fig 13/14 use small SSDs).
+    pub fn with_ssd_mib(mut self, mib: u64) -> Self {
+        self.ssd_capacity_sectors = mib_to_sectors(mib);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_queue_size(mut self, q: usize) -> Self {
+        self.hdd.queue_size = q;
+        self.stream_len = q; // the paper ties stream length to CFQ depth
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_kind_parses() {
+        assert_eq!("ssdup+".parse::<SystemKind>().unwrap(), SystemKind::SsdupPlus);
+        assert_eq!("BB".parse::<SystemKind>().unwrap(), SystemKind::OrangeFsBB);
+        assert!("nope".parse::<SystemKind>().is_err());
+    }
+
+    #[test]
+    fn builders_apply() {
+        let c = SimConfig::new(SystemKind::SsdupPlus).with_ssd_mib(8192).with_queue_size(32);
+        assert_eq!(c.ssd_capacity_sectors, 16 * 1024 * 1024);
+        assert_eq!(c.hdd.queue_size, 32);
+        assert_eq!(c.stream_len, 32);
+    }
+}

@@ -1,0 +1,135 @@
+//! Result metrics collected by a simulation run — the numbers every paper
+//! table/figure is built from.
+
+use crate::types::Usec;
+
+/// Per-application I/O statistics.
+#[derive(Clone, Debug)]
+pub struct AppStats {
+    pub app: u16,
+    pub bytes: u64,
+    pub start_us: Usec,
+    pub end_us: Usec,
+}
+
+impl AppStats {
+    /// Application-visible write bandwidth, MB/s.
+    pub fn throughput_mbps(&self) -> f64 {
+        if self.end_us <= self.start_us {
+            return 0.0;
+        }
+        self.bytes as f64 / (self.end_us - self.start_us) as f64
+    }
+}
+
+/// Per-node device + buffer statistics.
+#[derive(Clone, Debug, Default)]
+pub struct NodeStats {
+    pub hdd_bytes: u64,
+    pub hdd_seeks: u64,
+    pub hdd_busy_us: f64,
+    pub ssd_bytes_buffered: u64,
+    pub ssd_bytes_read: u64,
+    pub peak_ssd_occupancy_sectors: i64,
+    pub streams: u64,
+    pub flushes: u64,
+    pub flush_pause_us: Usec,
+    pub flush_pauses: u64,
+    pub blocked_requests: u64,
+    pub avl_metadata_peak_bytes: usize,
+    /// detection overhead accounting (Table 1)
+    pub group_cost_us: f64,
+    pub avl_cost_us: f64,
+}
+
+/// Full simulation result.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub system: &'static str,
+    pub workload: String,
+    /// time of the last application ack (the app-visible makespan)
+    pub makespan_us: Usec,
+    /// time when the final background flush drained
+    pub drained_us: Usec,
+    pub total_bytes: u64,
+    pub per_app: Vec<AppStats>,
+    pub nodes: Vec<NodeStats>,
+    /// mean random percentage over all streams
+    pub mean_percentage: f64,
+    /// fraction of bytes routed to SSD
+    pub ssd_ratio: f64,
+    /// simulated events processed (debug/perf visibility)
+    pub events: u64,
+}
+
+impl SimResult {
+    /// Aggregate application-visible throughput, MB/s.
+    pub fn throughput_mbps(&self) -> f64 {
+        if self.makespan_us == 0 {
+            return 0.0;
+        }
+        self.total_bytes as f64 / self.makespan_us as f64
+    }
+
+    pub fn app(&self, app: u16) -> Option<&AppStats> {
+        self.per_app.iter().find(|a| a.app == app)
+    }
+
+    pub fn ssd_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.ssd_bytes_buffered).sum()
+    }
+
+    pub fn total_flush_pause_us(&self) -> Usec {
+        self.nodes.iter().map(|n| n.flush_pause_us).sum()
+    }
+
+    /// One-line human summary (used by the CLI and examples).
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} {:<34} {:>8.2} MB/s  ssd {:>5.1}%  rp {:>5.1}%  pauses {:>6.1}s  makespan {:>7.2}s",
+            self.system,
+            self.workload,
+            self.throughput_mbps(),
+            self.ssd_ratio * 100.0,
+            self.mean_percentage * 100.0,
+            self.total_flush_pause_us() as f64 / 1e6,
+            self.makespan_us as f64 / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let a = AppStats { app: 0, bytes: 100 * 1024 * 1024, start_us: 0, end_us: 1_000_000 };
+        assert!((a.throughput_mbps() - 104.857).abs() < 0.01);
+        let zero = AppStats { app: 0, bytes: 5, start_us: 7, end_us: 7 };
+        assert_eq!(zero.throughput_mbps(), 0.0);
+    }
+
+    #[test]
+    fn result_aggregates() {
+        let r = SimResult {
+            system: "ssdup+",
+            workload: "w".into(),
+            makespan_us: 2_000_000,
+            drained_us: 2_500_000,
+            total_bytes: 200 * 1024 * 1024,
+            per_app: vec![],
+            nodes: vec![
+                NodeStats { ssd_bytes_buffered: 10, flush_pause_us: 5, ..Default::default() },
+                NodeStats { ssd_bytes_buffered: 20, flush_pause_us: 7, ..Default::default() },
+            ],
+            mean_percentage: 0.5,
+            ssd_ratio: 0.25,
+            events: 1,
+        };
+        assert!((r.throughput_mbps() - 104.857).abs() < 0.01);
+        assert_eq!(r.ssd_bytes(), 30);
+        assert_eq!(r.total_flush_pause_us(), 12);
+        assert!(r.summary().contains("ssdup+"));
+    }
+}

@@ -1,0 +1,12 @@
+//! The I/O-node server layer: configuration, the end-to-end cluster
+//! simulation, and result metrics. This is where the paper's four systems
+//! (OrangeFS, OrangeFS-BB, SSDUP, SSDUP+) are assembled from the
+//! detector/redirector/buffer/device building blocks.
+
+pub mod cluster;
+pub mod config;
+pub mod metrics;
+
+pub use cluster::{simulate, simulate_with_backends};
+pub use config::{SimConfig, SystemKind};
+pub use metrics::{AppStats, NodeStats, SimResult};

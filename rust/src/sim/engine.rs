@@ -1,0 +1,159 @@
+//! Deterministic event-queue engine.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::types::Usec;
+
+struct Scheduled<E> {
+    at: Usec,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first, then by
+        // insertion order for same-timestamp determinism.
+        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event queue.
+pub struct Engine<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: Usec,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
+    }
+
+    /// Current simulated time (time of the most recently popped event).
+    pub fn now(&self) -> Usec {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `payload` at absolute time `at` (clamped to >= now).
+    pub fn schedule_at(&mut self, at: Usec, payload: E) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, payload });
+    }
+
+    /// Schedule `payload` after `delay` microseconds.
+    pub fn schedule_in(&mut self, delay: Usec, payload: E) {
+        self.schedule_at(self.now.saturating_add(delay), payload);
+    }
+
+    /// Pop the next event, advancing the clock. Returns None when drained.
+    pub fn pop(&mut self) -> Option<(Usec, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.at >= self.now, "time went backwards");
+        self.now = s.at;
+        self.processed += 1;
+        Some((s.at, s.payload))
+    }
+
+    /// Peek the next event time without popping.
+    pub fn peek_time(&self) -> Option<Usec> {
+        self.heap.peek().map(|s| s.at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(30, 3);
+        e.schedule_at(10, 1);
+        e.schedule_at(20, 2);
+        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        assert_eq!(e.now(), 30);
+        assert_eq!(e.processed(), 3);
+    }
+
+    #[test]
+    fn same_timestamp_is_fifo() {
+        let mut e: Engine<u32> = Engine::new();
+        for i in 0..100 {
+            e.schedule_at(5, i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn schedule_in_is_relative_to_now() {
+        let mut e: Engine<&'static str> = Engine::new();
+        e.schedule_at(100, "first");
+        let (t, _) = e.pop().unwrap();
+        assert_eq!(t, 100);
+        e.schedule_in(50, "second");
+        let (t2, p) = e.pop().unwrap();
+        assert_eq!((t2, p), (150, "second"));
+    }
+
+    #[test]
+    fn schedule_in_past_clamps_to_now() {
+        let mut e: Engine<u8> = Engine::new();
+        e.schedule_at(100, 1);
+        e.pop();
+        e.schedule_at(10, 2); // in the past -> clamped
+        let (t, _) = e.pop().unwrap();
+        assert_eq!(t, 100);
+    }
+
+    #[test]
+    fn interleaved_scheduling_during_processing() {
+        // events that schedule follow-ups — the standard DES pattern
+        let mut e: Engine<u64> = Engine::new();
+        e.schedule_at(0, 0);
+        let mut log = Vec::new();
+        while let Some((t, gen)) = e.pop() {
+            log.push((t, gen));
+            if gen < 5 {
+                e.schedule_in(10, gen + 1);
+            }
+        }
+        assert_eq!(log, (0..=5).map(|g| (g * 10, g)).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,11 @@
+//! Discrete-event simulation substrate.
+//!
+//! The whole evaluation runs on simulated time (the paper's testbed — real
+//! HDD/SSD/OrangeFS cluster — is a hardware gate; see DESIGN.md
+//! §Substitutions). The engine is a deterministic event queue generic over
+//! the event payload; tie-breaks use insertion sequence so identical seeds
+//! replay identically.
+
+mod engine;
+
+pub use engine::Engine;

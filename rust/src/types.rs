@@ -1,0 +1,109 @@
+//! Core domain types shared across layers.
+//!
+//! All offsets and sizes are expressed in **512-byte sectors** (i32), the
+//! unit the AOT-compiled detector kernels use (python/compile/constants.py
+//! explains the int32 rationale). Simulated time is in microseconds.
+
+/// Simulated microseconds.
+pub type Usec = u64;
+
+/// Bytes per sector.
+pub const SECTOR_BYTES: u64 = 512;
+
+/// Sectors per 256 KB — the paper's default request size.
+pub const DEFAULT_REQ_SECTORS: i32 = 512;
+
+/// The paper's default request-stream length (CFQ queue depth).
+pub const DEFAULT_STREAM_LEN: usize = 128;
+
+/// Convert sectors to bytes.
+#[inline]
+pub fn sectors_to_bytes(sectors: i64) -> u64 {
+    sectors as u64 * SECTOR_BYTES
+}
+
+/// Convert a byte count to sectors (rounding up).
+#[inline]
+pub fn bytes_to_sectors(bytes: u64) -> i64 {
+    bytes.div_ceil(SECTOR_BYTES) as i64
+}
+
+/// Convert MiB to sectors.
+#[inline]
+pub fn mib_to_sectors(mib: u64) -> i64 {
+    (mib * 1024 * 1024 / SECTOR_BYTES) as i64
+}
+
+/// A single write request as seen by an I/O node (post-striping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// issuing application (for mixed-load accounting)
+    pub app: u16,
+    /// issuing process within the whole cluster
+    pub proc_id: u32,
+    /// target file handle
+    pub file: u32,
+    /// file-relative offset in sectors
+    pub offset: i32,
+    /// length in sectors
+    pub size: i32,
+}
+
+impl Request {
+    pub fn bytes(&self) -> u64 {
+        sectors_to_bytes(self.size as i64)
+    }
+
+    /// End offset (exclusive), in sectors.
+    pub fn end(&self) -> i32 {
+        self.offset + self.size
+    }
+}
+
+/// Where the redirector decided a stream's requests should go.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    Hdd,
+    Ssd,
+}
+
+impl std::fmt::Display for Route {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Route::Hdd => write!(f, "HDD"),
+            Route::Ssd => write!(f, "SSD"),
+        }
+    }
+}
+
+/// Result of detecting one request stream (paper §2.2/§2.3.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Detection {
+    /// S = sum of random factors (Eq. 1)
+    pub s: i32,
+    /// S / (N - 1)
+    pub percentage: f32,
+    /// estimated HDD seek microseconds to serve the sorted stream
+    pub seek_cost_us: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(sectors_to_bytes(512), 256 * 1024);
+        assert_eq!(bytes_to_sectors(256 * 1024), 512);
+        assert_eq!(bytes_to_sectors(1), 1);
+        assert_eq!(bytes_to_sectors(513), 2);
+        assert_eq!(mib_to_sectors(1), 2048);
+    }
+
+    #[test]
+    fn request_accessors() {
+        let r = Request { app: 0, proc_id: 3, file: 1, offset: 100, size: 512 };
+        assert_eq!(r.bytes(), 256 * 1024);
+        assert_eq!(r.end(), 612);
+    }
+}

@@ -1,0 +1,154 @@
+//! In-tree micro/macro-benchmark harness (criterion is not on the image).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` binaries (harness = false);
+//! each uses this module: warmup, timed iterations, mean/stdev/p50/p95,
+//! and a stable one-line-per-bench report that EXPERIMENTS.md quotes.
+//! Honors `SSDUP_BENCH_FAST=1` to shrink iteration counts in CI.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use crate::util::stats;
+
+pub use std::hint::black_box as bb;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stdev_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// optional throughput denominator: items processed per iteration
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "{:<44} {:>12.1} ns/iter (p50 {:>10.1}, p95 {:>10.1}, sd {:>9.1}, n={})",
+            self.name, self.mean_ns, self.p50_ns, self.p95_ns, self.stdev_ns, self.iters
+        );
+        if self.items_per_iter > 0.0 {
+            let per_item = self.mean_ns / self.items_per_iter;
+            let mops = 1000.0 / per_item;
+            line.push_str(&format!("  [{per_item:.1} ns/item, {mops:.2} Mitems/s]"));
+        }
+        line
+    }
+}
+
+pub struct Bench {
+    warmup_iters: u64,
+    measure_samples: usize,
+    iters_per_sample: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let fast = std::env::var("SSDUP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        if fast {
+            Self { warmup_iters: 3, measure_samples: 5, iters_per_sample: 3, results: vec![] }
+        } else {
+            Self { warmup_iters: 20, measure_samples: 30, iters_per_sample: 10, results: vec![] }
+        }
+    }
+
+    /// Override sampling (macro benches that take ~seconds per iteration).
+    pub fn slow(mut self) -> Self {
+        let fast = std::env::var("SSDUP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        self.warmup_iters = 1;
+        self.measure_samples = if fast { 3 } else { 10 };
+        self.iters_per_sample = 1;
+        self
+    }
+
+    /// Benchmark `f`, treating each call as processing `items` units
+    /// (pass 0.0 for pure latency benches).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, items: f64, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples_ns = Vec::with_capacity(self.measure_samples);
+        for _ in 0..self.measure_samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / self.iters_per_sample as f64;
+            samples_ns.push(dt);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.measure_samples as u64 * self.iters_per_sample,
+            mean_ns: stats::mean(&samples_ns),
+            stdev_ns: stats::stdev(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            items_per_iter: items,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Optional filter from argv: `cargo bench -- <substring>`.
+    pub fn should_run(name: &str) -> bool {
+        let filters: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+        filters.is_empty() || filters.iter().any(|f| name.contains(f.as_str()))
+    }
+}
+
+/// Print a section header so bench output groups visibly per paper table.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("SSDUP_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let r = b.run("spin", 100.0, || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.items_per_iter, 100.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 1234.5,
+            stdev_ns: 1.0,
+            p50_ns: 1230.0,
+            p95_ns: 1240.0,
+            items_per_iter: 0.0,
+        };
+        let s = r.report();
+        assert!(s.contains("ns/iter"));
+        assert!(!s.contains("ns/item"));
+    }
+}

@@ -1,0 +1,152 @@
+//! Tiny CLI-argument substrate (no clap on the offline image).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! switch style used by the `ssdup` binary and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// positional arguments in order (subcommand first)
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` options
+    pub options: BTreeMap<String, String>,
+    /// bare `--key` switches
+    pub switches: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value} ({why})")]
+    Invalid { key: String, value: String, why: String },
+}
+
+impl Args {
+    /// Parse an iterator of argv-style strings (without the program name).
+    /// `value_opts` lists options that consume a value; anything else
+    /// starting with `--` is a boolean switch.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, value_opts: &[&str]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&rest) {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(rest.to_string(), v);
+                        }
+                        None => return Err(CliError::MissingValue(rest.to_string())),
+                    }
+                } else {
+                    out.switches.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(value_opts: &[&str]) -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: T::Err| CliError::Invalid {
+                key: key.to_string(),
+                value: v.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--procs 8,16,32`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|e: T::Err| CliError::Invalid {
+                        key: key.to_string(),
+                        value: p.to_string(),
+                        why: e.to_string(),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_switches() {
+        let a = Args::parse(argv("exp fig11 --procs 8,16 --seed=7 --verbose"), &["procs", "seed"]).unwrap();
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.positional[1], "fig11");
+        assert_eq!(a.get("procs"), Some("8,16"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn get_parse_and_list() {
+        let a = Args::parse(argv("run --n 42 --ratios 0.1,0.5"), &["n", "ratios"]).unwrap();
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parse("missing", 9usize).unwrap(), 9);
+        assert_eq!(a.get_list::<f64>("ratios", &[]).unwrap(), vec![0.1, 0.5]);
+        assert_eq!(a.get_list::<u32>("missing", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(matches!(
+            Args::parse(argv("run --n"), &["n"]),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_value_is_error() {
+        let a = Args::parse(argv("run --n abc"), &["n"]).unwrap();
+        assert!(a.get_parse("n", 0usize).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate layer: everything a production repo would pull from crates.io
+//! but this offline image must provide in-tree (see Cargo.toml note).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod threadpool;

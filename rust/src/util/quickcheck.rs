@@ -1,0 +1,104 @@
+//! Mini property-testing substrate (proptest is not on the image).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it retries with progressively simpler
+//! inputs from the same generator family (size-bounded regeneration — a
+//! pragmatic stand-in for true shrinking) and reports the smallest
+//! counterexample found plus the reproduction seed.
+
+use crate::util::prng::Prng;
+
+/// A generator is any `Fn(&mut Prng, usize) -> T`; the `usize` is a size
+/// hint the runner ramps up, so early cases are small.
+pub fn forall<T, G, P>(seed: u64, cases: usize, name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Prng, usize) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Prng::new(seed);
+    for case in 0..cases {
+        // ramp size 1..=64 over the run so failures tend to be small
+        let size = 1 + (case * 64) / cases.max(1);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // regeneration-based simplification: try many small inputs to
+            // find a smaller failing case before reporting.
+            let mut smallest: Option<(usize, T)> = None;
+            let mut shrink_rng = Prng::new(seed ^ 0xDEAD_BEEF);
+            for s in 1..=size {
+                for _ in 0..50 {
+                    let cand = gen(&mut shrink_rng, s);
+                    if !prop(&cand) {
+                        smallest = Some((s, cand));
+                        break;
+                    }
+                }
+                if smallest.is_some() {
+                    break;
+                }
+            }
+            match smallest {
+                Some((s, cand)) => panic!(
+                    "property '{name}' failed (seed={seed}, case={case}, size={size});\n\
+                     simplified counterexample (size {s}): {cand:?}"
+                ),
+                None => panic!(
+                    "property '{name}' failed (seed={seed}, case={case}, size={size});\n\
+                     counterexample: {input:?}"
+                ),
+            }
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gens {
+    use crate::util::prng::Prng;
+
+    /// Vec of i32 in [lo, hi), length <= size*scale.
+    pub fn vec_i32(rng: &mut Prng, size: usize, scale: usize, lo: i32, hi: i32) -> Vec<i32> {
+        let len = rng.gen_range((size * scale + 1) as u64) as usize;
+        (0..len).map(|_| lo + rng.gen_range((hi - lo) as u64) as i32).collect()
+    }
+
+    /// Sorted unique u64 offsets.
+    pub fn sorted_unique(rng: &mut Prng, size: usize, max: u64) -> Vec<u64> {
+        let len = (rng.gen_range(size as u64 + 1) as usize).min(max as usize);
+        let mut v = rng.sample_distinct(max, len);
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        forall(1, 200, "reverse twice is id", |rng, size| {
+            gens::vec_i32(rng, size, 4, -100, 100)
+        }, |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            w == *v
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'sum is small' failed")]
+    fn failing_property_panics_with_counterexample() {
+        forall(2, 500, "sum is small", |rng, size| {
+            gens::vec_i32(rng, size, 8, 0, 100)
+        }, |v| v.iter().sum::<i32>() < 50);
+    }
+
+    #[test]
+    fn sorted_unique_is_sorted_and_unique() {
+        forall(3, 100, "sorted_unique invariant", |rng, size| {
+            gens::sorted_unique(rng, size, 10_000)
+        }, |v| v.windows(2).all(|w| w[0] < w[1]));
+    }
+}

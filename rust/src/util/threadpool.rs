@@ -1,0 +1,119 @@
+//! Minimal thread-pool substrate (no tokio on the offline image).
+//!
+//! The experiment harness fans independent simulations out across cores;
+//! the server's request loop itself is a discrete-event simulation and
+//! stays single-threaded by design (determinism).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("ssdup-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Default pool sized to available parallelism.
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().expect("pool alive").send(Box::new(f)).expect("worker alive");
+    }
+
+    /// Map `f` over `inputs` in parallel, preserving order.
+    pub fn map<I, O, F>(&self, inputs: Vec<I>, f: F) -> Vec<O>
+    where
+        I: Send + 'static,
+        O: Send + 'static,
+        F: Fn(I) -> O + Send + Sync + 'static,
+    {
+        let n = inputs.len();
+        let f = Arc::new(f);
+        let (otx, orx) = mpsc::channel::<(usize, O)>();
+        for (i, input) in inputs.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let otx = otx.clone();
+            self.execute(move || {
+                let out = f(input);
+                let _ = otx.send((i, out));
+            });
+        }
+        drop(otx);
+        let mut slots: Vec<Option<O>> = (0..n).map(|_| None).collect();
+        for (i, out) in orx {
+            slots[i] = Some(out);
+        }
+        slots.into_iter().map(|s| s.expect("all jobs completed")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..64u64).collect(), |x| x * x);
+        assert_eq!(out, (0..64u64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_on_empty_input() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+}

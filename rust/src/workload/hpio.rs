@@ -1,0 +1,133 @@
+//! HPIO workload generator (paper §4.3): region-based non-contiguous I/O.
+//!
+//! Parameters mirror the benchmark: region size, region count, region
+//! spacing, and the non-contiguous test array. The paper runs two
+//! instances: `c-c` (file-contiguous) and `c-nc` (file non-contiguous).
+
+use crate::types::Request;
+use crate::workload::{ProcessWorkload, Workload};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HpioMode {
+    /// contiguous in memory and file (test array 1000)
+    ContiguousContiguous,
+    /// contiguous memory, non-contiguous file (test array 0010): process
+    /// regions interleave with `spacing` sectors between a process's
+    /// consecutive regions
+    ContiguousNonContiguous,
+}
+
+/// Build one HPIO instance.
+///
+/// * `region_sectors` — region size (the paper sweeps 32 KB..256 KB);
+/// * `region_count` — regions per process (chosen to hold file size);
+/// * `spacing_sectors` — distance between adjacent regions (paper: 0; in
+///   c-nc mode the *other processes'* regions provide the distance).
+pub fn hpio(
+    app: u16,
+    mode: HpioMode,
+    procs: u32,
+    region_sectors: i32,
+    region_count: usize,
+    spacing_sectors: i32,
+) -> Workload {
+    let file = app as u32;
+    let processes = (0..procs)
+        .map(|p| {
+            let reqs = (0..region_count)
+                .map(|i| {
+                    let offset = match mode {
+                        HpioMode::ContiguousContiguous => {
+                            // process p owns a contiguous run of regions
+                            (p as i32 * region_count as i32 + i as i32)
+                                * (region_sectors + spacing_sectors)
+                        }
+                        HpioMode::ContiguousNonContiguous => {
+                            // regions deal round-robin across processes:
+                            // region i of process p sits at (i*procs + p)
+                            (i as i32 * procs as i32 + p as i32)
+                                * (region_sectors + spacing_sectors)
+                        }
+                    };
+                    Request { app, proc_id: p, file, offset, size: region_sectors }
+                })
+                .collect();
+            ProcessWorkload { app, proc_id: p, reqs, after_app: None }
+        })
+        .collect();
+    let m = match mode {
+        HpioMode::ContiguousContiguous => "c-c",
+        HpioMode::ContiguousNonContiguous => "c-nc",
+    };
+    Workload { name: format!("hpio-{m}-p{procs}-rs{region_sectors}"), processes }
+}
+
+/// The paper's §4.3 configuration: two concurrent HPIO instances (c-c ×
+/// c-nc), 32 processes total, file ~8 GB each; region count derived from
+/// region size to keep the file size fixed.
+pub fn paper_mixed(region_sectors: i32, procs_per_instance: u32, file_sectors: i64) -> Workload {
+    let per_proc = (file_sectors / (region_sectors as i64 * procs_per_instance as i64)).max(1) as usize;
+    let a = hpio(0, HpioMode::ContiguousContiguous, procs_per_instance, region_sectors, per_proc, 0);
+    let b = hpio(0, HpioMode::ContiguousNonContiguous, procs_per_instance, region_sectors, per_proc, 0);
+    Workload::concurrent(&format!("hpio-mixed-rs{region_sectors}"), a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cc_is_contiguous_per_process_and_globally() {
+        let w = hpio(0, HpioMode::ContiguousContiguous, 4, 64, 8, 0);
+        for p in &w.processes {
+            assert!(p.reqs.windows(2).all(|r| r[1].offset == r[0].end()));
+        }
+    }
+
+    #[test]
+    fn cnc_interleaves_processes() {
+        let w = hpio(0, HpioMode::ContiguousNonContiguous, 4, 64, 8, 0);
+        // process 0's consecutive regions are procs*region apart
+        for p in &w.processes {
+            assert!(p.reqs.windows(2).all(|r| r[1].offset - r[0].offset == 4 * 64));
+        }
+        // globally the regions tile the file exactly
+        let mut offs: Vec<i32> = w.processes.iter().flat_map(|p| &p.reqs).map(|r| r.offset).collect();
+        offs.sort_unstable();
+        assert!(offs.windows(2).all(|r| r[1] == r[0] + 64));
+    }
+
+    #[test]
+    fn spacing_creates_holes() {
+        let w = hpio(0, HpioMode::ContiguousContiguous, 1, 64, 4, 16);
+        let p = &w.processes[0];
+        assert!(p.reqs.windows(2).all(|r| r[1].offset - r[0].offset == 80));
+    }
+
+    #[test]
+    fn paper_mixed_has_two_apps_same_size() {
+        let w = paper_mixed(512, 16, 1 << 21);
+        assert_eq!(w.apps().len(), 2);
+        let by_app: Vec<u64> = w
+            .apps()
+            .iter()
+            .map(|&a| {
+                w.processes
+                    .iter()
+                    .filter(|p| p.app == a)
+                    .flat_map(|p| &p.reqs)
+                    .map(|r| r.bytes())
+                    .sum()
+            })
+            .collect();
+        assert_eq!(by_app[0], by_app[1]);
+    }
+
+    #[test]
+    fn region_count_scales_inversely_with_region_size() {
+        let small = paper_mixed(64, 16, 1 << 21);
+        let large = paper_mixed(512, 16, 1 << 21);
+        assert_eq!(small.total_bytes(), large.total_bytes());
+        assert!(small.total_requests() > large.total_requests());
+    }
+}

@@ -1,0 +1,125 @@
+//! Workload substrate: generators reproducing the access patterns of the
+//! paper's three benchmarks (IOR §4.2, HPIO §4.3, MPI-Tile-IO §4.4).
+//!
+//! A workload is a set of closed-loop processes, each with a request
+//! sequence in issue order. The simulator interleaves them (I/O depth +
+//! jitter), which is what creates the server-side randomness the paper's
+//! detector measures — per-process sequences here are exactly the
+//! patterns the benchmarks describe.
+
+pub mod hpio;
+pub mod ior;
+pub mod mpitileio;
+
+use crate::types::Request;
+
+/// One application process: a request sequence issued in order.
+#[derive(Clone, Debug)]
+pub struct ProcessWorkload {
+    pub app: u16,
+    pub proc_id: u32,
+    pub reqs: Vec<Request>,
+    /// the process starts only after this app has fully completed, plus a
+    /// compute gap (Fig 14's computing-time sweep); None = start at t=0
+    pub after_app: Option<(u16, u64)>,
+}
+
+/// A full workload: one or more applications' processes.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub processes: Vec<ProcessWorkload>,
+}
+
+impl Workload {
+    pub fn total_bytes(&self) -> u64 {
+        self.processes.iter().flat_map(|p| &p.reqs).map(|r| r.bytes()).sum()
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.processes.iter().map(|p| p.reqs.len()).sum()
+    }
+
+    pub fn apps(&self) -> Vec<u16> {
+        let mut v: Vec<u16> = self.processes.iter().map(|p| p.app).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Merge two workloads into a concurrent mixed load, remapping the
+    /// second one's app/file/proc ids to stay disjoint.
+    pub fn concurrent(name: &str, a: Workload, b: Workload) -> Workload {
+        let max_app = a.processes.iter().map(|p| p.app).max().unwrap_or(0);
+        let max_file =
+            a.processes.iter().flat_map(|p| &p.reqs).map(|r| r.file).max().unwrap_or(0);
+        let max_proc = a.processes.iter().map(|p| p.proc_id).max().unwrap_or(0);
+        let mut processes = a.processes;
+        for mut p in b.processes {
+            p.app += max_app + 1;
+            p.proc_id += max_proc + 1;
+            if let Some((dep, gap)) = p.after_app {
+                p.after_app = Some((dep + max_app + 1, gap));
+            }
+            for r in &mut p.reqs {
+                r.app += max_app + 1;
+                r.proc_id += max_proc + 1;
+                r.file += max_file + 1;
+            }
+            processes.push(p);
+        }
+        Workload { name: name.to_string(), processes }
+    }
+
+    /// Run workload `b` after `a` completes, with a compute gap (Fig 14).
+    pub fn sequential(name: &str, a: Workload, gap_us: u64, b: Workload) -> Workload {
+        let a_app = a.processes.first().map(|p| p.app).unwrap_or(0);
+        let mut merged = Self::concurrent(name, a, b);
+        let apps = merged.apps();
+        let b_apps: Vec<u16> = apps.into_iter().filter(|&x| x != a_app).collect();
+        for p in &mut merged.processes {
+            if b_apps.contains(&p.app) {
+                p.after_app = Some((a_app, gap_us));
+            }
+        }
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DEFAULT_REQ_SECTORS;
+
+    fn tiny(app: u16) -> Workload {
+        ior::segmented_contiguous(app, 4, 64, DEFAULT_REQ_SECTORS)
+    }
+
+    #[test]
+    fn concurrent_keeps_ids_disjoint() {
+        let w = Workload::concurrent("mix", tiny(0), tiny(0));
+        let apps = w.apps();
+        assert_eq!(apps.len(), 2);
+        let files: std::collections::HashSet<u32> =
+            w.processes.iter().flat_map(|p| &p.reqs).map(|r| r.file).collect();
+        assert_eq!(files.len(), 2, "each app writes its own shared file");
+        let procs: std::collections::HashSet<u32> =
+            w.processes.iter().map(|p| p.proc_id).collect();
+        assert_eq!(procs.len(), 8);
+    }
+
+    #[test]
+    fn sequential_sets_dependency() {
+        let w = Workload::sequential("seq", tiny(0), 5_000_000, tiny(0));
+        let deps: Vec<_> = w.processes.iter().filter_map(|p| p.after_app).collect();
+        assert_eq!(deps.len(), 4, "all of app B's processes wait");
+        assert!(deps.iter().all(|&(app, gap)| app == 0 && gap == 5_000_000));
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let w = Workload::concurrent("mix", tiny(0), tiny(1));
+        assert_eq!(w.total_requests(), 2 * 4 * 64);
+        assert_eq!(w.total_bytes(), 2 * 4 * 64 * 256 * 1024);
+    }
+}

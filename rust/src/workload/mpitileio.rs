@@ -1,0 +1,122 @@
+//! MPI-Tile-IO workload generator (paper §4.4): tiled access to a dense
+//! 2-D dataset. Each process owns one tile; writing a tile touches one
+//! row-segment per dataset row it spans, so 2-D tilings produce strided
+//! file patterns while 1-D (x=1) tilings degenerate to segmented runs.
+
+use crate::types::Request;
+use crate::workload::{ProcessWorkload, Workload};
+
+/// Build one MPI-Tile-IO instance over an `x_tiles` x `y_tiles` grid
+/// (procs = x*y). Each tile is `tile_w` x `tile_h` elements of
+/// `elem_sectors` sectors each.
+pub fn mpi_tile_io(
+    app: u16,
+    x_tiles: u32,
+    y_tiles: u32,
+    tile_w: u32,
+    tile_h: u32,
+    elem_sectors: i32,
+) -> Workload {
+    let file = app as u32;
+    let row_elems = x_tiles * tile_w; // dataset row width in elements
+    let mut processes = Vec::with_capacity((x_tiles * y_tiles) as usize);
+    for ty in 0..y_tiles {
+        for tx in 0..x_tiles {
+            let proc_id = ty * x_tiles + tx;
+            let mut reqs = Vec::with_capacity(tile_h as usize);
+            for r in 0..tile_h {
+                let row = ty * tile_h + r;
+                let elem_off = row * row_elems + tx * tile_w;
+                reqs.push(Request {
+                    app,
+                    proc_id,
+                    file,
+                    offset: elem_off as i32 * elem_sectors,
+                    size: tile_w as i32 * elem_sectors,
+                });
+            }
+            processes.push(ProcessWorkload { app, proc_id, reqs, after_app: None });
+        }
+    }
+    Workload { name: format!("mpi-tile-io-{x_tiles}x{y_tiles}"), processes }
+}
+
+/// The paper's §4.4 pair: instance 1 is 1-D (x=1, y=procs), instance 2 is
+/// 2-D (x = floor(sqrt(procs)), y = procs/x); element size 4 KB
+/// (8 sectors); tile dimensions sized so each instance writes
+/// `total_sectors`.
+pub fn paper_pair(procs: u32, total_sectors: i64) -> Workload {
+    let elem_sectors = 8; // 4 KB
+    // instance 1: 1-D — one tile per process, tile_w elements wide rows
+    let elems_total = (total_sectors / elem_sectors as i64) as u64;
+    let elems_per_proc = elems_total / procs as u64;
+    // make tiles roughly square in elements
+    let tile_h1 = (elems_per_proc as f64).sqrt().round().max(1.0) as u32;
+    let tile_w1 = (elems_per_proc / tile_h1 as u64).max(1) as u32;
+    let a = mpi_tile_io(0, 1, procs, tile_w1, tile_h1, elem_sectors);
+
+    let x2 = (procs as f64).sqrt().floor().max(1.0) as u32;
+    let y2 = (procs / x2).max(1);
+    let elems_per_proc2 = elems_total / (x2 * y2) as u64;
+    let tile_h2 = (elems_per_proc2 as f64).sqrt().round().max(1.0) as u32;
+    let tile_w2 = (elems_per_proc2 / tile_h2 as u64).max(1) as u32;
+    let b = mpi_tile_io(0, x2, y2, tile_w2, tile_h2, elem_sectors);
+
+    Workload::concurrent(&format!("mpi-tile-io-pair-p{procs}"), a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_d_tiling_is_segmented_contiguous() {
+        // x=1: each process's rows are file-contiguous
+        let w = mpi_tile_io(0, 1, 4, 16, 8, 8);
+        for p in &w.processes {
+            assert!(p.reqs.windows(2).all(|r| r[1].offset == r[0].end()), "{:?}", p.reqs);
+        }
+    }
+
+    #[test]
+    fn two_d_tiling_is_strided() {
+        let w = mpi_tile_io(0, 4, 2, 8, 4, 8);
+        assert_eq!(w.processes.len(), 8);
+        for p in &w.processes {
+            // consecutive rows of a tile stride by the full dataset row
+            let stride = 4 * 8 * 8; // x_tiles * tile_w * elem_sectors
+            assert!(p.reqs.windows(2).all(|r| r[1].offset - r[0].offset == stride));
+        }
+    }
+
+    #[test]
+    fn tiles_are_disjoint_and_cover() {
+        let w = mpi_tile_io(0, 2, 2, 4, 4, 8);
+        let mut offs: Vec<(i32, i32)> =
+            w.processes.iter().flat_map(|p| &p.reqs).map(|r| (r.offset, r.size)).collect();
+        offs.sort_unstable();
+        for win in offs.windows(2) {
+            assert_eq!(win[0].0 + win[0].1, win[1].0, "no gaps, no overlap");
+        }
+    }
+
+    #[test]
+    fn paper_pair_has_two_instances() {
+        let w = paper_pair(16, 1 << 20);
+        assert_eq!(w.apps().len(), 2);
+        assert_eq!(
+            w.processes.iter().filter(|p| p.app == w.apps()[0]).count(),
+            16
+        );
+        // sizes approximately equal (rounding from tile fitting)
+        let sizes: Vec<u64> = w
+            .apps()
+            .iter()
+            .map(|&a| {
+                w.processes.iter().filter(|p| p.app == a).flat_map(|p| &p.reqs).map(|r| r.bytes()).sum()
+            })
+            .collect();
+        let ratio = sizes[0] as f64 / sizes[1] as f64;
+        assert!((0.8..1.25).contains(&ratio), "sizes {sizes:?}");
+    }
+}

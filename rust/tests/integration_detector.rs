@@ -1,0 +1,110 @@
+//! Detector + redirector integration over realistic arrival traces.
+
+use ssdup::detector::native::detect_stream;
+use ssdup::detector::stream::StreamGrouper;
+use ssdup::redirector::{AdaptivePolicy, RoutePolicy, WatermarkPolicy};
+use ssdup::types::{Request, Route};
+use ssdup::util::prng::Prng;
+
+fn push_all(g: &mut StreamGrouper, reqs: &[(i32, i32)]) -> Vec<Vec<(i32, i32)>> {
+    let mut out = Vec::new();
+    for &(off, size) in reqs {
+        let r = Request { app: 0, proc_id: 0, file: 0, offset: off, size };
+        if let Some(s) = g.push(&r) {
+            out.push(s.reqs);
+        }
+    }
+    out
+}
+
+#[test]
+fn grouping_plus_detection_classifies_phases() {
+    // 4 phases: contiguous, random, contiguous, random — the detector
+    // must flag exactly the random phases
+    let mut rng = Prng::new(42);
+    let mut trace: Vec<(i32, i32)> = Vec::new();
+    let phase = 256usize;
+    for p in 0..4 {
+        if p % 2 == 0 {
+            let base = p as i32 * 1_000_000;
+            trace.extend((0..phase).map(|i| (base + i as i32 * 512, 512)));
+        } else {
+            trace.extend((0..phase).map(|_| (rng.gen_range(1 << 25) as i32 * 8, 512)));
+        }
+    }
+    let mut g = StreamGrouper::new(128);
+    let streams = push_all(&mut g, &trace);
+    assert_eq!(streams.len(), 8);
+    let dets: Vec<f32> = streams.iter().map(|s| detect_stream(s).percentage).collect();
+    // phases of 256 = 2 streams each; even phases sequential, odd random
+    for (i, d) in dets.iter().enumerate() {
+        if (i / 2) % 2 == 0 {
+            assert!(*d < 0.2, "stream {i} should be sequential, got {d}");
+        } else {
+            assert!(*d > 0.8, "stream {i} should be random, got {d}");
+        }
+    }
+}
+
+#[test]
+fn adaptive_tracks_phase_changes_faster_with_clear() {
+    // the §2.3.2 rationale for clearing PercentList on workload change
+    let mut policy_cleared = AdaptivePolicy::default();
+    let mut policy_stale = AdaptivePolicy::default();
+    let high = ssdup::types::Detection { s: 120, percentage: 0.94, seek_cost_us: 0.0 };
+    let low = ssdup::types::Detection { s: 5, percentage: 0.04, seek_cost_us: 0.0 };
+    for _ in 0..40 {
+        policy_cleared.on_stream(&high);
+        policy_stale.on_stream(&high);
+    }
+    // workload changes to sequential
+    policy_cleared.on_workload_change();
+    let mut cleared_switch = None;
+    let mut stale_switch = None;
+    for i in 0..40 {
+        if policy_cleared.on_stream(&low) == Route::Hdd && cleared_switch.is_none() {
+            cleared_switch = Some(i);
+        }
+        if policy_stale.on_stream(&low) == Route::Hdd && stale_switch.is_none() {
+            stale_switch = Some(i);
+        }
+    }
+    let c = cleared_switch.expect("cleared policy must switch");
+    let s = stale_switch.unwrap_or(40);
+    assert!(c <= s, "cleared history switches no later: {c} vs {s}");
+}
+
+#[test]
+fn watermark_vs_adaptive_ssd_volume() {
+    // moderately-random load: static 45% watermark buffers everything,
+    // the adaptive threshold buffers only the upper part (the paper's
+    // SSD-savings mechanism)
+    let mut rng = Prng::new(7);
+    let dets: Vec<ssdup::types::Detection> = (0..400)
+        .map(|_| {
+            let p = 0.5 + 0.3 * (rng.f64() as f32 - 0.5); // 0.35..0.65
+            ssdup::types::Detection { s: 0, percentage: p, seek_cost_us: 0.0 }
+        })
+        .collect();
+    let mut wm = WatermarkPolicy::default();
+    let mut ad = AdaptivePolicy::default();
+    let wm_ssd = dets.iter().filter(|d| wm.on_stream(d) == Route::Ssd).count();
+    let ad_ssd = dets.iter().filter(|d| ad.on_stream(d) == Route::Ssd).count();
+    assert!(
+        ad_ssd < wm_ssd,
+        "adaptive must buffer fewer streams than the static watermark ({ad_ssd} vs {wm_ssd})"
+    );
+    assert!(ad_ssd > 0, "but not zero — the random share still gets buffered");
+}
+
+#[test]
+fn stream_length_reconfiguration() {
+    // Fig 12: stream length follows the CFQ queue size
+    for len in [32usize, 128, 512] {
+        let mut g = StreamGrouper::new(len);
+        let trace: Vec<(i32, i32)> = (0..len * 2).map(|i| (i as i32 * 512, 512)).collect();
+        let streams = push_all(&mut g, &trace);
+        assert_eq!(streams.len(), 2);
+        assert!(streams.iter().all(|s| s.len() == len));
+    }
+}

@@ -1,0 +1,86 @@
+//! Experiment-harness integration: every registered table/figure runs at
+//! quick scale and reproduces the paper's *qualitative* claims (orderings
+//! and trends, not testbed-absolute numbers).
+
+use ssdup::experiments::{all_ids, run, Scale};
+use ssdup::util::json::Json;
+
+fn quick() -> Scale {
+    Scale { factor: 32, seed: 0x55D0 }
+}
+
+#[test]
+fn every_registered_experiment_runs_and_renders() {
+    for id in all_ids() {
+        let rep = run(id, quick()).unwrap_or_else(|| panic!("{id} not registered"));
+        assert_eq!(rep.id, id);
+        assert!(!rep.rows.is_empty(), "{id} produced no rows");
+        let rendered = rep.render();
+        assert!(rendered.contains(id));
+        // machine-readable data round-trips through our JSON substrate
+        let s = rep.data.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), rep.data, "{id} data round-trip");
+    }
+}
+
+#[test]
+fn unknown_experiment_is_none() {
+    assert!(run("fig99", quick()).is_none());
+}
+
+#[test]
+fn fig5_ordering_random_gt_mixed_gt_contiguous() {
+    let rep = run("fig5", quick()).unwrap();
+    let get = |pattern: &str| -> f64 {
+        rep.data
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|r| r.get("pattern").unwrap().as_str() == Some(pattern))
+            .unwrap()
+            .get("random_pct")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    let contig = get("seg-contiguous");
+    let random = get("seg-random");
+    let mixed = get("mixed");
+    assert!(random > 0.95, "seg-random must be ~100% random: {random}");
+    assert!(random >= mixed && mixed > contig, "ordering violated: r={random} m={mixed} c={contig}");
+    assert!(contig < 0.3, "contiguous must be mostly sequential: {contig}");
+}
+
+#[test]
+fn fig6_inverse_correlation() {
+    let rep = run("fig6", quick()).unwrap();
+    let rows = rep.data.as_arr().unwrap();
+    let first_pct = rows.first().unwrap().get("random_pct").unwrap().as_f64().unwrap();
+    let last_pct = rows.last().unwrap().get("random_pct").unwrap().as_f64().unwrap();
+    let first_t = rows.first().unwrap().get("mbps").unwrap().as_f64().unwrap();
+    let last_t = rows.last().unwrap().get("mbps").unwrap().as_f64().unwrap();
+    assert!(last_pct > first_pct, "randomness grows with procs: {first_pct} -> {last_pct}");
+    assert!(last_t < first_t, "throughput falls with procs: {first_t} -> {last_t}");
+}
+
+#[test]
+fn fig11_ssdup_plus_saves_ssd_vs_bb() {
+    let rep = run("fig11", quick()).unwrap();
+    for row in rep.data.as_arr().unwrap() {
+        let plus_ratio = row.get("ssdup_plus_ssd_ratio").unwrap().as_f64().unwrap();
+        let bb_ratio = row.get("bb_ssd_ratio").unwrap().as_f64().unwrap();
+        assert!(plus_ratio <= bb_ratio + 1e-9, "SSDUP+ must never buffer more than BB");
+        let native = row.get("orangefs").unwrap().as_f64().unwrap();
+        let plus = row.get("ssdup+").unwrap().as_f64().unwrap();
+        assert!(plus >= native * 0.9, "SSDUP+ {plus} must not lose to native {native}");
+    }
+}
+
+#[test]
+fn table1_overhead_below_one_percent() {
+    let rep = run("table1", quick()).unwrap();
+    for row in rep.data.as_arr().unwrap() {
+        let overhead = row.get("overhead_pct").unwrap().as_f64().unwrap();
+        assert!(overhead < 1.0, "paper claims <1% overhead; measured {overhead}%");
+    }
+}

@@ -1,0 +1,135 @@
+//! Cross-layer integration: the AOT-compiled JAX/Pallas detector executed
+//! via PJRT must agree with the native Rust mirror — bit-for-bit on S,
+//! tight tolerance on percentage/seek-cost (XLA may re-associate the f32
+//! reductions).
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use ssdup::detector::native::NativeDetector;
+use ssdup::device::SeekModel;
+use ssdup::runtime::{ArtifactSet, Runtime};
+use ssdup::util::prng::Prng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match ArtifactSet::load_default() {
+        Ok(a) => Some(Runtime::load(a).expect("PJRT client")),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn patterned_streams() -> Vec<(String, Vec<(i32, i32)>)> {
+    let mut rng = Prng::new(0xA0_70);
+    let req = 512;
+    let mut out = Vec::new();
+    // contiguous, shuffled arrival
+    let mut contig: Vec<(i32, i32)> = (0..128).map(|i| (i * req, req)).collect();
+    rng.shuffle(&mut contig);
+    out.push(("contiguous".to_string(), contig));
+    // fully random sparse
+    out.push((
+        "random".to_string(),
+        (0..128).map(|_| (rng.gen_range(1 << 24) as i32 * 8, req)).collect(),
+    ));
+    // strided with holes
+    out.push((
+        "strided".to_string(),
+        (0..128).map(|i| ((i * 16 + (i % 3) as i32) * req, req)).collect(),
+    ));
+    // short stream + odd sizes
+    out.push((
+        "short-mixed".to_string(),
+        (0..17).map(|_| (rng.gen_range(1 << 20) as i32, 1 + rng.gen_range(2048) as i32)).collect(),
+    ));
+    // adversarial: duplicate offsets
+    out.push(("duplicates".to_string(), vec![(1000, 8); 64]));
+    out
+}
+
+#[test]
+fn hlo_detector_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let det = rt.detector().expect("compile detector");
+    let mut native = NativeDetector::new(SeekModel::default());
+
+    let cases = patterned_streams();
+    let streams: Vec<Vec<(i32, i32)>> = cases.iter().map(|(_, s)| s.clone()).collect();
+    let hlo = det.run_all(&streams).expect("execute");
+    for ((name, stream), h) in cases.iter().zip(&hlo) {
+        let n = native.detect(stream);
+        assert_eq!(h.s, n.s, "{name}: S mismatch (hlo {} vs native {})", h.s, n.s);
+        assert!(
+            (h.percentage - n.percentage).abs() < 1e-6,
+            "{name}: percentage {} vs {}",
+            h.percentage,
+            n.percentage
+        );
+        let denom = n.seek_cost_us.abs().max(1.0);
+        assert!(
+            (h.seek_cost_us - n.seek_cost_us).abs() / denom < 1e-3,
+            "{name}: seek cost {} vs {}",
+            h.seek_cost_us,
+            n.seek_cost_us
+        );
+    }
+}
+
+#[test]
+fn hlo_detector_fuzz_vs_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let det = rt.detector().expect("compile detector");
+    let mut native = NativeDetector::new(SeekModel::default());
+    let mut rng = Prng::new(77);
+    for round in 0..8 {
+        let streams: Vec<Vec<(i32, i32)>> = (0..16)
+            .map(|_| {
+                let n = rng.range(2, 512);
+                (0..n)
+                    .map(|_| (rng.gen_range(1 << 26) as i32, 1 + rng.gen_range(4096) as i32))
+                    .collect()
+            })
+            .collect();
+        let hlo = det.run_all(&streams).expect("execute");
+        for (s, h) in streams.iter().zip(&hlo) {
+            let n = native.detect(s);
+            assert_eq!(h.s, n.s, "round {round}: S mismatch on len {}", s.len());
+            assert!((h.percentage - n.percentage).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn hlo_threshold_matches_native_percentlist() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let thr = rt.threshold().expect("compile threshold");
+    use ssdup::redirector::PercentList;
+    let mut rng = Prng::new(5);
+    for _ in 0..10 {
+        let n = rng.range(1, 64);
+        let mut list = PercentList::new(64);
+        for _ in 0..n {
+            list.insert(rng.f64() as f32);
+        }
+        let (t_hlo, avg_hlo) = thr.run(list.values()).expect("execute");
+        let t_native = list.threshold().unwrap();
+        let avg_native = list.avgper();
+        assert!(
+            (t_hlo - t_native).abs() < 1e-6,
+            "threshold {t_hlo} vs {t_native} (n={n})"
+        );
+        assert!((avg_hlo - avg_native).abs() < 1e-5, "avg {avg_hlo} vs {avg_native}");
+    }
+}
+
+#[test]
+fn oversize_inputs_are_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let det = rt.detector().expect("compile detector");
+    let too_long: Vec<(i32, i32)> = (0..1000).map(|i| (i, 1)).collect();
+    assert!(det.run_batch(&[&too_long]).is_err(), "stream > nmax must error");
+    let thr = rt.threshold().expect("compile threshold");
+    assert!(thr.run(&vec![0.5; 100]).is_err(), "list > cap must error");
+    assert!(thr.run(&[]).is_err(), "empty list must error");
+}

@@ -1,0 +1,124 @@
+//! Full-server integration: the four systems on shared workloads, checking
+//! the paper's *ordering* claims end to end.
+
+use ssdup::server::{simulate, SimConfig, SystemKind};
+use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::workload::hpio::paper_mixed;
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+use ssdup::workload::mpitileio::paper_pair;
+use ssdup::workload::Workload;
+
+fn cfg(system: SystemKind) -> SimConfig {
+    SimConfig::new(system).with_seed(77)
+}
+
+fn random_ior(sectors: i64, procs: u32, seed: u64) -> Workload {
+    ior_spanned(0, IorPattern::SegmentedRandom, procs, sectors, sectors * 8, DEFAULT_REQ_SECTORS, seed)
+}
+
+#[test]
+fn ssd_systems_beat_native_on_random_loads() {
+    let w = random_ior(512 * 1024, 16, 1);
+    let native = simulate(&cfg(SystemKind::OrangeFs), &w);
+    let bb = simulate(&cfg(SystemKind::OrangeFsBB), &w);
+    let plus = simulate(&cfg(SystemKind::SsdupPlus), &w);
+    assert!(bb.throughput_mbps() > native.throughput_mbps() * 1.2, "BB {} vs native {}", bb.throughput_mbps(), native.throughput_mbps());
+    assert!(plus.throughput_mbps() > native.throughput_mbps() * 1.2, "SSDUP+ {} vs native {}", plus.throughput_mbps(), native.throughput_mbps());
+}
+
+#[test]
+fn ssdup_plus_within_bb_envelope_using_less_ssd() {
+    // the Fig 11 headline: comparable throughput, less SSD
+    let w = Workload::concurrent(
+        "mixed",
+        ior_spanned(0, IorPattern::SegmentedContiguous, 8, 262_144, 262_144 * 8, DEFAULT_REQ_SECTORS, 2),
+        random_ior(262_144, 8, 3),
+    );
+    let bb = simulate(&cfg(SystemKind::OrangeFsBB), &w);
+    let plus = simulate(&cfg(SystemKind::SsdupPlus), &w);
+    assert!(
+        plus.throughput_mbps() > bb.throughput_mbps() * 0.75,
+        "SSDUP+ {:.1} should be within 25% of BB {:.1}",
+        plus.throughput_mbps(),
+        bb.throughput_mbps()
+    );
+    assert!(
+        plus.ssd_bytes() < bb.ssd_bytes() * 8 / 10,
+        "SSDUP+ must save >20% SSD bytes: {} vs {}",
+        plus.ssd_bytes(),
+        bb.ssd_bytes()
+    );
+}
+
+#[test]
+fn ssdup_plus_saves_ssd_vs_ssdup_on_mixed_loads() {
+    let w = Workload::concurrent(
+        "mixed",
+        ior_spanned(0, IorPattern::SegmentedContiguous, 8, 262_144, 262_144 * 8, DEFAULT_REQ_SECTORS, 4),
+        random_ior(262_144, 8, 5),
+    );
+    let ssdup = simulate(&cfg(SystemKind::Ssdup), &w);
+    let plus = simulate(&cfg(SystemKind::SsdupPlus), &w);
+    assert!(
+        plus.ssd_bytes() <= ssdup.ssd_bytes(),
+        "adaptive threshold must not buffer more than static: {} vs {}",
+        plus.ssd_bytes(),
+        ssdup.ssd_bytes()
+    );
+}
+
+#[test]
+fn hpio_and_tileio_workloads_run_on_all_systems() {
+    let hpio = paper_mixed(256, 8, 131_072);
+    let tile = paper_pair(16, 131_072);
+    for system in SystemKind::ALL {
+        for w in [&hpio, &tile] {
+            let r = simulate(&cfg(system), w);
+            assert_eq!(r.total_bytes, w.total_bytes(), "{}/{}", system.name(), w.name);
+            assert!(r.throughput_mbps() > 0.0);
+            assert!(r.drained_us >= r.makespan_us);
+        }
+    }
+}
+
+#[test]
+fn per_app_stats_are_consistent() {
+    let w = Workload::concurrent(
+        "two-apps",
+        random_ior(131_072, 4, 6),
+        random_ior(131_072, 4, 7),
+    );
+    let r = simulate(&cfg(SystemKind::SsdupPlus), &w);
+    assert_eq!(r.per_app.len(), 2);
+    let bytes: u64 = r.per_app.iter().map(|a| a.bytes).sum();
+    assert_eq!(bytes, r.total_bytes);
+    for a in &r.per_app {
+        assert!(a.end_us > a.start_us);
+        assert!(a.end_us <= r.makespan_us);
+    }
+}
+
+#[test]
+fn queue_size_sweep_changes_stream_len_and_results() {
+    let w = ior_spanned(0, IorPattern::Strided, 16, 262_144, 262_144 * 8, DEFAULT_REQ_SECTORS, 8);
+    let r32 = simulate(&cfg(SystemKind::OrangeFs).with_queue_size(32), &w);
+    let r512 = simulate(&cfg(SystemKind::OrangeFs).with_queue_size(512), &w);
+    // allow jitter-level noise; the claim is "no substantial regression"
+    assert!(
+        r512.throughput_mbps() >= r32.throughput_mbps() * 0.95,
+        "bigger CFQ queue must not hurt: {} vs {}",
+        r512.throughput_mbps(),
+        r32.throughput_mbps()
+    );
+}
+
+#[test]
+fn detection_is_deterministic_across_backends_config() {
+    // same seed, same workload -> identical stream statistics
+    let w = random_ior(131_072, 8, 9);
+    let a = simulate(&cfg(SystemKind::SsdupPlus), &w);
+    let b = simulate(&cfg(SystemKind::SsdupPlus), &w);
+    assert_eq!(a.mean_percentage, b.mean_percentage);
+    assert_eq!(a.ssd_bytes(), b.ssd_bytes());
+    assert_eq!(a.makespan_us, b.makespan_us);
+}

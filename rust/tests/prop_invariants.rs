@@ -1,0 +1,193 @@
+//! Property-based invariants (in-tree quickcheck substrate): coordinator
+//! routing, batching, buffering and detection state machines.
+
+use ssdup::buffer::{AvlTree, BufferOutcome, Pipeline};
+use ssdup::detector::native::detect_stream;
+use ssdup::device::{Hdd, HddConfig};
+use ssdup::fs::StripeLayout;
+use ssdup::redirector::{AdaptivePolicy, PercentList, RoutePolicy};
+use ssdup::types::{Detection, Request};
+use ssdup::util::prng::Prng;
+use ssdup::util::quickcheck::forall;
+
+#[test]
+fn prop_avl_in_order_is_sorted_and_complete() {
+    forall(1, 300, "avl sorted+complete", |rng: &mut Prng, size| {
+        let n = rng.range(1, 2 + size * 8);
+        (0..n).map(|_| rng.gen_range(1 << 30) as i64).collect::<Vec<i64>>()
+    }, |keys| {
+        let mut t = AvlTree::new();
+        for &k in keys {
+            t.insert(k, ());
+        }
+        if t.check_invariants().is_err() {
+            return false;
+        }
+        let got: Vec<i64> = t.in_order().map(|(k, _)| k).collect();
+        let mut want = keys.clone();
+        want.sort_unstable();
+        want.dedup();
+        got == want
+    });
+}
+
+#[test]
+fn prop_detection_bounds_and_permutation_invariance() {
+    forall(2, 300, "detection invariants", |rng: &mut Prng, size| {
+        let n = rng.range(2, 2 + size * 8);
+        let reqs: Vec<(i32, i32)> = (0..n)
+            .map(|_| (rng.gen_range(1 << 24) as i32, 1 + rng.gen_range(2048) as i32))
+            .collect();
+        let mut perm = reqs.clone();
+        rng.shuffle(&mut perm);
+        (reqs, perm)
+    }, |(a, b)| {
+        let da = detect_stream(a);
+        let db = detect_stream(b);
+        da.s == db.s
+            && (0.0..=1.0).contains(&da.percentage)
+            && da.s <= a.len() as i32 - 1
+            && da.seek_cost_us >= 0.0
+    });
+}
+
+#[test]
+fn prop_percentlist_threshold_is_member_and_order_free() {
+    forall(3, 300, "threshold member", |rng: &mut Prng, size| {
+        let n = rng.range(1, 2 + size);
+        (0..n).map(|_| rng.f64() as f32).collect::<Vec<f32>>()
+    }, |ps| {
+        let mut l = PercentList::new(256);
+        for &p in ps {
+            l.insert(p);
+        }
+        let t = match l.threshold() {
+            Some(t) => t,
+            None => return false,
+        };
+        // member of the list and within [min, max]
+        l.values().contains(&t)
+            && t >= l.values()[0]
+            && t <= *l.values().last().unwrap()
+            && l.values().windows(2).all(|w| w[0] <= w[1])
+    });
+}
+
+#[test]
+fn prop_adaptive_policy_monotone_response() {
+    // a policy that saw only high percentages must route a max-random
+    // stream to SSD; one that saw only low percentages must route a
+    // zero-random stream to HDD
+    forall(4, 200, "adaptive extremes", |rng: &mut Prng, size| {
+        let n = rng.range(2, 2 + size);
+        let base = 0.2 + 0.6 * rng.f64() as f32;
+        (0..n).map(|_| (base + 0.1 * (rng.f64() as f32 - 0.5)).clamp(0.0, 1.0)).collect::<Vec<f32>>()
+    }, |ps| {
+        let mut policy = AdaptivePolicy::default();
+        for &p in ps {
+            policy.on_stream(&Detection { s: 0, percentage: p, seek_cost_us: 0.0 });
+        }
+        let hi = {
+            let mut p2 = policy.clone();
+            p2.on_stream(&Detection { s: 127, percentage: 1.0, seek_cost_us: 0.0 })
+        };
+        let lo = {
+            let mut p2 = policy.clone();
+            p2.on_stream(&Detection { s: 0, percentage: 0.0, seek_cost_us: 0.0 })
+        };
+        // a fully-random probe must not be routed worse than a fully-
+        // sequential probe from the same state
+        !(hi == ssdup::types::Route::Hdd && lo == ssdup::types::Route::Ssd)
+    });
+}
+
+#[test]
+fn prop_pipeline_conservation_under_random_ops() {
+    forall(5, 150, "pipeline conservation", |rng: &mut Prng, size| {
+        let cap = 2 * (64 + rng.gen_range(1 + size as u64 * 64) as i64);
+        let ops = rng.range(1, 2 + size * 16);
+        let seed = rng.next_u64();
+        (cap, ops, seed)
+    }, |&(cap, ops, seed)| {
+        let mut rng = Prng::new(seed);
+        let mut p = Pipeline::new(cap);
+        let mut buffered: i64 = 0;
+        let mut flushed: i64 = 0;
+        for i in 0..ops {
+            let size = 1 + rng.gen_range((cap as u64 / 4).max(1)) as i64;
+            match p.buffer(0, i as i64 * 10_000, size) {
+                BufferOutcome::Buffered { .. } | BufferOutcome::BufferedAndFull { .. } => {
+                    buffered += size;
+                }
+                BufferOutcome::Blocked => {
+                    if p.next_flush().is_some() {
+                        flushed += p.drain_flushing().iter().map(|e| e.size).sum::<i64>();
+                        p.flush_done();
+                    }
+                }
+            }
+        }
+        loop {
+            p.enqueue_residual_flush();
+            if p.next_flush().is_none() {
+                break;
+            }
+            flushed += p.drain_flushing().iter().map(|e| e.size).sum::<i64>();
+            p.flush_done();
+        }
+        !p.dirty() && buffered == flushed
+    });
+}
+
+#[test]
+fn prop_striping_conserves_and_localizes() {
+    forall(6, 300, "striping", |rng: &mut Prng, size| {
+        let nodes = rng.range(1, 5);
+        let stripe = 1 + rng.gen_range(256) as i32;
+        let off = rng.gen_range(1 << 20) as i32;
+        let len = 1 + rng.gen_range(1 + (size as u64) * 64) as i32;
+        (nodes, stripe, off, len)
+    }, |&(nodes, stripe, off, len)| {
+        let layout = StripeLayout { stripe_sectors: stripe, n_nodes: nodes };
+        let req = Request { app: 0, proc_id: 0, file: 1, offset: off, size: len };
+        let subs = layout.split(req);
+        let total: i32 = subs.iter().map(|s| s.size).sum();
+        total == len
+            && subs.iter().all(|s| s.node < nodes && s.size > 0 && s.local_offset >= 0)
+    });
+}
+
+#[test]
+fn prop_hdd_serves_everything_exactly_once() {
+    forall(7, 150, "hdd completeness", |rng: &mut Prng, size| {
+        let n = rng.range(1, 2 + size * 8);
+        let seed = rng.next_u64();
+        (n, seed)
+    }, |&(n, seed)| {
+        let mut rng = Prng::new(seed);
+        let mut h: Hdd<u32> = Hdd::new(HddConfig::default());
+        for i in 0..n {
+            h.enqueue(
+                rng.gen_range(1 << 30) as i64,
+                1 + rng.gen_range(1024) as i64,
+                rng.gen_range(8) as u32,
+                i as u32,
+            );
+        }
+        let mut served = Vec::new();
+        let mut now = 0;
+        loop {
+            if let Some(d) = h.try_dispatch(now) {
+                served.extend(d.tags);
+                now = d.done_at;
+                h.complete();
+            } else if let Some(dl) = h.idle_deadline() {
+                now = dl;
+            } else {
+                break;
+            }
+        }
+        served.sort_unstable();
+        served == (0..n as u32).collect::<Vec<_>>()
+    });
+}
