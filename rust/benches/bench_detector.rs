@@ -35,7 +35,12 @@ fn main() {
     }
 
     section("PJRT (HLO) detector — compiled JAX/Pallas artifact");
-    match ArtifactSet::load_default().and_then(Runtime::load) {
+    // ArtifactSet::load_default returns RtResult while Runtime::load is
+    // anyhow-based; lift the artifact error into anyhow before chaining
+    match ArtifactSet::load_default()
+        .map_err(anyhow::Error::from)
+        .and_then(Runtime::load)
+    {
         Ok(rt) => {
             let exec = rt.detector().expect("compile");
             // single stream padded into a batch (worst amortization)

@@ -1,0 +1,77 @@
+//! Live-engine benchmarks: shard-scaling throughput on `MemBackend` with
+//! synthetic device latency (the sleeps model real device service times,
+//! so shard parallelism — not memcpy speed — dominates, exactly like a
+//! real deployment), plus a `FileBackend` smoke bench.
+//!
+//! Run: `cargo bench --bench bench_live` (SSDUP_BENCH_FAST=1 to shrink).
+
+use ssdup::live::{self, LiveConfig, LiveEngine, SyntheticLatency};
+use ssdup::server::SystemKind;
+use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::util::benchkit::{bb, section, Bench};
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+use ssdup::workload::Workload;
+
+/// The benchmark workload: contiguous x random mix, `mib` MiB total.
+fn mixed(mib: i64, seed: u64) -> Workload {
+    let sectors = mib * 2048;
+    let span = sectors * 8;
+    Workload::concurrent(
+        "bench-mixed",
+        ior_spanned(0, IorPattern::SegmentedContiguous, 4, sectors / 2, span, DEFAULT_REQ_SECTORS, seed),
+        ior_spanned(0, IorPattern::SegmentedRandom, 4, sectors / 2, span, DEFAULT_REQ_SECTORS, seed + 1),
+    )
+}
+
+fn run_mem(shards: usize, w: &Workload) -> f64 {
+    let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(shards).with_ssd_mib(32);
+    let engine = LiveEngine::mem(&cfg, SyntheticLatency::ssd(), SyntheticLatency::hdd());
+    let report = live::run_load(&engine, w, 8);
+    engine.shutdown();
+    report.throughput_mbps()
+}
+
+fn main() {
+    let mut b = Bench::new().slow();
+    let w = mixed(64, 11);
+    let bytes = w.total_bytes() as f64;
+
+    section("live engine shard scaling (MemBackend, synthetic device latency)");
+    let mut mbps: Vec<(usize, f64)> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let name = format!("live/mem-shards-{shards}");
+        if Bench::should_run(&name) {
+            let mut last = 0.0;
+            b.run(&name, bytes, || {
+                last = run_mem(shards, &w);
+                bb(last)
+            });
+            mbps.push((shards, last));
+        }
+    }
+    if let (Some(one), Some(four)) =
+        (mbps.iter().find(|(s, _)| *s == 1), mbps.iter().find(|(s, _)| *s == 4))
+    {
+        println!(
+            "\nshard scaling: 1 shard {:.1} MB/s -> 4 shards {:.1} MB/s  ({:.2}x)",
+            one.1,
+            four.1,
+            four.1 / one.1.max(1e-9)
+        );
+    }
+
+    section("live engine on real files (FileBackend, page-cached)");
+    if Bench::should_run("live/file-shards-4") {
+        let dir = std::env::temp_dir().join(format!("ssdup-bench-live-{}", std::process::id()));
+        let wf = mixed(32, 13);
+        let fbytes = wf.total_bytes() as f64;
+        b.run("live/file-shards-4", fbytes, || {
+            let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(4).with_ssd_mib(16);
+            let engine = LiveEngine::file(&cfg, &dir).expect("file backends");
+            let report = live::run_load(&engine, &wf, 8);
+            engine.shutdown();
+            bb(report.throughput_mbps())
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

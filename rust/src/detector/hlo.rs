@@ -2,10 +2,13 @@
 //! JAX/Pallas module via PJRT. This is the production request path of the
 //! three-layer architecture; the native backend mirrors it for the
 //! simulator hot loop and for environments without artifacts.
+//!
+//! The PJRT half ([`HloDetector`]) requires the `pjrt` cargo feature; the
+//! [`DetectBackend`] abstraction and the native implementation are always
+//! available, and [`default_backend`] picks the best backend this build
+//! can offer.
 
-use anyhow::Result;
-
-use crate::runtime::xla_exec::DetectorExec;
+use crate::device::seek::SeekModel;
 use crate::types::Detection;
 
 /// Detection backend abstraction so the server can swap native/HLO.
@@ -24,46 +27,88 @@ impl DetectBackend for crate::detector::native::NativeDetector {
     }
 }
 
-/// PJRT-backed detector. Single streams are padded into the compiled
-/// batch; use [`HloDetector::detect_many`] to amortize the execute call
-/// over up to `batch` streams (the §Perf-preferred shape).
-pub struct HloDetector {
-    exec: DetectorExec,
-    pub executions: u64,
-    pub streams_detected: u64,
-}
-
-impl HloDetector {
-    pub fn new(exec: DetectorExec) -> Self {
-        Self { exec, executions: 0, streams_detected: 0 }
-    }
-
-    pub fn batch(&self) -> usize {
-        self.exec.batch
-    }
-
-    pub fn detect_many(&mut self, streams: &[Vec<(i32, i32)>]) -> Result<Vec<Detection>> {
-        self.executions += streams.len().div_ceil(self.exec.batch) as u64;
-        self.streams_detected += streams.len() as u64;
-        self.exec.run_all(streams)
-    }
-}
-
-impl DetectBackend for HloDetector {
-    fn detect(&mut self, reqs: &[(i32, i32)]) -> Detection {
-        if reqs.len() <= 1 {
-            return Detection { s: 0, percentage: 0.0, seek_cost_us: 0.0 };
+/// Best-available detection backend: the PJRT/HLO path when this build has
+/// the `pjrt` feature and the AOT artifacts are present, otherwise the
+/// bit-exact native mirror.
+pub fn default_backend(seek: SeekModel) -> Box<dyn DetectBackend> {
+    #[cfg(feature = "pjrt")]
+    {
+        if let Ok(rt) = crate::runtime::Runtime::load_default() {
+            if let Ok(exec) = rt.detector() {
+                return Box::new(HloDetector::new(exec));
+            }
         }
-        self.executions += 1;
-        self.streams_detected += 1;
-        self.exec
-            .run_batch(&[reqs])
-            .expect("PJRT detector execution failed")
-            .pop()
-            .expect("one detection per stream")
+    }
+    Box::new(crate::detector::native::NativeDetector::new(seek))
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::HloDetector;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use anyhow::Result;
+
+    use super::DetectBackend;
+    use crate::runtime::xla_exec::DetectorExec;
+    use crate::types::Detection;
+
+    /// PJRT-backed detector. Single streams are padded into the compiled
+    /// batch; use [`HloDetector::detect_many`] to amortize the execute call
+    /// over up to `batch` streams (the §Perf-preferred shape).
+    pub struct HloDetector {
+        exec: DetectorExec,
+        pub executions: u64,
+        pub streams_detected: u64,
     }
 
-    fn name(&self) -> &'static str {
-        "hlo"
+    impl HloDetector {
+        pub fn new(exec: DetectorExec) -> Self {
+            Self { exec, executions: 0, streams_detected: 0 }
+        }
+
+        pub fn batch(&self) -> usize {
+            self.exec.batch
+        }
+
+        pub fn detect_many(&mut self, streams: &[Vec<(i32, i32)>]) -> Result<Vec<Detection>> {
+            self.executions += streams.len().div_ceil(self.exec.batch) as u64;
+            self.streams_detected += streams.len() as u64;
+            self.exec.run_all(streams)
+        }
+    }
+
+    impl DetectBackend for HloDetector {
+        fn detect(&mut self, reqs: &[(i32, i32)]) -> Detection {
+            if reqs.len() <= 1 {
+                return Detection { s: 0, percentage: 0.0, seek_cost_us: 0.0 };
+            }
+            self.executions += 1;
+            self.streams_detected += 1;
+            self.exec
+                .run_batch(&[reqs])
+                .expect("PJRT detector execution failed")
+                .pop()
+                .expect("one detection per stream")
+        }
+
+        fn name(&self) -> &'static str {
+            "hlo"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_detects() {
+        let mut b = default_backend(SeekModel::default());
+        let contiguous: Vec<(i32, i32)> = (0..64).map(|i| (i * 512, 512)).collect();
+        let random: Vec<(i32, i32)> = (0..64).map(|i| (i * 99_991, 512)).collect();
+        assert_eq!(b.detect(&contiguous).s, 0);
+        assert_eq!(b.detect(&random).s, 63);
+        assert!(!b.name().is_empty());
     }
 }

@@ -1,17 +1,37 @@
-//! # SSDUP+ — traffic-aware SSD burst buffer (paper reproduction)
+//! # SSDUP+ — traffic-aware SSD burst buffer
 //!
-//! Rust + JAX + Pallas three-layer reproduction of *Optimizing the SSD
-//! Burst Buffer by Traffic Detection* (Shi et al.). The Rust layer (L3)
-//! hosts the paper's coordination contribution — request-stream detection,
-//! adaptive redirection, two-region pipelined flushing, AVL-tree buffer
-//! metadata — plus every substrate the evaluation needs (simulated
-//! HDD/SSD, an OrangeFS-like striping layer, workload generators, a
-//! deterministic DES engine). The per-stream analytics execute as an
-//! AOT-compiled XLA module authored in JAX/Pallas (see `python/compile/`);
-//! Python never runs on the request path.
+//! Rust + JAX/Pallas reproduction of *Optimizing the SSD Burst Buffer by
+//! Traffic Detection* (Shi et al.), grown into a runnable burst-buffer
+//! system. The crate hosts two execution substrates over one set of
+//! mechanism components:
 //!
-//! Start at [`server`] for the SSDUP+ I/O-node implementation, or
-//! [`experiments`] for the paper's tables and figures.
+//! * **Simulation** — a deterministic discrete-event cluster ([`sim`],
+//!   [`server`], [`device`]) that reproduces the paper's tables and
+//!   figures ([`experiments`]);
+//! * **Live engine** ([`live`]) — a real-time, multi-threaded runtime:
+//!   N shards, each with its own detector, routing policy, two-region
+//!   pipelined SSD log, and a background flusher implementing the
+//!   traffic-aware pause gate, over pluggable in-memory or real-file
+//!   storage backends (`ssdup live`).
+//!
+//! Both substrates share the paper's mechanisms:
+//!
+//! * [`detector`] — request-stream grouping + random-factor scoring
+//!   (§2.2). The scoring math is authored as JAX/Pallas kernels
+//!   (`python/compile/`), AOT-lowered to HLO and executed via PJRT when
+//!   the `pjrt` feature is on; a bit-exact native Rust mirror covers the
+//!   hot loop and offline builds;
+//! * [`redirector`] — per-stream SSD/HDD routing: the paper's adaptive
+//!   threshold (Algorithm 1) plus the SSDUP/OrangeFS baselines (§2.3);
+//! * [`buffer`] — log-structured appends, AVL metadata, and the
+//!   two-region flush pipeline (§2.4–2.5);
+//! * [`fs`], [`workload`], [`util`] — OrangeFS-like striping, the
+//!   paper's benchmark workloads, and the in-tree substrate (PRNG, JSON,
+//!   CLI, bench harness, thread pool) the offline image can't pull from
+//!   crates.io.
+//!
+//! Start at [`live`] for the running system, [`server`] for the simulated
+//! I/O node, or [`experiments`] for the paper's tables and figures.
 
 pub mod device;
 pub mod fs;
@@ -25,8 +45,9 @@ pub fn version() -> &'static str {
 
 pub mod buffer;
 pub mod detector;
+pub mod experiments;
+pub mod live;
 pub mod redirector;
 pub mod runtime;
 pub mod server;
 pub mod workload;
-pub mod experiments;

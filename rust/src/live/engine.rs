@@ -1,0 +1,400 @@
+//! The live burst-buffer engine: N shards behind an OrangeFS-style stripe.
+//!
+//! Each shard is the live counterpart of one simulated I/O node (same
+//! striping, same detection feed, same routing policies), so a
+//! `LiveEngine` with `shards = K` is directly comparable to
+//! `sim::simulate` with `nodes = K` — the parity tests lean on that.
+//! Clients call [`LiveEngine::submit`] from any number of threads; each
+//! logical request is split into per-shard sub-requests that carry the
+//! matching slice of the payload. Requests return when every byte is on a
+//! backend (SSD log or HDD), and [`LiveEngine::drain`] settles all
+//! buffered data onto the HDD backends.
+
+use std::io;
+use std::path::Path;
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::device::SeekModel;
+use crate::fs::StripeLayout;
+use crate::live::backend::{Backend, FileBackend, MemBackend, SyntheticLatency};
+use crate::live::payload;
+use crate::live::shard::{Shard, ShardConfig, ShardStats};
+use crate::server::config::SystemKind;
+use crate::types::{mib_to_sectors, Request, SECTOR_BYTES};
+use crate::workload::Workload;
+
+/// Live-engine configuration. Defaults mirror the simulator's testbed
+/// shape (64 KB stripes, CFQ-depth-128 streams, SSDUP+ policies) with a
+/// 1 GiB per-shard SSD budget.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveConfig {
+    pub system: SystemKind,
+    pub shards: usize,
+    pub stripe_sectors: i32,
+    pub stream_len: usize,
+    /// per-shard SSD buffer capacity in sectors (two regions of half)
+    pub ssd_capacity_sectors: i64,
+    pub pause_below: f32,
+    pub history: usize,
+    pub flush_check: Duration,
+    pub seek: SeekModel,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        Self::new(SystemKind::SsdupPlus)
+    }
+}
+
+impl LiveConfig {
+    pub fn new(system: SystemKind) -> Self {
+        Self {
+            system,
+            shards: 4,
+            stripe_sectors: 128,
+            stream_len: 128,
+            ssd_capacity_sectors: mib_to_sectors(1024),
+            pause_below: 0.45,
+            history: 64,
+            flush_check: Duration::from_millis(20),
+            seek: SeekModel::default(),
+        }
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        self.shards = shards;
+        self
+    }
+
+    pub fn with_ssd_mib(mut self, mib: u64) -> Self {
+        self.ssd_capacity_sectors = mib_to_sectors(mib);
+        self
+    }
+
+    pub fn with_stream_len(mut self, len: usize) -> Self {
+        self.stream_len = len;
+        self
+    }
+
+    fn shard_config(&self) -> ShardConfig {
+        ShardConfig {
+            system: self.system,
+            ssd_capacity_sectors: self.ssd_capacity_sectors,
+            stream_len: self.stream_len,
+            pause_below: self.pause_below,
+            history: self.history,
+            flush_check: self.flush_check,
+            seek: self.seek,
+        }
+    }
+}
+
+/// Outcome of [`LiveEngine::verify_workload`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerifyReport {
+    pub checked_bytes: u64,
+    pub mismatched_sectors: u64,
+}
+
+impl VerifyReport {
+    pub fn is_ok(&self) -> bool {
+        self.mismatched_sectors == 0
+    }
+}
+
+/// Map a shard-local sector back to its logical file sector — the inverse
+/// of the round-robin stripe mapping (shared by payload gather + verify).
+#[inline]
+fn logical_sector(stripe: &StripeLayout, node: usize, local: i64) -> i64 {
+    let s = stripe.stripe_sectors as i64;
+    ((local / s) * stripe.n_nodes as i64 + node as i64) * s + (local % s)
+}
+
+pub struct LiveEngine {
+    shards: Vec<Arc<Shard>>,
+    flushers: Vec<JoinHandle<()>>,
+    stripe: StripeLayout,
+}
+
+impl LiveEngine {
+    /// Build an engine over caller-provided `(ssd, hdd)` backend pairs.
+    pub fn with_backends(
+        cfg: &LiveConfig,
+        mut backends: impl FnMut(usize) -> (Box<dyn Backend>, Box<dyn Backend>),
+    ) -> Self {
+        assert!(cfg.shards >= 1, "need at least one shard");
+        let stripe = StripeLayout { stripe_sectors: cfg.stripe_sectors, n_nodes: cfg.shards };
+        let shard_cfg = cfg.shard_config();
+        let mut shards = Vec::with_capacity(cfg.shards);
+        let mut flushers = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let (ssd, hdd) = backends(i);
+            let shard = Arc::new(Shard::new(&shard_cfg, ssd, hdd));
+            let worker = Arc::clone(&shard);
+            flushers.push(
+                thread::Builder::new()
+                    .name(format!("ssdup-flusher-{i}"))
+                    .spawn(move || worker.flusher_loop())
+                    .expect("spawn flusher thread"),
+            );
+            shards.push(shard);
+        }
+        Self { shards, flushers, stripe }
+    }
+
+    /// All-in-memory engine (unit tests, benches).
+    pub fn mem(cfg: &LiveConfig, ssd_latency: SyntheticLatency, hdd_latency: SyntheticLatency) -> Self {
+        Self::with_backends(cfg, |_| {
+            (
+                Box::new(MemBackend::new(ssd_latency)) as Box<dyn Backend>,
+                Box::new(MemBackend::new(hdd_latency)) as Box<dyn Backend>,
+            )
+        })
+    }
+
+    /// Real-file engine: per shard, an SSD log file and a sparse HDD image
+    /// under `dir`.
+    pub fn file(cfg: &LiveConfig, dir: &Path) -> io::Result<Self> {
+        // create all backends up front so I/O errors surface before any
+        // flusher thread spawns
+        let mut pairs = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let ssd = FileBackend::create(&dir.join(format!("shard{i}-ssd.log")))?;
+            let hdd = FileBackend::create(&dir.join(format!("shard{i}-hdd.img")))?;
+            pairs.push((Box::new(ssd) as Box<dyn Backend>, Box::new(hdd) as Box<dyn Backend>));
+        }
+        let mut pairs = pairs.into_iter();
+        Ok(Self::with_backends(cfg, move |_| pairs.next().expect("one backend pair per shard")))
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Write one logical request. Splits it across shards, handing each
+    /// sub-request the matching slice of `payload`; returns when every
+    /// byte is accepted by a backend (closed-loop semantics).
+    ///
+    /// Burst semantics: sectors are expected to be written once between
+    /// drains (see the module docs on cross-route rewrites).
+    pub fn submit(&self, req: Request, payload: &[u8]) {
+        debug_assert_eq!(payload.len() as u64, req.bytes(), "payload must match request size");
+        let sector = SECTOR_BYTES as usize;
+        let stripe_len = self.stripe.stripe_sectors as i64;
+        let mut sub_buf: Vec<u8> = Vec::new();
+        for sub in self.stripe.split(req) {
+            // gather the sub's sectors out of the logical payload via the
+            // stripe bijection (local -> logical is identity within a
+            // stripe): stripe-sized runs appended in order, no zero-fill
+            sub_buf.clear();
+            let mut k = 0i64;
+            while k < sub.size as i64 {
+                let local = sub.local_offset as i64 + k;
+                let logical = logical_sector(&self.stripe, sub.node, local);
+                let run = (stripe_len - local % stripe_len).min(sub.size as i64 - k);
+                let src = (logical - req.offset as i64) as usize * sector;
+                let len = run as usize * sector;
+                sub_buf.extend_from_slice(&payload[src..src + len]);
+                k += run;
+            }
+            debug_assert_eq!(sub_buf.len() as u64, sub.bytes());
+            self.shards[sub.node].submit(&sub, &sub_buf);
+        }
+    }
+
+    /// Settle every buffered byte onto the HDD backends and sync them.
+    /// Call after all producers have finished submitting.
+    pub fn drain(&self) {
+        for shard in &self.shards {
+            shard.begin_drain();
+        }
+        for shard in &self.shards {
+            shard.wait_drained();
+        }
+        for shard in &self.shards {
+            shard.sync();
+        }
+    }
+
+    /// Re-derive the deterministic payload of every request in `workload`
+    /// and compare it against what the HDD backends actually hold. Only
+    /// meaningful after [`LiveEngine::drain`], and only for workloads whose
+    /// payloads came from [`payload::fill`] (the load generator's).
+    pub fn verify_workload(&self, workload: &Workload) -> VerifyReport {
+        let sector = SECTOR_BYTES as usize;
+        let stripe_len = self.stripe.stripe_sectors as i64;
+        let mut report = VerifyReport::default();
+        let mut expect: Vec<u8> = Vec::new();
+        let mut got: Vec<u8> = Vec::new();
+        for proc in &workload.processes {
+            for req in &proc.reqs {
+                // resize without clear: fill/read_hdd overwrite fully, so
+                // same-size iterations skip the redundant zeroing
+                expect.resize(req.bytes() as usize, 0);
+                payload::fill(req.file, req.offset as i64, &mut expect);
+                for sub in self.stripe.split(*req) {
+                    got.resize(sub.bytes() as usize, 0);
+                    self.shards[sub.node].read_hdd(sub.parent.file, sub.local_offset, &mut got);
+                    // compare stripe-sized runs; only a mismatching run
+                    // pays the per-sector recount
+                    let mut k = 0i64;
+                    while k < sub.size as i64 {
+                        let local = sub.local_offset as i64 + k;
+                        let logical = logical_sector(&self.stripe, sub.node, local);
+                        let run = (stripe_len - local % stripe_len).min(sub.size as i64 - k);
+                        let src = (logical - req.offset as i64) as usize * sector;
+                        let dst = k as usize * sector;
+                        let len = run as usize * sector;
+                        if got[dst..dst + len] != expect[src..src + len] {
+                            for s in 0..run as usize {
+                                let (d, e) = (dst + s * sector, src + s * sector);
+                                if got[d..d + sector] != expect[e..e + sector] {
+                                    report.mismatched_sectors += 1;
+                                }
+                            }
+                        }
+                        report.checked_bytes += len as u64;
+                        k += run;
+                    }
+                }
+            }
+        }
+        report
+    }
+
+    /// Snapshot per-shard statistics.
+    pub fn stats(&self) -> Vec<ShardStats> {
+        self.shards.iter().map(|s| s.stats()).collect()
+    }
+
+    /// Fraction of ingested bytes that went through the SSD buffer.
+    pub fn ssd_ratio(&self) -> f64 {
+        crate::live::shard::ssd_ratio(&self.stats())
+    }
+
+    /// Drain, stop the flusher threads, and return the final stats.
+    pub fn shutdown(mut self) -> Vec<ShardStats> {
+        self.drain();
+        let stats = self.stats();
+        for shard in &self.shards {
+            shard.request_shutdown();
+        }
+        for handle in self.flushers.drain(..) {
+            let _ = handle.join();
+        }
+        stats
+    }
+}
+
+impl Drop for LiveEngine {
+    fn drop(&mut self) {
+        for shard in &self.shards {
+            shard.request_shutdown();
+        }
+        for handle in self.flushers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DEFAULT_REQ_SECTORS;
+
+    fn fast_cfg(system: SystemKind, shards: usize) -> LiveConfig {
+        let mut c = LiveConfig::new(system).with_shards(shards).with_ssd_mib(64);
+        c.flush_check = Duration::from_millis(2);
+        c
+    }
+
+    fn submit_pattern(engine: &LiveEngine, file: u32, offsets: &[i32]) {
+        let mut buf = vec![0u8; (DEFAULT_REQ_SECTORS as u64 * SECTOR_BYTES) as usize];
+        for &off in offsets {
+            payload::fill(file, off as i64, &mut buf);
+            let req =
+                Request { app: 0, proc_id: 0, file, offset: off, size: DEFAULT_REQ_SECTORS };
+            engine.submit(req, &buf);
+        }
+    }
+
+    #[test]
+    fn logical_sector_inverts_striping() {
+        let stripe = StripeLayout { stripe_sectors: 128, n_nodes: 3 };
+        // every logical sector maps to (node, local) and back
+        for logical in [0i64, 1, 127, 128, 129, 4000, 99_999] {
+            let stripe_idx = logical / 128;
+            let node = (stripe_idx % 3) as usize;
+            let local = (stripe_idx / 3) * 128 + logical % 128;
+            assert_eq!(logical_sector(&stripe, node, local), logical, "logical={logical}");
+        }
+    }
+
+    #[test]
+    fn contiguous_writes_land_on_hdd_directly() {
+        let engine = LiveEngine::mem(
+            &fast_cfg(SystemKind::SsdupPlus, 2),
+            SyntheticLatency::ZERO,
+            SyntheticLatency::ZERO,
+        );
+        let offsets: Vec<i32> = (0..256).map(|i| i * DEFAULT_REQ_SECTORS).collect();
+        submit_pattern(&engine, 1, &offsets);
+        engine.drain();
+        assert!(
+            engine.ssd_ratio() < 0.3,
+            "contiguous load should bypass the SSD, got {}",
+            engine.ssd_ratio()
+        );
+        let w = workload_from_offsets(1, &offsets);
+        let report = engine.verify_workload(&w);
+        assert!(report.is_ok(), "{report:?}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn random_writes_are_buffered_then_verifiable() {
+        let engine = LiveEngine::mem(
+            &fast_cfg(SystemKind::SsdupPlus, 2),
+            SyntheticLatency::ZERO,
+            SyntheticLatency::ZERO,
+        );
+        // sparse pseudo-random offsets (distinct + sector-aligned). 512
+        // requests = 4 streams per shard: the first is routed by the
+        // bootstrap direction (HDD), the rest must go to SSD.
+        let mut rng = crate::util::prng::Prng::new(11);
+        let mut offsets: Vec<i32> =
+            (0..512).map(|i| (i * 97 + rng.gen_range(64) as i32) * 4096).collect();
+        rng.shuffle(&mut offsets);
+        submit_pattern(&engine, 1, &offsets);
+        engine.drain();
+        assert!(
+            engine.ssd_ratio() > 0.5,
+            "random load should be buffered, got {}",
+            engine.ssd_ratio()
+        );
+        let w = workload_from_offsets(1, &offsets);
+        let report = engine.verify_workload(&w);
+        assert!(report.is_ok(), "{report:?}");
+        let stats = engine.shutdown();
+        assert!(stats.iter().map(|s| s.flushed_bytes).sum::<u64>() > 0, "flusher moved data");
+    }
+
+    fn workload_from_offsets(file: u32, offsets: &[i32]) -> Workload {
+        let reqs = offsets
+            .iter()
+            .map(|&off| Request { app: 0, proc_id: 0, file, offset: off, size: DEFAULT_REQ_SECTORS })
+            .collect();
+        Workload {
+            name: "unit".into(),
+            processes: vec![crate::workload::ProcessWorkload {
+                app: 0,
+                proc_id: 0,
+                reqs,
+                after_app: None,
+            }],
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! One live burst-buffer shard: the real-time analogue of the simulator's
+//! per-I/O-node server.
+//!
+//! A shard owns a detector + routing policy + two-region pipeline plus an
+//! SSD/HDD backend pair, and splits work across two lock domains:
+//!
+//! * the **core** mutex guards all coordination state (pipeline metadata,
+//!   stream grouper, policy, file table, stats). Ingest holds it while
+//!   routing, appending to the SSD log, and feeding the detector — a
+//!   shard's ingest is serial by design (the scaling unit is the shard);
+//! * the **device** mutexes (`ssd`, `hdd`) guard the backends alone, so
+//!   the background flusher moves region bytes SSD→HDD *without* the core
+//!   lock — buffering and flushing overlap, which is the whole point of
+//!   the paper's two-region pipeline (§2.4).
+//!
+//! Lock order is always core → device; the flusher takes devices only.
+//! Backpressure is physical: a write that finds both regions unavailable
+//! blocks its client on a condvar until the flusher frees a region —
+//! the paper's "the system waits until a region becomes empty".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::buffer::{BufferOutcome, FlushStrategy, Pipeline};
+use crate::detector::native::NativeDetector;
+use crate::detector::stream::StreamGrouper;
+use crate::device::SeekModel;
+use crate::fs::{FileTable, SubRequest};
+use crate::live::backend::Backend;
+use crate::redirector::{AdaptivePolicy, AlwaysHdd, AlwaysSsd, RoutePolicy, WatermarkPolicy};
+use crate::server::config::SystemKind;
+use crate::types::{Route, SECTOR_BYTES};
+
+/// Per-shard configuration (the engine derives one from its `LiveConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    pub system: SystemKind,
+    /// whole-SSD budget in sectors; each pipeline region gets half
+    pub ssd_capacity_sectors: i64,
+    pub stream_len: usize,
+    pub pause_below: f32,
+    pub history: usize,
+    /// re-check interval for paused flushes and condvar waits
+    pub flush_check: Duration,
+    pub seek: SeekModel,
+}
+
+/// Counters a shard accumulates; snapshot via [`Shard::stats`].
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub bytes_in: u64,
+    pub ssd_bytes_buffered: u64,
+    pub hdd_direct_bytes: u64,
+    pub flushed_bytes: u64,
+    pub streams: u64,
+    pub flushes: u64,
+    pub flush_pauses: u64,
+    pub flush_pause_us: u64,
+    pub blocked_waits: u64,
+    pub pct_sum: f64,
+}
+
+impl ShardStats {
+    /// Mean random percentage over this shard's completed streams.
+    pub fn mean_percentage(&self) -> f64 {
+        if self.streams == 0 {
+            0.0
+        } else {
+            self.pct_sum / self.streams as f64
+        }
+    }
+}
+
+/// Fraction of ingested bytes that went through the SSD buffer, over a
+/// set of shard stats (shared by the engine and the load-gen report).
+pub fn ssd_ratio(stats: &[ShardStats]) -> f64 {
+    let total: u64 = stats.iter().map(|s| s.bytes_in).sum();
+    let ssd: u64 = stats.iter().map(|s| s.ssd_bytes_buffered).sum();
+    if total == 0 {
+        0.0
+    } else {
+        ssd as f64 / total as f64
+    }
+}
+
+/// Everything guarded by the core mutex.
+struct ShardCore {
+    files: FileTable,
+    grouper: StreamGrouper,
+    detector: NativeDetector,
+    policy: Box<dyn RoutePolicy + Send>,
+    route: Route,
+    pipeline: Pipeline,
+    drained: bool,
+    shutdown: bool,
+    /// set by the flusher on a backend I/O error, with the cause; waiters
+    /// surface it instead of polling a pipeline that can never drain
+    failed: Option<String>,
+    stats: ShardStats,
+}
+
+pub struct Shard {
+    core: Mutex<ShardCore>,
+    ssd: Mutex<Box<dyn Backend>>,
+    hdd: Mutex<Box<dyn Backend>>,
+    /// signalled when the flusher frees a region (blocked ingest, drain)
+    space: Condvar,
+    /// signalled when flush work appears or the pause gate may open
+    work: Condvar,
+    /// direct-to-HDD writes currently in flight (traffic-aware gate input)
+    direct_inflight: AtomicU64,
+    strategy: FlushStrategy,
+    half_sectors: i64,
+    use_ssd: bool,
+    flush_check: Duration,
+}
+
+fn policy_for(system: SystemKind, history: usize) -> Box<dyn RoutePolicy + Send> {
+    match system {
+        SystemKind::OrangeFs => Box::new(AlwaysHdd),
+        SystemKind::OrangeFsBB => Box::new(AlwaysSsd),
+        SystemKind::Ssdup => Box::<WatermarkPolicy>::default(),
+        SystemKind::SsdupPlus => Box::new(AdaptivePolicy::new(history)),
+    }
+}
+
+impl Shard {
+    pub fn new(cfg: &ShardConfig, ssd: Box<dyn Backend>, hdd: Box<dyn Backend>) -> Self {
+        let policy = policy_for(cfg.system, cfg.history);
+        let route = policy.initial_route();
+        let strategy = match cfg.system {
+            SystemKind::SsdupPlus => FlushStrategy::TrafficAware { pause_below: cfg.pause_below },
+            _ => FlushStrategy::Immediate,
+        };
+        Shard {
+            core: Mutex::new(ShardCore {
+                files: FileTable::new(),
+                grouper: StreamGrouper::new(cfg.stream_len),
+                detector: NativeDetector::new(cfg.seek),
+                policy,
+                route,
+                pipeline: Pipeline::new(cfg.ssd_capacity_sectors),
+                drained: false,
+                shutdown: false,
+                failed: None,
+                stats: ShardStats::default(),
+            }),
+            ssd: Mutex::new(ssd),
+            hdd: Mutex::new(hdd),
+            space: Condvar::new(),
+            work: Condvar::new(),
+            direct_inflight: AtomicU64::new(0),
+            strategy,
+            half_sectors: cfg.ssd_capacity_sectors / 2,
+            use_ssd: cfg.system.uses_ssd(),
+            flush_check: cfg.flush_check,
+        }
+    }
+
+    /// Ingest one sub-request with its payload. Blocks (physical
+    /// backpressure) while both pipeline regions are unavailable.
+    pub fn submit(&self, sub: &SubRequest, payload: &[u8]) {
+        let size = sub.size as i64;
+        debug_assert_eq!(payload.len() as u64, sub.bytes());
+        let mut direct_dest: Option<u64> = None;
+        {
+            let mut core = self.core.lock().unwrap();
+            let lba = core.files.lba(sub.parent.file, sub.local_offset);
+            debug_assert!(lba <= i32::MAX as i64, "LBA exceeds detector i32 space");
+            core.stats.bytes_in += payload.len() as u64;
+            // a sub-request larger than a region could never buffer:
+            // route it directly to HDD (safety valve)
+            let route = if !self.use_ssd || size > self.half_sectors {
+                Route::Hdd
+            } else {
+                core.route
+            };
+            match route {
+                Route::Hdd => {
+                    core.stats.hdd_direct_bytes += payload.len() as u64;
+                    // counted under the core lock so the flusher's gate
+                    // sees the direct traffic the moment it is decided
+                    self.direct_inflight.fetch_add(1, Ordering::SeqCst);
+                    direct_dest = Some(lba as u64 * SECTOR_BYTES);
+                }
+                Route::Ssd => loop {
+                    match core.pipeline.buffer(sub.parent.file, sub.local_offset as i64, size) {
+                        BufferOutcome::Buffered { region, ssd_offset } => {
+                            if let Err(e) = self.write_ssd(region, ssd_offset, payload) {
+                                self.fail_and_panic(core, format!("ssd backend write: {e}"));
+                            }
+                            core.stats.ssd_bytes_buffered += payload.len() as u64;
+                            break;
+                        }
+                        BufferOutcome::BufferedAndFull { region, ssd_offset, .. } => {
+                            if let Err(e) = self.write_ssd(region, ssd_offset, payload) {
+                                self.fail_and_panic(core, format!("ssd backend write: {e}"));
+                            }
+                            core.stats.ssd_bytes_buffered += payload.len() as u64;
+                            self.work.notify_all(); // a region is ready to flush
+                            break;
+                        }
+                        BufferOutcome::Blocked => {
+                            // "the system waits until a region becomes
+                            // empty" — closed-loop backpressure
+                            core.stats.blocked_waits += 1;
+                            self.work.notify_all();
+                            core = self.space.wait_timeout(core, self.flush_check).unwrap().0;
+                            if let Some(msg) = core.failed.clone() {
+                                drop(core); // release before panicking: no poisoning
+                                panic!("shard failed while blocked on a region: {msg}");
+                            }
+                            if core.shutdown {
+                                return;
+                            }
+                        }
+                    }
+                },
+            }
+            // server-side detection feeds on the post-striping disk address
+            if let Some(stream) = core.grouper.push_parts(sub.parent.app, lba as i32, sub.size) {
+                let det = core.detector.detect(&stream.reqs);
+                core.stats.streams += 1;
+                core.stats.pct_sum += det.percentage as f64;
+                core.route = core.policy.on_stream(&det);
+                // a route change can unpause the traffic-aware flusher
+                self.work.notify_all();
+            }
+        }
+        if let Some(dest) = direct_dest {
+            let wrote = self.hdd.lock().unwrap().write_at(dest, payload);
+            if self.direct_inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                // direct traffic ebbed: the traffic-aware gate may open
+                self.work.notify_all();
+            }
+            if let Err(e) = wrote {
+                // no lock is held here, so the panic poisons nothing
+                self.fail(format!("hdd backend write: {e}"));
+                panic!("shard hdd write failed: {e}");
+            }
+        }
+    }
+
+    /// Append `payload` into the SSD log at the pipeline-assigned slot.
+    /// Called with the core lock held (core → device order), which is what
+    /// guarantees the flusher's `drain_flushing` only ever sees regions
+    /// whose bytes are fully on the backend.
+    fn write_ssd(&self, region: usize, ssd_offset: i64, payload: &[u8]) -> std::io::Result<()> {
+        let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
+        let mut ssd = self.ssd.lock().unwrap();
+        ssd.write_at(base + ssd_offset as u64 * SECTOR_BYTES, payload)
+    }
+
+    /// Record a failure, release the core lock, wake all waiters, and
+    /// panic in the calling thread — without poisoning any mutex.
+    fn fail_and_panic(&self, mut core: std::sync::MutexGuard<'_, ShardCore>, msg: String) -> ! {
+        core.failed.get_or_insert(msg.clone());
+        drop(core);
+        self.space.notify_all();
+        self.work.notify_all();
+        panic!("shard failed: {msg}");
+    }
+
+    /// Read back `buf.len()` bytes the shard's HDD holds for
+    /// `(file, local_offset)` — verification path.
+    pub fn read_hdd(&self, file: u32, local_offset: i32, buf: &mut [u8]) {
+        let lba = self.core.lock().unwrap().files.lba(file, local_offset);
+        let read = self.hdd.lock().unwrap().read_at(lba as u64 * SECTOR_BYTES, buf);
+        // result is inspected after the guard dropped: no poisoning
+        read.expect("hdd backend read");
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        self.core.lock().unwrap().stats.clone()
+    }
+
+    /// Background flusher: runs on its own thread until shutdown, or until
+    /// the shard is drained clean.
+    pub(crate) fn flusher_loop(&self) {
+        // reused bounded copy buffer: one allocation for the thread's life
+        let mut chunk = vec![0u8; 1 << 20];
+        loop {
+            // ---- acquire the next region to flush (or exit) ----
+            let resolved: Vec<(u64, u64, usize)> = {
+                let mut core = self.core.lock().unwrap();
+                let region = loop {
+                    if core.shutdown || core.failed.is_some() {
+                        return;
+                    }
+                    if core.drained
+                        && core.pipeline.flushing_region().is_none()
+                        && core.pipeline.flush_pending.is_empty()
+                    {
+                        core.pipeline.enqueue_residual_flush();
+                    }
+                    if let Some(r) = core.pipeline.next_flush() {
+                        break r;
+                    }
+                    if core.drained && !core.pipeline.dirty() {
+                        self.space.notify_all();
+                        return;
+                    }
+                    core = self.work.wait_timeout(core, self.flush_check).unwrap().0;
+                };
+                let region_base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
+                let extents = core.pipeline.drain_flushing();
+                core.stats.flushes += 1;
+                // resolve byte addresses now: the FileTable lives in core
+                extents
+                    .iter()
+                    .map(|e| {
+                        let lba = core.files.lba(e.file, e.orig_offset as i32);
+                        (
+                            region_base + e.ssd_offset as u64 * SECTOR_BYTES,
+                            lba as u64 * SECTOR_BYTES,
+                            (e.size as u64 * SECTOR_BYTES) as usize,
+                        )
+                    })
+                    .collect()
+            };
+
+            // ---- gate + copy, without the core lock ----
+            let mut moved = 0u64;
+            for (ssd_byte, hdd_byte, len) in resolved {
+                if !self.gate_extent() {
+                    return; // shutdown while paused
+                }
+                let mut done = 0usize;
+                while done < len {
+                    let take = chunk.len().min(len - done);
+                    let read =
+                        self.ssd.lock().unwrap().read_at(ssd_byte + done as u64, &mut chunk[..take]);
+                    if let Err(e) = read {
+                        self.fail(format!("flusher: ssd backend read: {e}"));
+                        return;
+                    }
+                    let write =
+                        self.hdd.lock().unwrap().write_at(hdd_byte + done as u64, &chunk[..take]);
+                    if let Err(e) = write {
+                        self.fail(format!("flusher: hdd backend write: {e}"));
+                        return;
+                    }
+                    done += take;
+                }
+                moved += len as u64;
+            }
+
+            // ---- complete: free the region, wake blocked ingest ----
+            {
+                let mut core = self.core.lock().unwrap();
+                core.pipeline.flush_done();
+                core.stats.flushed_bytes += moved;
+            }
+            self.space.notify_all();
+        }
+    }
+
+    /// Traffic-aware pause gate, re-evaluated per flush extent like the
+    /// DES flusher. Returns false only on shutdown or shard failure.
+    fn gate_extent(&self) -> bool {
+        let mut core = self.core.lock().unwrap();
+        let mut paused_at: Option<Instant> = None;
+        loop {
+            if core.shutdown || core.failed.is_some() {
+                return false;
+            }
+            let pct = core.policy.current_percentage().unwrap_or(1.0);
+            let direct = self.direct_inflight.load(Ordering::SeqCst) > 0;
+            if self.strategy.allow_flush(pct, direct, core.drained) {
+                break;
+            }
+            if paused_at.is_none() {
+                paused_at = Some(Instant::now());
+                core.stats.flush_pauses += 1;
+            }
+            core = self.work.wait_timeout(core, self.flush_check).unwrap().0;
+        }
+        if let Some(t0) = paused_at {
+            core.stats.flush_pause_us += t0.elapsed().as_micros() as u64;
+        }
+        true
+    }
+
+    /// All producers have finished: flush any partial detection stream and
+    /// queue the residual region.
+    pub(crate) fn begin_drain(&self) {
+        {
+            let mut core = self.core.lock().unwrap();
+            core.drained = true;
+            if let Some(stream) = core.grouper.flush_partial() {
+                let det = core.detector.detect(&stream.reqs);
+                core.stats.streams += 1;
+                core.stats.pct_sum += det.percentage as f64;
+                core.route = core.policy.on_stream(&det);
+            }
+            core.pipeline.enqueue_residual_flush();
+        }
+        self.work.notify_all();
+    }
+
+    /// Record a fatal flusher error and wake every waiter so it surfaces
+    /// in a caller thread instead of hanging the engine.
+    fn fail(&self, msg: String) {
+        self.core.lock().unwrap().failed.get_or_insert(msg);
+        self.space.notify_all();
+        self.work.notify_all();
+    }
+
+    /// Block until every buffered byte has reached the HDD backend.
+    /// Panics (in the caller's thread) if the flusher hit a backend I/O
+    /// error — buffered data can then never drain.
+    pub(crate) fn wait_drained(&self) {
+        let mut core = self.core.lock().unwrap();
+        while core.pipeline.dirty() {
+            if let Some(msg) = core.failed.clone() {
+                drop(core); // release before panicking: no poisoning
+                panic!("shard failed before drain completed: {msg}");
+            }
+            core = self.space.wait_timeout(core, self.flush_check).unwrap().0;
+        }
+    }
+
+    /// Flush both backends to durable storage.
+    pub(crate) fn sync(&self) {
+        let ssd = self.ssd.lock().unwrap().sync();
+        ssd.expect("ssd sync");
+        let hdd = self.hdd.lock().unwrap().sync();
+        hdd.expect("hdd sync");
+    }
+
+    pub(crate) fn request_shutdown(&self) {
+        self.core.lock().unwrap().shutdown = true;
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+}

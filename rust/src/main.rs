@@ -1,22 +1,25 @@
-//! `ssdup` — CLI for the SSDUP+ reproduction.
+//! `ssdup` — CLI for the SSDUP+ reproduction + live engine.
 //!
 //! Subcommands:
 //!   exp <id>|all   regenerate a paper table/figure (see `ssdup list`)
 //!   list           list experiment ids
 //!   run            run one simulation (system/pattern/procs flags)
+//!   live           run the real-time sharded engine on a live workload
 //!   runtime-info   verify artifacts + PJRT round-trip
 //!   version        print version
 
 use ssdup::experiments::{self, Scale};
+use ssdup::live::{self, LiveConfig, LiveEngine, SyntheticLatency};
 use ssdup::server::{simulate, SimConfig, SystemKind};
 use ssdup::util::cli::Args;
 use ssdup::util::json::Json;
 use ssdup::util::threadpool::ThreadPool;
-use ssdup::workload::ior::{ior, IorPattern};
+use ssdup::workload::ior::{ior, ior_spanned, IorPattern};
+use ssdup::workload::Workload;
 
 const VALUE_OPTS: &[&str] = &[
     "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
-    "queue",
+    "queue", "shards", "backend", "clients", "dir",
 ];
 
 fn main() {
@@ -36,6 +39,7 @@ fn main() {
             0
         }
         Some("run") => cmd_run(&args),
+        Some("live") => cmd_live(&args),
         Some("runtime-info") => cmd_runtime_info(),
         Some("version") => {
             println!("ssdup {}", ssdup::version());
@@ -43,11 +47,14 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: ssdup <exp|list|run|runtime-info|version> [flags]\n\
+                "usage: ssdup <exp|list|run|live|runtime-info|version> [flags]\n\
                  \n\
                  ssdup exp all [--scale 8] [--seed N] [--json out.json]\n\
                  ssdup exp fig11 --scale 4\n\
-                 ssdup run --system ssdup+ --pattern strided --procs 32 --size-mib 2048\n"
+                 ssdup run --system ssdup+ --pattern strided --procs 32 --size-mib 2048\n\
+                 ssdup live --shards 4 --backend mem|file [--dir DIR] [--pattern mixed]\n\
+                 \x20          [--procs 16] [--size-mib 1024] [--ssd-mib 64] [--clients 8]\n\
+                 \x20          [--no-verify] [--keep]\n"
             );
             2
         }
@@ -155,6 +162,131 @@ fn cmd_run(args: &Args) -> i32 {
     0
 }
 
+/// Build the live workload: `mixed` is the paper's headline scenario —
+/// one contiguous and one random app sharing the engine.
+fn live_workload(pattern: &str, procs: u32, total_sectors: i64, req_sectors: i32, seed: u64) -> Option<Workload> {
+    let span = total_sectors * 8; // keep random offsets paper-sparse
+    match pattern {
+        "mixed" => Some(Workload::concurrent(
+            "live-mixed",
+            ior_spanned(0, IorPattern::SegmentedContiguous, procs / 2, total_sectors / 2, span, req_sectors, seed),
+            ior_spanned(0, IorPattern::SegmentedRandom, procs / 2, total_sectors / 2, span, req_sectors, seed + 1),
+        )),
+        "contig" | "segmented-contiguous" => {
+            Some(ior_spanned(0, IorPattern::SegmentedContiguous, procs, total_sectors, span, req_sectors, seed))
+        }
+        "random" | "segmented-random" => {
+            Some(ior_spanned(0, IorPattern::SegmentedRandom, procs, total_sectors, span, req_sectors, seed))
+        }
+        "strided" => Some(ior_spanned(0, IorPattern::Strided, procs, total_sectors, span, req_sectors, seed)),
+        _ => None,
+    }
+}
+
+fn cmd_live(args: &Args) -> i32 {
+    let system: SystemKind = match args.get_or("system", "ssdup+").parse() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let shards: usize = args.get_parse("shards", 4).unwrap_or(4).max(1);
+    let backend = args.get_or("backend", "mem");
+    let procs: u32 = args.get_parse("procs", 16).unwrap_or(16).max(2);
+    let size_mib: u64 = args.get_parse("size-mib", 256).unwrap_or(256);
+    let req_kb: i32 = args.get_parse("req-kb", 256).unwrap_or(256);
+    let ssd_mib: u64 = args.get_parse("ssd-mib", 64).unwrap_or(64);
+    let clients: usize = args.get_parse("clients", 8).unwrap_or(8);
+    let seed: u64 = args.get_parse("seed", 7).unwrap_or(7);
+    let pattern = args.get_or("pattern", "mixed");
+
+    let total_sectors = (size_mib * 1024 * 1024 / 512) as i64;
+    let Some(workload) = live_workload(pattern, procs, total_sectors, req_kb * 2, seed) else {
+        eprintln!("unknown pattern '{pattern}' (mixed|contig|random|strided)");
+        return 2;
+    };
+
+    let cfg = LiveConfig::new(system).with_shards(shards).with_ssd_mib(ssd_mib);
+    let mut created_dir: Option<std::path::PathBuf> = None;
+    let engine = match backend {
+        "mem" => LiveEngine::mem(&cfg, SyntheticLatency::ssd(), SyntheticLatency::hdd()),
+        "file" => {
+            let dir = match args.get("dir") {
+                Some(d) => std::path::PathBuf::from(d),
+                None => {
+                    let d = std::env::temp_dir()
+                        .join(format!("ssdup-live-{}", std::process::id()));
+                    created_dir = Some(d.clone());
+                    d
+                }
+            };
+            println!("backend dir: {}", dir.display());
+            match LiveEngine::file(&cfg, &dir) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("error: cannot create file backends: {e}");
+                    return 1;
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown backend '{other}' (mem|file)");
+            return 2;
+        }
+    };
+
+    println!(
+        "live: {} | {} shards | {} backend | {} MiB over {} procs, {} clients | ssd {} MiB/shard\n",
+        system.name(),
+        shards,
+        backend,
+        size_mib,
+        procs,
+        clients,
+        ssd_mib
+    );
+    let report = live::run_load(&engine, &workload, clients);
+    println!("{}", report.summary());
+    for (i, s) in report.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: in {} MiB | ssd {} MiB | direct {} MiB | flushed {} MiB | \
+             {} streams (rp {:.1}%) | {} flushes, {} pauses ({:.2}s), {} blocked waits",
+            s.bytes_in / (1 << 20),
+            s.ssd_bytes_buffered / (1 << 20),
+            s.hdd_direct_bytes / (1 << 20),
+            s.flushed_bytes / (1 << 20),
+            s.streams,
+            s.mean_percentage() * 100.0,
+            s.flushes,
+            s.flush_pauses,
+            s.flush_pause_us as f64 / 1e6,
+            s.blocked_waits,
+        );
+    }
+
+    let mut code = 0;
+    if !args.has("no-verify") {
+        let v = engine.verify_workload(&workload);
+        if v.is_ok() {
+            println!("\nverify: OK — {} MiB re-derived and matched on the HDD backends", v.checked_bytes / (1 << 20));
+        } else {
+            println!("\nverify: FAILED — {} mismatched sectors of {} bytes checked", v.mismatched_sectors, v.checked_bytes);
+            code = 1;
+        }
+    }
+    engine.shutdown();
+    if let Some(dir) = created_dir {
+        if !args.has("keep") {
+            std::fs::remove_dir_all(&dir).ok();
+        } else {
+            println!("kept backend dir: {}", dir.display());
+        }
+    }
+    code
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_runtime_info() -> i32 {
     match ssdup::runtime::Runtime::load_default() {
         Ok(rt) => {
@@ -177,4 +309,25 @@ fn cmd_runtime_info() -> i32 {
             1
         }
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runtime_info() -> i32 {
+    use ssdup::detector::hlo::DetectBackend;
+    // built without the `pjrt` feature: report artifact status and prove
+    // the native fallback path works
+    match ssdup::runtime::ArtifactSet::load_default() {
+        Ok(a) => println!("artifacts: {} (validated; PJRT execution compiled out)", a.dir.display()),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    let mut det = ssdup::detector::hlo::default_backend(ssdup::device::SeekModel::default());
+    let contiguous: Vec<(i32, i32)> = (0..128).map(|i| (i * 512, 512)).collect();
+    let random: Vec<(i32, i32)> = (0..128).map(|i| (i * 9973, 512)).collect();
+    println!(
+        "detector:  backend={} | contiguous S={} random S={}",
+        det.name(),
+        det.detect(&contiguous).s,
+        det.detect(&random).s
+    );
+    0
 }

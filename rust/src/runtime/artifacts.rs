@@ -7,9 +7,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
 use crate::device::seek::SeekModel;
+use crate::runtime::{RtResult, RuntimeError};
 use crate::util::json::Json;
 
 /// Parsed artifact manifest.
@@ -39,17 +38,17 @@ pub fn default_dir() -> PathBuf {
 }
 
 impl Manifest {
-    pub fn parse(text: &str) -> Result<Manifest> {
-        let v = Json::parse(text).context("manifest.json parse")?;
-        let get_i = |path: &[&str]| -> Result<i64> {
+    pub fn parse(text: &str) -> RtResult<Manifest> {
+        let v = Json::parse(text).map_err(|e| RuntimeError(format!("manifest.json parse: {e}")))?;
+        let get_i = |path: &[&str]| -> RtResult<i64> {
             v.at(path)
                 .and_then(Json::as_i64)
-                .with_context(|| format!("manifest missing int {path:?}"))
+                .ok_or_else(|| RuntimeError(format!("manifest missing int {path:?}")))
         };
-        let get_f = |path: &[&str]| -> Result<f64> {
+        let get_f = |path: &[&str]| -> RtResult<f64> {
             v.at(path)
                 .and_then(Json::as_f64)
-                .with_context(|| format!("manifest missing num {path:?}"))
+                .ok_or_else(|| RuntimeError(format!("manifest missing num {path:?}")))
         };
         Ok(Manifest {
             batch: get_i(&["batch"])? as usize,
@@ -69,14 +68,13 @@ impl Manifest {
 
     /// Fail fast if the compiled kernels' constants differ from this
     /// build's native mirror.
-    pub fn validate_against(&self, native: &SeekModel) -> Result<()> {
+    pub fn validate_against(&self, native: &SeekModel) -> RtResult<()> {
         if self.seek != *native {
-            bail!(
+            return Err(RuntimeError(format!(
                 "artifact seek model {:?} != native seek model {:?}; \
                  re-run `make artifacts` after changing constants",
-                self.seek,
-                native
-            );
+                self.seek, native
+            )));
         }
         Ok(())
     }
@@ -84,23 +82,26 @@ impl Manifest {
 
 impl ArtifactSet {
     /// Load and validate the artifact set under `dir`.
-    pub fn load(dir: &Path) -> Result<ArtifactSet> {
+    pub fn load(dir: &Path) -> RtResult<ArtifactSet> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {}", manifest_path.display()))?;
+            .map_err(|e| RuntimeError(format!("reading {}: {e}", manifest_path.display())))?;
         let manifest = Manifest::parse(&text)?;
         manifest.validate_against(&SeekModel::default())?;
         let detector_hlo = dir.join("detector.hlo.txt");
         let threshold_hlo = dir.join("threshold.hlo.txt");
         for p in [&detector_hlo, &threshold_hlo] {
             if !p.exists() {
-                bail!("missing artifact {} (run `make artifacts`)", p.display());
+                return Err(RuntimeError(format!(
+                    "missing artifact {} (run `make artifacts`)",
+                    p.display()
+                )));
             }
         }
         Ok(ArtifactSet { dir: dir.to_path_buf(), detector_hlo, threshold_hlo, manifest })
     }
 
-    pub fn load_default() -> Result<ArtifactSet> {
+    pub fn load_default() -> RtResult<ArtifactSet> {
         Self::load(&default_dir())
     }
 }

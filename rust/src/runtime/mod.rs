@@ -1,9 +1,33 @@
 //! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
 //! and execute them from Rust. Python never runs here — the HLO text is
 //! compiled once at startup by the in-process XLA CPU client.
+//!
+//! The execution path ([`xla_exec`]) needs the `xla` PJRT bindings and is
+//! gated behind the `pjrt` cargo feature (the offline image ships no
+//! crates.io mirror — see Cargo.toml). Artifact discovery and manifest
+//! validation stay available in every build so tooling can report artifact
+//! status, and `detector::hlo::default_backend` falls back to the native
+//! detector mirror when PJRT is compiled out.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod xla_exec;
 
 pub use artifacts::{ArtifactSet, Manifest};
+#[cfg(feature = "pjrt")]
 pub use xla_exec::{DetectorExec, Runtime, ThresholdExec};
+
+/// Minimal error type for the artifact layer (`anyhow` is only available
+/// under the `pjrt` feature, and the manifest loader must work without it).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type RtResult<T> = std::result::Result<T, RuntimeError>;

@@ -1,7 +1,137 @@
-//! Result metrics collected by a simulation run — the numbers every paper
-//! table/figure is built from.
+//! Result metrics: per-run statistics the paper tables/figures are built
+//! from, plus the wall-clock latency histogram the live engine's load
+//! generator records.
 
 use crate::types::Usec;
+
+/// Number of linear sub-buckets per power-of-two octave (2^3 = 8): values
+/// below 16 are exact, everything above is bucketed within ~12.5%.
+const HIST_SUB_BITS: u32 = 3;
+// max index is (63 - 3 + 1) * 8 + 7 = 495 (for u64::MAX), so 512 covers
+// the full u64 range
+const HIST_BUCKETS: usize = 512;
+
+/// Log-bucketed latency histogram (microseconds). HDR-style bucketing:
+/// fixed memory, ~12.5% worst-case value error, O(1) record, mergeable
+/// across load-generator threads.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn bucket_index(v: u64) -> usize {
+    let v = v.max(1);
+    let exp = 63 - v.leading_zeros() as u64; // floor(log2(v))
+    if exp < HIST_SUB_BITS as u64 {
+        return v as usize; // small values map to themselves
+    }
+    let sub = (v >> (exp - HIST_SUB_BITS as u64)) & ((1 << HIST_SUB_BITS) - 1);
+    (((exp - HIST_SUB_BITS as u64 + 1) << HIST_SUB_BITS) + sub) as usize
+}
+
+/// Lower bound of the value range covered by `idx` (inverse of
+/// `bucket_index` up to bucket granularity).
+fn bucket_value(idx: usize) -> u64 {
+    if idx < (2 << HIST_SUB_BITS) {
+        return idx as u64;
+    }
+    let exp = idx as u64 / (1 << HIST_SUB_BITS) + HIST_SUB_BITS as u64 - 1;
+    let sub = idx as u64 % (1 << HIST_SUB_BITS);
+    ((1 << HIST_SUB_BITS) + sub) << (exp - HIST_SUB_BITS as u64)
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; HIST_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, us: u64) {
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Value at quantile `q` in [0, 1] (bucket lower bound; exact for
+    /// values < 16 us, within ~12.5% above). 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return bucket_value(idx);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another histogram in (per-thread histograms -> run total).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// One-line `p50/p95/p99/max` summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "p50 {}us  p95 {}us  p99 {}us  max {}us  (n={})",
+            self.p50(),
+            self.p95(),
+            self.p99(),
+            self.max_us,
+            self.count
+        )
+    }
+}
 
 /// Per-application I/O statistics.
 #[derive(Clone, Debug)]
@@ -101,6 +231,66 @@ impl SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        let mut h = LatencyHistogram::new();
+        for v in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.p50(), 5);
+        assert_eq!(h.quantile(1.0), 10);
+        assert_eq!(h.max_us(), 10);
+        assert!((h.mean_us() - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket_error() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        // bucket lower bounds are within 12.5% below the true quantile
+        for (q, truth) in [(0.5, 5_000u64), (0.95, 9_500), (0.99, 9_900)] {
+            let got = h.quantile(q) as f64;
+            let t = truth as f64;
+            assert!(got <= t && got >= t * 0.87, "q={q}: got {got}, truth {t}");
+        }
+        assert_eq!(h.max_us(), 10_000);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for v in [3u64, 70, 900, 12_000] {
+            a.record(v);
+            all.record(v);
+        }
+        for v in [5u64, 55, 1_000_000] {
+            b.record(v);
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), all.quantile(q));
+        }
+        assert_eq!(a.max_us(), all.max_us());
+        assert!(a.summary().contains("p99"));
+    }
+
+    #[test]
+    fn histogram_extreme_values_do_not_panic() {
+        let mut h = LatencyHistogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) > 1 << 59);
+    }
 
     #[test]
     fn throughput_math() {

@@ -15,15 +15,26 @@ pub struct Args {
     pub switches: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value} ({why})")]
     Invalid { key: String, value: String, why: String },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(opt) => write!(f, "unknown option --{opt}"),
+            CliError::MissingValue(opt) => write!(f, "option --{opt} expects a value"),
+            CliError::Invalid { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value} ({why})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse an iterator of argv-style strings (without the program name).

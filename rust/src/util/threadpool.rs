@@ -84,6 +84,21 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Run `jobs` concurrently on scoped threads and return their results in
+/// order. Unlike [`ThreadPool::map`], the closures may borrow from the
+/// caller's stack (no `'static` bound) — the live load generator drives a
+/// stack-owned engine with it. Panics propagate to the caller.
+pub fn scoped_map<T, F>(jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs.into_iter().map(|job| scope.spawn(job)).collect();
+        handles.into_iter().map(|h| h.join().expect("scoped job panicked")).collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,5 +130,17 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_borrows_from_stack() {
+        let data: Vec<u64> = (0..32).collect();
+        let jobs: Vec<_> = data
+            .chunks(8)
+            .map(|chunk| move || chunk.iter().sum::<u64>())
+            .collect();
+        let sums = scoped_map(jobs);
+        assert_eq!(sums.len(), 4);
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
     }
 }

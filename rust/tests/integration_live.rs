@@ -1,0 +1,144 @@
+//! Live-engine integration: the real-time sharded runtime must (a) make
+//! the same traffic-detection routing decisions as the discrete-event
+//! simulator on matched workloads, (b) land every byte, verifiably, on
+//! the HDD backends — including through real files — and (c) survive
+//! region-blocking backpressure under a too-small SSD.
+
+use std::time::Duration;
+
+use ssdup::live::{self, LiveConfig, LiveEngine, SyntheticLatency};
+use ssdup::server::{simulate, SimConfig, SystemKind};
+use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::workload::ior::{ior, ior_spanned, IorPattern};
+use ssdup::workload::Workload;
+
+fn live_cfg(system: SystemKind, shards: usize, ssd_mib: u64) -> LiveConfig {
+    let mut c = LiveConfig::new(system).with_shards(shards).with_ssd_mib(ssd_mib);
+    c.flush_check = Duration::from_millis(2); // keep test turnaround fast
+    c
+}
+
+fn run_live(cfg: &LiveConfig, w: &Workload, clients: usize) -> (f64, LiveEngine) {
+    let engine = LiveEngine::mem(cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+    let report = live::run_load(&engine, w, clients);
+    (report.ssd_ratio(), engine)
+}
+
+#[test]
+fn parity_with_sim_contiguous_load_bypasses_ssd() {
+    // 64 MiB segmented-contiguous IOR, 8 procs
+    let w = ior(0, IorPattern::SegmentedContiguous, 8, 131_072, DEFAULT_REQ_SECTORS, 9);
+    let sim = simulate(&SimConfig::new(SystemKind::SsdupPlus).with_seed(42), &w);
+    let (live_ratio, engine) = run_live(&live_cfg(SystemKind::SsdupPlus, 2, 1024), &w, 4);
+    assert!(
+        sim.ssd_ratio < 0.3,
+        "sim: contiguous load should mostly bypass SSD, got {}",
+        sim.ssd_ratio
+    );
+    assert!(
+        live_ratio < 0.3,
+        "live: contiguous load should mostly bypass SSD, got {live_ratio}"
+    );
+    let verify = engine.verify_workload(&w);
+    assert!(verify.is_ok(), "{verify:?}");
+    engine.shutdown();
+}
+
+#[test]
+fn parity_with_sim_random_load_is_buffered() {
+    // 128 MiB segmented-random IOR with paper-sparse offsets, 16 procs
+    let w = ior_spanned(
+        0,
+        IorPattern::SegmentedRandom,
+        16,
+        262_144,
+        262_144 * 16,
+        DEFAULT_REQ_SECTORS,
+        9,
+    );
+    let sim = simulate(&SimConfig::new(SystemKind::SsdupPlus).with_seed(42), &w);
+    let (live_ratio, engine) = run_live(&live_cfg(SystemKind::SsdupPlus, 2, 1024), &w, 4);
+    assert!(
+        sim.ssd_ratio > 0.5,
+        "sim: random load should be buffered, got {}",
+        sim.ssd_ratio
+    );
+    assert!(live_ratio > 0.5, "live: random load should be buffered, got {live_ratio}");
+    // same detection + policy code, same striping: the two substrates must
+    // agree on the routing split up to arrival-order effects
+    assert!(
+        (live_ratio - sim.ssd_ratio).abs() < 0.3,
+        "live ssd_ratio {live_ratio} vs sim {}",
+        sim.ssd_ratio
+    );
+    let verify = engine.verify_workload(&w);
+    assert!(verify.is_ok(), "{verify:?}");
+    engine.shutdown();
+}
+
+#[test]
+fn file_backend_drains_and_verifies_in_tempdir() {
+    let dir = std::env::temp_dir().join(format!("ssdup-live-it-{}", std::process::id()));
+    // 64 MiB sparse-random load over 4 shards with 8 MiB SSD per shard:
+    // after the first detection window everything is buffered, so each
+    // shard cycles through multiple region flushes on real files
+    let sectors = 131_072;
+    let w = ior_spanned(0, IorPattern::SegmentedRandom, 8, sectors, sectors * 16, DEFAULT_REQ_SECTORS, 3);
+    let mut cfg = live_cfg(SystemKind::SsdupPlus, 4, 8);
+    cfg = cfg.with_stream_len(64);
+    let engine = LiveEngine::file(&cfg, &dir).expect("create file backends");
+    let report = live::run_load(&engine, &w, 8);
+    assert_eq!(report.total_bytes, w.total_bytes());
+    let verify = engine.verify_workload(&w);
+    assert!(verify.is_ok(), "file backend verification failed: {verify:?}");
+    assert_eq!(verify.checked_bytes, w.total_bytes());
+    let stats = engine.shutdown();
+    let buffered: u64 = stats.iter().map(|s| s.ssd_bytes_buffered).sum();
+    let flushed: u64 = stats.iter().map(|s| s.flushed_bytes).sum();
+    assert!(buffered > w.total_bytes() / 2, "random load must hit the SSD log");
+    assert_eq!(flushed, buffered, "every buffered byte must reach HDD by drain");
+    assert!(
+        stats.iter().map(|s| s.flushes).sum::<u64>() >= 4,
+        "small SSD must force multiple flush cycles"
+    );
+    // the backends are real files on disk
+    for i in 0..4 {
+        assert!(dir.join(format!("shard{i}-ssd.log")).exists());
+        assert!(dir.join(format!("shard{i}-hdd.img")).exists());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn blocked_ingest_backpressure_resolves_and_verifies() {
+    // OrangeFS-BB policy (everything to SSD) with a 4 MiB SSD per shard
+    // and a deliberately slow HDD flush target: regions fill faster than
+    // they drain, so clients must block on the "wait until a region
+    // becomes empty" path and be woken again
+    let w = ior(0, IorPattern::SegmentedContiguous, 4, 65_536, DEFAULT_REQ_SECTORS, 5);
+    let cfg = live_cfg(SystemKind::OrangeFsBB, 2, 4);
+    let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::hdd());
+    let report = live::run_load(&engine, &w, 4);
+    assert!(report.ssd_ratio() > 0.99, "BB routes everything via SSD");
+    let stats = engine.stats();
+    assert!(
+        stats.iter().map(|s| s.blocked_waits).sum::<u64>() > 0,
+        "32 MiB through 2x4 MiB SSDs must block at least once"
+    );
+    let verify = engine.verify_workload(&w);
+    assert!(verify.is_ok(), "{verify:?}");
+    engine.shutdown();
+}
+
+#[test]
+fn per_request_latency_is_recorded() {
+    let w = ior(0, IorPattern::SegmentedContiguous, 4, 16_384, DEFAULT_REQ_SECTORS, 5);
+    let cfg = live_cfg(SystemKind::SsdupPlus, 2, 64);
+    let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+    let report = live::run_load(&engine, &w, 2);
+    assert_eq!(report.latency.count(), w.total_requests() as u64);
+    assert!(report.latency.p50() <= report.latency.p95());
+    assert!(report.latency.p95() <= report.latency.p99());
+    assert!(report.latency.p99() <= report.latency.max_us());
+    engine.shutdown();
+}
