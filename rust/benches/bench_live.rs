@@ -10,6 +10,7 @@ use ssdup::server::SystemKind;
 use ssdup::types::DEFAULT_REQ_SECTORS;
 use ssdup::util::benchkit::{bb, section, Bench};
 use ssdup::workload::ior::{ior_spanned, IorPattern};
+use ssdup::workload::rewrite::checkpoint_rewrite;
 use ssdup::workload::Workload;
 
 /// The benchmark workload: contiguous x random mix, `mib` MiB total.
@@ -58,6 +59,26 @@ fn main() {
             four.1,
             four.1 / one.1.max(1e-9)
         );
+    }
+
+    section("rewrite-heavy load (ownership map + stale-flush suppression)");
+    if Bench::should_run("live/mem-rewrite") {
+        // every sector written twice across mixed routes: measures the
+        // ownership-map overhead on ingest plus the HDD bandwidth the
+        // flusher saves by skipping superseded extents
+        let wr = checkpoint_rewrite(4, 32 * 2048, DEFAULT_REQ_SECTORS, 1_000, 17);
+        let rbytes = wr.total_bytes() as f64;
+        let mut skipped = 0u64;
+        b.run("live/mem-rewrite", rbytes, || {
+            let mut cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(2).with_ssd_mib(64);
+            cfg = cfg.with_stream_len(32);
+            let engine = LiveEngine::mem(&cfg, SyntheticLatency::ssd(), SyntheticLatency::hdd());
+            let report = live::run_load_with(&engine, &wr, 8, true);
+            let stats = engine.shutdown();
+            skipped = stats.iter().map(|s| s.superseded_bytes).sum();
+            bb(report.throughput_mbps())
+        });
+        println!("  stale flushes suppressed: {} MiB of HDD writes saved", skipped / (1 << 20));
     }
 
     section("live engine on real files (FileBackend, page-cached)");

@@ -12,7 +12,8 @@ fn main() {
     } else {
         Scale::default()
     };
-    println!("experiment suite at scale 1/{} (16 GB file simulates as {} MiB)\n", scale.factor, (scale.gb16() * 512) >> 20);
+    let as_mib = (scale.gb16() * 512) >> 20;
+    println!("experiment suite at scale 1/{} (16 GB file simulates as {as_mib} MiB)\n", scale.factor);
     let mut total = 0.0;
     for id in all_ids() {
         if !ssdup::util::benchkit::Bench::should_run(id) {

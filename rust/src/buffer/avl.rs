@@ -11,10 +11,16 @@
 //! no per-node malloc, cache-friendly traversal).
 
 /// Arena-based AVL tree with `i64` keys (generic value payload).
+///
+/// Deleted slots go on a free list and are reused by later inserts, so a
+/// long-lived tree under churn (the live engine's sector-ownership map
+/// claims and releases extents continuously) stays one allocation.
 #[derive(Clone, Debug)]
 pub struct AvlTree<V> {
     nodes: Vec<Node<V>>,
     root: Option<u32>,
+    free: Vec<u32>,
+    len: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -34,19 +40,19 @@ impl<V> Default for AvlTree<V> {
 
 impl<V> AvlTree<V> {
     pub fn new() -> Self {
-        Self { nodes: Vec::new(), root: None }
+        Self { nodes: Vec::new(), root: None, free: Vec::new(), len: 0 }
     }
 
     pub fn with_capacity(cap: usize) -> Self {
-        Self { nodes: Vec::with_capacity(cap), root: None }
+        Self { nodes: Vec::with_capacity(cap), root: None, free: Vec::new(), len: 0 }
     }
 
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.len == 0
     }
 
     /// Bytes of metadata per node — the paper's 24-byte accounting
@@ -122,11 +128,32 @@ impl<V> AvlTree<V> {
         self.root = Some(self.insert_at(root, key, value));
     }
 
+    /// Allocate a node slot, preferring the free list over growing.
+    fn alloc(&mut self, key: i64, value: V) -> u32 {
+        self.len += 1;
+        let node = Node { key, value, left: None, right: None, height: 1 };
+        match self.free.pop() {
+            Some(i) => {
+                self.nodes[i as usize] = node;
+                i
+            }
+            None => {
+                let idx = self.nodes.len() as u32;
+                self.nodes.push(node);
+                idx
+            }
+        }
+    }
+
+    /// Return a node slot to the free list.
+    fn release(&mut self, i: u32) {
+        self.free.push(i);
+        self.len -= 1;
+    }
+
     fn insert_at(&mut self, node: Option<u32>, key: i64, value: V) -> u32 {
         let Some(i) = node else {
-            let idx = self.nodes.len() as u32;
-            self.nodes.push(Node { key, value, left: None, right: None, height: 1 });
-            return idx;
+            return self.alloc(key, value);
         };
         match key.cmp(&self.nodes[i as usize].key) {
             std::cmp::Ordering::Less => {
@@ -145,6 +172,145 @@ impl<V> AvlTree<V> {
             }
         }
         self.rebalance(i)
+    }
+
+    /// Remove `key`, returning its value. Rebalances on the way back up,
+    /// so interleaved inserts and deletes keep the AVL height bound — the
+    /// live engine's ownership map churns extents for the whole run.
+    pub fn remove(&mut self, key: i64) -> Option<V>
+    where
+        V: Copy,
+    {
+        let root = self.root;
+        let (new_root, removed) = self.remove_at(root, key);
+        self.root = new_root;
+        removed
+    }
+
+    fn remove_at(&mut self, node: Option<u32>, key: i64) -> (Option<u32>, Option<V>)
+    where
+        V: Copy,
+    {
+        let Some(i) = node else { return (None, None) };
+        let removed;
+        match key.cmp(&self.nodes[i as usize].key) {
+            std::cmp::Ordering::Less => {
+                let l = self.nodes[i as usize].left;
+                let (nl, r) = self.remove_at(l, key);
+                self.nodes[i as usize].left = nl;
+                removed = r;
+            }
+            std::cmp::Ordering::Greater => {
+                let r0 = self.nodes[i as usize].right;
+                let (nr, r) = self.remove_at(r0, key);
+                self.nodes[i as usize].right = nr;
+                removed = r;
+            }
+            std::cmp::Ordering::Equal => {
+                let val = self.nodes[i as usize].value;
+                let (l, r) = (self.nodes[i as usize].left, self.nodes[i as usize].right);
+                return match (l, r) {
+                    (None, None) => {
+                        self.release(i);
+                        (None, Some(val))
+                    }
+                    (Some(c), None) | (None, Some(c)) => {
+                        self.release(i);
+                        (Some(self.rebalance(c)), Some(val))
+                    }
+                    (Some(_), Some(r)) => {
+                        // two children: graft the in-order successor (min
+                        // of the right subtree) into this slot, then
+                        // delete the successor's old node below
+                        let (succ_key, succ_val) = self.min_entry(r);
+                        let (nr, _) = self.remove_at(Some(r), succ_key);
+                        let n = &mut self.nodes[i as usize];
+                        n.key = succ_key;
+                        n.value = succ_val;
+                        n.right = nr;
+                        (Some(self.rebalance(i)), Some(val))
+                    }
+                };
+            }
+        }
+        (Some(self.rebalance(i)), removed)
+    }
+
+    fn min_entry(&self, mut i: u32) -> (i64, V)
+    where
+        V: Copy,
+    {
+        while let Some(l) = self.nodes[i as usize].left {
+            i = l;
+        }
+        (self.nodes[i as usize].key, self.nodes[i as usize].value)
+    }
+
+    /// Greatest entry with key strictly less than `key` (predecessor
+    /// query — how the extent map finds a run starting left of a range).
+    pub fn below(&self, key: i64) -> Option<(i64, &V)> {
+        let mut best: Option<u32> = None;
+        let mut cur = self.root;
+        while let Some(i) = cur {
+            let n = &self.nodes[i as usize];
+            if n.key < key {
+                best = Some(i);
+                cur = n.right;
+            } else {
+                cur = n.left;
+            }
+        }
+        best.map(|i| {
+            let n = &self.nodes[i as usize];
+            (n.key, &n.value)
+        })
+    }
+
+    /// Is there any key in `[lo, hi)`? Allocation-free — hot-path guard
+    /// queries (the ownership map's overlap check on every direct write)
+    /// should not pay for materializing the range.
+    pub fn any_in_range(&self, lo: i64, hi: i64) -> bool {
+        // least key >= lo, then compare against hi
+        let mut best: Option<i64> = None;
+        let mut cur = self.root;
+        while let Some(i) = cur {
+            let n = &self.nodes[i as usize];
+            if n.key >= lo {
+                best = Some(n.key);
+                cur = n.left;
+            } else {
+                cur = n.right;
+            }
+        }
+        matches!(best, Some(k) if k < hi)
+    }
+
+    /// Entries with keys in `[lo, hi)`, ascending.
+    pub fn range(&self, lo: i64, hi: i64) -> Vec<(i64, V)>
+    where
+        V: Copy,
+    {
+        let mut out = Vec::new();
+        self.range_collect(self.root, lo, hi, &mut out);
+        out
+    }
+
+    fn range_collect(&self, node: Option<u32>, lo: i64, hi: i64, out: &mut Vec<(i64, V)>)
+    where
+        V: Copy,
+    {
+        let Some(i) = node else { return };
+        let n = &self.nodes[i as usize];
+        let (key, value, left, right) = (n.key, n.value, n.left, n.right);
+        if key > lo {
+            self.range_collect(left, lo, hi, out);
+        }
+        if key >= lo && key < hi {
+            out.push((key, value));
+        }
+        if key < hi {
+            self.range_collect(right, lo, hi, out);
+        }
     }
 
     pub fn get(&self, key: i64) -> Option<&V> {
@@ -185,7 +351,9 @@ impl<V> AvlTree<V> {
 
     pub fn clear(&mut self) {
         self.nodes.clear();
+        self.free.clear();
         self.root = None;
+        self.len = 0;
     }
 
     pub fn height(&self) -> i8 {
@@ -211,7 +379,12 @@ impl<V> AvlTree<V> {
             }
             Ok(h)
         }
-        go(self, self.root, i64::MIN, i64::MAX).map(|_| ())
+        go(self, self.root, i64::MIN, i64::MAX)?;
+        let reachable = self.in_order().count();
+        if reachable != self.len {
+            return Err(format!("len {} but {} reachable nodes", self.len, reachable));
+        }
+        Ok(())
     }
 }
 
@@ -318,6 +491,91 @@ mod tests {
             }
             t.check_invariants().unwrap_or_else(|e| panic!("trial {trial}: {e}"));
         }
+    }
+
+    #[test]
+    fn remove_leaf_inner_and_root() {
+        let mut t = AvlTree::new();
+        for k in [50i64, 30, 70, 20, 40, 60, 80] {
+            t.insert(k, k);
+        }
+        assert_eq!(t.remove(20), Some(20), "leaf");
+        assert_eq!(t.remove(30), Some(30), "inner node with one child");
+        assert_eq!(t.remove(50), Some(50), "root with two children");
+        assert_eq!(t.remove(50), None, "double remove");
+        assert_eq!(t.len(), 4);
+        t.check_invariants().unwrap();
+        let got: Vec<i64> = t.in_order().map(|(k, _)| k).collect();
+        assert_eq!(got, vec![40, 60, 70, 80]);
+    }
+
+    #[test]
+    fn update_then_remove_yields_latest_value() {
+        let mut t = AvlTree::new();
+        t.insert(5, "stale");
+        t.insert(5, "fresh");
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.remove(5), Some("fresh"), "duplicate insert must have overwritten");
+        assert!(t.is_empty());
+        assert_eq!(t.get(5), None);
+    }
+
+    #[test]
+    fn removed_slots_are_reused() {
+        let mut t = AvlTree::new();
+        for k in 0..64i64 {
+            t.insert(k, ());
+        }
+        let arena = t.nodes.len();
+        for k in 0..32i64 {
+            t.remove(k);
+        }
+        for k in 100..132i64 {
+            t.insert(k, ());
+        }
+        assert_eq!(t.nodes.len(), arena, "churn must not grow the arena");
+        assert_eq!(t.len(), 64);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn random_insert_remove_matches_model() {
+        let mut rng = Prng::new(23);
+        let mut t = AvlTree::new();
+        let mut model = std::collections::BTreeMap::new();
+        for _ in 0..4000 {
+            let k = rng.gen_range(300) as i64;
+            if rng.chance(0.4) {
+                assert_eq!(t.remove(k), model.remove(&k), "remove {k}");
+            } else {
+                t.insert(k, k * 3);
+                model.insert(k, k * 3);
+            }
+        }
+        t.check_invariants().unwrap();
+        let got: Vec<(i64, i64)> = t.in_order().map(|(k, v)| (k, *v)).collect();
+        let want: Vec<(i64, i64)> = model.into_iter().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn below_and_range_queries() {
+        let mut t = AvlTree::new();
+        for k in [10i64, 20, 30, 40, 50] {
+            t.insert(k, k);
+        }
+        assert_eq!(t.below(10), None);
+        assert_eq!(t.below(11).map(|(k, _)| k), Some(10));
+        assert_eq!(t.below(45).map(|(k, _)| k), Some(40));
+        assert_eq!(t.below(i64::MAX).map(|(k, _)| k), Some(50));
+        let keys: Vec<i64> = t.range(15, 45).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec![20, 30, 40]);
+        assert_eq!(t.range(20, 21).len(), 1, "inclusive lower bound");
+        assert!(t.range(41, 50).is_empty(), "exclusive upper bound");
+        assert!(t.any_in_range(15, 45));
+        assert!(t.any_in_range(20, 21), "inclusive lower bound");
+        assert!(!t.any_in_range(41, 50), "exclusive upper bound");
+        assert!(!t.any_in_range(51, 100));
     }
 
     #[test]

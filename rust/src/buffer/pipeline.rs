@@ -112,21 +112,43 @@ impl Pipeline {
         self.regions.iter().map(|r| r.used()).sum()
     }
 
+    /// Is `r` neither flushing nor queued to flush? A region handed to
+    /// the flusher must never accept appends: the flusher resolves its
+    /// log slots into copy addresses, so a concurrent append would write
+    /// new bytes under extents being copied to *old* HDD locations.
+    fn appendable(&self, r: usize) -> bool {
+        self.flushing != Some(r) && !self.flush_pending.contains(&r)
+    }
+
     /// Try to buffer a request of `size` sectors for `file` at
     /// `orig_offset`. Implements the §2.4.1 region switch.
     pub fn buffer(&mut self, file: u32, orig_offset: i64, size: i64) -> BufferOutcome {
         let a = self.active;
-        if let Some(ssd_offset) = self.regions[a].buffer(file, orig_offset, size) {
-            return BufferOutcome::Buffered { region: a, ssd_offset };
+        let a_appendable = self.appendable(a);
+        if a_appendable {
+            if let Some(ssd_offset) = self.regions[a].buffer(file, orig_offset, size) {
+                return BufferOutcome::Buffered { region: a, ssd_offset };
+            }
         }
-        // active region full: try the other one if it is empty (flushed)
+        // active region full (or already handed to the flusher): try the
+        // other one if it is empty. `active` only switches after a
+        // *successful* buffer — flipping first (and bailing when the
+        // write does not fit the empty region either) would leave the
+        // full region active-in-name-only and never queued for flushing,
+        // starving the flusher while blocked ingest waits forever.
         let b = 1 - a;
-        let other_free = self.regions[b].is_empty() && self.flushing != Some(b);
+        let other_free = self.regions[b].is_empty() && self.appendable(b);
         if other_free {
-            self.active = b;
             if let Some(ssd_offset) = self.regions[b].buffer(file, orig_offset, size) {
-                self.flush_pending.push(a);
-                return BufferOutcome::BufferedAndFull { region: b, ssd_offset, flush_region: a };
+                self.active = b;
+                // report BufferedAndFull only when this call actually
+                // queued the old region; if it was already handed to the
+                // flusher (or empty), nothing new needs flushing
+                if a_appendable && !self.regions[a].is_empty() {
+                    self.flush_pending.push(a);
+                    return BufferOutcome::BufferedAndFull { region: b, ssd_offset, flush_region: a };
+                }
+                return BufferOutcome::Buffered { region: b, ssd_offset };
             }
         }
         self.blocked_events += 1;
@@ -162,6 +184,14 @@ impl Pipeline {
     pub fn drain_flushing(&mut self) -> Vec<FlushExtent> {
         let r = self.flushing.expect("drain without active flush");
         self.regions[r].drain_for_flush()
+    }
+
+    /// Reset the flushing region without building flush extents — for
+    /// flushers that resolve their copy set elsewhere (the live shard's
+    /// ownership map).
+    pub fn reset_flushing(&mut self) {
+        let r = self.flushing.expect("reset without active flush");
+        self.regions[r].reset();
     }
 
     /// The flusher finished writing the drained extents to HDD.
@@ -230,6 +260,23 @@ mod tests {
     }
 
     #[test]
+    fn oversized_write_does_not_strand_the_full_region() {
+        let mut p = pl(2000); // two regions of 1000
+        p.buffer(1, 0, 1000); // fill region 0 exactly
+        // a write too large even for the empty region must not flip
+        // `active`: regression for the switch-before-buffer bug
+        assert_eq!(p.buffer(1, 5000, 1001), BufferOutcome::Blocked);
+        assert_eq!(p.active_region(), 0, "active switches only after a successful buffer");
+        // a region-sized write still triggers the switch and queues the
+        // full region for the flusher
+        match p.buffer(1, 9000, 500) {
+            BufferOutcome::BufferedAndFull { region: 1, flush_region: 0, .. } => {}
+            o => panic!("unexpected {o:?}"),
+        }
+        assert_eq!(p.next_flush(), Some(0), "the full region reaches the flusher");
+    }
+
+    #[test]
     fn pipeline_conservation_of_bytes() {
         let mut p = pl(4000);
         let mut buffered = 0i64;
@@ -267,6 +314,30 @@ mod tests {
         assert!(s.allow_flush(0.0, true, true), "drained -> always flush");
         let imm = FlushStrategy::Immediate;
         assert!(imm.allow_flush(0.0, true, false), "SSDUP never pauses");
+    }
+
+    #[test]
+    fn queued_region_never_accepts_appends() {
+        let mut p = pl(2000);
+        p.buffer(1, 0, 10); // partially-filled active region 0
+        assert!(p.enqueue_residual_flush()); // forced out early (drain/valve)
+        // region 0 is queued: appends must go to region 1 even though 0
+        // has plenty of space — its log slots now belong to the flusher.
+        // Plain Buffered: this call queued nothing new (0 already is).
+        match p.buffer(1, 100, 10) {
+            BufferOutcome::Buffered { region: 1, .. } => {}
+            o => panic!("unexpected {o:?}"),
+        }
+        assert_eq!(p.active_region(), 1);
+        assert_eq!(p.next_flush(), Some(0));
+        // and while region 0 flushes, it still accepts nothing
+        let extents = p.drain_flushing();
+        assert_eq!(extents.len(), 1);
+        match p.buffer(1, 200, 10) {
+            BufferOutcome::Buffered { region: 1, .. } => {}
+            o => panic!("unexpected {o:?}"),
+        }
+        p.flush_done();
     }
 
     #[test]

@@ -97,6 +97,15 @@ impl Region {
     /// into single sequential runs (they are also adjacent in the SSD log
     /// iff they were appended consecutively; merged only when both sides
     /// are contiguous so one SSD read + one HDD write suffices).
+    ///
+    /// The returned extents restore *order*, not *versions*: a same-key
+    /// rewrite replaces its metadata entry here, but partial overlaps and
+    /// cross-region/cross-route rewrites leave stale ranges behind. The
+    /// DES flusher uses this output directly (the simulator models
+    /// write-once bursts); the live flusher only uses this call to reset
+    /// the region and instead copies the surviving extents recorded in
+    /// the shard's sector-ownership map (`live::ownership`), so only the
+    /// newest copies reach the HDD.
     pub fn drain_for_flush(&mut self) -> Vec<FlushExtent> {
         let mut files: Vec<u32> = self.trees.keys().copied().collect();
         files.sort_unstable();
@@ -129,11 +138,19 @@ impl Region {
                 out.push(r);
             }
         }
+        self.reset();
+        out
+    }
+
+    /// Clear the region's metadata and log without materializing flush
+    /// extents — the live flusher's reset path (its copy set comes from
+    /// the shard's sector-ownership map, so building the sorted extent
+    /// list here would be thrown away).
+    pub fn reset(&mut self) {
         self.trees.clear();
         self.used = 0;
         self.log.reset();
         self.buffered_requests = 0;
-        out
     }
 }
 

@@ -129,7 +129,12 @@ impl Report {
 }
 
 /// Run one workload under one system with standard config knobs.
-pub fn run_system(system: SystemKind, workload: &Workload, scale: Scale, tweak: impl FnOnce(&mut SimConfig)) -> SimResult {
+pub fn run_system(
+    system: SystemKind,
+    workload: &Workload,
+    scale: Scale,
+    tweak: impl FnOnce(&mut SimConfig),
+) -> SimResult {
     let mut cfg = SimConfig::new(system).with_seed(scale.seed);
     tweak(&mut cfg);
     simulate(&cfg, workload)

@@ -20,7 +20,16 @@ pub fn table1(scale: Scale) -> Report {
     let mut data = Vec::new();
     for req_kb in [32i32, 64, 128, 256, 512] {
         let req_sectors = req_kb * 2;
-        let w = crate::workload::ior::ior_spanned(0, IorPattern::SegmentedRandom, 16, total_sectors, total_sectors * scale.factor as i64, req_sectors, scale.seed);
+        let span = total_sectors * scale.factor as i64;
+        let w = crate::workload::ior::ior_spanned(
+            0,
+            IorPattern::SegmentedRandom,
+            16,
+            total_sectors,
+            span,
+            req_sectors,
+            scale.seed,
+        );
         let r = run_system(SystemKind::SsdupPlus, &w, scale, |c| {
             c.ssd_capacity_sectors = crate::types::mib_to_sectors(ssd_mib);
         });

@@ -10,9 +10,11 @@
 //!   figures ([`experiments`]);
 //! * **Live engine** ([`live`]) — a real-time, multi-threaded runtime:
 //!   N shards, each with its own detector, routing policy, two-region
-//!   pipelined SSD log, and a background flusher implementing the
-//!   traffic-aware pause gate, over pluggable in-memory or real-file
-//!   storage backends (`ssdup live`).
+//!   pipelined SSD log, a background flusher implementing the
+//!   traffic-aware pause gate, and a sector-ownership map that makes
+//!   overwrites safe across routes (stale buffered copies are superseded
+//!   and skipped at flush; reads serve the newest copy mid-burst), over
+//!   pluggable in-memory or real-file storage backends (`ssdup live`).
 //!
 //! Both substrates share the paper's mechanisms:
 //!

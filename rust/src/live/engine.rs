@@ -10,6 +10,7 @@
 //! backend (SSD log or HDD), and [`LiveEngine::drain`] settles all
 //! buffered data onto the HDD backends.
 
+use std::collections::HashMap;
 use std::io;
 use std::path::Path;
 use std::sync::Arc;
@@ -178,8 +179,10 @@ impl LiveEngine {
     /// sub-request the matching slice of `payload`; returns when every
     /// byte is accepted by a backend (closed-loop semantics).
     ///
-    /// Burst semantics: sectors are expected to be written once between
-    /// drains (see the module docs on cross-route rewrites).
+    /// Overwrites are fully supported, across routes and mid-burst: each
+    /// shard's sector-ownership map supersedes the stale copy, the
+    /// flusher skips it, and [`LiveEngine::read`] serves the newest one
+    /// (see the module docs).
     pub fn submit(&self, req: Request, payload: &[u8]) {
         debug_assert_eq!(payload.len() as u64, req.bytes(), "payload must match request size");
         let sector = SECTOR_BYTES as usize;
@@ -205,8 +208,48 @@ impl LiveEngine {
         }
     }
 
+    /// Read `buf.len()` bytes of `file` starting at sector `offset`,
+    /// served from wherever the newest copy of each sector lives — SSD
+    /// log or HDD — even mid-burst, before any drain. The inverse of
+    /// [`LiveEngine::submit`]'s stripe scatter: each shard resolves its
+    /// sub-range through its sector-ownership map.
+    ///
+    /// Never-written sectors read as zeros (HDD hole semantics).
+    pub fn read(&self, file: u32, offset: i32, buf: &mut [u8]) {
+        let sector = SECTOR_BYTES as usize;
+        debug_assert_eq!(buf.len() % sector, 0, "reads are sector-aligned");
+        let size = (buf.len() / sector) as i32;
+        if size == 0 {
+            return;
+        }
+        let req = Request { app: 0, proc_id: 0, file, offset, size };
+        let stripe_len = self.stripe.stripe_sectors as i64;
+        let mut sub_buf: Vec<u8> = Vec::new();
+        for sub in self.stripe.split(req) {
+            // read the whole sub-range from its shard, then scatter it
+            // back through the stripe bijection (inverse of submit)
+            sub_buf.resize(sub.bytes() as usize, 0);
+            self.shards[sub.node].read(sub.parent.file, sub.local_offset, &mut sub_buf);
+            let mut k = 0i64;
+            while k < sub.size as i64 {
+                let local = sub.local_offset as i64 + k;
+                let logical = logical_sector(&self.stripe, sub.node, local);
+                let run = (stripe_len - local % stripe_len).min(sub.size as i64 - k);
+                let dst = (logical - offset as i64) as usize * sector;
+                let src = k as usize * sector;
+                let len = run as usize * sector;
+                buf[dst..dst + len].copy_from_slice(&sub_buf[src..src + len]);
+                k += run;
+            }
+        }
+    }
+
     /// Settle every buffered byte onto the HDD backends and sync them.
     /// Call after all producers have finished submitting.
+    ///
+    /// Draining is terminal: the flusher threads exit once their shard is
+    /// clean, so the engine is one burst per instance — a submit after
+    /// drain panics (its bytes could otherwise buffer forever).
     pub fn drain(&self) {
         for shard in &self.shards {
             shard.begin_drain();
@@ -258,6 +301,74 @@ impl LiveEngine {
                         }
                         report.checked_bytes += len as u64;
                         k += run;
+                    }
+                }
+            }
+        }
+        report
+    }
+
+    /// Like [`LiveEngine::verify_workload`], but for multi-version
+    /// (rewrite) workloads driven with versioned payloads (the load
+    /// generator's `versioned` mode, [`payload::write_gen`] per request).
+    ///
+    /// For every sector, the *final* writer in program order is computed
+    /// — within a process by issue order, across apps by `after_app` rank
+    /// ([`Workload::app_ranks`]) — and the HDD contents must match that
+    /// writer's generation byte-exactly, proving no stale copy was
+    /// resurrected anywhere. Only meaningful after a drain.
+    ///
+    /// Rank is a chain order, not a global one: it only sequences an app
+    /// against its own `after_app` ancestors. Writes to the same sector
+    /// from processes that are not chain-ordered (two rank-0 apps, or a
+    /// rank-1 app vs. a rank-0 app outside its chain) have no defined
+    /// winner at runtime; rewrite generators keep such ranges disjoint.
+    /// For determinism the candidate tuple breaks remaining ties by
+    /// request index, then `proc_id`.
+    ///
+    /// Memory note: the final-writer map is per-sector (tens of bytes
+    /// per written sector) — sized for test/verify workloads, not
+    /// multi-TiB runs; an extent-granular winner map is the upgrade path
+    /// if verification of huge rewrite runs is ever needed.
+    pub fn verify_workload_versioned(&self, workload: &Workload) -> VerifyReport {
+        let sector = SECTOR_BYTES as usize;
+        let ranks = workload.app_ranks();
+        // final writer per (file, logical sector)
+        let mut winner: HashMap<(u32, i64), (u32, u32, u32)> = HashMap::new();
+        for proc in &workload.processes {
+            let rank = ranks.get(&proc.app).copied().unwrap_or(0);
+            for (idx, req) in proc.reqs.iter().enumerate() {
+                let cand = (rank, idx as u32, proc.proc_id);
+                for s in 0..req.size as i64 {
+                    let key = (req.file, req.offset as i64 + s);
+                    let entry = winner.entry(key).or_insert(cand);
+                    if cand > *entry {
+                        *entry = cand;
+                    }
+                }
+            }
+        }
+        let mut report = VerifyReport::default();
+        let mut got: Vec<u8> = Vec::new();
+        for proc in &workload.processes {
+            let rank = ranks.get(&proc.app).copied().unwrap_or(0);
+            for (idx, req) in proc.reqs.iter().enumerate() {
+                let me = (rank, idx as u32, proc.proc_id);
+                let gen = payload::write_gen(proc.proc_id, idx as u32);
+                for sub in self.stripe.split(*req) {
+                    got.resize(sub.bytes() as usize, 0);
+                    self.shards[sub.node].read_hdd(sub.parent.file, sub.local_offset, &mut got);
+                    for k in 0..sub.size as i64 {
+                        let local = sub.local_offset as i64 + k;
+                        let logical = logical_sector(&self.stripe, sub.node, local);
+                        if winner[&(req.file, logical)] != me {
+                            continue; // a later write owns this sector
+                        }
+                        let buf = &got[k as usize * sector..(k as usize + 1) * sector];
+                        if !payload::sector_matches(req.file, logical, gen, buf) {
+                            report.mismatched_sectors += 1;
+                        }
+                        report.checked_bytes += sector as u64;
                     }
                 }
             }
@@ -380,6 +491,57 @@ mod tests {
         assert!(report.is_ok(), "{report:?}");
         let stats = engine.shutdown();
         assert!(stats.iter().map(|s| s.flushed_bytes).sum::<u64>() > 0, "flusher moved data");
+    }
+
+    #[test]
+    fn read_serves_newest_copy_mid_burst_and_after_drain() {
+        // OrangeFS-BB routes everything to the SSD log; with a roomy SSD
+        // nothing flushes before the drain, so mid-burst reads must come
+        // from the log
+        let engine = LiveEngine::mem(
+            &fast_cfg(SystemKind::OrangeFsBB, 2),
+            SyntheticLatency::ZERO,
+            SyntheticLatency::ZERO,
+        );
+        let s = SECTOR_BYTES as usize;
+        let n = DEFAULT_REQ_SECTORS; // 512 sectors: stripes across shards
+        let req = Request { app: 0, proc_id: 0, file: 1, offset: 0, size: n };
+        let mut v1 = vec![0u8; n as usize * s];
+        payload::fill_gen(1, 0, 1, &mut v1);
+        engine.submit(req, &v1);
+
+        // SSD hit: served from the log, before any flush
+        let mut got = vec![0u8; n as usize * s];
+        engine.read(1, 0, &mut got);
+        assert_eq!(got, v1, "mid-burst read must return the buffered copy");
+        let flushed: u64 = engine.stats().iter().map(|st| st.flushed_bytes).sum();
+        assert_eq!(flushed, 0, "nothing flushed yet: the read was an SSD hit");
+
+        // superseded extent: rewrite the middle 128 sectors; the newest
+        // copy must win immediately, stale log slots notwithstanding
+        let mid = Request { app: 0, proc_id: 0, file: 1, offset: 128, size: 128 };
+        let mut v2 = vec![0u8; 128 * s];
+        payload::fill_gen(1, 128, 2, &mut v2);
+        engine.submit(mid, &v2);
+        engine.read(1, 0, &mut got);
+        assert_eq!(got[..128 * s], v1[..128 * s]);
+        assert_eq!(got[128 * s..256 * s], v2[..]);
+        assert_eq!(got[256 * s..], v1[256 * s..]);
+        let superseded: u64 = engine.stats().iter().map(|st| st.superseded_bytes).sum();
+        assert_eq!(superseded, 128 * SECTOR_BYTES, "stale copy superseded in the map");
+
+        // HDD hit: after the drain the same view comes from the HDD
+        let expect = got.clone();
+        engine.drain();
+        let flushed: u64 = engine.stats().iter().map(|st| st.flushed_bytes).sum();
+        assert!(flushed > 0, "drain moved the buffered data");
+        engine.read(1, 0, &mut got);
+        assert_eq!(got, expect, "post-drain read (HDD hit) must match");
+        // never-written ranges read as zeros
+        let mut hole = vec![0xAAu8; 2 * s];
+        engine.read(1, 4096, &mut hole);
+        assert!(hole.iter().all(|&b| b == 0), "holes read as zeros");
+        engine.shutdown();
     }
 
     fn workload_from_offsets(file: u32, offsets: &[i32]) -> Workload {

@@ -9,10 +9,15 @@
 //! wall-clock latency lands in a per-thread [`LatencyHistogram`]; the
 //! histograms merge into the final [`LiveReport`].
 //!
-//! Limitation: `after_app` dependencies (sequential two-app workloads) are
-//! treated as start-immediately; use concurrent workloads for live runs.
+//! `after_app` dependencies are honored: a process gated on another app
+//! starts only after every process of that app has completed, plus the
+//! workload's compute gap (Fig 14's sequential two-app scenarios run in
+//! the paper's order). Gating is cross-thread — an [`AppGate`] tracks
+//! per-app completion and wakes waiters when a predecessor finishes.
 
-use std::time::Instant;
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::live::engine::LiveEngine;
 use crate::live::payload;
@@ -20,6 +25,10 @@ use crate::live::shard::ShardStats;
 use crate::server::metrics::LatencyHistogram;
 use crate::util::threadpool::scoped_map;
 use crate::workload::{ProcessWorkload, Workload};
+
+/// Fallback poll interval while parked on a gate (the condvar wake on
+/// predecessor completion is the fast path; this bounds gap cool-downs).
+const GATE_POLL: Duration = Duration::from_millis(5);
 
 /// Result of one live run: wall-clock timings, latency distribution, and
 /// the per-shard counters.
@@ -70,42 +79,199 @@ impl LiveReport {
     }
 }
 
+/// Outcome of asking the gate whether a dependent process may start.
+enum GateCheck {
+    Ready,
+    /// predecessor app still running: wait for its completion signal
+    Waiting,
+    /// predecessor done, compute gap still cooling down
+    Cooling(Duration),
+}
+
+/// Tracks per-app completion across client threads so `after_app`
+/// processes start only after their predecessor finished plus the gap.
+struct AppGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    /// processes still running, per app (absent = app completed)
+    remaining: HashMap<u16, usize>,
+    /// wall-clock completion instant, per completed app
+    done_at: HashMap<u16, Instant>,
+}
+
+impl AppGate {
+    fn new(workload: &Workload) -> Self {
+        let mut remaining: HashMap<u16, usize> = HashMap::new();
+        for p in &workload.processes {
+            *remaining.entry(p.app).or_insert(0) += 1;
+        }
+        Self {
+            state: Mutex::new(GateState { remaining, done_at: HashMap::new() }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn check(&self, dep: u16, gap_us: u64) -> GateCheck {
+        let st = self.state.lock().unwrap();
+        match st.done_at.get(&dep) {
+            Some(&t) => {
+                let gap = Duration::from_micros(gap_us);
+                let waited = t.elapsed();
+                if waited >= gap {
+                    GateCheck::Ready
+                } else {
+                    GateCheck::Cooling(gap - waited)
+                }
+            }
+            // a dependency on an app with no processes can never fire:
+            // treat it as satisfied rather than deadlock
+            None if !st.remaining.contains_key(&dep) => GateCheck::Ready,
+            None => GateCheck::Waiting,
+        }
+    }
+
+    /// One process of `app` completed all its requests.
+    fn mark_done(&self, app: u16) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(n) = st.remaining.get_mut(&app) {
+            *n -= 1;
+            if *n == 0 {
+                st.remaining.remove(&app);
+                st.done_at.insert(app, Instant::now());
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Park until a completion signal arrives or `dur` elapses.
+    fn park(&self, dur: Duration) {
+        let st = self.state.lock().unwrap();
+        let _ = self.cv.wait_timeout(st, dur).unwrap();
+    }
+}
+
+/// Reject cyclic `after_app` graphs up front: a cycle can never make
+/// progress and would park every client thread forever. (Self-deps are
+/// ignored here and at the gate — they mean "start immediately".)
+fn assert_acyclic(workload: &Workload) {
+    let mut dep: HashMap<u16, u16> = HashMap::new();
+    for p in &workload.processes {
+        if let Some((d, _)) = p.after_app {
+            if d != p.app {
+                dep.insert(p.app, d);
+            }
+        }
+    }
+    for &start in dep.keys() {
+        let mut cur = start;
+        let mut hops = 0;
+        while let Some(&d) = dep.get(&cur) {
+            cur = d;
+            hops += 1;
+            assert!(hops <= dep.len(), "after_app dependency cycle involving app {start}");
+        }
+    }
+}
+
 /// Drive `workload` through `engine` from `clients` concurrent closed-loop
 /// threads, then drain. The engine must be fresh (one run per engine).
 pub fn run(engine: &LiveEngine, workload: &Workload, clients: usize) -> LiveReport {
+    run_with(engine, workload, clients, false)
+}
+
+/// Like [`run`], with `versioned` payloads: every request's bytes are
+/// stamped with its per-process write generation
+/// ([`payload::write_gen`]), so rewrite-heavy workloads stay verifiable
+/// via [`LiveEngine::verify_workload_versioned`] — including *which* copy
+/// of a rewritten sector survived.
+///
+/// [`LiveEngine::verify_workload_versioned`]: crate::live::LiveEngine::verify_workload_versioned
+pub fn run_with(
+    engine: &LiveEngine,
+    workload: &Workload,
+    clients: usize,
+    versioned: bool,
+) -> LiveReport {
     let clients = clients.max(1);
+    assert_acyclic(workload);
     // deal processes round-robin onto client threads
     let mut groups: Vec<Vec<&ProcessWorkload>> = (0..clients).map(|_| Vec::new()).collect();
     for (i, proc) in workload.processes.iter().enumerate() {
         groups[i % clients].push(proc);
     }
     groups.retain(|g| !g.is_empty());
+    let gate = AppGate::new(workload);
 
     let t0 = Instant::now();
     let jobs: Vec<_> = groups
         .into_iter()
         .map(|group| {
+            let gate = &gate;
             move || {
                 let mut hist = LatencyHistogram::new();
                 let mut buf: Vec<u8> = Vec::new();
+                // a process with no requests is complete by definition
+                for proc in &group {
+                    if proc.reqs.is_empty() {
+                        gate.mark_done(proc.app);
+                    }
+                }
                 // interleave this thread's processes one request at a time
                 let mut cursors = vec![0usize; group.len()];
                 loop {
                     let mut progressed = false;
+                    let mut pending = false;
+                    let mut cooldown: Option<Duration> = None;
                     for (proc, cursor) in group.iter().zip(cursors.iter_mut()) {
-                        let Some(req) = proc.reqs.get(*cursor) else { continue };
+                        if *cursor >= proc.reqs.len() {
+                            continue;
+                        }
+                        if *cursor == 0 {
+                            // a self-dependency means "start immediately"
+                            if let Some((dep, gap_us)) = proc.after_app.filter(|&(d, _)| d != proc.app) {
+                                match gate.check(dep, gap_us) {
+                                    GateCheck::Ready => {}
+                                    GateCheck::Waiting => {
+                                        pending = true;
+                                        continue;
+                                    }
+                                    GateCheck::Cooling(d) => {
+                                        pending = true;
+                                        cooldown = Some(cooldown.map_or(d, |c| c.min(d)));
+                                        continue;
+                                    }
+                                }
+                            }
+                        }
+                        let req = proc.reqs[*cursor];
+                        let gen = if versioned {
+                            payload::write_gen(proc.proc_id, *cursor as u32)
+                        } else {
+                            0
+                        };
                         *cursor += 1;
                         progressed = true;
                         // resize without clear: fill overwrites the whole
                         // buffer, and same-size requests skip the memset
                         buf.resize(req.bytes() as usize, 0);
-                        payload::fill(req.file, req.offset as i64, &mut buf);
+                        payload::fill_gen(req.file, req.offset as i64, gen, &mut buf);
                         let start = Instant::now();
-                        engine.submit(*req, &buf);
+                        engine.submit(req, &buf);
                         hist.record(start.elapsed().as_micros() as u64);
+                        if *cursor == proc.reqs.len() {
+                            gate.mark_done(proc.app);
+                        }
                     }
                     if !progressed {
-                        break;
+                        if !pending {
+                            break;
+                        }
+                        // every runnable process is gated: park until a
+                        // predecessor completes or a gap cools down
+                        gate.park(cooldown.unwrap_or(GATE_POLL));
                     }
                 }
                 hist
@@ -168,6 +334,44 @@ mod tests {
         assert!(report.throughput_mbps() > 0.0);
         assert!(report.throughput_mbps() >= report.drained_throughput_mbps());
         assert!(report.summary().contains("MB/s"));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn after_app_gates_on_predecessor_completion_plus_gap() {
+        let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(1).with_ssd_mib(16);
+        let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+        let a = ior(0, IorPattern::SegmentedContiguous, 2, 2_048, DEFAULT_REQ_SECTORS, 5);
+        let b = ior(0, IorPattern::SegmentedContiguous, 2, 2_048, DEFAULT_REQ_SECTORS, 6);
+        // 80 ms compute gap: without gating the whole (tiny) run finishes
+        // in well under that
+        let w = Workload::sequential("seq", a, 80_000, b);
+        let report = run(&engine, &w, 4);
+        assert_eq!(report.requests, w.total_requests() as u64);
+        assert!(
+            report.ingest_us >= 80_000,
+            "app B must wait out its predecessor plus the gap, got {} us",
+            report.ingest_us
+        );
+        let verify = engine.verify_workload(&w);
+        assert!(verify.is_ok(), "{verify:?}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn gated_process_on_the_same_thread_does_not_deadlock() {
+        // 1 client thread: the gated process shares its thread with the
+        // predecessor, so the interleave loop must keep making progress
+        // past the parked process
+        let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(1).with_ssd_mib(16);
+        let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+        let a = ior(0, IorPattern::SegmentedContiguous, 1, 1_024, DEFAULT_REQ_SECTORS, 5);
+        let b = ior(0, IorPattern::SegmentedContiguous, 1, 1_024, DEFAULT_REQ_SECTORS, 6);
+        let w = Workload::sequential("seq-1thread", a, 1_000, b);
+        let report = run(&engine, &w, 1);
+        assert_eq!(report.requests, w.total_requests() as u64);
+        let verify = engine.verify_workload(&w);
+        assert!(verify.is_ok(), "{verify:?}");
         engine.shutdown();
     }
 }

@@ -23,25 +23,35 @@
 //!   drain, and byte-exact verification;
 //! * [`loadgen`] — closed-loop concurrent load generator over the
 //!   `workload::*` patterns, recording p50/p95/p99 request latency;
-//! * [`payload`] — deterministic sector contents so every byte on the HDD
-//!   backends can be re-derived and checked after a run.
+//! * [`ownership`] — the per-shard **sector-ownership extent map**: which
+//!   tier (SSD log slot or HDD) holds the newest copy of every sector;
+//! * [`payload`] — deterministic sector contents (optionally versioned
+//!   per write) so every byte on the HDD backends can be re-derived and
+//!   checked after a run — including *which* copy of a rewritten sector
+//!   survived.
 //!
-//! Semantics note: like the simulator (and the paper's write-burst
-//! evaluation), the engine models a write-only burst path with no
-//! cross-route overwrite tracking. A sector rewritten *after* the route
-//! flipped from SSD to HDD still has its older buffered copy flushed at
-//! drain, which would then win. HPC checkpoint bursts never rewrite a
-//! sector within a burst; a general-purpose store would need buffered-
-//! extent invalidation on the direct path (future PR, together with the
-//! read path).
+//! Semantics note: overwrites are fully supported, across routes and
+//! mid-burst. Every ingest claims its sector range in the shard's
+//! ownership map; a rewrite supersedes the older buffered copy (the
+//! flusher skips it — stale-flush suppression), and a direct-to-HDD
+//! write that would overlap live buffered data is absorbed into the SSD
+//! log so it can never race the flusher for the same HDD sectors. Reads
+//! ([`LiveEngine::read`]) resolve through the same map and always serve
+//! the newest copy, even while a burst is still buffered. The one
+//! remaining caveat is *concurrent* writers to the same sector: with no
+//! ordering between two in-flight client writes, "newest" is whichever
+//! claim lands last (the map keeps the engine consistent; the workload
+//! decides whether that order is meaningful).
 
 pub mod backend;
 pub mod engine;
 pub mod loadgen;
+pub mod ownership;
 pub mod payload;
 pub mod shard;
 
 pub use backend::{Backend, FileBackend, MemBackend, SyntheticLatency};
 pub use engine::{LiveConfig, LiveEngine, VerifyReport};
-pub use loadgen::{run as run_load, LiveReport};
+pub use loadgen::{run as run_load, run_with as run_load_with, LiveReport};
+pub use ownership::{OwnershipMap, Tier};
 pub use shard::{Shard, ShardConfig, ShardStats};

@@ -1,0 +1,338 @@
+//! Per-shard **sector-ownership extent map**: which tier holds the newest
+//! copy of every sector (overwrite safety for the live engine).
+//!
+//! The paper's log-structured buffer (§2.5) restores *order* at flush
+//! time, but a rewrite can leave two copies of a sector alive — one in
+//! the SSD log, one on the HDD — and without version tracking the flusher
+//! may resurrect the stale one. This map, an [`AvlTree`] keyed by the
+//! absolute disk LBA of each extent's first sector, is the single source
+//! of truth for "where does the newest copy live":
+//!
+//! * ingest **claims** the written range — any overlapped part of an
+//!   older buffered extent is superseded on the spot;
+//! * the flusher **clips** every flush extent against the map and copies
+//!   only the parts its region still owns (stale-flush suppression: the
+//!   skipped sectors also never cost HDD bandwidth);
+//! * the read path **resolves** a range into (SSD-slot | HDD) segments
+//!   and serves each from the newest copy, even mid-burst;
+//! * when a region's flush completes, its surviving extents are
+//!   **released** — the newest copy is now the HDD one.
+//!
+//! Only SSD-resident extents are stored: a range with no entry is
+//! HDD-owned by definition (settled by a flush, written directly, or a
+//! never-written hole that reads as zeros). That keeps the map
+//! proportional to *currently buffered* data, not to history.
+
+use crate::buffer::avl::AvlTree;
+
+/// Which tier holds the newest copy of a sector range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// newest copy is settled on the HDD backend (or never written)
+    Hdd,
+    /// newest copy sits in the SSD log: pipeline region + sector slot
+    /// within that region's log
+    Ssd { region: usize, ssd_offset: i64 },
+}
+
+/// Stored per live extent: length plus the SSD slot of the newest copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct SsdExtent {
+    size: i64,
+    region: usize,
+    ssd_offset: i64,
+}
+
+/// Extent map over absolute disk LBAs (sectors). See the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct OwnershipMap {
+    map: AvlTree<SsdExtent>,
+}
+
+impl OwnershipMap {
+    pub fn new() -> Self {
+        Self { map: AvlTree::new() }
+    }
+
+    /// Number of live (SSD-resident) extents.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total SSD-resident sectors (test/debug visibility).
+    pub fn ssd_sectors(&self) -> i64 {
+        self.map.in_order().map(|(_, e)| e.size).sum()
+    }
+
+    /// Stored extents overlapping `[lba, end)`, ascending, unclipped:
+    /// everything in `range(lba, end)` plus at most one run that starts
+    /// left of `lba` and reaches into it.
+    fn overlapping(&self, lba: i64, end: i64) -> Vec<(i64, SsdExtent)> {
+        let mut out = Vec::new();
+        if let Some((k, e)) = self.map.below(lba) {
+            if k + e.size > lba {
+                out.push((k, *e));
+            }
+        }
+        out.extend(self.map.range(lba, end));
+        out
+    }
+
+    /// Does any part of `[lba, lba+size)` currently live in the SSD log?
+    /// Allocation-free: this guards every direct-route write.
+    pub fn overlaps_ssd(&self, lba: i64, size: i64) -> bool {
+        if let Some((k, e)) = self.map.below(lba) {
+            if k + e.size > lba {
+                return true;
+            }
+        }
+        self.map.any_in_range(lba, lba + size)
+    }
+
+    /// Does any part of `[lba, lba+size)` live in `region`'s log
+    /// specifically? (The valve path asks before forcing a residual
+    /// flush of the active region: overlaps held by a pending/flushing
+    /// region clear on their own.)
+    pub fn overlaps_ssd_region(&self, lba: i64, size: i64, region: usize) -> bool {
+        self.overlapping(lba, lba + size).iter().any(|(_, e)| e.region == region)
+    }
+
+    /// Record that the newest copy of `[lba, lba+size)` now lives at
+    /// `tier`, superseding the overlapped parts of any older extents
+    /// (they are trimmed or removed, with their slot offsets adjusted).
+    /// Returns the number of sectors whose previously-newest copy sat in
+    /// the SSD log — exactly the stale sectors a flush will now skip.
+    pub fn claim(&mut self, lba: i64, size: i64, tier: Tier) -> i64 {
+        debug_assert!(size > 0, "empty claim");
+        let end = lba + size;
+        let mut superseded = 0;
+        for (k, e) in self.overlapping(lba, end) {
+            self.map.remove(k);
+            let e_end = k + e.size;
+            if k < lba {
+                // left remainder keeps its slot start
+                self.map.insert(k, SsdExtent { size: lba - k, ..e });
+            }
+            if e_end > end {
+                // right remainder: slot offset advances by the cut length
+                let cut = end - k;
+                self.map.insert(
+                    end,
+                    SsdExtent { size: e_end - end, region: e.region, ssd_offset: e.ssd_offset + cut },
+                );
+            }
+            superseded += e_end.min(end) - k.max(lba);
+        }
+        if let Tier::Ssd { region, ssd_offset } = tier {
+            self.map.insert(lba, SsdExtent { size, region, ssd_offset });
+        }
+        superseded
+    }
+
+    /// Cover `[lba, lba+size)` with ascending non-overlapping segments
+    /// `(seg_lba, seg_size, tier)`; ranges with no SSD-resident copy come
+    /// back as [`Tier::Hdd`]. The SSD slot offsets are adjusted to each
+    /// segment's start, so a segment can be served with one backend read.
+    pub fn resolve(&self, lba: i64, size: i64) -> Vec<(i64, i64, Tier)> {
+        let end = lba + size;
+        let mut out = Vec::new();
+        let mut cursor = lba;
+        for (k, e) in self.overlapping(lba, end) {
+            let s = k.max(lba);
+            let e_end = (k + e.size).min(end);
+            if s > cursor {
+                out.push((cursor, s - cursor, Tier::Hdd));
+            }
+            let delta = s - k;
+            out.push((s, e_end - s, Tier::Ssd { region: e.region, ssd_offset: e.ssd_offset + delta }));
+            cursor = e_end;
+        }
+        if cursor < end {
+            out.push((cursor, end - cursor, Tier::Hdd));
+        }
+        out
+    }
+
+    /// Everything a flush of `region` must copy: the extents whose newest
+    /// copy lives in that region's log, as `(lba, size, ssd_offset)`
+    /// ascending by LBA (the sequential HDD order — LBAs embed the
+    /// per-file base extents), with log-adjacent neighbors merged into
+    /// single runs. Superseded ranges are simply *absent*: the map tracks
+    /// newest copies only, so stale-flush suppression falls out of
+    /// iterating it instead of the region's raw append metadata. (The
+    /// region metadata alone would also lose data here: a same-offset
+    /// rewrite with a shorter size replaces its tree entry whole, while
+    /// the map correctly keeps the surviving tail as its own extent.)
+    pub fn region_extents(&self, region: usize) -> Vec<(i64, i64, i64)> {
+        let mut out: Vec<(i64, i64, i64)> = Vec::new();
+        for (k, e) in self.map.in_order() {
+            if e.region != region {
+                continue;
+            }
+            match out.last_mut() {
+                Some(prev) if prev.0 + prev.1 == k && prev.2 + prev.1 == e.ssd_offset => {
+                    prev.1 += e.size;
+                }
+                _ => out.push((k, e.size, e.ssd_offset)),
+            }
+        }
+        out
+    }
+
+    /// A region's flush completed: every extent it still owns is settled
+    /// on the HDD now. Removing them keeps "absent = HDD" true before the
+    /// region is recycled for new appends. Returns the settled sector
+    /// count — the flusher's `flushed_bytes` accounting (extents
+    /// superseded mid-copy are absent here, already booked at claim).
+    pub fn release_region(&mut self, region: usize) -> i64 {
+        let settled: Vec<(i64, i64)> = self
+            .map
+            .in_order()
+            .filter(|(_, e)| e.region == region)
+            .map(|(k, e)| (k, e.size))
+            .collect();
+        let mut sectors = 0;
+        for (k, size) in settled {
+            self.map.remove(k);
+            sectors += size;
+        }
+        sectors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ssd(region: usize, ssd_offset: i64) -> Tier {
+        Tier::Ssd { region, ssd_offset }
+    }
+
+    #[test]
+    fn claim_then_resolve_round_trips() {
+        let mut m = OwnershipMap::new();
+        assert_eq!(m.claim(100, 50, ssd(0, 0)), 0, "nothing superseded yet");
+        assert_eq!(m.resolve(100, 50), vec![(100, 50, ssd(0, 0))]);
+        // gaps around it resolve as HDD
+        assert_eq!(
+            m.resolve(90, 70),
+            vec![(90, 10, Tier::Hdd), (100, 50, ssd(0, 10)), (150, 10, Tier::Hdd)]
+        );
+        assert!(m.overlaps_ssd(149, 1));
+        assert!(!m.overlaps_ssd(150, 100));
+    }
+
+    #[test]
+    fn resolve_adjusts_slot_offset_to_segment_start() {
+        let mut m = OwnershipMap::new();
+        m.claim(1000, 100, ssd(1, 400));
+        // reading the tail of the extent must point into the middle of
+        // the SSD run, not its start
+        assert_eq!(m.resolve(1040, 20), vec![(1040, 20, ssd(1, 440))]);
+    }
+
+    #[test]
+    fn exact_overwrite_supersedes_fully() {
+        let mut m = OwnershipMap::new();
+        m.claim(0, 64, ssd(0, 0));
+        assert_eq!(m.claim(0, 64, ssd(0, 64)), 64, "whole old copy superseded");
+        assert_eq!(m.resolve(0, 64), vec![(0, 64, ssd(0, 64))]);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn partial_overlap_trims_and_adjusts_offsets() {
+        let mut m = OwnershipMap::new();
+        m.claim(0, 100, ssd(0, 0));
+        // overwrite the middle from the other region
+        assert_eq!(m.claim(30, 40, ssd(1, 500)), 40);
+        assert_eq!(
+            m.resolve(0, 100),
+            vec![(0, 30, ssd(0, 0)), (30, 40, ssd(1, 500)), (70, 30, ssd(0, 70))]
+        );
+        assert_eq!(m.ssd_sectors(), 100);
+    }
+
+    #[test]
+    fn hdd_claim_evicts_buffered_copies() {
+        let mut m = OwnershipMap::new();
+        m.claim(0, 100, ssd(0, 0));
+        // direct-to-HDD rewrite of the tail: the buffered copy of those
+        // sectors is stale now
+        assert_eq!(m.claim(60, 80, Tier::Hdd), 40);
+        assert_eq!(m.resolve(0, 140), vec![(0, 60, ssd(0, 0)), (60, 80, Tier::Hdd)]);
+    }
+
+    #[test]
+    fn claim_spanning_multiple_extents() {
+        let mut m = OwnershipMap::new();
+        m.claim(0, 10, ssd(0, 0));
+        m.claim(20, 10, ssd(0, 10));
+        m.claim(40, 10, ssd(0, 20));
+        // one big rewrite covering all three plus the gaps
+        assert_eq!(m.claim(5, 40, ssd(1, 0)), 10 + 5 + 5);
+        assert_eq!(
+            m.resolve(0, 50),
+            vec![(0, 5, ssd(0, 0)), (5, 40, ssd(1, 0)), (45, 5, ssd(0, 25))]
+        );
+    }
+
+    #[test]
+    fn region_extents_merge_runs_and_skip_superseded_and_foreign() {
+        let mut m = OwnershipMap::new();
+        // three consecutive appends into region 0: adjacent in LBA + log
+        m.claim(0, 10, ssd(0, 0));
+        m.claim(10, 10, ssd(0, 10));
+        m.claim(20, 10, ssd(0, 20));
+        m.claim(100, 10, ssd(1, 0)); // other region
+        assert_eq!(m.region_extents(0), vec![(0, 30, 0)], "one merged sequential run");
+        assert_eq!(m.region_extents(1), vec![(100, 10, 0)]);
+        // supersede the middle: the run splits and the hole is skipped
+        m.claim(12, 6, ssd(1, 10));
+        assert_eq!(m.region_extents(0), vec![(0, 12, 0), (18, 12, 18)]);
+        // same-offset shorter rewrite: the surviving tail stays flushable
+        let mut m2 = OwnershipMap::new();
+        m2.claim(0, 64, ssd(0, 0));
+        m2.claim(0, 16, ssd(0, 64));
+        assert_eq!(m2.region_extents(0), vec![(0, 16, 64), (16, 48, 16)]);
+    }
+
+    #[test]
+    fn release_region_settles_only_that_region() {
+        let mut m = OwnershipMap::new();
+        m.claim(0, 10, ssd(0, 0));
+        m.claim(100, 10, ssd(1, 0));
+        m.claim(200, 10, ssd(0, 10));
+        assert_eq!(m.release_region(0), 20, "both region-0 extents settle");
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.resolve(100, 10), vec![(100, 10, ssd(1, 0))]);
+        assert_eq!(m.resolve(0, 10), vec![(0, 10, Tier::Hdd)]);
+        assert_eq!(m.release_region(1), 10);
+        assert!(m.is_empty());
+        assert_eq!(m.release_region(0), 0, "idempotent on an empty map");
+    }
+
+    #[test]
+    fn superseded_accounting_is_exact_under_churn() {
+        // conservation: claimed SSD sectors == live + superseded, always
+        let mut m = OwnershipMap::new();
+        let mut rng = crate::util::prng::Prng::new(31);
+        let mut claimed = 0i64;
+        let mut superseded = 0i64;
+        for i in 0..500usize {
+            let lba = rng.gen_range(2000) as i64;
+            let size = 1 + rng.gen_range(64) as i64;
+            if rng.chance(0.25) {
+                superseded += m.claim(lba, size, Tier::Hdd);
+            } else {
+                claimed += size;
+                superseded += m.claim(lba, size, Tier::Ssd { region: i % 2, ssd_offset: i as i64 * 64 });
+            }
+            assert_eq!(m.ssd_sectors() + superseded, claimed, "step {i}");
+        }
+    }
+}

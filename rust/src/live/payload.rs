@@ -1,49 +1,82 @@
 //! Deterministic request payloads.
 //!
 //! Every sector a client writes carries content that is a pure function of
-//! `(file, logical sector)`, so after a run *any* byte on the HDD backends
-//! can be re-derived and verified — the live engine's end-to-end proof
-//! that buffering, flushing, and striping moved data to the right place.
-//! Rewrites of the same sector produce the same bytes, so verification is
-//! insensitive to write order.
+//! `(file, logical sector, generation)`, so after a run *any* byte on the
+//! HDD backends can be re-derived and verified — the live engine's
+//! end-to-end proof that buffering, flushing, and striping moved data to
+//! the right place.
+//!
+//! Generation 0 is the classic write-once pattern: rewrites of the same
+//! sector produce the same bytes, so verification is insensitive to write
+//! order. Multi-version (rewrite) workloads instead stamp each request
+//! with a unique [`write_gen`] so *which* copy survived is checkable too
+//! — that is what lets the tests prove the flusher never resurrects a
+//! stale buffered copy.
 
 use crate::types::SECTOR_BYTES;
 use crate::util::prng::SplitMix64;
 
-/// The 8-byte pattern repeated through sector `sector` of `file`.
+/// The 8-byte pattern repeated through sector `sector` of `file` at write
+/// generation `gen` (`gen == 0` is the unversioned pattern).
 #[inline]
-pub fn sector_pattern(file: u32, sector: i64) -> [u8; 8] {
-    let seed = ((file as u64) << 40) ^ (sector as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+pub fn sector_pattern_gen(file: u32, sector: i64, gen: u64) -> [u8; 8] {
+    let seed = ((file as u64) << 40)
+        ^ (sector as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ gen.wrapping_mul(0xD1B5_4A32_D192_ED03);
     SplitMix64::new(seed).next_u64().to_le_bytes()
 }
 
-/// Fill `buf` (a whole number of sectors) with the payload for the extent
-/// starting at `(file, start_sector)`.
-pub fn fill(file: u32, start_sector: i64, buf: &mut [u8]) {
+/// The unversioned (generation-0) pattern for sector `sector` of `file`.
+#[inline]
+pub fn sector_pattern(file: u32, sector: i64) -> [u8; 8] {
+    sector_pattern_gen(file, sector, 0)
+}
+
+/// Generation tag for the `idx`-th request of process `proc_id`: unique
+/// per (process, request), so any two writes of the same sector produce
+/// different bytes. The `+ 1` keeps generation 0 — the unversioned
+/// pattern — out of the versioned space entirely.
+#[inline]
+pub fn write_gen(proc_id: u32, idx: u32) -> u64 {
+    ((proc_id as u64 + 1) << 32) | idx as u64
+}
+
+/// Fill `buf` (a whole number of sectors) with the generation-`gen`
+/// payload for the extent starting at `(file, start_sector)`.
+pub fn fill_gen(file: u32, start_sector: i64, gen: u64, buf: &mut [u8]) {
     let sector_bytes = SECTOR_BYTES as usize;
     debug_assert_eq!(buf.len() % sector_bytes, 0, "payload must be sector-aligned");
     for (k, sector_buf) in buf.chunks_mut(sector_bytes).enumerate() {
-        let pat = sector_pattern(file, start_sector + k as i64);
+        let pat = sector_pattern_gen(file, start_sector + k as i64, gen);
         for chunk in sector_buf.chunks_mut(8) {
             chunk.copy_from_slice(&pat[..chunk.len()]);
         }
     }
 }
 
-/// Count the sectors of `buf` that do NOT hold the expected payload for
-/// the extent starting at `(file, start_sector)`. 0 means fully verified.
+/// Fill `buf` with the unversioned payload for `(file, start_sector)`.
+pub fn fill(file: u32, start_sector: i64, buf: &mut [u8]) {
+    fill_gen(file, start_sector, 0, buf);
+}
+
+/// Does `sector_buf` (one sector) hold exactly the pattern for
+/// `(file, sector, gen)`?
+#[inline]
+pub fn sector_matches(file: u32, sector: i64, gen: u64, sector_buf: &[u8]) -> bool {
+    let pat = sector_pattern_gen(file, sector, gen);
+    sector_buf.chunks(8).all(|chunk| chunk == &pat[..chunk.len()])
+}
+
+/// Count the sectors of `buf` that do NOT hold the expected unversioned
+/// payload for the extent starting at `(file, start_sector)`. 0 means
+/// fully verified.
 pub fn mismatched_sectors(file: u32, start_sector: i64, buf: &[u8]) -> u64 {
     let sector_bytes = SECTOR_BYTES as usize;
     debug_assert_eq!(buf.len() % sector_bytes, 0, "payload must be sector-aligned");
-    let mut bad = 0;
-    for (k, sector_buf) in buf.chunks(sector_bytes).enumerate() {
-        let pat = sector_pattern(file, start_sector + k as i64);
-        let ok = sector_buf.chunks(8).all(|chunk| chunk == &pat[..chunk.len()]);
-        if !ok {
-            bad += 1;
-        }
-    }
-    bad
+    buf.chunks(sector_bytes)
+        .enumerate()
+        .filter(|(k, sector_buf)| !sector_matches(file, start_sector + *k as i64, 0, sector_buf))
+        .count() as u64
 }
 
 #[cfg(test)]
@@ -78,5 +111,33 @@ mod tests {
         fill(1, 50, &mut buf);
         // claiming the same bytes came from sector 51 must fail
         assert_eq!(mismatched_sectors(1, 51, &buf), 2);
+    }
+
+    #[test]
+    fn generations_produce_distinct_verifiable_bytes() {
+        let s = SECTOR_BYTES as usize;
+        let mut v1 = vec![0u8; s];
+        let mut v2 = vec![0u8; s];
+        fill_gen(1, 10, write_gen(0, 0), &mut v1);
+        fill_gen(1, 10, write_gen(0, 1), &mut v2);
+        assert_ne!(v1, v2, "rewrites must be distinguishable");
+        assert!(sector_matches(1, 10, write_gen(0, 0), &v1));
+        assert!(!sector_matches(1, 10, write_gen(0, 1), &v1));
+        assert!(sector_matches(1, 10, write_gen(0, 1), &v2));
+    }
+
+    #[test]
+    fn generation_zero_is_the_unversioned_pattern() {
+        assert_eq!(sector_pattern_gen(5, 77, 0), sector_pattern(5, 77));
+        // and write_gen never collides with it
+        assert_ne!(write_gen(0, 0), 0);
+    }
+
+    #[test]
+    fn write_gens_are_unique_per_process_and_index() {
+        let a = write_gen(0, 0);
+        let b = write_gen(0, 1);
+        let c = write_gen(1, 0);
+        assert!(a != b && a != c && b != c);
     }
 }

@@ -17,6 +17,18 @@
 //! Backpressure is physical: a write that finds both regions unavailable
 //! blocks its client on a condvar until the flusher frees a region —
 //! the paper's "the system waits until a region becomes empty".
+//!
+//! **Overwrite safety.** Every ingest claims its sector range in the
+//! shard's [`OwnershipMap`] (under the core lock, after the SSD bytes
+//! landed), so the newest copy of every sector is always locatable. A
+//! direct-to-HDD write that would overlap a live buffered extent is
+//! absorbed into the SSD log instead — a direct write racing the flusher
+//! for the same sectors is the one ordering the locks cannot arbitrate.
+//! The flusher copies exactly the map's surviving extents for its
+//! region — superseded ranges are absent from the map — so a stale
+//! buffered copy can never clobber newer data on the HDD, and skipped
+//! sectors cost no HDD bandwidth. Reads resolve through the same map and
+//! are served from the newest copy — SSD log or HDD — even mid-burst.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -28,9 +40,10 @@ use crate::detector::stream::StreamGrouper;
 use crate::device::SeekModel;
 use crate::fs::{FileTable, SubRequest};
 use crate::live::backend::Backend;
+use crate::live::ownership::{OwnershipMap, Tier};
 use crate::redirector::{AdaptivePolicy, AlwaysHdd, AlwaysSsd, RoutePolicy, WatermarkPolicy};
 use crate::server::config::SystemKind;
-use crate::types::{Route, SECTOR_BYTES};
+use crate::types::{sectors_to_bytes, Route, SECTOR_BYTES};
 
 /// Per-shard configuration (the engine derives one from its `LiveConfig`).
 #[derive(Clone, Copy, Debug)]
@@ -53,6 +66,14 @@ pub struct ShardStats {
     pub ssd_bytes_buffered: u64,
     pub hdd_direct_bytes: u64,
     pub flushed_bytes: u64,
+    /// bytes whose buffered copy was superseded by a newer write before
+    /// the flusher reached it (skipped at flush time). Conservation:
+    /// after a full drain, `ssd_bytes_buffered == flushed_bytes +
+    /// superseded_bytes`.
+    pub superseded_bytes: u64,
+    /// direct-route writes absorbed into the SSD log because they
+    /// overlapped live buffered data (cross-route rewrite safety)
+    pub rerouted_writes: u64,
     pub streams: u64,
     pub flushes: u64,
     pub flush_pauses: u64,
@@ -92,6 +113,9 @@ struct ShardCore {
     policy: Box<dyn RoutePolicy + Send>,
     route: Route,
     pipeline: Pipeline,
+    /// sector-ownership extent map: where the newest copy of every
+    /// buffered sector lives (see the module docs on overwrite safety)
+    own: OwnershipMap,
     drained: bool,
     shutdown: bool,
     /// set by the flusher on a backend I/O error, with the cause; waiters
@@ -141,6 +165,7 @@ impl Shard {
                 policy,
                 route,
                 pipeline: Pipeline::new(cfg.ssd_capacity_sectors),
+                own: OwnershipMap::new(),
                 drained: false,
                 shutdown: false,
                 failed: None,
@@ -160,24 +185,72 @@ impl Shard {
 
     /// Ingest one sub-request with its payload. Blocks (physical
     /// backpressure) while both pipeline regions are unavailable.
+    ///
+    /// Overwrites are fully supported, across routes: the newest copy of
+    /// every sector is tracked in the ownership map, stale buffered
+    /// copies are superseded, and a direct write over live buffered data
+    /// is absorbed into the SSD log (see the module docs).
     pub fn submit(&self, sub: &SubRequest, payload: &[u8]) {
         let size = sub.size as i64;
         debug_assert_eq!(payload.len() as u64, sub.bytes());
         let mut direct_dest: Option<u64> = None;
         {
             let mut core = self.core.lock().unwrap();
+            // the engine is one burst per instance: the flusher exits for
+            // good once a drain completes, so a later submit could buffer
+            // bytes that no one would ever flush — fail loudly instead
+            assert!(!core.drained, "submit after drain: the live engine is one burst per engine");
             let lba = core.files.lba(sub.parent.file, sub.local_offset);
             debug_assert!(lba <= i32::MAX as i64, "LBA exceeds detector i32 space");
             core.stats.bytes_in += payload.len() as u64;
             // a sub-request larger than a region could never buffer:
             // route it directly to HDD (safety valve)
-            let route = if !self.use_ssd || size > self.half_sectors {
+            let mut route = if !self.use_ssd || size > self.half_sectors {
                 Route::Hdd
             } else {
                 core.route
             };
+            // overwrite safety: a direct write overlapping a live
+            // buffered extent would race the flusher for the same HDD
+            // sectors. Absorb it into the SSD log instead — the claim
+            // below supersedes the stale copy and the flush order across
+            // regions keeps last-write-wins on the HDD.
+            if route == Route::Hdd && self.use_ssd && core.own.overlaps_ssd(lba, size) {
+                if size <= self.half_sectors {
+                    route = Route::Ssd;
+                    core.stats.rerouted_writes += 1;
+                } else {
+                    // valve-sized write over buffered data cannot be
+                    // absorbed: force the overlap out through the flusher
+                    // and only then go direct
+                    while core.own.overlaps_ssd(lba, size) {
+                        core.stats.blocked_waits += 1;
+                        // only the active region needs forcing — overlaps
+                        // held by a pending/flushing region drain anyway
+                        let active = core.pipeline.active_region();
+                        if core.own.overlaps_ssd_region(lba, size, active) {
+                            core.pipeline.enqueue_residual_flush();
+                        }
+                        self.work.notify_all();
+                        core = self.space.wait_timeout(core, self.flush_check).unwrap().0;
+                        if let Some(msg) = core.failed.clone() {
+                            drop(core); // release before panicking: no poisoning
+                            panic!("shard failed while blocked on a region: {msg}");
+                        }
+                        if core.shutdown {
+                            drop(core);
+                            panic!(
+                                "shard shut down with a blocked write still pending \
+                                 ({} bytes undelivered)",
+                                payload.len()
+                            );
+                        }
+                    }
+                }
+            }
             match route {
                 Route::Hdd => {
+                    debug_assert!(!core.own.overlaps_ssd(lba, size), "direct write over live buffer");
                     core.stats.hdd_direct_bytes += payload.len() as u64;
                     // counted under the core lock so the flusher's gate
                     // sees the direct traffic the moment it is decided
@@ -185,37 +258,52 @@ impl Shard {
                     direct_dest = Some(lba as u64 * SECTOR_BYTES);
                 }
                 Route::Ssd => loop {
-                    match core.pipeline.buffer(sub.parent.file, sub.local_offset as i64, size) {
-                        BufferOutcome::Buffered { region, ssd_offset } => {
-                            if let Err(e) = self.write_ssd(region, ssd_offset, payload) {
-                                self.fail_and_panic(core, format!("ssd backend write: {e}"));
+                    let (region, ssd_offset, filled) =
+                        match core.pipeline.buffer(sub.parent.file, sub.local_offset as i64, size) {
+                            BufferOutcome::Buffered { region, ssd_offset } => {
+                                (region, ssd_offset, false)
                             }
-                            core.stats.ssd_bytes_buffered += payload.len() as u64;
-                            break;
-                        }
-                        BufferOutcome::BufferedAndFull { region, ssd_offset, .. } => {
-                            if let Err(e) = self.write_ssd(region, ssd_offset, payload) {
-                                self.fail_and_panic(core, format!("ssd backend write: {e}"));
+                            BufferOutcome::BufferedAndFull { region, ssd_offset, .. } => {
+                                (region, ssd_offset, true)
                             }
-                            core.stats.ssd_bytes_buffered += payload.len() as u64;
-                            self.work.notify_all(); // a region is ready to flush
-                            break;
-                        }
-                        BufferOutcome::Blocked => {
-                            // "the system waits until a region becomes
-                            // empty" — closed-loop backpressure
-                            core.stats.blocked_waits += 1;
-                            self.work.notify_all();
-                            core = self.space.wait_timeout(core, self.flush_check).unwrap().0;
-                            if let Some(msg) = core.failed.clone() {
-                                drop(core); // release before panicking: no poisoning
-                                panic!("shard failed while blocked on a region: {msg}");
+                            BufferOutcome::Blocked => {
+                                // "the system waits until a region becomes
+                                // empty" — closed-loop backpressure
+                                core.stats.blocked_waits += 1;
+                                self.work.notify_all();
+                                core = self.space.wait_timeout(core, self.flush_check).unwrap().0;
+                                if let Some(msg) = core.failed.clone() {
+                                    drop(core); // release before panicking: no poisoning
+                                    panic!("shard failed while blocked on a region: {msg}");
+                                }
+                                if core.shutdown {
+                                    // the caller was never acknowledged:
+                                    // vanishing silently here would turn a
+                                    // shutdown into data loss the client
+                                    // believes was written
+                                    drop(core);
+                                    panic!(
+                                        "shard shut down with a blocked write still pending \
+                                         ({} bytes undelivered)",
+                                        payload.len()
+                                    );
+                                }
+                                continue;
                             }
-                            if core.shutdown {
-                                return;
-                            }
-                        }
+                        };
+                    if let Err(e) = self.write_ssd(region, ssd_offset, payload) {
+                        self.fail_and_panic(core, format!("ssd backend write: {e}"));
                     }
+                    // claim under the same core-lock hold as the append:
+                    // the flusher and readers resolve against a map that
+                    // never lags the log
+                    let stale = core.own.claim(lba, size, Tier::Ssd { region, ssd_offset });
+                    core.stats.superseded_bytes += sectors_to_bytes(stale);
+                    core.stats.ssd_bytes_buffered += payload.len() as u64;
+                    if filled {
+                        self.work.notify_all(); // a region is ready to flush
+                    }
+                    break;
                 },
             }
             // server-side detection feeds on the post-striping disk address
@@ -263,12 +351,50 @@ impl Shard {
     }
 
     /// Read back `buf.len()` bytes the shard's HDD holds for
-    /// `(file, local_offset)` — verification path.
+    /// `(file, local_offset)` — verification path. Unlike [`Shard::read`]
+    /// this deliberately ignores buffered copies; only meaningful after a
+    /// drain.
     pub fn read_hdd(&self, file: u32, local_offset: i32, buf: &mut [u8]) {
         let lba = self.core.lock().unwrap().files.lba(file, local_offset);
         let read = self.hdd.lock().unwrap().read_at(lba as u64 * SECTOR_BYTES, buf);
         // result is inspected after the guard dropped: no poisoning
         read.expect("hdd backend read");
+    }
+
+    /// Read `buf.len()` bytes for `(file, local_offset)` from wherever
+    /// the newest copy lives — SSD log or HDD — resolved per segment
+    /// through the ownership map. Works mid-burst, before any drain.
+    ///
+    /// The core lock is held across the device reads: a region flush
+    /// completing concurrently would otherwise recycle the very SSD slots
+    /// being read (the flusher needs the core lock to complete, so it
+    /// cannot). Reads therefore serialize against ingest; the live read
+    /// path favors correctness over read concurrency for now.
+    pub fn read(&self, file: u32, local_offset: i32, buf: &mut [u8]) {
+        let sector = SECTOR_BYTES as usize;
+        debug_assert_eq!(buf.len() % sector, 0, "reads are sector-aligned");
+        let sectors = (buf.len() / sector) as i64;
+        if sectors == 0 {
+            return;
+        }
+        let mut core = self.core.lock().unwrap();
+        let lba = core.files.lba(file, local_offset);
+        for (seg_lba, seg_size, tier) in core.own.resolve(lba, sectors) {
+            let dst = (seg_lba - lba) as usize * sector;
+            let len = seg_size as usize * sector;
+            let slice = &mut buf[dst..dst + len];
+            let read = match tier {
+                Tier::Hdd => self.hdd.lock().unwrap().read_at(seg_lba as u64 * SECTOR_BYTES, slice),
+                Tier::Ssd { region, ssd_offset } => {
+                    let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
+                    self.ssd.lock().unwrap().read_at(base + ssd_offset as u64 * SECTOR_BYTES, slice)
+                }
+            };
+            if let Err(e) = read {
+                drop(core); // release before panicking: no poisoning
+                panic!("shard read failed: {e}");
+            }
+        }
     }
 
     pub fn stats(&self) -> ShardStats {
@@ -282,7 +408,7 @@ impl Shard {
         let mut chunk = vec![0u8; 1 << 20];
         loop {
             // ---- acquire the next region to flush (or exit) ----
-            let resolved: Vec<(u64, u64, usize)> = {
+            let (region, resolved): (usize, Vec<(u64, u64, usize)>) = {
                 let mut core = self.core.lock().unwrap();
                 let region = loop {
                     if core.shutdown || core.failed.is_some() {
@@ -304,24 +430,30 @@ impl Shard {
                     core = self.work.wait_timeout(core, self.flush_check).unwrap().0;
                 };
                 let region_base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
-                let extents = core.pipeline.drain_flushing();
+                // reset the region's append metadata; what actually gets
+                // copied comes from the ownership map: its extents for
+                // this region are exactly the *newest* copies living in
+                // the log, ascending by LBA (sequential HDD order) and
+                // already clipped of every superseded range — stale-flush
+                // suppression by construction
+                core.pipeline.reset_flushing();
                 core.stats.flushes += 1;
-                // resolve byte addresses now: the FileTable lives in core
-                extents
-                    .iter()
-                    .map(|e| {
-                        let lba = core.files.lba(e.file, e.orig_offset as i32);
+                let resolved: Vec<(u64, u64, usize)> = core
+                    .own
+                    .region_extents(region)
+                    .into_iter()
+                    .map(|(lba, size, slot)| {
                         (
-                            region_base + e.ssd_offset as u64 * SECTOR_BYTES,
+                            region_base + slot as u64 * SECTOR_BYTES,
                             lba as u64 * SECTOR_BYTES,
-                            (e.size as u64 * SECTOR_BYTES) as usize,
+                            (size as u64 * SECTOR_BYTES) as usize,
                         )
                     })
-                    .collect()
+                    .collect();
+                (region, resolved)
             };
 
             // ---- gate + copy, without the core lock ----
-            let mut moved = 0u64;
             for (ssd_byte, hdd_byte, len) in resolved {
                 if !self.gate_extent() {
                     return; // shutdown while paused
@@ -343,14 +475,22 @@ impl Shard {
                     }
                     done += take;
                 }
-                moved += len as u64;
             }
 
-            // ---- complete: free the region, wake blocked ingest ----
+            // ---- complete: free the region, settle its surviving
+            // extents (their newest copy is the HDD one now), wake
+            // blocked ingest ----
             {
                 let mut core = self.core.lock().unwrap();
                 core.pipeline.flush_done();
-                core.stats.flushed_bytes += moved;
+                // account flushed bytes from the map at completion, not
+                // from what the copy loop moved: an extent superseded
+                // *mid-copy* was already booked into superseded_bytes by
+                // its claim, so counting the (now stale) copy too would
+                // double-book it — `buffered == flushed + superseded`
+                // must stay exact
+                let settled = core.own.release_region(region);
+                core.stats.flushed_bytes += sectors_to_bytes(settled);
             }
             self.space.notify_all();
         }
@@ -433,5 +573,159 @@ impl Shard {
         self.core.lock().unwrap().shutdown = true;
         self.work.notify_all();
         self.space.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::live::backend::{MemBackend, SyntheticLatency};
+    use crate::live::payload;
+    use crate::types::Request;
+
+    fn cfg(system: SystemKind, capacity_sectors: i64) -> ShardConfig {
+        ShardConfig {
+            system,
+            ssd_capacity_sectors: capacity_sectors,
+            stream_len: 1024, // no detection flips mid-test
+            pause_below: 0.45,
+            history: 64,
+            flush_check: Duration::from_millis(1),
+            seek: SeekModel::default(),
+        }
+    }
+
+    fn mem_shard(system: SystemKind, capacity_sectors: i64) -> Shard {
+        Shard::new(
+            &cfg(system, capacity_sectors),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+        )
+    }
+
+    fn sub(file: u32, offset: i32, size: i32) -> SubRequest {
+        SubRequest {
+            node: 0,
+            local_offset: offset,
+            size,
+            parent: Request { app: 0, proc_id: 0, file, offset, size },
+        }
+    }
+
+    fn gen_payload(file: u32, offset: i32, size: i32, gen: u64) -> Vec<u8> {
+        let mut buf = vec![0u8; (size as u64 * SECTOR_BYTES) as usize];
+        payload::fill_gen(file, offset as i64, gen, &mut buf);
+        buf
+    }
+
+    #[test]
+    fn shutdown_while_blocked_panics_instead_of_dropping_bytes() {
+        // no flusher thread: both regions fill and stay unavailable
+        let shard = Arc::new(mem_shard(SystemKind::OrangeFsBB, 256));
+        shard.submit(&sub(1, 0, 128), &gen_payload(1, 0, 128, 1)); // fills region 0
+        shard.submit(&sub(1, 128, 128), &gen_payload(1, 128, 128, 1)); // fills region 1
+        let worker = Arc::clone(&shard);
+        let handle = std::thread::spawn(move || {
+            // both regions full, nobody flushing: blocks, then shutdown
+            // arrives — silently returning here would be data loss the
+            // caller was never told about
+            worker.submit(&sub(1, 256, 128), &gen_payload(1, 256, 128, 1));
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        shard.request_shutdown();
+        assert!(
+            handle.join().is_err(),
+            "a write dropped by shutdown must panic, not vanish"
+        );
+    }
+
+    #[test]
+    fn rewrite_of_buffered_sector_serves_and_flushes_the_newest_copy() {
+        let shard = mem_shard(SystemKind::OrangeFsBB, 4096);
+        let s = SECTOR_BYTES as usize;
+        // first version buffers in the SSD log
+        shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1));
+        // mid-burst read returns it (SSD hit)
+        let mut got = vec![0u8; 64 * s];
+        shard.read(1, 0, &mut got);
+        assert_eq!(got, gen_payload(1, 0, 64, 1));
+        // overwrite part of it: the newest copy wins immediately
+        shard.submit(&sub(1, 16, 32), &gen_payload(1, 16, 32, 2));
+        shard.read(1, 0, &mut got);
+        assert_eq!(got[..16 * s], gen_payload(1, 0, 64, 1)[..16 * s]);
+        assert_eq!(got[16 * s..48 * s], gen_payload(1, 16, 32, 2)[..]);
+        assert_eq!(got[48 * s..], gen_payload(1, 0, 64, 1)[48 * s..]);
+        // drain synchronously (no flusher thread: run one loop pass by
+        // hand via begin_drain + flusher_loop, which exits once clean)
+        shard.begin_drain();
+        shard.flusher_loop();
+        let stats = shard.stats();
+        assert_eq!(stats.superseded_bytes, 32 * SECTOR_BYTES, "stale copy skipped");
+        assert_eq!(
+            stats.flushed_bytes + stats.superseded_bytes,
+            stats.ssd_bytes_buffered,
+            "conservation: buffered == flushed + superseded"
+        );
+        // post-drain the HDD holds the merged newest content
+        let mut hdd = vec![0u8; 64 * s];
+        shard.read_hdd(1, 0, &mut hdd);
+        assert_eq!(hdd, got, "HDD must match the newest-copy view");
+        // and the ownership map is empty: reads now come from HDD
+        let mut again = vec![0u8; 64 * s];
+        shard.read(1, 0, &mut again);
+        assert_eq!(again, got);
+    }
+
+    #[test]
+    fn direct_write_over_buffered_extent_is_absorbed_into_the_log() {
+        // the dangerous cross-route direction: data buffered in the SSD
+        // log, route flips to HDD, and the same sectors are rewritten.
+        // The rewrite must be absorbed into the log, not written direct —
+        // otherwise the later flush would resurrect the stale copy.
+        let mut c = cfg(SystemKind::SsdupPlus, 4096);
+        c.stream_len = 4; // one detection window per 4 sub-requests
+        let shard = Shard::new(
+            &c,
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+        );
+        // window 1: sparse offsets -> random (pct 1.0) -> route SSD next
+        for off in [0, 10_000, 50_000, 90_000] {
+            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+        }
+        // window 2: buffered in the log (route is SSD); contiguous run ->
+        // pct 0.0 -> route flips back to HDD afterwards
+        for k in 0..4 {
+            let off = 200_000 + k * 16;
+            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+        }
+        let mid = shard.stats();
+        assert_eq!(mid.ssd_bytes_buffered, 4 * 16 * SECTOR_BYTES, "window 2 buffered");
+        assert_eq!(mid.rerouted_writes, 0);
+        // route is HDD now; rewrite a buffered extent -> must be absorbed
+        shard.submit(&sub(1, 200_016, 16), &gen_payload(1, 200_016, 16, 2));
+        let after = shard.stats();
+        assert_eq!(after.rerouted_writes, 1, "cross-route rewrite absorbed into the log");
+        assert_eq!(after.superseded_bytes, 16 * SECTOR_BYTES, "stale buffered copy superseded");
+        assert_eq!(after.hdd_direct_bytes, mid.hdd_direct_bytes, "no direct write raced the flusher");
+        // the newest copy is served mid-burst…
+        let s = SECTOR_BYTES as usize;
+        let mut got = vec![0u8; 16 * s];
+        shard.read(1, 200_016, &mut got);
+        assert_eq!(got, gen_payload(1, 200_016, 16, 2));
+        // …and survives the drain byte-exactly
+        shard.begin_drain();
+        shard.flusher_loop();
+        let mut hdd = vec![0u8; 16 * s];
+        shard.read_hdd(1, 200_016, &mut hdd);
+        assert_eq!(hdd, gen_payload(1, 200_016, 16, 2), "flusher must not resurrect the stale copy");
+        let end = shard.stats();
+        assert_eq!(
+            end.flushed_bytes + end.superseded_bytes,
+            end.ssd_bytes_buffered,
+            "conservation: buffered == flushed + superseded"
+        );
     }
 }

@@ -15,6 +15,7 @@ use ssdup::util::cli::Args;
 use ssdup::util::json::Json;
 use ssdup::util::threadpool::ThreadPool;
 use ssdup::workload::ior::{ior, ior_spanned, IorPattern};
+use ssdup::workload::rewrite::checkpoint_rewrite;
 use ssdup::workload::Workload;
 
 const VALUE_OPTS: &[&str] = &[
@@ -52,7 +53,8 @@ fn main() {
                  ssdup exp all [--scale 8] [--seed N] [--json out.json]\n\
                  ssdup exp fig11 --scale 4\n\
                  ssdup run --system ssdup+ --pattern strided --procs 32 --size-mib 2048\n\
-                 ssdup live --shards 4 --backend mem|file [--dir DIR] [--pattern mixed]\n\
+                 ssdup live --shards 4 --backend mem|file [--dir DIR]\n\
+                 \x20          [--pattern mixed|contig|random|strided|rewrite]\n\
                  \x20          [--procs 16] [--size-mib 1024] [--ssd-mib 64] [--clients 8]\n\
                  \x20          [--no-verify] [--keep]\n"
             );
@@ -63,10 +65,11 @@ fn main() {
 }
 
 fn scale_from(args: &Args) -> Scale {
-    let mut s = Scale::default();
-    s.factor = args.get_parse("scale", s.factor).unwrap_or(s.factor);
-    s.seed = args.get_parse("seed", s.seed).unwrap_or(s.seed);
-    s
+    let d = Scale::default();
+    Scale {
+        factor: args.get_parse("scale", d.factor).unwrap_or(d.factor),
+        seed: args.get_parse("seed", d.seed).unwrap_or(d.seed),
+    }
 }
 
 fn cmd_exp(args: &Args) -> i32 {
@@ -163,22 +166,43 @@ fn cmd_run(args: &Args) -> i32 {
 }
 
 /// Build the live workload: `mixed` is the paper's headline scenario —
-/// one contiguous and one random app sharing the engine.
-fn live_workload(pattern: &str, procs: u32, total_sectors: i64, req_sectors: i32, seed: u64) -> Option<Workload> {
+/// one contiguous and one random app sharing the engine. The returned
+/// flag says whether the run needs versioned payloads (rewrite patterns,
+/// where *which* copy of a sector survived matters).
+fn live_workload(
+    pattern: &str,
+    procs: u32,
+    total_sectors: i64,
+    req_sectors: i32,
+    seed: u64,
+) -> Option<(Workload, bool)> {
     let span = total_sectors * 8; // keep random offsets paper-sparse
+    let half = total_sectors / 2;
     match pattern {
-        "mixed" => Some(Workload::concurrent(
-            "live-mixed",
-            ior_spanned(0, IorPattern::SegmentedContiguous, procs / 2, total_sectors / 2, span, req_sectors, seed),
-            ior_spanned(0, IorPattern::SegmentedRandom, procs / 2, total_sectors / 2, span, req_sectors, seed + 1),
+        "mixed" => Some((
+            Workload::concurrent(
+                "live-mixed",
+                ior_spanned(0, IorPattern::SegmentedContiguous, procs / 2, half, span, req_sectors, seed),
+                ior_spanned(0, IorPattern::SegmentedRandom, procs / 2, half, span, req_sectors, seed + 1),
+            ),
+            false,
         )),
-        "contig" | "segmented-contiguous" => {
-            Some(ior_spanned(0, IorPattern::SegmentedContiguous, procs, total_sectors, span, req_sectors, seed))
+        "contig" | "segmented-contiguous" => Some((
+            ior_spanned(0, IorPattern::SegmentedContiguous, procs, total_sectors, span, req_sectors, seed),
+            false,
+        )),
+        "random" | "segmented-random" => Some((
+            ior_spanned(0, IorPattern::SegmentedRandom, procs, total_sectors, span, req_sectors, seed),
+            false,
+        )),
+        "strided" => {
+            Some((ior_spanned(0, IorPattern::Strided, procs, total_sectors, span, req_sectors, seed), false))
         }
-        "random" | "segmented-random" => {
-            Some(ior_spanned(0, IorPattern::SegmentedRandom, procs, total_sectors, span, req_sectors, seed))
+        // checkpoint-rewrite: every sector written twice across mixed
+        // routes — the ownership-map overwrite-safety scenario
+        "rewrite" | "checkpoint-rewrite" => {
+            Some((checkpoint_rewrite((procs / 2).max(1), half, req_sectors, 1_000, seed), true))
         }
-        "strided" => Some(ior_spanned(0, IorPattern::Strided, procs, total_sectors, span, req_sectors, seed)),
         _ => None,
     }
 }
@@ -202,8 +226,9 @@ fn cmd_live(args: &Args) -> i32 {
     let pattern = args.get_or("pattern", "mixed");
 
     let total_sectors = (size_mib * 1024 * 1024 / 512) as i64;
-    let Some(workload) = live_workload(pattern, procs, total_sectors, req_kb * 2, seed) else {
-        eprintln!("unknown pattern '{pattern}' (mixed|contig|random|strided)");
+    let Some((workload, versioned)) = live_workload(pattern, procs, total_sectors, req_kb * 2, seed)
+    else {
+        eprintln!("unknown pattern '{pattern}' (mixed|contig|random|strided|rewrite)");
         return 2;
     };
 
@@ -246,16 +271,19 @@ fn cmd_live(args: &Args) -> i32 {
         clients,
         ssd_mib
     );
-    let report = live::run_load(&engine, &workload, clients);
+    let report = live::run_load_with(&engine, &workload, clients, versioned);
     println!("{}", report.summary());
     for (i, s) in report.shards.iter().enumerate() {
         println!(
             "  shard {i}: in {} MiB | ssd {} MiB | direct {} MiB | flushed {} MiB | \
-             {} streams (rp {:.1}%) | {} flushes, {} pauses ({:.2}s), {} blocked waits",
+             superseded {} MiB | {} rerouted | {} streams (rp {:.1}%) | {} flushes, \
+             {} pauses ({:.2}s), {} blocked waits",
             s.bytes_in / (1 << 20),
             s.ssd_bytes_buffered / (1 << 20),
             s.hdd_direct_bytes / (1 << 20),
             s.flushed_bytes / (1 << 20),
+            s.superseded_bytes / (1 << 20),
+            s.rerouted_writes,
             s.streams,
             s.mean_percentage() * 100.0,
             s.flushes,
@@ -267,11 +295,17 @@ fn cmd_live(args: &Args) -> i32 {
 
     let mut code = 0;
     if !args.has("no-verify") {
-        let v = engine.verify_workload(&workload);
-        if v.is_ok() {
-            println!("\nverify: OK — {} MiB re-derived and matched on the HDD backends", v.checked_bytes / (1 << 20));
+        let v = if versioned {
+            engine.verify_workload_versioned(&workload)
         } else {
-            println!("\nverify: FAILED — {} mismatched sectors of {} bytes checked", v.mismatched_sectors, v.checked_bytes);
+            engine.verify_workload(&workload)
+        };
+        if v.is_ok() {
+            let mib = v.checked_bytes / (1 << 20);
+            println!("\nverify: OK — {mib} MiB re-derived and matched on the HDD backends");
+        } else {
+            let (bad, total) = (v.mismatched_sectors, v.checked_bytes);
+            println!("\nverify: FAILED — {bad} mismatched sectors of {total} bytes checked");
             code = 1;
         }
     }

@@ -170,8 +170,9 @@ impl Node {
 /// Simulate `workload` under `cfg` with the default (native) detector
 /// backend on every node.
 pub fn simulate(cfg: &SimConfig, workload: &Workload) -> SimResult {
-    let backends: Vec<Box<dyn DetectBackend>> =
-        (0..cfg.nodes).map(|_| Box::new(NativeDetector::new(cfg.hdd.seek)) as Box<dyn DetectBackend>).collect();
+    let backends: Vec<Box<dyn DetectBackend>> = (0..cfg.nodes)
+        .map(|_| Box::new(NativeDetector::new(cfg.hdd.seek)) as Box<dyn DetectBackend>)
+        .collect();
     simulate_with_backends(cfg, workload, backends)
 }
 
@@ -222,8 +223,11 @@ pub fn simulate_with_backends(
         apps[app_index(p.app, &apps_list)].total_reqs += p.reqs.len();
     }
 
-    let mut procs: Vec<ProcState> =
-        workload.processes.iter().map(|_| ProcState { next: 0, inflight: 0, started: false, issued: 0 }).collect();
+    let mut procs: Vec<ProcState> = workload
+        .processes
+        .iter()
+        .map(|_| ProcState { next: 0, inflight: 0, started: false, issued: 0 })
+        .collect();
     let mut reqs: Vec<ReqState> = Vec::with_capacity(workload.total_requests());
     // processes waiting on an app's completion: (proc index, gap)
     let mut waiters: Vec<Vec<(usize, u64)>> = vec![Vec::new(); napps];
@@ -406,7 +410,8 @@ pub fn simulate_with_backends(
                     SsdBuffer::Single { .. } => {
                         // BB fallback: direct HDD write
                         let lba = nodes[$n].files.lba(sub.parent.file, sub.local_offset);
-                        nodes[$n].hdd.enqueue(lba, size, sub.parent.proc_id, HddTag::Direct { req_id: $req_id });
+                        let tag = HddTag::Direct { req_id: $req_id };
+                        nodes[$n].hdd.enqueue(lba, size, sub.parent.proc_id, tag);
                         nodes[$n].direct_inflight += 1;
                         pump_hdd!($n, $inflight);
                         pump_flush!($n, $inflight);
@@ -502,11 +507,13 @@ pub fn simulate_with_backends(
             Ev::Arrive { sub, req_id } => {
                 let n = sub.node;
                 // route this sub-request by the node's current direction
-                let route = if matches!(nodes[n].buffer, SsdBuffer::None) { Route::Hdd } else { nodes[n].route };
+                let route =
+                    if matches!(nodes[n].buffer, SsdBuffer::None) { Route::Hdd } else { nodes[n].route };
                 match route {
                     Route::Hdd => {
                         let lba = nodes[n].files.lba(sub.parent.file, sub.local_offset);
-                        nodes[n].hdd.enqueue(lba, sub.size as i64, sub.parent.proc_id, HddTag::Direct { req_id });
+                        let tag = HddTag::Direct { req_id };
+                        nodes[n].hdd.enqueue(lba, sub.size as i64, sub.parent.proc_id, tag);
                         nodes[n].direct_inflight += 1;
                         pump_hdd!(n, inflight);
                     }

@@ -289,7 +289,9 @@ impl<'a> Parser<'a> {
                         }
                         self.pos += 1;
                     }
-                    s.push_str(std::str::from_utf8(&self.b[start..self.pos]).map_err(|_| self.err("bad utf8"))?);
+                    let raw = std::str::from_utf8(&self.b[start..self.pos])
+                        .map_err(|_| self.err("bad utf8"))?;
+                    s.push_str(raw);
                 }
             }
         }

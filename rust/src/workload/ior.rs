@@ -110,7 +110,14 @@ pub enum IorPattern {
     Strided,
 }
 
-pub fn ior(app: u16, pattern: IorPattern, procs: u32, total_sectors: i64, req_sectors: i32, seed: u64) -> Workload {
+pub fn ior(
+    app: u16,
+    pattern: IorPattern,
+    procs: u32,
+    total_sectors: i64,
+    req_sectors: i32,
+    seed: u64,
+) -> Workload {
     ior_spanned(app, pattern, procs, total_sectors, total_sectors, req_sectors, seed)
 }
 

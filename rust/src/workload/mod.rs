@@ -10,6 +10,9 @@
 pub mod hpio;
 pub mod ior;
 pub mod mpitileio;
+pub mod rewrite;
+
+use std::collections::HashMap;
 
 use crate::types::Request;
 
@@ -45,6 +48,36 @@ impl Workload {
         v.sort_unstable();
         v.dedup();
         v
+    }
+
+    /// Rank of every app in the `after_app` dependency chain: apps with
+    /// no dependency are rank 0; an app gated on a rank-k app is k+1.
+    /// Writes by a higher-rank app always happen after a lower-rank one,
+    /// which is what makes rewrites across apps verifiable (the final
+    /// copy of a sector is the highest-ranked writer's).
+    pub fn app_ranks(&self) -> HashMap<u16, u32> {
+        let mut dep: HashMap<u16, u16> = HashMap::new();
+        for p in &self.processes {
+            if let Some((d, _)) = p.after_app {
+                if d != p.app {
+                    dep.insert(p.app, d);
+                }
+            }
+        }
+        let mut ranks = HashMap::new();
+        for p in &self.processes {
+            let mut rank = 0u32;
+            let mut cur = p.app;
+            while let Some(&d) = dep.get(&cur) {
+                rank += 1;
+                cur = d;
+                if rank as usize > dep.len() {
+                    break; // defensive: a dependency cycle cannot rank
+                }
+            }
+            ranks.insert(p.app, rank);
+        }
+        ranks
     }
 
     /// Merge two workloads into a concurrent mixed load, remapping the
@@ -114,6 +147,19 @@ mod tests {
         let deps: Vec<_> = w.processes.iter().filter_map(|p| p.after_app).collect();
         assert_eq!(deps.len(), 4, "all of app B's processes wait");
         assert!(deps.iter().all(|&(app, gap)| app == 0 && gap == 5_000_000));
+    }
+
+    #[test]
+    fn app_ranks_follow_dependency_chain() {
+        let w = Workload::sequential("seq", tiny(0), 1000, tiny(0));
+        let ranks = w.app_ranks();
+        assert_eq!(ranks[&0], 0);
+        assert_eq!(ranks[&1], 1);
+        // `sequential` gates every later app on the *first* app of `a`,
+        // so a third app also lands at rank 1
+        let w3 = Workload::sequential("seq3", w, 1000, tiny(0));
+        let r3 = w3.app_ranks();
+        assert_eq!((r3[&0], r3[&1], r3[&2]), (0, 1, 1));
     }
 
     #[test]

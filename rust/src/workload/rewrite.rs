@@ -1,0 +1,161 @@
+//! Rewrite-heavy workloads: every sector written at least twice, with the
+//! two passes shaped to take *different* routes through the burst buffer.
+//!
+//! The checkpoint-rewrite pattern is the overwrite-safety stress the
+//! live engine's ownership map exists for: a checkpoint app scatters the
+//! file in random request order (after the first detection window these
+//! land in the SSD log), then a rewrite app — gated on the checkpoint by
+//! `after_app` — rewrites the same sectors sequentially. Low-randomness
+//! traffic is exactly what the redirector sends straight to HDD, so the
+//! second pass hits the dangerous cross-route direction: direct writes
+//! over sectors whose stale copies still sit in the log.
+//!
+//! Per-process segments are disjoint and the passes are ordered by the
+//! dependency, so the final version of every sector is well defined (the
+//! rewrite pass wins). Drive it with versioned payloads
+//! (`live::run_load_with(.., versioned = true)`) and check with
+//! `LiveEngine::verify_workload_versioned`.
+
+use crate::types::Request;
+use crate::util::prng::Prng;
+use crate::workload::{ProcessWorkload, Workload};
+
+/// Two-phase checkpoint-rewrite workload over one shared file (see the
+/// module docs). `total_sectors` is the file span per phase; every slot
+/// of it is written once by each phase, so each sector is written exactly
+/// twice. `gap_us` is the compute gap between the phases (Fig 14's knob).
+pub fn checkpoint_rewrite(
+    procs: u32,
+    total_sectors: i64,
+    req_sectors: i32,
+    gap_us: u64,
+    seed: u64,
+) -> Workload {
+    assert!(procs >= 1, "need at least one process per phase");
+    assert!(req_sectors > 0);
+    let file = 0u32;
+    let mut rng = Prng::new(seed ^ 0x5EED_00F2);
+    let slots = (total_sectors / req_sectors as i64).max(1);
+    // balanced partition: proc p owns slots [p*slots/procs, (p+1)*slots/
+    // procs), so the whole span is covered exactly once per phase even
+    // when procs does not divide slots (procs > slots leaves the excess
+    // processes empty, which the load generator treats as complete)
+    let segment = |p: u32| -> (i64, i64) {
+        (p as i64 * slots / procs as i64, (p as i64 + 1) * slots / procs as i64)
+    };
+    let mut processes = Vec::with_capacity(2 * procs as usize);
+    // phase 1 — "checkpoint": random visit order within each segment.
+    // The slot space is dense, but a detection window samples only a few
+    // of a segment's slots at a time, so sorted neighbors are rarely
+    // adjacent: high random percentage -> SSD log.
+    for p in 0..procs {
+        let (lo, hi) = segment(p);
+        let mut order: Vec<i64> = (lo..hi).collect();
+        rng.shuffle(&mut order);
+        let reqs = order
+            .into_iter()
+            .map(|s| Request {
+                app: 0,
+                proc_id: p,
+                file,
+                offset: (s * req_sectors as i64) as i32,
+                size: req_sectors,
+            })
+            .collect();
+        processes.push(ProcessWorkload { app: 0, proc_id: p, reqs, after_app: None });
+    }
+    // phase 2 — "rewrite": the same segments in ascending order (pct ~ 0
+    // -> direct-to-HDD route), gated on phase 1 completing
+    for p in 0..procs {
+        let (lo, hi) = segment(p);
+        let reqs = (lo..hi)
+            .map(|s| Request {
+                app: 1,
+                proc_id: procs + p,
+                file,
+                offset: (s * req_sectors as i64) as i32,
+                size: req_sectors,
+            })
+            .collect();
+        processes.push(ProcessWorkload {
+            app: 1,
+            proc_id: procs + p,
+            reqs,
+            after_app: Some((0, gap_us)),
+        });
+    }
+    Workload { name: format!("checkpoint-rewrite-p{procs}x2"), processes }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    use super::*;
+
+    #[test]
+    fn every_sector_is_written_exactly_twice() {
+        let w = checkpoint_rewrite(4, 8192, 64, 1000, 7);
+        let mut hits: HashMap<i32, u32> = HashMap::new();
+        for proc in &w.processes {
+            for req in &proc.reqs {
+                for s in 0..req.size {
+                    *hits.entry(req.offset + s).or_insert(0) += 1;
+                }
+            }
+        }
+        assert_eq!(hits.len(), 8192, "full span covered");
+        assert!(hits.values().all(|&c| c == 2), "each sector written twice");
+    }
+
+    #[test]
+    fn uneven_proc_counts_still_cover_the_whole_span() {
+        // 1024/64 = 16 slots over 3 procs: 5+5+6, no gap, no overflow
+        let w = checkpoint_rewrite(3, 1024, 64, 0, 5);
+        let mut hits: HashMap<i32, u32> = HashMap::new();
+        for proc in &w.processes {
+            for req in &proc.reqs {
+                assert!(req.offset >= 0 && req.offset + req.size <= 1024, "{req:?}");
+                for s in 0..req.size {
+                    *hits.entry(req.offset + s).or_insert(0) += 1;
+                }
+            }
+        }
+        assert_eq!(hits.len(), 1024, "no tail slot dropped");
+        assert!(hits.values().all(|&c| c == 2));
+        // more procs than slots: excess processes are simply empty
+        let w2 = checkpoint_rewrite(8, 256, 64, 0, 5);
+        let total: i32 = w2.processes.iter().flat_map(|p| &p.reqs).map(|r| r.size).sum();
+        assert_eq!(total, 2 * 256, "each phase writes the span exactly once");
+        assert!(w2.processes.iter().flat_map(|p| &p.reqs).all(|r| r.end() <= 256));
+    }
+
+    #[test]
+    fn rewrite_phase_is_gated_and_ordered() {
+        let w = checkpoint_rewrite(4, 8192, 64, 5000, 7);
+        assert_eq!(w.processes.len(), 8);
+        let ranks = w.app_ranks();
+        assert_eq!((ranks[&0], ranks[&1]), (0, 1));
+        for proc in w.processes.iter().filter(|p| p.app == 1) {
+            assert_eq!(proc.after_app, Some((0, 5000)));
+            // ascending rewrite order (the HDD-routed shape)
+            assert!(proc.reqs.windows(2).all(|w| w[1].offset > w[0].offset));
+        }
+        // the checkpoint phase visits its slots in shuffled order
+        let any_shuffled = w.processes.iter().filter(|p| p.app == 0).any(|p| {
+            let offs: Vec<i32> = p.reqs.iter().map(|r| r.offset).collect();
+            let mut sorted = offs.clone();
+            sorted.sort_unstable();
+            offs != sorted
+        });
+        assert!(any_shuffled, "checkpoint phase must visit randomly");
+    }
+
+    #[test]
+    fn proc_ids_are_disjoint_across_phases() {
+        let w = checkpoint_rewrite(3, 4096, 64, 0, 9);
+        let ids: std::collections::HashSet<u32> =
+            w.processes.iter().map(|p| p.proc_id).collect();
+        assert_eq!(ids.len(), 6);
+    }
+}

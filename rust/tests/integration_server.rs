@@ -22,8 +22,18 @@ fn ssd_systems_beat_native_on_random_loads() {
     let native = simulate(&cfg(SystemKind::OrangeFs), &w);
     let bb = simulate(&cfg(SystemKind::OrangeFsBB), &w);
     let plus = simulate(&cfg(SystemKind::SsdupPlus), &w);
-    assert!(bb.throughput_mbps() > native.throughput_mbps() * 1.2, "BB {} vs native {}", bb.throughput_mbps(), native.throughput_mbps());
-    assert!(plus.throughput_mbps() > native.throughput_mbps() * 1.2, "SSDUP+ {} vs native {}", plus.throughput_mbps(), native.throughput_mbps());
+    assert!(
+        bb.throughput_mbps() > native.throughput_mbps() * 1.2,
+        "BB {} vs native {}",
+        bb.throughput_mbps(),
+        native.throughput_mbps()
+    );
+    assert!(
+        plus.throughput_mbps() > native.throughput_mbps() * 1.2,
+        "SSDUP+ {} vs native {}",
+        plus.throughput_mbps(),
+        native.throughput_mbps()
+    );
 }
 
 #[test]

@@ -1,12 +1,18 @@
 //! Property-based invariants (in-tree quickcheck substrate): coordinator
-//! routing, batching, buffering and detection state machines.
+//! routing, batching, buffering and detection state machines, plus the
+//! live engine's overwrite-safety guarantee under random interleaved
+//! cross-route rewrites.
+
+use std::time::Duration;
 
 use ssdup::buffer::{AvlTree, BufferOutcome, Pipeline};
 use ssdup::detector::native::detect_stream;
 use ssdup::device::{Hdd, HddConfig};
 use ssdup::fs::StripeLayout;
+use ssdup::live::{payload, LiveConfig, LiveEngine, SyntheticLatency};
 use ssdup::redirector::{AdaptivePolicy, PercentList, RoutePolicy};
-use ssdup::types::{Detection, Request};
+use ssdup::server::SystemKind;
+use ssdup::types::{Detection, Request, SECTOR_BYTES};
 use ssdup::util::prng::Prng;
 use ssdup::util::quickcheck::forall;
 
@@ -28,6 +34,93 @@ fn prop_avl_in_order_is_sorted_and_complete() {
         want.sort_unstable();
         want.dedup();
         got == want
+    });
+}
+
+#[test]
+fn prop_avl_random_insert_remove_matches_btreemap() {
+    forall(8, 200, "avl remove model", |rng: &mut Prng, size| {
+        let ops = rng.range(1, 2 + size * 8);
+        let seed = rng.next_u64();
+        (ops, seed)
+    }, |&(ops, seed)| {
+        let mut rng = Prng::new(seed);
+        let mut t = AvlTree::new();
+        let mut model = std::collections::BTreeMap::new();
+        for i in 0..ops {
+            let k = rng.gen_range(64) as i64;
+            if rng.chance(0.45) {
+                if t.remove(k) != model.remove(&k) {
+                    return false;
+                }
+            } else {
+                t.insert(k, i);
+                model.insert(k, i);
+            }
+        }
+        t.check_invariants().is_ok()
+            && t.in_order().map(|(k, v)| (k, *v)).eq(model.into_iter())
+    });
+}
+
+#[test]
+fn prop_live_cross_route_rewrites_stay_byte_exact() {
+    // The tentpole property: random interleaved overwrites across routes
+    // (SSD-buffered checkpoint, then sequential rewrites the redirector
+    // sends to HDD) must leave the HDD byte-exact with the *newest* copy
+    // of every sector once drained. Without the sector-ownership map the
+    // drain resurrects the stale buffered copies over the rewrites.
+    forall(9, 10, "cross-route rewrites", |rng: &mut Prng, size| {
+        let slots = 32 + rng.range(0, 1 + size * 4) as i64; // dense slot space
+        let rewrites = rng.range(16, 1 + slots.max(17) as usize);
+        let seed = rng.next_u64();
+        (slots, rewrites, seed)
+    }, |&(slots, rewrites, seed)| {
+        let mut rng = Prng::new(seed);
+        let req_sectors = 16i32;
+        let mut cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(1).with_ssd_mib(16);
+        cfg.stream_len = 8;
+        cfg.flush_check = Duration::from_millis(1);
+        let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+        let mut latest = vec![1u64; slots as usize];
+        let mut buf = vec![0u8; req_sectors as usize * SECTOR_BYTES as usize];
+        // phase 1: write every slot once in random order (random traffic
+        // -> SSD log after the bootstrap window)
+        let mut order: Vec<i64> = (0..slots).collect();
+        rng.shuffle(&mut order);
+        for &s in &order {
+            let offset = (s * req_sectors as i64) as i32;
+            payload::fill_gen(1, offset as i64, 1, &mut buf);
+            engine.submit(Request { app: 0, proc_id: 0, file: 1, offset, size: req_sectors }, &buf);
+        }
+        // phase 2: rewrite a contiguous prefix in ascending order —
+        // sequential traffic the redirector reliably sends to HDD, i.e.
+        // direct writes over sectors whose stale copies sit in the log
+        for s in 0..rewrites.min(slots as usize) as i64 {
+            let offset = (s * req_sectors as i64) as i32;
+            payload::fill_gen(1, offset as i64, 2, &mut buf);
+            engine.submit(Request { app: 0, proc_id: 0, file: 1, offset, size: req_sectors }, &buf);
+            latest[s as usize] = 2;
+        }
+        engine.drain();
+        // every sector must hold its newest generation
+        let mut got = vec![0u8; req_sectors as usize * SECTOR_BYTES as usize];
+        let mut ok = true;
+        for s in 0..slots {
+            let offset = (s * req_sectors as i64) as i32;
+            engine.read(1, offset, &mut got);
+            for k in 0..req_sectors as i64 {
+                let sector = offset as i64 + k;
+                let sb = &got[k as usize * SECTOR_BYTES as usize..(k as usize + 1) * SECTOR_BYTES as usize];
+                ok &= payload::sector_matches(1, sector, latest[s as usize], sb);
+            }
+        }
+        // and the stats conserve bytes end to end
+        let stats = engine.shutdown();
+        let buffered: u64 = stats.iter().map(|st| st.ssd_bytes_buffered).sum();
+        let flushed: u64 = stats.iter().map(|st| st.flushed_bytes).sum();
+        let superseded: u64 = stats.iter().map(|st| st.superseded_bytes).sum();
+        ok && flushed + superseded == buffered
     });
 }
 
