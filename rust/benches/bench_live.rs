@@ -1,17 +1,33 @@
-//! Live-engine benchmarks: shard-scaling throughput on `MemBackend` with
-//! synthetic device latency (the sleeps model real device service times,
-//! so shard parallelism — not memcpy speed — dominates, exactly like a
-//! real deployment), plus a `FileBackend` smoke bench.
+//! Live-engine benchmarks: shard- and client-scaling throughput on
+//! `MemBackend` with synthetic device latency (the sleeps model real
+//! device service times, so concurrency — not memcpy speed — dominates,
+//! exactly like a real deployment), mid-burst read latency, a
+//! rewrite-heavy section, and a `FileBackend` smoke bench.
 //!
-//! Run: `cargo bench --bench bench_live` (SSDUP_BENCH_FAST=1 to shrink).
+//! Run: `cargo bench --bench bench_live` (SSDUP_BENCH_FAST=1 to shrink —
+//! that mode also runs as a blocking CI smoke step).
+//!
+//! Machine-readable results land in `BENCH_live.json` (schema below), so
+//! the perf trajectory is trackable across PRs.
 
-use ssdup::live::{self, LiveConfig, LiveEngine, SyntheticLatency};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use ssdup::live::{self, payload, LiveConfig, LiveEngine, SyntheticLatency};
+use ssdup::server::metrics::LatencyHistogram;
 use ssdup::server::SystemKind;
-use ssdup::types::DEFAULT_REQ_SECTORS;
+use ssdup::types::{Request, DEFAULT_REQ_SECTORS, SECTOR_BYTES};
 use ssdup::util::benchkit::{bb, section, Bench};
+use ssdup::util::json::Json;
+use ssdup::util::prng::Prng;
 use ssdup::workload::ior::{ior_spanned, IorPattern};
 use ssdup::workload::rewrite::checkpoint_rewrite;
 use ssdup::workload::Workload;
+
+fn fast() -> bool {
+    std::env::var("SSDUP_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
 
 /// The benchmark workload: contiguous x random mix, `mib` MiB total.
 fn mixed(mib: i64, seed: u64) -> Workload {
@@ -32,13 +48,80 @@ fn run_mem(shards: usize, w: &Workload) -> f64 {
     report.throughput_mbps()
 }
 
+/// One ingest run against a single shard from `clients` concurrent
+/// closed-loop threads. The SSD budget exceeds the burst (the burst
+/// buffer's own premise), so what this measures is pure reserve→publish
+/// ingest: with device writes outside the core lock, throughput scales
+/// with the number of in-flight clients.
+fn run_clients(clients: usize, w: &Workload) -> f64 {
+    let cfg = LiveConfig::new(SystemKind::OrangeFsBB).with_shards(1).with_ssd_mib(256);
+    let engine = LiveEngine::mem(&cfg, SyntheticLatency::ssd(), SyntheticLatency::hdd());
+    let report = live::run_load(&engine, w, clients);
+    engine.shutdown();
+    report.throughput_mbps()
+}
+
+/// Mid-burst read latency on one shard: preload a buffered range, keep a
+/// writer ingesting a disjoint range, and sample reads against the log.
+/// Before the pinned-extent read path, every read serialized behind the
+/// core lock *across the writer's device I/O*; now it costs about one
+/// device read regardless of ingest traffic.
+fn read_latency(samples: usize) -> LatencyHistogram {
+    let cfg = LiveConfig::new(SystemKind::OrangeFsBB).with_shards(1).with_ssd_mib(256);
+    let engine = LiveEngine::mem(&cfg, SyntheticLatency::ssd(), SyntheticLatency::hdd());
+    let s = SECTOR_BYTES as usize;
+    // preload 16 MiB into the log
+    let preload_reqs = 64;
+    let mut buf = vec![0u8; DEFAULT_REQ_SECTORS as usize * s];
+    for i in 0..preload_reqs {
+        let off = i * DEFAULT_REQ_SECTORS;
+        payload::fill(1, off as i64, &mut buf);
+        engine.submit(Request { app: 0, proc_id: 0, file: 1, offset: off, size: DEFAULT_REQ_SECTORS }, &buf);
+    }
+    let stop = AtomicBool::new(false);
+    let mut hist = LatencyHistogram::new();
+    std::thread::scope(|sc| {
+        let engine = &engine;
+        let stop = &stop;
+        // background ingest into a disjoint file, closed loop
+        sc.spawn(move || {
+            let mut wbuf = vec![0u8; DEFAULT_REQ_SECTORS as usize * s];
+            let mut off = 0i32;
+            while !stop.load(Ordering::Relaxed) {
+                payload::fill(2, off as i64, &mut wbuf);
+                let req = Request { app: 1, proc_id: 1, file: 2, offset: off, size: DEFAULT_REQ_SECTORS };
+                engine.submit(req, &wbuf);
+                off += DEFAULT_REQ_SECTORS;
+            }
+        });
+        let mut rng = Prng::new(23);
+        let read_sectors = 8usize; // 4 KiB reads
+        let mut rbuf = vec![0u8; read_sectors * s];
+        let span = (preload_reqs * DEFAULT_REQ_SECTORS) as u64 - read_sectors as u64;
+        for _ in 0..samples {
+            let off = rng.gen_range(span) as i32;
+            let t0 = Instant::now();
+            engine.read(1, off, &mut rbuf);
+            hist.record(t0.elapsed().as_micros() as u64);
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    engine.shutdown();
+    hist
+}
+
 fn main() {
     let mut b = Bench::new().slow();
-    let w = mixed(64, 11);
-    let bytes = w.total_bytes() as f64;
+    let fast = fast();
+    let mut out: BTreeMap<String, Json> = BTreeMap::new();
+    out.insert("schema".into(), Json::Num(1.0));
+    out.insert("bench".into(), Json::Str("bench_live".into()));
+    out.insert("fast_mode".into(), Json::Bool(fast));
 
     section("live engine shard scaling (MemBackend, synthetic device latency)");
-    let mut mbps: Vec<(usize, f64)> = Vec::new();
+    let w = mixed(if fast { 16 } else { 64 }, 11);
+    let bytes = w.total_bytes() as f64;
+    let mut shard_mbps: Vec<(usize, f64)> = Vec::new();
     for shards in [1usize, 2, 4] {
         let name = format!("live/mem-shards-{shards}");
         if Bench::should_run(&name) {
@@ -47,11 +130,11 @@ fn main() {
                 last = run_mem(shards, &w);
                 bb(last)
             });
-            mbps.push((shards, last));
+            shard_mbps.push((shards, last));
         }
     }
     if let (Some(one), Some(four)) =
-        (mbps.iter().find(|(s, _)| *s == 1), mbps.iter().find(|(s, _)| *s == 4))
+        (shard_mbps.iter().find(|(s, _)| *s == 1), shard_mbps.iter().find(|(s, _)| *s == 4))
     {
         println!(
             "\nshard scaling: 1 shard {:.1} MB/s -> 4 shards {:.1} MB/s  ({:.2}x)",
@@ -60,15 +143,95 @@ fn main() {
             four.1 / one.1.max(1e-9)
         );
     }
+    if !shard_mbps.is_empty() {
+        out.insert(
+            "shard_scaling".into(),
+            Json::Arr(
+                shard_mbps
+                    .iter()
+                    .map(|&(s, m)| Json::obj(vec![("shards", Json::Num(s as f64)), ("mbps", Json::Num(m))]))
+                    .collect(),
+            ),
+        );
+    }
+
+    section("clients-per-shard scaling (ONE shard, reserve→publish ingest)");
+    // the burst fits the SSD budget: no backpressure, so this isolates
+    // the ingest path itself — device writes overlapping outside the
+    // core lock. Expected: ≥2x at 4 clients vs 1.
+    let wc = {
+        let mib: i64 = if fast { 12 } else { 48 };
+        let sectors = mib * 2048;
+        ior_spanned(0, IorPattern::SegmentedRandom, 8, sectors, sectors * 8, DEFAULT_REQ_SECTORS, 29)
+    };
+    let cbytes = wc.total_bytes() as f64;
+    let mut client_mbps: Vec<(usize, f64)> = Vec::new();
+    for clients in [1usize, 2, 4, 8] {
+        let name = format!("live/mem-clients-{clients}");
+        if Bench::should_run(&name) {
+            let mut last = 0.0;
+            b.run(&name, cbytes, || {
+                last = run_clients(clients, &wc);
+                bb(last)
+            });
+            client_mbps.push((clients, last));
+        }
+    }
+    if let (Some(one), Some(four)) =
+        (client_mbps.iter().find(|(c, _)| *c == 1), client_mbps.iter().find(|(c, _)| *c == 4))
+    {
+        println!(
+            "\nclient scaling on one shard: 1 client {:.1} MB/s -> 4 clients {:.1} MB/s  ({:.2}x)",
+            one.1,
+            four.1,
+            four.1 / one.1.max(1e-9)
+        );
+    }
+    if !client_mbps.is_empty() {
+        out.insert(
+            "clients_per_shard".into(),
+            Json::Arr(
+                client_mbps
+                    .iter()
+                    .map(|&(c, m)| Json::obj(vec![("clients", Json::Num(c as f64)), ("mbps", Json::Num(m))]))
+                    .collect(),
+            ),
+        );
+    }
+
+    section("mid-burst read latency (pinned-extent reads vs concurrent ingest)");
+    if Bench::should_run("live/read-latency") {
+        let hist = read_latency(if fast { 200 } else { 2000 });
+        println!(
+            "live/read-latency: {} reads, p50 {} us, p95 {} us, p99 {} us, max {} us",
+            hist.count(),
+            hist.p50(),
+            hist.p95(),
+            hist.p99(),
+            hist.max_us()
+        );
+        out.insert(
+            "read_latency_us".into(),
+            Json::obj(vec![
+                ("samples", Json::Num(hist.count() as f64)),
+                ("p50", Json::Num(hist.p50() as f64)),
+                ("p95", Json::Num(hist.p95() as f64)),
+                ("p99", Json::Num(hist.p99() as f64)),
+                ("max", Json::Num(hist.max_us() as f64)),
+            ]),
+        );
+    }
 
     section("rewrite-heavy load (ownership map + stale-flush suppression)");
     if Bench::should_run("live/mem-rewrite") {
         // every sector written twice across mixed routes: measures the
         // ownership-map overhead on ingest plus the HDD bandwidth the
         // flusher saves by skipping superseded extents
-        let wr = checkpoint_rewrite(4, 32 * 2048, DEFAULT_REQ_SECTORS, 1_000, 17);
+        let rw_sectors = if fast { 8 * 2048 } else { 32 * 2048 };
+        let wr = checkpoint_rewrite(4, rw_sectors, DEFAULT_REQ_SECTORS, 1_000, 17);
         let rbytes = wr.total_bytes() as f64;
         let mut skipped = 0u64;
+        let mut last = 0.0;
         b.run("live/mem-rewrite", rbytes, || {
             let mut cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(2).with_ssd_mib(64);
             cfg = cfg.with_stream_len(32);
@@ -76,23 +239,40 @@ fn main() {
             let report = live::run_load_with(&engine, &wr, 8, true);
             let stats = engine.shutdown();
             skipped = stats.iter().map(|s| s.superseded_bytes).sum();
-            bb(report.throughput_mbps())
+            last = report.throughput_mbps();
+            bb(last)
         });
         println!("  stale flushes suppressed: {} MiB of HDD writes saved", skipped / (1 << 20));
+        out.insert(
+            "rewrite".into(),
+            Json::obj(vec![
+                ("mbps", Json::Num(last)),
+                ("superseded_mib", Json::Num((skipped / (1 << 20)) as f64)),
+            ]),
+        );
     }
 
     section("live engine on real files (FileBackend, page-cached)");
     if Bench::should_run("live/file-shards-4") {
         let dir = std::env::temp_dir().join(format!("ssdup-bench-live-{}", std::process::id()));
-        let wf = mixed(32, 13);
+        let wf = mixed(if fast { 8 } else { 32 }, 13);
         let fbytes = wf.total_bytes() as f64;
+        let mut last = 0.0;
         b.run("live/file-shards-4", fbytes, || {
             let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(4).with_ssd_mib(16);
             let engine = LiveEngine::file(&cfg, &dir).expect("file backends");
             let report = live::run_load(&engine, &wf, 8);
             engine.shutdown();
-            bb(report.throughput_mbps())
+            last = report.throughput_mbps();
+            bb(last)
         });
         std::fs::remove_dir_all(&dir).ok();
+        out.insert("file_shards_4".into(), Json::obj(vec![("mbps", Json::Num(last))]));
+    }
+
+    let json = Json::Obj(out);
+    match std::fs::write("BENCH_live.json", format!("{json}\n")) {
+        Ok(()) => println!("\nwrote BENCH_live.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_live.json: {e}"),
     }
 }

@@ -285,6 +285,32 @@ impl<V> AvlTree<V> {
         matches!(best, Some(k) if k < hi)
     }
 
+    /// Is there any entry with key in `[lo, hi)` whose value satisfies
+    /// `pred`? Allocation-free, like [`AvlTree::any_in_range`] — hot-path
+    /// guard queries (the ownership map's pending-claim check on every
+    /// live read) should not pay for materializing the range.
+    pub fn any_in_range_where(&self, lo: i64, hi: i64, mut pred: impl FnMut(&V) -> bool) -> bool {
+        self.any_where_node(self.root, lo, hi, &mut pred)
+    }
+
+    fn any_where_node(
+        &self,
+        node: Option<u32>,
+        lo: i64,
+        hi: i64,
+        pred: &mut impl FnMut(&V) -> bool,
+    ) -> bool {
+        let Some(i) = node else { return false };
+        let n = &self.nodes[i as usize];
+        if n.key > lo && self.any_where_node(n.left, lo, hi, pred) {
+            return true;
+        }
+        if n.key >= lo && n.key < hi && pred(&n.value) {
+            return true;
+        }
+        n.key < hi && self.any_where_node(n.right, lo, hi, pred)
+    }
+
     /// Entries with keys in `[lo, hi)`, ascending.
     pub fn range(&self, lo: i64, hi: i64) -> Vec<(i64, V)>
     where
@@ -438,6 +464,28 @@ mod tests {
         t.insert(1, "new");
         assert_eq!(t.len(), 1);
         assert_eq!(t.get(1), Some(&"new"));
+    }
+
+    #[test]
+    fn any_in_range_where_matches_range_filter() {
+        let mut t = AvlTree::new();
+        for k in [5i64, 2, 8, 1, 9, 3, 14] {
+            t.insert(k, k * 10);
+        }
+        // agrees with the materialized range on hits, misses, and bounds
+        for (lo, hi) in [(0i64, 20), (2, 9), (4, 5), (5, 6), (9, 9), (10, 14), (15, 99)] {
+            for want in [30i64, 80, 140, 999] {
+                let via_range = t.range(lo, hi).iter().any(|(_, v)| *v == want);
+                assert_eq!(
+                    t.any_in_range_where(lo, hi, |v| *v == want),
+                    via_range,
+                    "lo={lo} hi={hi} want={want}"
+                );
+            }
+        }
+        assert!(!t.any_in_range_where(0, 100, |_| false), "predicate can reject everything");
+        assert!(t.any_in_range_where(0, 100, |_| true));
+        assert!(!AvlTree::<i64>::new().any_in_range_where(0, 100, |_| true), "empty tree");
     }
 
     #[test]

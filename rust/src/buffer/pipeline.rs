@@ -53,12 +53,23 @@ impl FlushStrategy {
 }
 
 /// Outcome of trying to buffer one request into the pipeline.
+///
+/// A successful outcome is a **slot reservation**, not a completed
+/// transfer: the pipeline hands out `(region, ssd_offset)` and updates
+/// its metadata, and the caller writes the device bytes afterwards. The
+/// DES simulator does both under one event; the live shard deliberately
+/// writes *outside* its core lock (reserve→publish ingest) and tracks
+/// the in-flight window in its ownership map, so concurrent clients
+/// overlap their device writes. Either way the pipeline's invariant is
+/// the same: a region handed to the flusher stops accepting
+/// reservations, so the flusher's copy set is final once the in-flight
+/// reservations on that region have completed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BufferOutcome {
-    /// buffered into the active region at this SSD offset
+    /// slot reserved in the active region at this SSD offset
     Buffered { region: usize, ssd_offset: i64 },
-    /// buffered, and the active region is now switching: the previously
-    /// active region became full and should start flushing
+    /// slot reserved, and the active region is now switching: the
+    /// previously active region became full and should start flushing
     BufferedAndFull { region: usize, ssd_offset: i64, flush_region: usize },
     /// both regions unavailable — request must wait (the paper: "the
     /// system waits until a region becomes empty")
@@ -120,8 +131,9 @@ impl Pipeline {
         self.flushing != Some(r) && !self.flush_pending.contains(&r)
     }
 
-    /// Try to buffer a request of `size` sectors for `file` at
-    /// `orig_offset`. Implements the §2.4.1 region switch.
+    /// Try to reserve a slot for a request of `size` sectors for `file`
+    /// at `orig_offset`. Implements the §2.4.1 region switch. See
+    /// [`BufferOutcome`] for the reservation semantics.
     pub fn buffer(&mut self, file: u32, orig_offset: i64, size: i64) -> BufferOutcome {
         let a = self.active;
         let a_appendable = self.appendable(a);

@@ -212,7 +212,9 @@ impl LiveEngine {
     /// served from wherever the newest copy of each sector lives — SSD
     /// log or HDD — even mid-burst, before any drain. The inverse of
     /// [`LiveEngine::submit`]'s stripe scatter: each shard resolves its
-    /// sub-range through its sector-ownership map.
+    /// sub-range through its sector-ownership map, pins the referenced
+    /// log regions, and reads its devices with no lock held — reads run
+    /// concurrently with ingest, flushing, and each other.
     ///
     /// Never-written sectors read as zeros (HDD hole semantics).
     pub fn read(&self, file: u32, offset: i32, buf: &mut [u8]) {

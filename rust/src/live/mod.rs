@@ -14,8 +14,10 @@
 //!                                                 pause gate, SSD→HDD drain
 //! ```
 //!
-//! * [`backend`] — pluggable byte stores: in-memory (tests/benches, with
-//!   synthetic device latency) and real files (`ssdup live --backend file`);
+//! * [`backend`] — pluggable byte stores with **concurrent positional
+//!   (`&self`) I/O**: in-memory (tests/benches, with synthetic device
+//!   latency and sharded page locks) and real files (`pwrite`/`pread`,
+//!   `ssdup live --backend file`);
 //! * [`shard`] — one live I/O node: detector + policy + two-region
 //!   pipeline + SSD/HDD backend pair + background flusher with the
 //!   paper's traffic-aware pause gate (§2.4.2);
@@ -24,11 +26,22 @@
 //! * [`loadgen`] — closed-loop concurrent load generator over the
 //!   `workload::*` patterns, recording p50/p95/p99 request latency;
 //! * [`ownership`] — the per-shard **sector-ownership extent map**: which
-//!   tier (SSD log slot or HDD) holds the newest copy of every sector;
+//!   tier (SSD log slot or HDD) holds the newest copy of every sector,
+//!   including claims whose device bytes are still in flight;
 //! * [`payload`] — deterministic sector contents (optionally versioned
 //!   per write) so every byte on the HDD backends can be re-derived and
 //!   checked after a run — including *which* copy of a rewritten sector
 //!   survived.
+//!
+//! Concurrency model: a shard has exactly one lock — its core mutex —
+//! and **no thread ever holds it across device I/O**. Ingest runs
+//! reserve→publish (route + slot + ownership claim under the lock,
+//! device write unlocked, brief re-acquire to publish), reads run
+//! resolve→pin→read (the flusher waits out a region's reader pins before
+//! recycling its slots), and the flusher snapshots its copy set under
+//! the lock but moves every byte without it. Many clients submitting to
+//! one shard therefore overlap their device transfers, and mid-burst
+//! reads proceed concurrently with ingest and flushing.
 //!
 //! Semantics note: overwrites are fully supported, across routes and
 //! mid-burst. Every ingest claims its sector range in the shard's
@@ -37,11 +50,15 @@
 //! write that would overlap live buffered data is absorbed into the SSD
 //! log so it can never race the flusher for the same HDD sectors. Reads
 //! ([`LiveEngine::read`]) resolve through the same map and always serve
-//! the newest copy, even while a burst is still buffered. The one
-//! remaining caveat is *concurrent* writers to the same sector: with no
-//! ordering between two in-flight client writes, "newest" is whichever
-//! claim lands last (the map keeps the engine consistent; the workload
-//! decides whether that order is meaningful).
+//! the newest copy, even while a burst is still buffered; a read
+//! overlapping a claim whose device bytes are still in flight waits for
+//! that claim to publish first. Claim order — fixed under the core lock
+//! at reserve time, before any bytes move — is the engine's write order:
+//! two *concurrent* writers to the same sector are unordered as ever
+//! (the map keeps the engine consistent; the workload decides whether
+//! that order is meaningful), but once a claim is made, no older write
+//! can resurface under it — in-flight direct writes are waited out
+//! rather than raced.
 
 pub mod backend;
 pub mod engine;

@@ -1,5 +1,6 @@
 //! Per-shard **sector-ownership extent map**: which tier holds the newest
-//! copy of every sector (overwrite safety for the live engine).
+//! copy of every sector (overwrite safety for the live engine), plus the
+//! in-flight state that makes lock-free device I/O safe.
 //!
 //! The paper's log-structured buffer (§2.5) restores *order* at flush
 //! time, but a rewrite can leave two copies of a sector alive — one in
@@ -8,20 +9,35 @@
 //! absolute disk LBA of each extent's first sector, is the single source
 //! of truth for "where does the newest copy live":
 //!
-//! * ingest **claims** the written range — any overlapped part of an
-//!   older buffered extent is superseded on the spot;
-//! * the flusher **clips** every flush extent against the map and copies
-//!   only the parts its region still owns (stale-flush suppression: the
-//!   skipped sectors also never cost HDD bandwidth);
+//! * ingest **reserves** the written range under the shard's core lock
+//!   (the claim supersedes any overlapped older buffered extent on the
+//!   spot), then writes the device bytes with no lock held, then
+//!   **publishes** the claim. A reserved-but-unpublished extent is
+//!   *pending*: readers wait it out and the flusher refuses to snapshot
+//!   its region, because the log slot's bytes are not on the backend yet;
+//! * direct-to-HDD writes register the same way in a small side list of
+//!   **in-flight direct extents** ([`OwnershipMap::claim_direct`]): any
+//!   later claim overlapping one waits for it to land first, which is
+//!   what keeps an in-flight HDD write from surfacing *after* a newer
+//!   buffered copy was flushed over the same sectors;
+//! * the flusher copies exactly the map's surviving extents for its
+//!   region (stale-flush suppression: superseded ranges are simply
+//!   absent, and skipped sectors never cost HDD bandwidth);
 //! * the read path **resolves** a range into (SSD-slot | HDD) segments
 //!   and serves each from the newest copy, even mid-burst;
 //! * when a region's flush completes, its surviving extents are
 //!   **released** — the newest copy is now the HDD one.
 //!
-//! Only SSD-resident extents are stored: a range with no entry is
-//! HDD-owned by definition (settled by a flush, written directly, or a
-//! never-written hole that reads as zeros). That keeps the map
-//! proportional to *currently buffered* data, not to history.
+//! Only SSD-resident extents are stored in the tree: a range with no
+//! entry is HDD-owned by definition (settled by a flush, written
+//! directly, or a never-written hole that reads as zeros). That keeps the
+//! map proportional to *currently buffered* data, not to history.
+//!
+//! Pending claims are identified by **tickets** (monotonic `u64`s handed
+//! out at reserve time): a claim can be partially superseded by a newer
+//! claim while its device write is still in flight, so publishing flips
+//! exactly the surviving fragments that still carry the publisher's
+//! ticket — never a newer claim that landed inside the same range.
 
 use crate::buffer::avl::AvlTree;
 
@@ -35,23 +51,44 @@ pub enum Tier {
     Ssd { region: usize, ssd_offset: i64 },
 }
 
+/// Published marker in [`SsdExtent::pending`] (real tickets start at 1).
+const PUBLISHED: u64 = 0;
+
 /// Stored per live extent: length plus the SSD slot of the newest copy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 struct SsdExtent {
     size: i64,
     region: usize,
     ssd_offset: i64,
+    /// [`PUBLISHED`], or the reserving write's ticket while its device
+    /// write is still in flight. Trims preserve this, so every surviving
+    /// fragment of a pending claim stays attributable to its writer.
+    pending: u64,
 }
 
 /// Extent map over absolute disk LBAs (sectors). See the module docs.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct OwnershipMap {
     map: AvlTree<SsdExtent>,
+    /// in-flight direct-to-HDD writes as `(lba, size, ticket)`. Disjoint
+    /// by construction: the shard waits out any overlap before claiming.
+    /// A Vec because it only ever holds the handful of direct writes
+    /// currently between claim and device-write completion.
+    direct: Vec<(i64, i64, u64)>,
+    /// next reserve/claim ticket (0 is reserved for "published")
+    next_ticket: u64,
+}
+
+impl Default for OwnershipMap {
+    // not derived: tickets must start at 1 (0 is the PUBLISHED sentinel)
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl OwnershipMap {
     pub fn new() -> Self {
-        Self { map: AvlTree::new() }
+        Self { map: AvlTree::new(), direct: Vec::new(), next_ticket: 1 }
     }
 
     /// Number of live (SSD-resident) extents.
@@ -63,9 +100,16 @@ impl OwnershipMap {
         self.map.is_empty()
     }
 
-    /// Total SSD-resident sectors (test/debug visibility).
+    /// Total SSD-resident sectors, pending claims included (test/debug
+    /// visibility).
     pub fn ssd_sectors(&self) -> i64 {
         self.map.in_order().map(|(_, e)| e.size).sum()
+    }
+
+    fn alloc_ticket(&mut self) -> u64 {
+        let t = self.next_ticket;
+        self.next_ticket += 1;
+        t
     }
 
     /// Stored extents overlapping `[lba, end)`, ascending, unclipped:
@@ -82,8 +126,9 @@ impl OwnershipMap {
         out
     }
 
-    /// Does any part of `[lba, lba+size)` currently live in the SSD log?
-    /// Allocation-free: this guards every direct-route write.
+    /// Does any part of `[lba, lba+size)` currently live in the SSD log
+    /// (pending claims included)? Allocation-free: this guards every
+    /// direct-route write.
     pub fn overlaps_ssd(&self, lba: i64, size: i64) -> bool {
         if let Some((k, e)) = self.map.below(lba) {
             if k + e.size > lba {
@@ -101,14 +146,36 @@ impl OwnershipMap {
         self.overlapping(lba, lba + size).iter().any(|(_, e)| e.region == region)
     }
 
-    /// Record that the newest copy of `[lba, lba+size)` now lives at
-    /// `tier`, superseding the overlapped parts of any older extents
-    /// (they are trimmed or removed, with their slot offsets adjusted).
-    /// Returns the number of sectors whose previously-newest copy sat in
-    /// the SSD log — exactly the stale sectors a flush will now skip.
-    pub fn claim(&mut self, lba: i64, size: i64, tier: Tier) -> i64 {
-        debug_assert!(size > 0, "empty claim");
+    /// Is any part of `[lba, lba+size)` claimed by a write whose device
+    /// bytes are still in flight — a reserved-but-unpublished SSD slot or
+    /// an in-flight direct-to-HDD write? Readers wait this out before
+    /// resolving, and new claims wait out the direct component.
+    pub fn pending_overlaps(&self, lba: i64, size: i64) -> bool {
+        if self.direct_overlaps(lba, size) {
+            return true;
+        }
+        // allocation-free like `overlaps_ssd`: this guards every live
+        // read (and re-runs on each wakeup while a reader waits)
+        if let Some((k, e)) = self.map.below(lba) {
+            if k + e.size > lba && e.pending != PUBLISHED {
+                return true;
+            }
+        }
+        self.map.any_in_range_where(lba, lba + size, |e| e.pending != PUBLISHED)
+    }
+
+    /// Is any part of `[lba, lba+size)` covered by an in-flight
+    /// direct-to-HDD write?
+    pub fn direct_overlaps(&self, lba: i64, size: i64) -> bool {
         let end = lba + size;
+        self.direct.iter().any(|&(d_lba, d_size, _)| d_lba < end && d_lba + d_size > lba)
+    }
+
+    /// Supersede the overlapped parts of any extents in `[lba, end)`:
+    /// they are trimmed or removed, with slot offsets (and pending
+    /// tickets) carried onto the remainders. Returns the superseded
+    /// sector count — exactly the stale sectors a flush will now skip.
+    fn supersede(&mut self, lba: i64, end: i64) -> i64 {
         let mut superseded = 0;
         for (k, e) in self.overlapping(lba, end) {
             self.map.remove(k);
@@ -122,26 +189,104 @@ impl OwnershipMap {
                 let cut = end - k;
                 self.map.insert(
                     end,
-                    SsdExtent { size: e_end - end, region: e.region, ssd_offset: e.ssd_offset + cut },
+                    SsdExtent { size: e_end - end, ssd_offset: e.ssd_offset + cut, ..e },
                 );
             }
             superseded += e_end.min(end) - k.max(lba);
         }
+        superseded
+    }
+
+    /// Record that the newest copy of `[lba, lba+size)` now lives at
+    /// `tier`, superseding the overlapped parts of any older extents.
+    /// The claim is **published** immediately — the caller asserts the
+    /// bytes are already on the backend (tests, and any future
+    /// synchronous path). Returns the superseded sector count.
+    pub fn claim(&mut self, lba: i64, size: i64, tier: Tier) -> i64 {
+        debug_assert!(size > 0, "empty claim");
+        let superseded = self.supersede(lba, lba + size);
         if let Tier::Ssd { region, ssd_offset } = tier {
-            self.map.insert(lba, SsdExtent { size, region, ssd_offset });
+            self.map.insert(lba, SsdExtent { size, region, ssd_offset, pending: PUBLISHED });
         }
         superseded
+    }
+
+    /// Reserve `[lba, lba+size)` for an SSD-log write whose device bytes
+    /// are **not yet written**: supersedes older copies exactly like
+    /// [`OwnershipMap::claim`], but the new extent is pending until
+    /// [`OwnershipMap::publish`] is called with the returned ticket.
+    /// Returns `(superseded sectors, ticket)`.
+    pub fn reserve(&mut self, lba: i64, size: i64, region: usize, ssd_offset: i64) -> (i64, u64) {
+        debug_assert!(size > 0, "empty reserve");
+        debug_assert!(!self.direct_overlaps(lba, size), "reserve over in-flight direct write");
+        let superseded = self.supersede(lba, lba + size);
+        let ticket = self.alloc_ticket();
+        self.map.insert(lba, SsdExtent { size, region, ssd_offset, pending: ticket });
+        (superseded, ticket)
+    }
+
+    /// A reserved write's device bytes landed: flip every surviving
+    /// fragment of `ticket`'s claim in `[lba, lba+size)` to published.
+    /// Fragments superseded while the write was in flight are simply
+    /// gone — publishing never touches extents claimed by other writes.
+    /// Returns the published sector count (0 if fully superseded).
+    pub fn publish(&mut self, ticket: u64, lba: i64, size: i64) -> i64 {
+        debug_assert!(ticket != PUBLISHED, "publish without a ticket");
+        let mut published = 0;
+        for (k, e) in self.overlapping(lba, lba + size) {
+            if e.pending != ticket {
+                continue;
+            }
+            self.map.remove(k);
+            self.map.insert(k, SsdExtent { pending: PUBLISHED, ..e });
+            published += e.size;
+        }
+        published
+    }
+
+    /// Register an in-flight direct-to-HDD write of `[lba, lba+size)`.
+    /// The caller must have waited out any overlap first (no SSD-resident
+    /// copy, no other in-flight direct write); the returned ticket is
+    /// handed back to [`OwnershipMap::finish_direct`] once the device
+    /// write completed.
+    pub fn claim_direct(&mut self, lba: i64, size: i64) -> u64 {
+        debug_assert!(size > 0, "empty direct claim");
+        debug_assert!(!self.overlaps_ssd(lba, size), "direct write over live buffer");
+        debug_assert!(!self.direct_overlaps(lba, size), "overlapping in-flight direct writes");
+        let ticket = self.alloc_ticket();
+        self.direct.push((lba, size, ticket));
+        ticket
+    }
+
+    /// An in-flight direct write's device bytes landed: drop its entry.
+    /// The range has no tree entry (absent = HDD-owned), so nothing else
+    /// changes. Panics on an unknown ticket — that is a caller bug, and
+    /// silently ignoring it would leave readers waiting on a ghost write.
+    pub fn finish_direct(&mut self, ticket: u64) {
+        let i = self.direct.iter().position(|&(_, _, t)| t == ticket).expect("unknown direct ticket");
+        self.direct.swap_remove(i);
+    }
+
+    /// In-flight direct writes currently registered (test visibility).
+    pub fn direct_in_flight(&self) -> usize {
+        self.direct.len()
     }
 
     /// Cover `[lba, lba+size)` with ascending non-overlapping segments
     /// `(seg_lba, seg_size, tier)`; ranges with no SSD-resident copy come
     /// back as [`Tier::Hdd`]. The SSD slot offsets are adjusted to each
     /// segment's start, so a segment can be served with one backend read.
+    ///
+    /// Callers must have waited until [`OwnershipMap::pending_overlaps`]
+    /// is false for the range: a pending claim has no readable copy
+    /// anywhere (the old one is superseded, the new bytes are still in
+    /// flight).
     pub fn resolve(&self, lba: i64, size: i64) -> Vec<(i64, i64, Tier)> {
         let end = lba + size;
         let mut out = Vec::new();
         let mut cursor = lba;
         for (k, e) in self.overlapping(lba, end) {
+            debug_assert_eq!(e.pending, PUBLISHED, "resolve across a pending claim");
             let s = k.max(lba);
             let e_end = (k + e.size).min(end);
             if s > cursor {
@@ -167,12 +312,17 @@ impl OwnershipMap {
     /// region metadata alone would also lose data here: a same-offset
     /// rewrite with a shorter size replaces its tree entry whole, while
     /// the map correctly keeps the surviving tail as its own extent.)
+    ///
+    /// The caller (the shard's flusher) waits until the region has no
+    /// pending claims first — the region stopped accepting appends when
+    /// it was queued, so that state is final.
     pub fn region_extents(&self, region: usize) -> Vec<(i64, i64, i64)> {
         let mut out: Vec<(i64, i64, i64)> = Vec::new();
         for (k, e) in self.map.in_order() {
             if e.region != region {
                 continue;
             }
+            debug_assert_eq!(e.pending, PUBLISHED, "flush snapshot across a pending claim");
             match out.last_mut() {
                 Some(prev) if prev.0 + prev.1 == k && prev.2 + prev.1 == e.ssd_offset => {
                     prev.1 += e.size;
@@ -333,6 +483,93 @@ mod tests {
                 superseded += m.claim(lba, size, Tier::Ssd { region: i % 2, ssd_offset: i as i64 * 64 });
             }
             assert_eq!(m.ssd_sectors() + superseded, claimed, "step {i}");
+        }
+    }
+
+    #[test]
+    fn reserve_is_pending_until_published() {
+        let mut m = OwnershipMap::new();
+        let (stale, ticket) = m.reserve(100, 20, 0, 0);
+        assert_eq!(stale, 0);
+        assert!(m.pending_overlaps(110, 1), "reserved range is pending");
+        assert!(m.overlaps_ssd(110, 1), "pending claims still count as SSD-resident");
+        assert!(!m.pending_overlaps(120, 10), "outside the claim is clear");
+        assert_eq!(m.publish(ticket, 100, 20), 20);
+        assert!(!m.pending_overlaps(100, 20));
+        assert_eq!(m.resolve(100, 20), vec![(100, 20, ssd(0, 0))]);
+    }
+
+    #[test]
+    fn publish_flips_only_surviving_fragments_of_its_ticket() {
+        let mut m = OwnershipMap::new();
+        let (_, a) = m.reserve(0, 100, 0, 0);
+        // a newer claim lands inside A's range while A is in flight
+        let (stale, b) = m.reserve(30, 40, 1, 500);
+        assert_eq!(stale, 40, "mid-flight supersede is booked to the newer claim");
+        // A publishes: only its two surviving fragments flip; B's claim
+        // inside the same range stays pending
+        assert_eq!(m.publish(a, 0, 100), 30 + 30);
+        assert!(m.pending_overlaps(30, 40), "B is still in flight");
+        assert!(!m.pending_overlaps(0, 30));
+        assert!(!m.pending_overlaps(70, 30));
+        assert_eq!(m.publish(b, 30, 40), 40);
+        assert_eq!(
+            m.resolve(0, 100),
+            vec![(0, 30, ssd(0, 0)), (30, 40, ssd(1, 500)), (70, 30, ssd(0, 70))]
+        );
+    }
+
+    #[test]
+    fn fully_superseded_pending_claim_publishes_nothing() {
+        let mut m = OwnershipMap::new();
+        let (_, a) = m.reserve(0, 10, 0, 0);
+        let (stale, b) = m.reserve(0, 10, 0, 10);
+        assert_eq!(stale, 10);
+        assert_eq!(m.publish(a, 0, 10), 0, "nothing of A survived");
+        assert_eq!(m.publish(b, 0, 10), 10);
+        assert_eq!(m.resolve(0, 10), vec![(0, 10, ssd(0, 10))]);
+        assert_eq!(m.ssd_sectors(), 10);
+    }
+
+    #[test]
+    fn direct_claims_track_in_flight_hdd_writes() {
+        let mut m = OwnershipMap::new();
+        let t = m.claim_direct(1000, 50);
+        assert_eq!(m.direct_in_flight(), 1);
+        assert!(m.direct_overlaps(1040, 20));
+        assert!(m.pending_overlaps(990, 11), "tail overlap is pending");
+        assert!(!m.direct_overlaps(1050, 10), "end is exclusive");
+        assert!(!m.direct_overlaps(990, 10));
+        // the tree is untouched: direct writes are HDD-owned (absent)
+        assert!(m.is_empty());
+        assert_eq!(m.resolve(1000, 50), vec![(1000, 50, Tier::Hdd)]);
+        m.finish_direct(t);
+        assert_eq!(m.direct_in_flight(), 0);
+        assert!(!m.pending_overlaps(1000, 50));
+    }
+
+    #[test]
+    fn conservation_holds_across_reserve_publish_churn() {
+        // the shard's invariant, at map level: sectors booked at reserve
+        // == live + superseded, no matter how publishes interleave
+        let mut m = OwnershipMap::new();
+        let mut rng = crate::util::prng::Prng::new(77);
+        let mut reserved = 0i64;
+        let mut superseded = 0i64;
+        let mut in_flight: Vec<(u64, i64, i64)> = Vec::new();
+        for i in 0..400usize {
+            if !in_flight.is_empty() && rng.chance(0.4) {
+                let (t, lba, size) = in_flight.swap_remove(rng.gen_range(in_flight.len() as u64) as usize);
+                m.publish(t, lba, size);
+            } else {
+                let lba = rng.gen_range(1500) as i64;
+                let size = 1 + rng.gen_range(48) as i64;
+                let (stale, t) = m.reserve(lba, size, i % 2, i as i64 * 48);
+                reserved += size;
+                superseded += stale;
+                in_flight.push((t, lba, size));
+            }
+            assert_eq!(m.ssd_sectors() + superseded, reserved, "step {i}");
         }
     }
 }

@@ -2,36 +2,51 @@
 //! per-I/O-node server.
 //!
 //! A shard owns a detector + routing policy + two-region pipeline plus an
-//! SSD/HDD backend pair, and splits work across two lock domains:
+//! SSD/HDD backend pair. Since the backends expose concurrent positional
+//! I/O (`&self` — see [`crate::live::backend`]), there is exactly **one**
+//! lock: the **core** mutex, and it guards *coordination only* — pipeline
+//! metadata, stream grouper, policy, file table, ownership map, stats.
+//! **No thread ever holds it across device I/O.** Every hot path splits
+//! into short critical sections around an unlocked device transfer:
 //!
-//! * the **core** mutex guards all coordination state (pipeline metadata,
-//!   stream grouper, policy, file table, stats). Ingest holds it while
-//!   routing, appending to the SSD log, and feeding the detector — a
-//!   shard's ingest is serial by design (the scaling unit is the shard);
-//! * the **device** mutexes (`ssd`, `hdd`) guard the backends alone, so
-//!   the background flusher moves region bytes SSD→HDD *without* the core
-//!   lock — buffering and flushing overlap, which is the whole point of
-//!   the paper's two-region pipeline (§2.4).
+//! * **Ingest (reserve → publish).** Under the core lock a write routes,
+//!   reserves its pipeline slot, and claims its sector range in the
+//!   ownership map as *pending*; the lock drops; the SSD/HDD bytes are
+//!   written; a brief re-acquire publishes the claim. Concurrent clients
+//!   of one shard therefore overlap their device writes — per-shard
+//!   ingest bandwidth scales with in-flight clients instead of being
+//!   device-latency × 1 (the paper's buffering/flushing overlap, §2.4,
+//!   extended to the ingest path itself).
+//! * **Reads (resolve → pin → read).** [`Shard::read`] resolves the range
+//!   under the lock, takes a per-region *pin*, releases the lock, reads
+//!   the devices, and unpins. A flush completion waits for a region's
+//!   pins to drain before recycling its log slots, so a reader never sees
+//!   a slot reused under it — and readers never serialize against ingest.
+//! * **Flush.** The flusher snapshots its region's surviving extents
+//!   under the lock (after waiting for the region's pending claims to
+//!   publish — a queued region accepts no new appends, so that state is
+//!   final), then copies SSD→HDD with no lock held, in coalesced runs
+//!   (see `copy_runs`).
 //!
-//! Lock order is always core → device; the flusher takes devices only.
 //! Backpressure is physical: a write that finds both regions unavailable
 //! blocks its client on a condvar until the flusher frees a region —
 //! the paper's "the system waits until a region becomes empty".
 //!
 //! **Overwrite safety.** Every ingest claims its sector range in the
-//! shard's [`OwnershipMap`] (under the core lock, after the SSD bytes
-//! landed), so the newest copy of every sector is always locatable. A
-//! direct-to-HDD write that would overlap a live buffered extent is
-//! absorbed into the SSD log instead — a direct write racing the flusher
-//! for the same sectors is the one ordering the locks cannot arbitrate.
-//! The flusher copies exactly the map's surviving extents for its
-//! region — superseded ranges are absent from the map — so a stale
-//! buffered copy can never clobber newer data on the HDD, and skipped
-//! sectors cost no HDD bandwidth. Reads resolve through the same map and
-//! are served from the newest copy — SSD log or HDD — even mid-burst.
+//! shard's [`OwnershipMap`] in the same critical section that reserves
+//! its slot, so the newest copy of every sector is always locatable and
+//! claims are totally ordered by the core lock. A direct-to-HDD write
+//! that would overlap a live buffered extent is absorbed into the SSD log
+//! instead, and any claim overlapping an *in-flight* direct write waits
+//! for it to land first — the two cases where an unordered device write
+//! could otherwise resurrect stale bytes on the HDD. The flusher copies
+//! exactly the map's surviving extents for its region (superseded ranges
+//! are absent — stale-flush suppression by construction), and reads
+//! resolve through the same map, waiting out claims whose device bytes
+//! are still in flight (a pending claim has no readable copy anywhere).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::buffer::{BufferOutcome, FlushStrategy, Pipeline};
@@ -44,6 +59,13 @@ use crate::live::ownership::{OwnershipMap, Tier};
 use crate::redirector::{AdaptivePolicy, AlwaysHdd, AlwaysSsd, RoutePolicy, WatermarkPolicy};
 use crate::server::config::SystemKind;
 use crate::types::{sectors_to_bytes, Route, SECTOR_BYTES};
+
+/// Number of pipeline regions (fixed by the two-region design, §2.4).
+const REGIONS: usize = 2;
+
+/// Flusher copy-buffer size: also the upper bound of one coalesced copy
+/// run, and thus the granularity of traffic-gate re-checks.
+const CHUNK_BYTES: usize = 1 << 20;
 
 /// Per-shard configuration (the engine derives one from its `LiveConfig`).
 #[derive(Clone, Copy, Debug)]
@@ -76,8 +98,15 @@ pub struct ShardStats {
     pub rerouted_writes: u64,
     pub streams: u64,
     pub flushes: u64,
+    /// coalesced SSD→HDD copy runs issued by the flusher: adjacent
+    /// surviving extents merge into one sequential HDD write (and one
+    /// gate check), so `flush_runs` ≪ extent count on fragmented maps
+    pub flush_runs: u64,
     pub flush_pauses: u64,
     pub flush_pause_us: u64,
+    /// waits actually taken by blocked ingest (region backpressure or the
+    /// valve forcing an overlap out through the flusher) — one count per
+    /// wait, never booked when a re-check finds the path already clear
     pub blocked_waits: u64,
     pub pct_sum: f64,
 }
@@ -114,30 +143,61 @@ struct ShardCore {
     route: Route,
     pipeline: Pipeline,
     /// sector-ownership extent map: where the newest copy of every
-    /// buffered sector lives (see the module docs on overwrite safety)
+    /// buffered sector lives, including claims still in flight (see the
+    /// module docs on overwrite safety)
     own: OwnershipMap,
+    /// reserved-but-unpublished SSD slots per region. The flusher waits
+    /// for its region's count to hit zero before snapshotting: those
+    /// slots' device bytes are still being written by client threads.
+    pending_slots: [u64; REGIONS],
     drained: bool,
     shutdown: bool,
-    /// set by the flusher on a backend I/O error, with the cause; waiters
-    /// surface it instead of polling a pipeline that can never drain
+    /// set on a backend I/O error, with the cause; waiters surface it
+    /// instead of polling work that can never finish
     failed: Option<String>,
     stats: ShardStats,
 }
 
 pub struct Shard {
     core: Mutex<ShardCore>,
-    ssd: Mutex<Box<dyn Backend>>,
-    hdd: Mutex<Box<dyn Backend>>,
+    /// concurrent (`&self`) backends: ingest clients, the flusher, and
+    /// readers all issue positional I/O directly — there is deliberately
+    /// no device mutex anywhere in the shard
+    ssd: Box<dyn Backend>,
+    hdd: Box<dyn Backend>,
     /// signalled when the flusher frees a region (blocked ingest, drain)
     space: Condvar,
-    /// signalled when flush work appears or the pause gate may open
+    /// signalled when flush work appears, the pause gate may open, or a
+    /// reader pin drains
     work: Condvar,
-    /// direct-to-HDD writes currently in flight (traffic-aware gate input)
+    /// signalled when an in-flight claim publishes (SSD slot published or
+    /// direct write landed): wakes readers waiting on a pending range,
+    /// writers waiting out an in-flight direct overlap, and a flusher
+    /// waiting for its region's reserved slots
+    published: Condvar,
+    /// readers currently holding resolved slots into each region's log.
+    /// Incremented under the core lock at resolve time; decremented
+    /// lock-free (`Release`) when the device reads finish, paired with
+    /// the flusher's `Acquire` load before it recycles the region.
+    read_pins: [AtomicU64; REGIONS],
+    /// direct-to-HDD writes in flight (traffic-aware gate input).
+    /// Ordering: increments happen inside the core critical section that
+    /// decided the route, decrements after the unlocked device write;
+    /// both use `Release`, the gate reads `Acquire`. The gate needs a
+    /// conservative snapshot only (it re-polls every `flush_check`), so
+    /// the cross-variable total order `SeqCst` would add is not required.
     direct_inflight: AtomicU64,
     strategy: FlushStrategy,
     half_sectors: i64,
     use_ssd: bool,
     flush_check: Duration,
+}
+
+/// Outcome of the routing/claim critical section of [`Shard::submit`]:
+/// which device write this client owes, and the ticket to publish after.
+enum Claimed {
+    Direct { dest: u64, ticket: u64 },
+    Slot { region: usize, ssd_offset: i64, ticket: u64 },
 }
 
 fn policy_for(system: SystemKind, history: usize) -> Box<dyn RoutePolicy + Send> {
@@ -147,6 +207,49 @@ fn policy_for(system: SystemKind, history: usize) -> Box<dyn RoutePolicy + Send>
         SystemKind::Ssdup => Box::<WatermarkPolicy>::default(),
         SystemKind::SsdupPlus => Box::new(AdaptivePolicy::new(history)),
     }
+}
+
+/// One sequential HDD write gathered from one or more SSD log segments.
+struct CopyRun {
+    hdd_byte: u64,
+    len: usize,
+    /// `(ssd_byte, len)` source segments, gathered in order
+    segs: Vec<(u64, usize)>,
+}
+
+/// Coalesce a region's surviving extents (ascending LBA, from
+/// `region_extents`) into bounded copy runs: extents adjacent on the HDD
+/// merge into **one sequential HDD write** even when their log slots are
+/// scattered — random reads from the SSD are cheap (§2.5), sequential
+/// writes are what the HDD wants. One traffic-gate check and one HDD
+/// write per run instead of per extent; runs are capped at `chunk_cap`
+/// so the gate still re-checks at a bounded byte granularity.
+fn copy_runs(extents: Vec<(i64, i64, i64)>, region_base: u64, chunk_cap: usize) -> Vec<CopyRun> {
+    let mut runs: Vec<CopyRun> = Vec::new();
+    for (lba, size, slot) in extents {
+        let mut hdd_byte = lba as u64 * SECTOR_BYTES;
+        let mut ssd_byte = region_base + slot as u64 * SECTOR_BYTES;
+        let mut left = (size as u64 * SECTOR_BYTES) as usize;
+        while left > 0 {
+            let take = match runs.last_mut() {
+                Some(run) if run.hdd_byte + run.len as u64 == hdd_byte && run.len < chunk_cap => {
+                    let take = left.min(chunk_cap - run.len);
+                    run.segs.push((ssd_byte, take));
+                    run.len += take;
+                    take
+                }
+                _ => {
+                    let take = left.min(chunk_cap);
+                    runs.push(CopyRun { hdd_byte, len: take, segs: vec![(ssd_byte, take)] });
+                    take
+                }
+            };
+            hdd_byte += take as u64;
+            ssd_byte += take as u64;
+            left -= take;
+        }
+    }
+    runs
 }
 
 impl Shard {
@@ -166,15 +269,18 @@ impl Shard {
                 route,
                 pipeline: Pipeline::new(cfg.ssd_capacity_sectors),
                 own: OwnershipMap::new(),
+                pending_slots: [0; REGIONS],
                 drained: false,
                 shutdown: false,
                 failed: None,
                 stats: ShardStats::default(),
             }),
-            ssd: Mutex::new(ssd),
-            hdd: Mutex::new(hdd),
+            ssd,
+            hdd,
             space: Condvar::new(),
             work: Condvar::new(),
+            published: Condvar::new(),
+            read_pins: [AtomicU64::new(0), AtomicU64::new(0)],
             direct_inflight: AtomicU64::new(0),
             strategy,
             half_sectors: cfg.ssd_capacity_sectors / 2,
@@ -183,18 +289,48 @@ impl Shard {
         }
     }
 
+    /// Timed wait on `cv` that surfaces a shard failure or shutdown
+    /// instead of sleeping on work that can never finish. `bytes` sizes
+    /// the undelivered-write panic message.
+    fn wait_or_die<'a>(
+        &self,
+        cv: &Condvar,
+        core: MutexGuard<'a, ShardCore>,
+        bytes: usize,
+    ) -> MutexGuard<'a, ShardCore> {
+        let core = cv.wait_timeout(core, self.flush_check).unwrap().0;
+        if let Some(msg) = core.failed.clone() {
+            drop(core); // release before panicking: no poisoning
+            panic!("shard failed while a write waited: {msg}");
+        }
+        if core.shutdown {
+            // the caller was never acknowledged: vanishing silently here
+            // would turn a shutdown into data loss the client believes
+            // was written
+            drop(core);
+            panic!("shard shut down with a blocked write still pending ({bytes} bytes undelivered)");
+        }
+        core
+    }
+
     /// Ingest one sub-request with its payload. Blocks (physical
     /// backpressure) while both pipeline regions are unavailable.
+    ///
+    /// The core lock is held only to route, reserve, and claim; the
+    /// device write itself runs unlocked, then a brief re-acquire
+    /// publishes the claim — concurrent clients of one shard overlap
+    /// their device writes (see the module docs).
     ///
     /// Overwrites are fully supported, across routes: the newest copy of
     /// every sector is tracked in the ownership map, stale buffered
     /// copies are superseded, and a direct write over live buffered data
-    /// is absorbed into the SSD log (see the module docs).
+    /// is absorbed into the SSD log.
     pub fn submit(&self, sub: &SubRequest, payload: &[u8]) {
         let size = sub.size as i64;
         debug_assert_eq!(payload.len() as u64, sub.bytes());
-        let mut direct_dest: Option<u64> = None;
-        {
+
+        // ---- critical section 1: route + reserve + claim ----
+        let (lba, claimed) = {
             let mut core = self.core.lock().unwrap();
             // the engine is one burst per instance: the flusher exits for
             // good once a drain completes, so a later submit could buffer
@@ -203,63 +339,69 @@ impl Shard {
             let lba = core.files.lba(sub.parent.file, sub.local_offset);
             debug_assert!(lba <= i32::MAX as i64, "LBA exceeds detector i32 space");
             core.stats.bytes_in += payload.len() as u64;
-            // a sub-request larger than a region could never buffer:
-            // route it directly to HDD (safety valve)
-            let mut route = if !self.use_ssd || size > self.half_sectors {
-                Route::Hdd
-            } else {
-                core.route
-            };
-            // overwrite safety: a direct write overlapping a live
-            // buffered extent would race the flusher for the same HDD
-            // sectors. Absorb it into the SSD log instead — the claim
-            // below supersedes the stale copy and the flush order across
-            // regions keeps last-write-wins on the HDD.
-            if route == Route::Hdd && self.use_ssd && core.own.overlaps_ssd(lba, size) {
-                if size <= self.half_sectors {
-                    route = Route::Ssd;
-                    core.stats.rerouted_writes += 1;
+            let claimed = loop {
+                // (re)decide the route against the map as it is *now*:
+                // every wait below drops the lock, so other clients'
+                // claims, publishes, and flushes can shift the picture
+                // between passes — including the policy route itself
+                let mut route = if !self.use_ssd || size > self.half_sectors {
+                    // a sub-request larger than a region could never
+                    // buffer: route it directly to HDD (safety valve)
+                    Route::Hdd
                 } else {
-                    // valve-sized write over buffered data cannot be
-                    // absorbed: force the overlap out through the flusher
-                    // and only then go direct
-                    while core.own.overlaps_ssd(lba, size) {
-                        core.stats.blocked_waits += 1;
-                        // only the active region needs forcing — overlaps
-                        // held by a pending/flushing region drain anyway
-                        let active = core.pipeline.active_region();
-                        if core.own.overlaps_ssd_region(lba, size, active) {
+                    core.route
+                };
+                // overwrite safety: a direct write overlapping a live
+                // buffered extent would race the flusher for the same HDD
+                // sectors. Absorb it into the SSD log instead — the claim
+                // supersedes the stale copy and the flush order across
+                // regions keeps last-write-wins on the HDD.
+                let mut absorbed = false;
+                if route == Route::Hdd && self.use_ssd && core.own.overlaps_ssd(lba, size) {
+                    if size <= self.half_sectors {
+                        route = Route::Ssd;
+                        absorbed = true;
+                    } else {
+                        // valve-sized write over buffered data cannot be
+                        // absorbed: force the overlap out through the
+                        // flusher and retry. Only the active region needs
+                        // forcing — overlaps held by a pending/flushing
+                        // region drain on their own. The blocked_wait is
+                        // booked *after* this pass re-confirmed the
+                        // overlap, immediately before the wait it counts:
+                        // a cleared overlap re-enters the loop and claims
+                        // without inflating the stat.
+                        if core.own.overlaps_ssd_region(lba, size, core.pipeline.active_region()) {
                             core.pipeline.enqueue_residual_flush();
                         }
+                        core.stats.blocked_waits += 1;
                         self.work.notify_all();
-                        core = self.space.wait_timeout(core, self.flush_check).unwrap().0;
-                        if let Some(msg) = core.failed.clone() {
-                            drop(core); // release before panicking: no poisoning
-                            panic!("shard failed while blocked on a region: {msg}");
-                        }
-                        if core.shutdown {
-                            drop(core);
-                            panic!(
-                                "shard shut down with a blocked write still pending \
-                                 ({} bytes undelivered)",
-                                payload.len()
-                            );
-                        }
+                        core = self.wait_or_die(&self.space, core, payload.len());
+                        continue;
                     }
                 }
-            }
-            match route {
-                Route::Hdd => {
-                    debug_assert!(!core.own.overlaps_ssd(lba, size), "direct write over live buffer");
-                    core.stats.hdd_direct_bytes += payload.len() as u64;
-                    // counted under the core lock so the flusher's gate
-                    // sees the direct traffic the moment it is decided
-                    self.direct_inflight.fetch_add(1, Ordering::SeqCst);
-                    direct_dest = Some(lba as u64 * SECTOR_BYTES);
+                // a claim overlapping an *in-flight* direct write must
+                // wait for it to land: with both device writes unordered,
+                // the older HDD bytes could otherwise surface after this
+                // claim's copy was flushed over them
+                if core.own.direct_overlaps(lba, size) {
+                    core = self.wait_or_die(&self.published, core, payload.len());
+                    continue;
                 }
-                Route::Ssd => loop {
-                    let (region, ssd_offset, filled) =
-                        match core.pipeline.buffer(sub.parent.file, sub.local_offset as i64, size) {
+                match route {
+                    Route::Hdd => {
+                        core.stats.hdd_direct_bytes += payload.len() as u64;
+                        // counted inside the critical section that decided
+                        // the route, so the flusher's gate sees the direct
+                        // traffic the moment it exists
+                        self.direct_inflight.fetch_add(1, Ordering::Release);
+                        let ticket = core.own.claim_direct(lba, size);
+                        break Claimed::Direct { dest: lba as u64 * SECTOR_BYTES, ticket };
+                    }
+                    Route::Ssd => {
+                        let outcome =
+                            core.pipeline.buffer(sub.parent.file, sub.local_offset as i64, size);
+                        let (region, ssd_offset, filled) = match outcome {
                             BufferOutcome::Buffered { region, ssd_offset } => {
                                 (region, ssd_offset, false)
                             }
@@ -271,41 +413,28 @@ impl Shard {
                                 // empty" — closed-loop backpressure
                                 core.stats.blocked_waits += 1;
                                 self.work.notify_all();
-                                core = self.space.wait_timeout(core, self.flush_check).unwrap().0;
-                                if let Some(msg) = core.failed.clone() {
-                                    drop(core); // release before panicking: no poisoning
-                                    panic!("shard failed while blocked on a region: {msg}");
-                                }
-                                if core.shutdown {
-                                    // the caller was never acknowledged:
-                                    // vanishing silently here would turn a
-                                    // shutdown into data loss the client
-                                    // believes was written
-                                    drop(core);
-                                    panic!(
-                                        "shard shut down with a blocked write still pending \
-                                         ({} bytes undelivered)",
-                                        payload.len()
-                                    );
-                                }
+                                core = self.wait_or_die(&self.space, core, payload.len());
                                 continue;
                             }
                         };
-                    if let Err(e) = self.write_ssd(region, ssd_offset, payload) {
-                        self.fail_and_panic(core, format!("ssd backend write: {e}"));
+                        // reserve in the same lock hold as the slot: the
+                        // map never lags the pipeline, and the claim's
+                        // order is fixed here even though its bytes land
+                        // later
+                        let (stale, ticket) = core.own.reserve(lba, size, region, ssd_offset);
+                        core.pending_slots[region] += 1;
+                        core.stats.superseded_bytes += sectors_to_bytes(stale);
+                        core.stats.ssd_bytes_buffered += payload.len() as u64;
+                        if absorbed {
+                            core.stats.rerouted_writes += 1;
+                        }
+                        if filled {
+                            self.work.notify_all(); // a region is ready to flush
+                        }
+                        break Claimed::Slot { region, ssd_offset, ticket };
                     }
-                    // claim under the same core-lock hold as the append:
-                    // the flusher and readers resolve against a map that
-                    // never lags the log
-                    let stale = core.own.claim(lba, size, Tier::Ssd { region, ssd_offset });
-                    core.stats.superseded_bytes += sectors_to_bytes(stale);
-                    core.stats.ssd_bytes_buffered += payload.len() as u64;
-                    if filled {
-                        self.work.notify_all(); // a region is ready to flush
-                    }
-                    break;
-                },
-            }
+                }
+            };
             // server-side detection feeds on the post-striping disk address
             if let Some(stream) = core.grouper.push_parts(sub.parent.app, lba as i32, sub.size) {
                 let det = core.detector.detect(&stream.reqs);
@@ -315,38 +444,57 @@ impl Shard {
                 // a route change can unpause the traffic-aware flusher
                 self.work.notify_all();
             }
-        }
-        if let Some(dest) = direct_dest {
-            let wrote = self.hdd.lock().unwrap().write_at(dest, payload);
-            if self.direct_inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
-                // direct traffic ebbed: the traffic-aware gate may open
+            (lba, claimed)
+        };
+
+        // ---- device write, no lock held: this is where concurrent
+        // clients of one shard overlap their transfers ----
+        match claimed {
+            Claimed::Direct { dest, ticket } => {
+                let wrote = self.hdd.write_at(dest, payload);
+                // ---- critical section 2: publish ----
+                {
+                    let mut core = self.core.lock().unwrap();
+                    core.own.finish_direct(ticket);
+                    if let Err(e) = wrote {
+                        self.fail_and_panic(core, format!("hdd backend write: {e}"));
+                    }
+                }
+                self.published.notify_all();
+                if self.direct_inflight.fetch_sub(1, Ordering::Release) == 1 {
+                    // direct traffic ebbed: the traffic-aware gate may open
+                    self.work.notify_all();
+                }
+            }
+            Claimed::Slot { region, ssd_offset, ticket } => {
+                let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
+                let wrote = self.ssd.write_at(base + ssd_offset as u64 * SECTOR_BYTES, payload);
+                // ---- critical section 2: publish ----
+                {
+                    let mut core = self.core.lock().unwrap();
+                    core.pending_slots[region] -= 1;
+                    if let Err(e) = wrote {
+                        self.fail_and_panic(core, format!("ssd backend write: {e}"));
+                    }
+                    core.own.publish(ticket, lba, size);
+                }
+                // readers waiting on this range, writers waiting out an
+                // overlap, and a flusher waiting for the region's
+                // reserved slots all key off publishes
+                self.published.notify_all();
                 self.work.notify_all();
             }
-            if let Err(e) = wrote {
-                // no lock is held here, so the panic poisons nothing
-                self.fail(format!("hdd backend write: {e}"));
-                panic!("shard hdd write failed: {e}");
-            }
         }
-    }
-
-    /// Append `payload` into the SSD log at the pipeline-assigned slot.
-    /// Called with the core lock held (core → device order), which is what
-    /// guarantees the flusher's `drain_flushing` only ever sees regions
-    /// whose bytes are fully on the backend.
-    fn write_ssd(&self, region: usize, ssd_offset: i64, payload: &[u8]) -> std::io::Result<()> {
-        let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
-        let mut ssd = self.ssd.lock().unwrap();
-        ssd.write_at(base + ssd_offset as u64 * SECTOR_BYTES, payload)
     }
 
     /// Record a failure, release the core lock, wake all waiters, and
     /// panic in the calling thread — without poisoning any mutex.
-    fn fail_and_panic(&self, mut core: std::sync::MutexGuard<'_, ShardCore>, msg: String) -> ! {
+    fn fail_and_panic(&self, mut core: MutexGuard<'_, ShardCore>, msg: String) -> ! {
         core.failed.get_or_insert(msg.clone());
         drop(core);
         self.space.notify_all();
         self.work.notify_all();
+        self.published.notify_all();
         panic!("shard failed: {msg}");
     }
 
@@ -356,20 +504,22 @@ impl Shard {
     /// drain.
     pub fn read_hdd(&self, file: u32, local_offset: i32, buf: &mut [u8]) {
         let lba = self.core.lock().unwrap().files.lba(file, local_offset);
-        let read = self.hdd.lock().unwrap().read_at(lba as u64 * SECTOR_BYTES, buf);
-        // result is inspected after the guard dropped: no poisoning
-        read.expect("hdd backend read");
+        // no lock across the device read; result inspected after
+        self.hdd.read_at(lba as u64 * SECTOR_BYTES, buf).expect("hdd backend read");
     }
 
     /// Read `buf.len()` bytes for `(file, local_offset)` from wherever
     /// the newest copy lives — SSD log or HDD — resolved per segment
     /// through the ownership map. Works mid-burst, before any drain.
     ///
-    /// The core lock is held across the device reads: a region flush
-    /// completing concurrently would otherwise recycle the very SSD slots
-    /// being read (the flusher needs the core lock to complete, so it
-    /// cannot). Reads therefore serialize against ingest; the live read
-    /// path favors correctness over read concurrency for now.
+    /// The range is resolved (and its regions pinned) under the core
+    /// lock, but the device reads happen with **no lock held**: readers
+    /// never serialize against ingest or the flusher. The pins keep a
+    /// concurrently-completing flush from recycling the very log slots
+    /// being read (`flusher_loop` waits them out before `flush_done`).
+    /// If part of the range is claimed by a write whose device bytes are
+    /// still in flight, the read first waits for that claim to publish —
+    /// a pending claim has no readable copy anywhere.
     pub fn read(&self, file: u32, local_offset: i32, buf: &mut [u8]) {
         let sector = SECTOR_BYTES as usize;
         debug_assert_eq!(buf.len() % sector, 0, "reads are sector-aligned");
@@ -377,24 +527,65 @@ impl Shard {
         if sectors == 0 {
             return;
         }
-        let mut core = self.core.lock().unwrap();
-        let lba = core.files.lba(file, local_offset);
-        for (seg_lba, seg_size, tier) in core.own.resolve(lba, sectors) {
+        let (lba, segs, pinned) = {
+            let mut core = self.core.lock().unwrap();
+            let lba = core.files.lba(file, local_offset);
+            loop {
+                if let Some(msg) = core.failed.clone() {
+                    drop(core); // release before panicking: no poisoning
+                    panic!("shard read failed: {msg}");
+                }
+                if core.shutdown {
+                    drop(core);
+                    panic!("shard shut down while a read waited on an in-flight write");
+                }
+                if !core.own.pending_overlaps(lba, sectors) {
+                    break;
+                }
+                core = self.published.wait_timeout(core, self.flush_check).unwrap().0;
+            }
+            let segs = core.own.resolve(lba, sectors);
+            let mut pinned = [false; REGIONS];
+            for (_, _, tier) in &segs {
+                if let Tier::Ssd { region, .. } = tier {
+                    pinned[*region] = true;
+                }
+            }
+            for (r, p) in pinned.iter().enumerate() {
+                if *p {
+                    // pinned while still holding the core lock: the
+                    // flusher checks pins under the same lock after
+                    // emptying the region's map entries, so a pin taken
+                    // here is never missed
+                    self.read_pins[r].fetch_add(1, Ordering::Release);
+                }
+            }
+            (lba, segs, pinned)
+        };
+        let mut result = Ok(());
+        for (seg_lba, seg_size, tier) in segs {
             let dst = (seg_lba - lba) as usize * sector;
             let len = seg_size as usize * sector;
             let slice = &mut buf[dst..dst + len];
-            let read = match tier {
-                Tier::Hdd => self.hdd.lock().unwrap().read_at(seg_lba as u64 * SECTOR_BYTES, slice),
+            result = match tier {
+                Tier::Hdd => self.hdd.read_at(seg_lba as u64 * SECTOR_BYTES, slice),
                 Tier::Ssd { region, ssd_offset } => {
                     let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
-                    self.ssd.lock().unwrap().read_at(base + ssd_offset as u64 * SECTOR_BYTES, slice)
+                    self.ssd.read_at(base + ssd_offset as u64 * SECTOR_BYTES, slice)
                 }
             };
-            if let Err(e) = read {
-                drop(core); // release before panicking: no poisoning
-                panic!("shard read failed: {e}");
+            if result.is_err() {
+                break;
             }
         }
+        // unpin before surfacing any error: a flusher waiting out our
+        // pins must not hang on a reader that is about to panic
+        for (r, p) in pinned.iter().enumerate() {
+            if *p && self.read_pins[r].fetch_sub(1, Ordering::Release) == 1 {
+                self.work.notify_all();
+            }
+        }
+        result.expect("shard backend read");
     }
 
     pub fn stats(&self) -> ShardStats {
@@ -405,10 +596,10 @@ impl Shard {
     /// the shard is drained clean.
     pub(crate) fn flusher_loop(&self) {
         // reused bounded copy buffer: one allocation for the thread's life
-        let mut chunk = vec![0u8; 1 << 20];
+        let mut chunk = vec![0u8; CHUNK_BYTES];
         loop {
             // ---- acquire the next region to flush (or exit) ----
-            let (region, resolved): (usize, Vec<(u64, u64, usize)>) = {
+            let (region, runs) = {
                 let mut core = self.core.lock().unwrap();
                 let region = loop {
                     if core.shutdown || core.failed.is_some() {
@@ -429,6 +620,17 @@ impl Shard {
                     }
                     core = self.work.wait_timeout(core, self.flush_check).unwrap().0;
                 };
+                // reserve→publish: wait for the region's in-flight
+                // reserved slots to publish before snapshotting. The
+                // region stopped accepting appends when it was queued, so
+                // the count only falls — and the map state we snapshot
+                // below is final for this region.
+                while core.pending_slots[region] > 0 {
+                    if core.shutdown || core.failed.is_some() {
+                        return;
+                    }
+                    core = self.published.wait_timeout(core, self.flush_check).unwrap().0;
+                }
                 let region_base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
                 // reset the region's append metadata; what actually gets
                 // copied comes from the ownership map: its extents for
@@ -438,51 +640,42 @@ impl Shard {
                 // suppression by construction
                 core.pipeline.reset_flushing();
                 core.stats.flushes += 1;
-                let resolved: Vec<(u64, u64, usize)> = core
-                    .own
-                    .region_extents(region)
-                    .into_iter()
-                    .map(|(lba, size, slot)| {
-                        (
-                            region_base + slot as u64 * SECTOR_BYTES,
-                            lba as u64 * SECTOR_BYTES,
-                            (size as u64 * SECTOR_BYTES) as usize,
-                        )
-                    })
-                    .collect();
-                (region, resolved)
+                let runs = copy_runs(core.own.region_extents(region), region_base, chunk.len());
+                core.stats.flush_runs += runs.len() as u64;
+                (region, runs)
             };
 
-            // ---- gate + copy, without the core lock ----
-            for (ssd_byte, hdd_byte, len) in resolved {
-                if !self.gate_extent() {
+            // ---- gate + copy, no lock held: one gate check and one
+            // sequential HDD write per coalesced run, gathered from the
+            // log with cheap SSD reads ----
+            for run in runs {
+                if !self.gate_run() {
                     return; // shutdown while paused
                 }
-                let mut done = 0usize;
-                while done < len {
-                    let take = chunk.len().min(len - done);
-                    let read =
-                        self.ssd.lock().unwrap().read_at(ssd_byte + done as u64, &mut chunk[..take]);
-                    if let Err(e) = read {
-                        self.fail(format!("flusher: ssd backend read: {e}"));
-                        return;
+                let mut pos = 0usize;
+                let mut read = Ok(());
+                for &(ssd_byte, len) in &run.segs {
+                    read = self.ssd.read_at(ssd_byte, &mut chunk[pos..pos + len]);
+                    if read.is_err() {
+                        break;
                     }
-                    let write =
-                        self.hdd.lock().unwrap().write_at(hdd_byte + done as u64, &chunk[..take]);
-                    if let Err(e) = write {
-                        self.fail(format!("flusher: hdd backend write: {e}"));
-                        return;
-                    }
-                    done += take;
+                    pos += len;
+                }
+                if let Err(e) = read {
+                    self.fail(format!("flusher: ssd backend read: {e}"));
+                    return;
+                }
+                if let Err(e) = self.hdd.write_at(run.hdd_byte, &chunk[..run.len]) {
+                    self.fail(format!("flusher: hdd backend write: {e}"));
+                    return;
                 }
             }
 
-            // ---- complete: free the region, settle its surviving
-            // extents (their newest copy is the HDD one now), wake
-            // blocked ingest ----
+            // ---- complete: settle the surviving extents (their newest
+            // copy is the HDD one now), wait out readers still pinning
+            // the region, free it, wake blocked ingest ----
             {
                 let mut core = self.core.lock().unwrap();
-                core.pipeline.flush_done();
                 // account flushed bytes from the map at completion, not
                 // from what the copy loop moved: an extent superseded
                 // *mid-copy* was already booked into superseded_bytes by
@@ -491,14 +684,25 @@ impl Shard {
                 // must stay exact
                 let settled = core.own.release_region(region);
                 core.stats.flushed_bytes += sectors_to_bytes(settled);
+                // with the map holding nothing for this region, no *new*
+                // reader can resolve into its log; wait out the readers
+                // that already did before the slots are recycled
+                while self.read_pins[region].load(Ordering::Acquire) > 0 {
+                    if core.shutdown || core.failed.is_some() {
+                        return;
+                    }
+                    core = self.work.wait_timeout(core, self.flush_check).unwrap().0;
+                }
+                core.pipeline.flush_done();
             }
             self.space.notify_all();
         }
     }
 
-    /// Traffic-aware pause gate, re-evaluated per flush extent like the
-    /// DES flusher. Returns false only on shutdown or shard failure.
-    fn gate_extent(&self) -> bool {
+    /// Traffic-aware pause gate, re-evaluated per coalesced copy run like
+    /// the DES flusher re-evaluates per extent. Returns false only on
+    /// shutdown or shard failure.
+    fn gate_run(&self) -> bool {
         let mut core = self.core.lock().unwrap();
         let mut paused_at: Option<Instant> = None;
         loop {
@@ -506,7 +710,7 @@ impl Shard {
                 return false;
             }
             let pct = core.policy.current_percentage().unwrap_or(1.0);
-            let direct = self.direct_inflight.load(Ordering::SeqCst) > 0;
+            let direct = self.direct_inflight.load(Ordering::Acquire) > 0;
             if self.strategy.allow_flush(pct, direct, core.drained) {
                 break;
             }
@@ -545,6 +749,7 @@ impl Shard {
         self.core.lock().unwrap().failed.get_or_insert(msg);
         self.space.notify_all();
         self.work.notify_all();
+        self.published.notify_all();
     }
 
     /// Block until every buffered byte has reached the HDD backend.
@@ -563,16 +768,15 @@ impl Shard {
 
     /// Flush both backends to durable storage.
     pub(crate) fn sync(&self) {
-        let ssd = self.ssd.lock().unwrap().sync();
-        ssd.expect("ssd sync");
-        let hdd = self.hdd.lock().unwrap().sync();
-        hdd.expect("hdd sync");
+        self.ssd.sync().expect("ssd sync");
+        self.hdd.sync().expect("hdd sync");
     }
 
     pub(crate) fn request_shutdown(&self) {
         self.core.lock().unwrap().shutdown = true;
         self.work.notify_all();
         self.space.notify_all();
+        self.published.notify_all();
     }
 }
 
@@ -725,6 +929,149 @@ mod tests {
         assert_eq!(
             end.flushed_bytes + end.superseded_bytes,
             end.ssd_bytes_buffered,
+            "conservation: buffered == flushed + superseded"
+        );
+    }
+
+    /// [`MemBackend`] wrapper recording the high-water mark of
+    /// concurrently in-flight `write_at` calls — a scheduler-independent
+    /// proof that device writes overlap (no wall-clock assertions).
+    struct ConcurrencyProbe {
+        inner: MemBackend,
+        in_flight: AtomicU64,
+        high_water: Arc<AtomicU64>,
+    }
+
+    impl Backend for ConcurrencyProbe {
+        fn write_at(&self, offset: u64, data: &[u8]) -> std::io::Result<()> {
+            let now = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            self.high_water.fetch_max(now, Ordering::SeqCst);
+            let result = self.inner.write_at(offset, data);
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            result
+        }
+
+        fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+            self.inner.read_at(offset, buf)
+        }
+
+        fn bytes_written(&self) -> u64 {
+            self.inner.bytes_written()
+        }
+
+        fn sync(&self) -> std::io::Result<()> {
+            self.inner.sync()
+        }
+
+        fn kind(&self) -> &'static str {
+            "probe"
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_overlap_their_device_writes_on_one_shard() {
+        // the tentpole property: device I/O happens outside the core
+        // lock, so concurrent clients of one shard overlap their device
+        // writes. Proven by a concurrency high-water mark on the SSD
+        // backend, not wall-clock timing: with a 10 ms synthetic service
+        // time, writes from 8 threads dwell in `write_at` long enough
+        // that a lock-serialized implementation would record a high
+        // water of exactly 1, while the reserve→publish path overlaps
+        // them (≥2; in practice near 8).
+        let c = cfg(SystemKind::OrangeFsBB, 1 << 16);
+        let high_water = Arc::new(AtomicU64::new(0));
+        let probe = ConcurrencyProbe {
+            inner: MemBackend::new(SyntheticLatency { per_op_us: 10_000, us_per_mib: 0 }),
+            in_flight: AtomicU64::new(0),
+            high_water: Arc::clone(&high_water),
+        };
+        let shard = Arc::new(Shard::new(
+            &c,
+            Box::new(probe),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+        ));
+        std::thread::scope(|s| {
+            for t in 0..8u32 {
+                let shard = Arc::clone(&shard);
+                s.spawn(move || {
+                    let off = t as i32 * 64;
+                    shard.submit(&sub(1, off, 64), &gen_payload(1, off, 64, 1));
+                });
+            }
+        });
+        assert!(
+            high_water.load(Ordering::SeqCst) >= 2,
+            "device writes must overlap; a serialized shard records a high water of 1"
+        );
+        // all eight claims published and readable
+        let s_bytes = SECTOR_BYTES as usize;
+        let mut got = vec![0u8; 8 * 64 * s_bytes];
+        shard.read(1, 0, &mut got);
+        let mut expect = vec![0u8; 8 * 64 * s_bytes];
+        payload::fill_gen(1, 0, 1, &mut expect);
+        assert_eq!(got, expect);
+        assert_eq!(shard.stats().ssd_bytes_buffered, got.len() as u64);
+    }
+
+    #[test]
+    fn copy_runs_coalesce_lba_adjacent_extents_with_scattered_slots() {
+        // three LBA-adjacent extents whose log slots are out of order:
+        // one HDD write, three gathered SSD reads
+        let sb = SECTOR_BYTES;
+        let extents = vec![(100, 10, 20), (110, 10, 0), (120, 10, 40)];
+        let runs = copy_runs(extents, 0, CHUNK_BYTES);
+        assert_eq!(runs.len(), 1, "adjacent LBAs coalesce into one run");
+        assert_eq!(runs[0].hdd_byte, 100 * sb);
+        assert_eq!(runs[0].len, 30 * sb as usize);
+        assert_eq!(
+            runs[0].segs,
+            vec![(20 * sb, 10 * sb as usize), (0, 10 * sb as usize), (40 * sb, 10 * sb as usize)]
+        );
+        // a gap breaks the run
+        let runs = copy_runs(vec![(0, 4, 0), (8, 4, 4)], 0, CHUNK_BYTES);
+        assert_eq!(runs.len(), 2);
+        // an extent larger than the chunk splits at chunk granularity
+        let big = (CHUNK_BYTES / sb as usize) as i64 + 7;
+        let runs = copy_runs(vec![(0, big, 0)], 0, CHUNK_BYTES);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].len, CHUNK_BYTES);
+        assert_eq!(runs[1].len, 7 * sb as usize);
+        assert_eq!(runs[1].hdd_byte, CHUNK_BYTES as u64);
+    }
+
+    #[test]
+    fn flusher_coalescing_survives_fragmentation_byte_exactly() {
+        // buffer a contiguous range, then punch rewrites into it so the
+        // region's extents fragment; the drain must still produce the
+        // newest merged contents, with fewer copy runs than extents
+        let shard = mem_shard(SystemKind::OrangeFsBB, 8192);
+        shard.submit(&sub(1, 0, 256), &gen_payload(1, 0, 256, 1));
+        for k in 0..8 {
+            let off = k * 32 + 8;
+            shard.submit(&sub(1, off, 8), &gen_payload(1, off, 8, 2));
+        }
+        let s = SECTOR_BYTES as usize;
+        let mut expect = vec![0u8; 256 * s];
+        payload::fill_gen(1, 0, 1, &mut expect);
+        for k in 0..8usize {
+            let off = k * 32 + 8;
+            let mut v2 = vec![0u8; 8 * s];
+            payload::fill_gen(1, off as i64, 2, &mut v2);
+            expect[off * s..(off + 8) * s].copy_from_slice(&v2);
+        }
+        shard.begin_drain();
+        shard.flusher_loop();
+        let mut hdd = vec![0u8; 256 * s];
+        shard.read_hdd(1, 0, &mut hdd);
+        assert_eq!(hdd, expect, "fragmented flush must merge to the newest view");
+        let stats = shard.stats();
+        // 256 sectors of LBA-contiguous newest data: the whole region
+        // flushes as ONE coalesced run even though the map holds 17
+        // fragments (8 rewrites split the original into 9 + 8 pieces)
+        assert_eq!(stats.flush_runs, 1, "adjacent extents coalesce into one HDD write");
+        assert_eq!(
+            stats.flushed_bytes + stats.superseded_bytes,
+            stats.ssd_bytes_buffered,
             "conservation: buffered == flushed + superseded"
         );
     }

@@ -1,0 +1,251 @@
+//! Zero-dependency concurrency stress test for the live engine's
+//! reserve→publish ingest, pinned-extent reads, and lock-free-device
+//! flusher: N writer threads + M reader threads hammer **one shard**
+//! (`shards = 1`, so every claim, pin, and flush contends on the same
+//! core lock) with seeded-RNG overwrites while the flusher cycles
+//! regions underneath them.
+//!
+//! Invariants checked:
+//!
+//! * **mid-burst sector validity** — every sector a reader observes is
+//!   either all-zero (never written) or byte-exactly one of the
+//!   generations its owning writer ever produced; sector-granular
+//!   tearing, slot recycling under a pinned reader, or a resurrected
+//!   stale copy would all fail this;
+//! * **final byte-exactness** — after the drain, every slot holds its
+//!   *last* written generation (per-writer program order), proving the
+//!   ownership map's claim order survived concurrent publishes, valve
+//!   writes, and flushes;
+//! * **conservation** — `ssd_bytes_buffered == flushed_bytes +
+//!   superseded_bytes` once drained, plus exact `bytes_in` accounting.
+//!
+//! Writers alternate random and sequential slot sweeps (so SSDUP+
+//! detection flips routes mid-run, exercising direct writes and the
+//! absorb path), and each issues one region-oversized valve write over
+//! its live buffered slots — the hardest ordering case the shard
+//! supports.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ssdup::live::{payload, LiveConfig, LiveEngine, SyntheticLatency};
+use ssdup::server::SystemKind;
+use ssdup::types::{Request, SECTOR_BYTES};
+use ssdup::util::prng::Prng;
+
+/// writer threads (each owns one file, so writer ranges are disjoint)
+const WRITERS: usize = 4;
+/// reader threads
+const READERS: usize = 3;
+/// request-sized slots per writer; rewrites hit the same slots repeatedly
+const SLOTS: usize = 24;
+/// sectors per slot write
+const SLOT_SECTORS: i32 = 8;
+/// slot writes per writer
+const WRITES: usize = 192;
+/// the valve write: larger than one pipeline region (half of the 1 MiB
+/// SSD budget = 1024 sectors), over the writer's live buffered slots
+const VALVE_SECTORS: i32 = 1040;
+
+fn file_of(writer: usize) -> u32 {
+    writer as u32 + 1
+}
+
+fn slot_offset(slot: usize) -> i32 {
+    slot as i32 * SLOT_SECTORS
+}
+
+/// Does `sector_buf` hold a content this writer could legitimately have
+/// produced for `(file, sector)` at any point — zero (never written) or
+/// any generation the writer ever wrote?
+fn sector_is_valid(writer: usize, file: u32, sector: i64, sector_buf: &[u8]) -> bool {
+    if sector_buf.iter().all(|&b| b == 0) {
+        return true;
+    }
+    (0..=WRITES as u32)
+        .any(|i| payload::sector_matches(file, sector, payload::write_gen(writer as u32, i), sector_buf))
+}
+
+#[test]
+fn concurrent_writers_readers_and_flusher_preserve_every_byte() {
+    // a liveness bug would otherwise hang CI forever: abort loudly instead
+    let done = Arc::new(AtomicBool::new(false));
+    {
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            for _ in 0..180 {
+                std::thread::sleep(Duration::from_secs(1));
+                if done.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            eprintln!("stress_concurrency: deadlock suspected (180 s timeout), aborting");
+            std::process::abort();
+        });
+    }
+
+    let mut cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(1).with_ssd_mib(1);
+    cfg.stream_len = 16; // short detection windows: routes flip mid-run
+    cfg.flush_check = Duration::from_millis(2);
+    let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+
+    let stop = AtomicBool::new(false);
+    let sector = SECTOR_BYTES as usize;
+
+    // last generation written per (writer, slot), plus the valve gen
+    let mut last_gen: Vec<Vec<Option<u64>>> = Vec::new();
+    let mut valve_gen: Vec<Option<u64>> = Vec::new();
+
+    std::thread::scope(|s| {
+        let engine = &engine;
+        let stop = &stop;
+
+        let writer_handles: Vec<_> = (0..WRITERS)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut rng = Prng::new(0xC0FFEE + w as u64);
+                    let mut last: Vec<Option<u64>> = vec![None; SLOTS];
+                    let mut valve: Option<u64> = None;
+                    let mut buf = vec![0u8; SLOT_SECTORS as usize * sector];
+                    for i in 0..WRITES {
+                        // alternate randomly-ordered and sequential slot
+                        // sweeps in blocks of 16, so the detector sees
+                        // both random and contiguous streams
+                        let slot = if (i / 16) % 2 == 0 {
+                            rng.gen_range(SLOTS as u64) as usize
+                        } else {
+                            i % SLOTS
+                        };
+                        let gen = payload::write_gen(w as u32, i as u32);
+                        let off = slot_offset(slot);
+                        payload::fill_gen(file_of(w), off as i64, gen, &mut buf);
+                        let req = Request {
+                            app: w as u16,
+                            proc_id: w as u32,
+                            file: file_of(w),
+                            offset: off,
+                            size: SLOT_SECTORS,
+                        };
+                        engine.submit(req, &buf);
+                        last[slot] = Some(gen);
+                        // mid-run, once: a valve write larger than a
+                        // region, straight over the live buffered slots —
+                        // it must force the overlap out through the
+                        // flusher and then land direct, never resurrecting
+                        // anything
+                        if i == WRITES / 2 {
+                            let gen = payload::write_gen(w as u32, WRITES as u32);
+                            let mut big = vec![0u8; VALVE_SECTORS as usize * sector];
+                            payload::fill_gen(file_of(w), 0, gen, &mut big);
+                            let req = Request {
+                                app: w as u16,
+                                proc_id: w as u32,
+                                file: file_of(w),
+                                offset: 0,
+                                size: VALVE_SECTORS,
+                            };
+                            engine.submit(req, &big);
+                            valve = Some(gen);
+                            // the valve covered every slot: it is now the
+                            // newest copy everywhere until rewritten
+                            last.fill(Some(gen));
+                        }
+                    }
+                    (last, valve)
+                })
+            })
+            .collect();
+
+        let reader_handles: Vec<_> = (0..READERS)
+            .map(|r| {
+                s.spawn(move || {
+                    let mut rng = Prng::new(0xBEEF + r as u64);
+                    let mut checked = 0u64;
+                    let mut buf = vec![0u8; 4 * SLOT_SECTORS as usize * sector];
+                    while !stop.load(Ordering::Relaxed) {
+                        let w = rng.gen_range(WRITERS as u64) as usize;
+                        // read 1–4 adjacent slots (multi-extent resolves),
+                        // or occasionally a range beyond the slot area
+                        // (valve-written or never-written territory)
+                        let (off, sectors) = if rng.chance(0.15) {
+                            (SLOTS as i32 * SLOT_SECTORS, 4 * SLOT_SECTORS)
+                        } else {
+                            let slots = 1 + rng.gen_range(4) as usize;
+                            let first = rng.gen_range((SLOTS - slots + 1) as u64) as usize;
+                            (slot_offset(first), slots as i32 * SLOT_SECTORS)
+                        };
+                        let len = sectors as usize * sector;
+                        buf[..len].fill(0xA5);
+                        engine.read(file_of(w), off, &mut buf[..len]);
+                        for k in 0..sectors as i64 {
+                            let sec = &buf[k as usize * sector..(k as usize + 1) * sector];
+                            assert!(
+                                sector_is_valid(w, file_of(w), off as i64 + k, sec),
+                                "reader {r}: writer {w} sector {} holds bytes no \
+                                 generation ever produced (torn read, recycled slot, \
+                                 or stale copy)",
+                                off as i64 + k,
+                            );
+                        }
+                        checked += sectors as u64;
+                    }
+                    checked
+                })
+            })
+            .collect();
+
+        for h in writer_handles {
+            let (last, valve) = h.join().expect("writer thread panicked");
+            last_gen.push(last);
+            valve_gen.push(valve);
+        }
+        // drain while the readers are still hammering: flush completions
+        // must keep waiting out reader pins to the very end
+        engine.drain();
+        stop.store(true, Ordering::Relaxed);
+        let mut checked = 0u64;
+        for h in reader_handles {
+            checked += h.join().expect("reader thread panicked");
+        }
+        assert!(checked > 0, "readers must have observed the burst");
+    });
+
+    // ---- final byte-exactness: every slot holds its last generation ----
+    let mut buf = vec![0u8; SLOT_SECTORS as usize * sector];
+    let mut expect = vec![0u8; SLOT_SECTORS as usize * sector];
+    for w in 0..WRITERS {
+        assert!(valve_gen[w].is_some(), "writer {w} issued its valve write");
+        for slot in 0..SLOTS {
+            let gen = last_gen[w][slot].expect("valve write covered every slot");
+            engine.read(file_of(w), slot_offset(slot), &mut buf);
+            payload::fill_gen(file_of(w), slot_offset(slot) as i64, gen, &mut expect);
+            assert_eq!(
+                buf, expect,
+                "writer {w} slot {slot}: post-drain contents must be generation {gen}"
+            );
+        }
+        // beyond the slots, the valve write's tail is the newest copy
+        let tail_off = SLOTS as i32 * SLOT_SECTORS;
+        let tail_sectors = VALVE_SECTORS - tail_off;
+        let mut tail = vec![0u8; tail_sectors as usize * sector];
+        let mut tail_expect = vec![0u8; tail_sectors as usize * sector];
+        engine.read(file_of(w), tail_off, &mut tail);
+        payload::fill_gen(file_of(w), tail_off as i64, valve_gen[w].unwrap(), &mut tail_expect);
+        assert_eq!(tail, tail_expect, "writer {w}: valve tail survives byte-exactly");
+    }
+
+    // ---- conservation ----
+    let stats = engine.shutdown();
+    let st = &stats[0];
+    let submitted =
+        WRITERS as u64 * (WRITES as u64 * SLOT_SECTORS as u64 + VALVE_SECTORS as u64) * SECTOR_BYTES;
+    assert_eq!(st.bytes_in, submitted, "every submitted byte was accounted");
+    assert_eq!(
+        st.ssd_bytes_buffered,
+        st.flushed_bytes + st.superseded_bytes,
+        "conservation after drain: buffered == flushed + superseded"
+    );
+    assert!(st.flushes > 1, "the flusher cycled regions under the burst");
+    done.store(true, Ordering::Relaxed);
+}
