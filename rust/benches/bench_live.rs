@@ -14,7 +14,9 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
-use ssdup::live::{self, payload, LiveConfig, LiveEngine, SyntheticLatency};
+use std::sync::Arc;
+
+use ssdup::live::{self, payload, Backend, LiveConfig, LiveEngine, MemBackend, MemStore, SyntheticLatency};
 use ssdup::server::metrics::LatencyHistogram;
 use ssdup::server::SystemKind;
 use ssdup::types::{Request, DEFAULT_REQ_SECTORS, SECTOR_BYTES};
@@ -248,6 +250,102 @@ fn main() {
             Json::obj(vec![
                 ("mbps", Json::Num(last)),
                 ("superseded_mib", Json::Num((skipped / (1 << 20)) as f64)),
+            ]),
+        );
+    }
+
+    section("recovery: dirty log replay vs clean reopen (crash-consistent log)");
+    if Bench::should_run("live/recovery") {
+        // buffer a random burst into snapshot-mode mem stores WITHOUT
+        // draining, freeze (the crash), and time LiveEngine::open
+        // replaying every framed record; then shut the recovered engine
+        // down cleanly and time the superblock short-circuit reopen
+        let mib: i64 = if fast { 8 } else { 32 };
+        let sectors = mib * 2048;
+        let wrk = ior_spanned(
+            0,
+            IorPattern::SegmentedRandom,
+            4,
+            sectors,
+            sectors * 8,
+            DEFAULT_REQ_SECTORS,
+            31,
+        );
+        let shards = 2usize;
+        // the SSD budget holds the whole burst: every record is still
+        // buffered (unflushed) at the crash, so all of them replay
+        let cfg = LiveConfig::new(SystemKind::OrangeFsBB)
+            .with_shards(shards)
+            .with_ssd_mib(mib as u64 * 2);
+        let stores: Vec<(Arc<MemStore>, Arc<MemStore>)> =
+            (0..shards).map(|_| (MemStore::new(true), MemStore::new(true))).collect();
+        let engine = {
+            let stores = stores.clone();
+            LiveEngine::with_backends(&cfg, move |i| {
+                (
+                    Box::new(MemBackend::over(Arc::clone(&stores[i].0), SyntheticLatency::ZERO))
+                        as Box<dyn Backend>,
+                    Box::new(MemBackend::over(Arc::clone(&stores[i].1), SyntheticLatency::ZERO))
+                        as Box<dyn Backend>,
+                )
+            })
+        };
+        let mut buf: Vec<u8> = Vec::new();
+        let mut ingested = 0u64;
+        for proc in &wrk.processes {
+            for req in &proc.reqs {
+                buf.resize(req.bytes() as usize, 0);
+                payload::fill(req.file, req.offset as i64, &mut buf);
+                engine.submit(*req, &buf);
+                ingested += req.bytes();
+            }
+        }
+        let frozen: Vec<(Arc<MemStore>, Arc<MemStore>)> =
+            stores.iter().map(|(s, h)| (s.freeze(), h.freeze())).collect();
+        drop(engine); // crash: no drain, no clean superblock
+
+        let reopen = |pairs: Vec<(Arc<MemStore>, Arc<MemStore>)>| {
+            LiveEngine::open(&cfg, move |i| {
+                (
+                    Box::new(MemBackend::over(Arc::clone(&pairs[i].0), SyntheticLatency::ZERO))
+                        as Box<dyn Backend>,
+                    Box::new(MemBackend::over(Arc::clone(&pairs[i].1), SyntheticLatency::ZERO))
+                        as Box<dyn Backend>,
+                )
+            })
+            .expect("reopen")
+        };
+        let t0 = Instant::now();
+        let (recovered, report) = reopen(frozen.clone());
+        let dirty_s = t0.elapsed().as_secs_f64();
+        let replayed = report.records_replayed();
+        let rate = replayed as f64 / dirty_s.max(1e-9);
+        // settle + clean superblocks on the frozen stores, then time the
+        // clean short-circuit reopen of the same image
+        recovered.shutdown();
+        let t1 = Instant::now();
+        let (clean_engine, clean_report) = reopen(frozen);
+        let clean_s = t1.elapsed().as_secs_f64();
+        clean_engine.shutdown();
+        println!(
+            "live/recovery: {} records ({} MiB) replayed in {:.1} ms ({:.0} records/s); \
+             clean reopen {:.2} ms (scanned {} sectors, clean={})",
+            replayed,
+            ingested / (1 << 20),
+            dirty_s * 1e3,
+            rate,
+            clean_s * 1e3,
+            clean_report.sectors_scanned(),
+            clean_report.clean(),
+        );
+        out.insert(
+            "recovery".into(),
+            Json::obj(vec![
+                ("records_replayed", Json::Num(replayed as f64)),
+                ("records_per_sec", Json::Num(rate)),
+                ("dirty_reopen_ms", Json::Num(dirty_s * 1e3)),
+                ("clean_reopen_ms", Json::Num(clean_s * 1e3)),
+                ("bytes_recovered_mib", Json::Num((report.bytes_recovered() / (1 << 20)) as f64)),
             ]),
         );
     }

@@ -3,16 +3,29 @@
 //! Random writes are appended at the tail of the buffered file region so
 //! the SSD only ever sees sequential writes (avoiding write amplification);
 //! the AVL tree records where each original offset landed.
+//!
+//! The allocator also tracks a **published watermark**: the high-water
+//! sector up to which appended records' device bytes are known to be on
+//! the backend (the live shard marks it at publish time). [`AppendLog::restore`]
+//! — the recovery path that re-seats the cursor after a crash scan —
+//! debug-asserts it never rewinds past that watermark: rewinding below a
+//! published record would let the allocator hand its slots out again and
+//! silently overwrite acknowledged data. The old `reset()` footgun (a
+//! blind rewind with no such guard) survives only as the region-recycle
+//! path, where the flusher has already settled every published byte.
 
 /// Monotone append cursor over a region's sector space.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AppendLog {
     cursor: i64,
+    /// sectors `[0, published)` belong to records whose device bytes have
+    /// landed on the backend; the cursor must never rewind below this
+    published: i64,
 }
 
 impl AppendLog {
     pub fn new() -> Self {
-        Self { cursor: 0 }
+        Self { cursor: 0, published: 0 }
     }
 
     /// Allocate `sectors` at the tail; returns the SSD-relative offset.
@@ -28,8 +41,40 @@ impl AppendLog {
         self.cursor
     }
 
+    /// Record that every sector below `upto` now has its device bytes on
+    /// the backend. Monotone; never exceeds the cursor (a record cannot
+    /// publish slots that were never allocated).
+    pub fn mark_published(&mut self, upto: i64) {
+        debug_assert!(upto <= self.cursor, "published past the append cursor");
+        if upto > self.published {
+            self.published = upto;
+        }
+    }
+
+    /// Published high-water mark, in sectors.
+    pub fn published(&self) -> i64 {
+        self.published
+    }
+
+    /// Re-seat the cursor after a crash-recovery scan: `cursor` is the
+    /// end of the last surviving record. Recovery must never rewind past
+    /// records already published — that would recycle live slots.
+    pub fn restore(&mut self, cursor: i64) {
+        debug_assert!(cursor >= 0);
+        debug_assert!(
+            cursor >= self.published,
+            "restore({cursor}) rewinds past published records (published {})",
+            self.published
+        );
+        self.cursor = cursor;
+    }
+
+    /// Full recycle (region flushed and settled): rewinds everything,
+    /// including the published watermark — the flusher owns this path and
+    /// calls it only after every published byte reached the HDD.
     pub fn reset(&mut self) {
         self.cursor = 0;
+        self.published = 0;
     }
 }
 
@@ -51,8 +96,50 @@ mod tests {
     fn reset_rewinds() {
         let mut log = AppendLog::new();
         log.append(100);
+        log.mark_published(100);
         log.reset();
         assert_eq!(log.used(), 0);
+        assert_eq!(log.published(), 0, "recycle rewinds the watermark too");
         assert_eq!(log.append(5), 0);
+    }
+
+    #[test]
+    fn publish_watermark_is_monotone_and_bounded() {
+        let mut log = AppendLog::new();
+        log.append(50);
+        log.append(30);
+        log.mark_published(50);
+        assert_eq!(log.published(), 50);
+        log.mark_published(20); // out-of-order publish completion
+        assert_eq!(log.published(), 50, "watermark never regresses");
+        log.mark_published(80);
+        assert_eq!(log.published(), 80);
+    }
+
+    #[test]
+    fn restore_seats_the_cursor_for_recovery() {
+        let mut log = AppendLog::new();
+        log.restore(640); // fresh log, cursor re-seated from a crash scan
+        assert_eq!(log.used(), 640);
+        assert_eq!(log.append(10), 640, "appends continue past the recovered tail");
+    }
+
+    #[test]
+    #[should_panic(expected = "rewinds past published records")]
+    #[cfg(debug_assertions)]
+    fn restore_below_published_records_is_a_bug() {
+        let mut log = AppendLog::new();
+        log.append(100);
+        log.mark_published(100);
+        log.restore(50); // would hand published slots out again
+    }
+
+    #[test]
+    #[should_panic(expected = "published past the append cursor")]
+    #[cfg(debug_assertions)]
+    fn publishing_unallocated_slots_is_a_bug() {
+        let mut log = AppendLog::new();
+        log.append(10);
+        log.mark_published(11);
     }
 }

@@ -206,6 +206,36 @@ impl Pipeline {
         self.regions[r].reset();
     }
 
+    /// Mark `region`'s log sectors below `upto` as published — the live
+    /// shard calls this when a reserved slot's device bytes land, so the
+    /// recovery path's rewind guard ([`crate::buffer::log::AppendLog::restore`])
+    /// has teeth.
+    pub fn mark_published(&mut self, region: usize, upto: i64) {
+        self.regions[region].mark_published(upto);
+    }
+
+    /// Crash recovery: re-seat both regions over their scanned log tails
+    /// and restore the flush topology. `active` accepts new appends;
+    /// `queue` (oldest first, by record sequence) goes to the flusher —
+    /// recovery must preserve fill-order flushing, because the replay
+    /// watermarks assume an older region never flushes after a newer one.
+    pub fn restore(&mut self, used: [i64; 2], active: usize, queue: &[usize]) {
+        assert!(active < 2);
+        assert!(
+            self.used_sectors() == 0 && self.flushing.is_none() && self.flush_pending.is_empty(),
+            "restore on a fresh pipeline only"
+        );
+        for (i, &u) in used.iter().enumerate() {
+            self.regions[i].restore(u);
+        }
+        self.active = active;
+        for &r in queue {
+            assert!(r < 2 && r != active, "queued region must be the inactive one");
+            assert!(!self.regions[r].is_empty(), "queued region must hold recovered data");
+            self.flush_pending.push(r);
+        }
+    }
+
     /// The flusher finished writing the drained extents to HDD.
     pub fn flush_done(&mut self) {
         assert!(self.flushing.is_some(), "flush_done without flush");
@@ -350,6 +380,26 @@ mod tests {
             o => panic!("unexpected {o:?}"),
         }
         p.flush_done();
+    }
+
+    #[test]
+    fn restore_reseats_regions_and_preserves_flush_order() {
+        let mut p = pl(2000);
+        // crash left region 1 full (older burst) and region 0 half full
+        // (it was active): region 1 must reach the flusher first, region 0
+        // keeps accepting appends after its recovered tail
+        p.restore([500, 1000], 0, &[1]);
+        assert_eq!(p.active_region(), 0);
+        assert_eq!(p.used_sectors(), 1500);
+        assert!(p.dirty());
+        assert_eq!(p.next_flush(), Some(1), "recovered queue order preserved");
+        match p.buffer(1, 0, 100) {
+            BufferOutcome::Buffered { region: 0, ssd_offset: 500 } => {}
+            o => panic!("appends must continue past the recovered tail, got {o:?}"),
+        }
+        p.drain_flushing();
+        p.flush_done();
+        assert_eq!(p.region(1).used(), 0, "recovered region flushes clean");
     }
 
     #[test]

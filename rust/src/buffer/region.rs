@@ -152,6 +152,28 @@ impl Region {
         self.log.reset();
         self.buffered_requests = 0;
     }
+
+    /// Mark the log sectors below `upto` as published (device bytes on
+    /// the backend) — see [`AppendLog::mark_published`].
+    pub fn mark_published(&mut self, upto: i64) {
+        self.log.mark_published(upto);
+    }
+
+    /// Crash recovery: re-seat the region over `used` sectors of
+    /// already-written log (the end of the last surviving record found by
+    /// the scan). The per-file metadata trees are *not* rebuilt — the
+    /// live flusher's copy set comes from the shard's ownership map, and
+    /// that map is rebuilt by replay.
+    pub fn restore(&mut self, used: i64) {
+        assert!(
+            (0..=self.capacity_sectors).contains(&used),
+            "restored region tail {used} outside capacity {}",
+            self.capacity_sectors
+        );
+        debug_assert!(self.used == 0 && self.trees.is_empty(), "restore on a fresh region");
+        self.used = used;
+        self.log.restore(used);
+    }
 }
 
 #[cfg(test)]

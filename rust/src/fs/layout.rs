@@ -31,14 +31,61 @@ impl FileTable {
     /// Absolute LBA of `local_offset` within `file`, creating the file's
     /// extent on first touch.
     pub fn lba(&mut self, file: u32, local_offset: i32) -> i64 {
+        self.lba_or_new(file, local_offset).0
+    }
+
+    /// Like [`FileTable::lba`], but also reports whether this call
+    /// *created* the file's extent. The live shard persists the table to
+    /// its superblock on first touch — the mapping decides where every
+    /// byte of the file lives on disk, so it must survive a crash (a
+    /// restarted table that re-dealt extents in a different first-touch
+    /// order would read every file from the wrong place).
+    pub fn lba_or_new(&mut self, file: u32, local_offset: i32) -> (i64, bool) {
         let extent = self.extent;
         let next = &mut self.next_slot;
+        let mut created = false;
         let base = *self.base.entry(file).or_insert_with(|| {
             let b = *next * extent;
             *next += 1;
+            created = true;
             b
         });
-        base + local_offset as i64
+        (base + local_offset as i64, created)
+    }
+
+    /// Non-creating lookup: the absolute LBA of `local_offset` within
+    /// `file`, or `None` if the file has no extent yet. Read paths use
+    /// this — a read must never mint an extent, because minted entries
+    /// are only persisted on *write* first-touch, and an entry that
+    /// exists in memory but not in the superblock would let the file's
+    /// first write skip persistence and be orphaned at recovery.
+    pub fn lookup(&self, file: u32, local_offset: i32) -> Option<i64> {
+        self.base.get(&file).map(|&b| b + local_offset as i64)
+    }
+
+    /// The table as `(file, extent slot)` pairs, ascending by file —
+    /// what the live shard serializes into its superblock.
+    pub fn entries(&self) -> Vec<(u32, u32)> {
+        let mut out: Vec<(u32, u32)> =
+            self.base.iter().map(|(&f, &b)| (f, (b / self.extent) as u32)).collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Crash recovery: re-seat one `(file, slot)` entry read back from a
+    /// superblock. Keeps `next_slot` past every restored slot so new
+    /// files never collide with recovered extents.
+    pub fn restore_entry(&mut self, file: u32, slot: u32) {
+        let prev = self.base.insert(file, slot as i64 * self.extent);
+        debug_assert!(prev.is_none(), "file {file} restored twice");
+        self.next_slot = self.next_slot.max(slot as i64 + 1);
+    }
+
+    /// Does `lba` fall inside some known file's extent? Recovery uses
+    /// this to discard orphaned log records (a record whose file never
+    /// reached a durable superblock was never acknowledged).
+    pub fn owns_lba(&self, lba: i64) -> bool {
+        self.base.values().any(|&b| (b..b + self.extent).contains(&lba))
     }
 
     pub fn files(&self) -> usize {
@@ -73,6 +120,29 @@ mod tests {
         let a1 = t.lba(9, 5);
         let a2 = t.lba(9, 5);
         assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn entries_round_trip_through_restore() {
+        let mut t = FileTable::with_extent(1000);
+        t.lba(7, 0);
+        t.lba(3, 5);
+        t.lba(9, 1);
+        let entries = t.entries();
+        assert_eq!(entries, vec![(3, 1), (7, 0), (9, 2)], "ascending by file, slot by arrival");
+        // a fresh table restored from those entries maps identically and
+        // deals the next file past every recovered slot
+        let mut r = FileTable::with_extent(1000);
+        for (f, s) in entries {
+            r.restore_entry(f, s);
+        }
+        assert_eq!(r.lba(7, 4), t.lba(7, 4));
+        assert_eq!(r.lba(3, 0), t.lba(3, 0));
+        let (new_base, created) = r.lba_or_new(42, 0);
+        assert!(created);
+        assert_eq!(new_base, 3000, "new files allocate past recovered slots");
+        assert!(r.owns_lba(1500));
+        assert!(!r.owns_lba(5000));
     }
 
     #[test]

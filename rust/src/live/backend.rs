@@ -15,15 +15,19 @@
 //!
 //! * [`MemBackend`] — a chunked sparse in-memory store with configurable
 //!   synthetic latency, so unit tests run instantly and benches can model
-//!   SSD/HDD speed ratios without real disks. Pages are guarded by
-//!   sharded locks (by page index), so disjoint concurrent transfers
-//!   proceed in parallel; the synthetic service-time sleep happens before
-//!   any lock is taken, exactly like a real device absorbing concurrent
-//!   in-flight commands;
+//!   SSD/HDD speed ratios without real disks. The page store
+//!   ([`MemStore`]) can be shared between backends and **snapshotted**:
+//!   in snapshot (volatile-overlay) mode, writes land in an overlay that
+//!   only [`Backend::sync`] merges into the durable map, and
+//!   [`MemStore::freeze`] clones the durable map mid-flight — a
+//!   power-loss image with torn in-flight writes, which is what lets the
+//!   crash-recovery tests run with zero external dependencies;
 //! * [`FileBackend`] — a real `std::fs` file (sparse where the OS
 //!   allows), used by `ssdup live --backend file`. On Unix it uses true
 //!   positional I/O (`pwrite`/`pread` via `FileExt`), so concurrent
-//!   transfers never fight over a shared cursor.
+//!   transfers never fight over a shared cursor; `sync` is a real
+//!   `sync_data`, and [`FileBackend::open_existing`] reopens a previous
+//!   run's image for crash recovery (`ssdup live --recover`).
 //!
 //! Writes at arbitrary offsets are allowed (HDD images are sparse); holes
 //! read as zero on both implementations.
@@ -33,7 +37,7 @@ use std::fs::{File, OpenOptions};
 use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// A flat byte store with positional (`&self`) I/O. `Send + Sync` so a
@@ -49,7 +53,9 @@ pub trait Backend: Send + Sync {
     /// Total bytes written over the backend's lifetime.
     fn bytes_written(&self) -> u64;
 
-    /// Flush to durable storage (no-op for memory).
+    /// Flush to durable storage. The live shard calls this before
+    /// acknowledging a write (publish) and before recycling a flushed
+    /// region — acknowledged means durable.
     fn sync(&self) -> io::Result<()>;
 
     fn kind(&self) -> &'static str;
@@ -93,33 +99,175 @@ const PAGE_BYTES: usize = 64 * 1024;
 /// threads a shard can keep in flight at once.
 const LOCK_SHARDS: usize = 64;
 
-/// Chunked sparse in-memory backend: only touched 64 KiB pages are
-/// allocated, so a TiB-scale sparse HDD image costs memory proportional
-/// to the data actually written. Concurrency comes from sharding the
-/// page table by page index: transfers touching different pages never
-/// contend, and the synthetic-latency sleep (the modeled device service
-/// time) is taken before any lock, so concurrent in-flight operations
-/// overlap their service times exactly like commands queued on a real
-/// device.
+type PageMap = Vec<Mutex<HashMap<u64, Box<[u8]>>>>;
+
+fn empty_pages() -> PageMap {
+    (0..LOCK_SHARDS).map(|_| Mutex::new(HashMap::new())).collect()
+}
+
+/// The sharable page store behind [`MemBackend`]: durable pages plus —
+/// in snapshot mode — a volatile overlay modeling a device write cache.
+///
+/// * **direct mode** (`MemStore::new(false)`, and every backend made via
+///   [`MemBackend::new`]): writes land in the durable map immediately and
+///   `sync` is a no-op — the original, fastest behavior;
+/// * **snapshot mode** (`MemStore::new(true)`): writes land in a volatile
+///   overlay; `sync` merges the *whole* overlay into the durable map
+///   (like `fsync` flushing a shared page cache); [`MemStore::freeze`]
+///   clones the durable map into a fresh store — the exact power-loss
+///   image: unsynced writes are gone, and an in-flight write caught
+///   between pages is genuinely torn.
+pub struct MemStore {
+    durable: PageMap,
+    overlay: PageMap,
+    volatile: bool,
+}
+
+impl MemStore {
+    pub fn new(volatile: bool) -> Arc<Self> {
+        Arc::new(Self { durable: empty_pages(), overlay: empty_pages(), volatile })
+    }
+
+    /// Clone the durable state into a fresh store (same mode): the image
+    /// a machine would reboot with if power failed at this instant. Safe
+    /// to call while other threads keep writing — each page is cloned
+    /// under its lock, so a concurrent multi-page write is captured
+    /// partially (a torn write), exactly like real power loss.
+    pub fn freeze(&self) -> Arc<Self> {
+        let durable: PageMap = self
+            .durable
+            .iter()
+            .map(|s| Mutex::new(s.lock().unwrap().clone()))
+            .collect();
+        Arc::new(Self { durable, overlay: empty_pages(), volatile: self.volatile })
+    }
+
+    /// Resident (allocated) bytes across durable + overlay pages.
+    pub fn resident_bytes(&self) -> u64 {
+        let count = |m: &PageMap| -> u64 {
+            m.iter().map(|s| s.lock().unwrap().len() as u64 * PAGE_BYTES as u64).sum()
+        };
+        count(&self.durable) + count(&self.overlay)
+    }
+
+    fn shard_of(page: u64) -> usize {
+        (page % LOCK_SHARDS as u64) as usize
+    }
+
+    /// Copy `data` into pages starting at byte `offset`. In snapshot mode
+    /// the target is the overlay, copy-on-write from the durable page.
+    fn write(&self, offset: u64, data: &[u8]) {
+        let mut off = offset;
+        let mut rest = data;
+        while !rest.is_empty() {
+            let page = off / PAGE_BYTES as u64;
+            let within = (off % PAGE_BYTES as u64) as usize;
+            let take = rest.len().min(PAGE_BYTES - within);
+            if self.volatile {
+                let mut shard = self.overlay[Self::shard_of(page)].lock().unwrap();
+                let p = shard.entry(page).or_insert_with(|| {
+                    // copy-on-write: seed the overlay page from the
+                    // durable copy so partial-page writes keep old bytes
+                    self.durable[Self::shard_of(page)]
+                        .lock()
+                        .unwrap()
+                        .get(&page)
+                        .cloned()
+                        .unwrap_or_else(|| vec![0u8; PAGE_BYTES].into_boxed_slice())
+                });
+                p[within..within + take].copy_from_slice(&rest[..take]);
+            } else {
+                let mut shard = self.durable[Self::shard_of(page)].lock().unwrap();
+                let p =
+                    shard.entry(page).or_insert_with(|| vec![0u8; PAGE_BYTES].into_boxed_slice());
+                p[within..within + take].copy_from_slice(&rest[..take]);
+            }
+            off += take as u64;
+            rest = &rest[take..];
+        }
+    }
+
+    fn read(&self, offset: u64, buf: &mut [u8]) {
+        let mut off = offset;
+        let mut rest: &mut [u8] = buf;
+        while !rest.is_empty() {
+            let page = off / PAGE_BYTES as u64;
+            let within = (off % PAGE_BYTES as u64) as usize;
+            let take = rest.len().min(PAGE_BYTES - within);
+            let mut served = false;
+            if self.volatile {
+                let shard = self.overlay[Self::shard_of(page)].lock().unwrap();
+                if let Some(p) = shard.get(&page) {
+                    rest[..take].copy_from_slice(&p[within..within + take]);
+                    served = true;
+                }
+            }
+            if !served {
+                let shard = self.durable[Self::shard_of(page)].lock().unwrap();
+                match shard.get(&page) {
+                    Some(p) => rest[..take].copy_from_slice(&p[within..within + take]),
+                    None => rest[..take].fill(0),
+                }
+            }
+            off += take as u64;
+            rest = &mut rest[take..];
+        }
+    }
+
+    /// Merge every overlay page into the durable map (snapshot mode; a
+    /// no-op otherwise). Like a real `fsync`, this flushes the shared
+    /// cache — including other writers' not-yet-synced pages.
+    fn sync(&self) {
+        if !self.volatile {
+            return;
+        }
+        for (i, shard) in self.overlay.iter().enumerate() {
+            let mut overlay = shard.lock().unwrap();
+            if overlay.is_empty() {
+                continue;
+            }
+            let mut durable = self.durable[i].lock().unwrap();
+            for (page, data) in overlay.drain() {
+                durable.insert(page, data);
+            }
+        }
+    }
+}
+
+/// Chunked sparse in-memory backend over a (possibly shared)
+/// [`MemStore`]. Only touched 64 KiB pages are allocated, so a TiB-scale
+/// sparse HDD image costs memory proportional to the data actually
+/// written. Concurrency comes from sharding the page table by page index:
+/// transfers touching different pages never contend, and the
+/// synthetic-latency sleep (the modeled device service time) is taken
+/// before any lock, so concurrent in-flight operations overlap their
+/// service times exactly like commands queued on a real device.
 pub struct MemBackend {
-    /// page index → page contents, sharded by `page % LOCK_SHARDS`
-    shards: Vec<Mutex<HashMap<u64, Box<[u8]>>>>,
+    store: Arc<MemStore>,
     latency: SyntheticLatency,
     bytes_written: AtomicU64,
 }
 
 impl MemBackend {
+    /// Private direct-mode store (the original zero-ceremony constructor).
     pub fn new(latency: SyntheticLatency) -> Self {
-        Self {
-            shards: (0..LOCK_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
-            latency,
-            bytes_written: AtomicU64::new(0),
-        }
+        Self::over(MemStore::new(false), latency)
+    }
+
+    /// A backend over a caller-owned store — the handle that survives an
+    /// engine "crash" so a second engine can recover from the same pages.
+    pub fn over(store: Arc<MemStore>, latency: SyntheticLatency) -> Self {
+        Self { store, latency, bytes_written: AtomicU64::new(0) }
+    }
+
+    /// The shared page store (freeze/inspect from tests).
+    pub fn store(&self) -> Arc<MemStore> {
+        Arc::clone(&self.store)
     }
 
     /// Resident (allocated) bytes — test visibility into sparseness.
     pub fn resident_bytes(&self) -> u64 {
-        self.shards.iter().map(|s| s.lock().unwrap().len() as u64 * PAGE_BYTES as u64).sum()
+        self.store.resident_bytes()
     }
 }
 
@@ -129,40 +277,14 @@ impl Backend for MemBackend {
         // writers overlap their sleeps (a deep device queue), then only
         // touch per-page locks for the memcpy
         self.latency.apply(data.len());
-        let mut off = offset;
-        let mut rest = data;
-        while !rest.is_empty() {
-            let page = off / PAGE_BYTES as u64;
-            let within = (off % PAGE_BYTES as u64) as usize;
-            let take = rest.len().min(PAGE_BYTES - within);
-            let mut shard = self.shards[(page % LOCK_SHARDS as u64) as usize].lock().unwrap();
-            let p = shard.entry(page).or_insert_with(|| vec![0u8; PAGE_BYTES].into_boxed_slice());
-            p[within..within + take].copy_from_slice(&rest[..take]);
-            drop(shard);
-            off += take as u64;
-            rest = &rest[take..];
-        }
+        self.store.write(offset, data);
         self.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
         Ok(())
     }
 
     fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
         self.latency.apply(buf.len());
-        let mut off = offset;
-        let mut rest: &mut [u8] = buf;
-        while !rest.is_empty() {
-            let page = off / PAGE_BYTES as u64;
-            let within = (off % PAGE_BYTES as u64) as usize;
-            let take = rest.len().min(PAGE_BYTES - within);
-            let shard = self.shards[(page % LOCK_SHARDS as u64) as usize].lock().unwrap();
-            match shard.get(&page) {
-                Some(p) => rest[..take].copy_from_slice(&p[within..within + take]),
-                None => rest[..take].fill(0),
-            }
-            drop(shard);
-            off += take as u64;
-            rest = &mut rest[take..];
-        }
+        self.store.read(offset, buf);
         Ok(())
     }
 
@@ -171,6 +293,7 @@ impl Backend for MemBackend {
     }
 
     fn sync(&self) -> io::Result<()> {
+        self.store.sync();
         Ok(())
     }
 
@@ -179,10 +302,10 @@ impl Backend for MemBackend {
     }
 }
 
-/// Real-file backend. The file is created (truncated) on open; offsets
-/// past EOF read as zero, matching sparse-file semantics. I/O is
-/// positional (`pwrite`/`pread` on Unix), so concurrent callers never
-/// share a file cursor.
+/// Real-file backend. Offsets past EOF read as zero, matching sparse-file
+/// semantics. I/O is positional (`pwrite`/`pread` on Unix), so concurrent
+/// callers never share a file cursor; `sync` is `sync_data`, so the
+/// shard's publish barrier makes acknowledged writes power-loss durable.
 pub struct FileBackend {
     file: File,
     path: PathBuf,
@@ -194,19 +317,33 @@ pub struct FileBackend {
 }
 
 impl FileBackend {
+    /// Create (truncating any previous image) — a fresh device.
     pub fn create(path: &Path) -> io::Result<Self> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
         let file =
             OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
-        Ok(Self {
+        Ok(Self::from_file(file, path))
+    }
+
+    /// Reopen an existing image *without* truncating — the recovery path
+    /// (`LiveEngine::open_file`). Fails if the image does not exist: a
+    /// silently-created empty file would turn "recover my data" into
+    /// "start over".
+    pub fn open_existing(path: &Path) -> io::Result<Self> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        Ok(Self::from_file(file, path))
+    }
+
+    fn from_file(file: File, path: &Path) -> Self {
+        Self {
             file,
             path: path.to_path_buf(),
             bytes_written: AtomicU64::new(0),
             #[cfg(not(unix))]
             cursor: Mutex::new(()),
-        })
+        }
     }
 
     pub fn path(&self) -> &Path {
@@ -306,10 +443,33 @@ mod tests {
     }
 
     #[test]
+    fn mem_backend_snapshot_mode_round_trips() {
+        round_trip(&MemBackend::over(MemStore::new(true), SyntheticLatency::ZERO));
+    }
+
+    #[test]
     fn file_backend_round_trips() {
         let dir = std::env::temp_dir().join(format!("ssdup-be-{}", std::process::id()));
         let b = FileBackend::create(&dir.join("t.img")).unwrap();
         round_trip(&b);
+        drop(b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_backend_open_existing_sees_previous_data_and_rejects_missing() {
+        let dir = std::env::temp_dir().join(format!("ssdup-beo-{}", std::process::id()));
+        let path = dir.join("img");
+        {
+            let b = FileBackend::create(&path).unwrap();
+            b.write_at(100, b"persist").unwrap();
+            b.sync().unwrap();
+        }
+        let b = FileBackend::open_existing(&path).unwrap();
+        let mut buf = [0u8; 7];
+        b.read_at(100, &mut buf).unwrap();
+        assert_eq!(&buf, b"persist", "reopen must not truncate");
+        assert!(FileBackend::open_existing(&dir.join("absent")).is_err());
         drop(b);
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -331,6 +491,49 @@ mod tests {
         let mut back = vec![0u8; data.len()];
         b.read_at(start, &mut back).unwrap();
         assert_eq!(back, data);
+    }
+
+    #[test]
+    fn snapshot_store_loses_unsynced_writes_and_keeps_synced_ones() {
+        let store = MemStore::new(true);
+        let b = MemBackend::over(Arc::clone(&store), SyntheticLatency::ZERO);
+        b.write_at(0, b"durable-after-sync").unwrap();
+        b.sync().unwrap();
+        b.write_at(100, b"volatile").unwrap(); // never synced
+        // the live view reads both
+        let mut buf = [0u8; 8];
+        b.read_at(100, &mut buf).unwrap();
+        assert_eq!(&buf, b"volatile");
+        // the frozen (power-loss) image only has the synced write
+        let frozen = MemBackend::over(store.freeze(), SyntheticLatency::ZERO);
+        let mut got = [0u8; 18];
+        frozen.read_at(0, &mut got).unwrap();
+        assert_eq!(&got, b"durable-after-sync");
+        frozen.read_at(100, &mut buf).unwrap();
+        assert_eq!(buf, [0u8; 8], "unsynced write must not survive the freeze");
+        // partial-page overwrite before sync keeps the old synced bytes
+        // around it (copy-on-write overlay)
+        b.write_at(2, b"XX").unwrap();
+        let mut mixed = [0u8; 7];
+        b.read_at(0, &mut mixed).unwrap();
+        assert_eq!(&mixed, b"duXXble");
+    }
+
+    #[test]
+    fn direct_mode_freeze_is_a_plain_copy() {
+        // non-volatile store: every write is durable immediately (process
+        // kill semantics — the page cache survives), so freeze sees all
+        let store = MemStore::new(false);
+        let b = MemBackend::over(Arc::clone(&store), SyntheticLatency::ZERO);
+        b.write_at(0, b"kept").unwrap();
+        let frozen = MemBackend::over(store.freeze(), SyntheticLatency::ZERO);
+        let mut buf = [0u8; 4];
+        frozen.read_at(0, &mut buf).unwrap();
+        assert_eq!(&buf, b"kept");
+        // and the copy is independent of later writes
+        b.write_at(0, b"gone").unwrap();
+        frozen.read_at(0, &mut buf).unwrap();
+        assert_eq!(&buf, b"kept");
     }
 
     /// The point of the `&self` API: disjoint transfers from many threads
@@ -360,6 +563,11 @@ mod tests {
     #[test]
     fn mem_backend_concurrent_disjoint_writes() {
         concurrent_disjoint_writes(&MemBackend::new(SyntheticLatency::ZERO));
+    }
+
+    #[test]
+    fn snapshot_mode_concurrent_disjoint_writes() {
+        concurrent_disjoint_writes(&MemBackend::over(MemStore::new(true), SyntheticLatency::ZERO));
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::device::SeekModel;
 use crate::fs::StripeLayout;
 use crate::live::backend::{Backend, FileBackend, MemBackend, SyntheticLatency};
 use crate::live::payload;
-use crate::live::shard::{Shard, ShardConfig, ShardStats};
+use crate::live::shard::{Shard, ShardConfig, ShardRecovery, ShardStats};
 use crate::server::config::SystemKind;
 use crate::types::{mib_to_sectors, Request, SECTOR_BYTES};
 use crate::workload::Workload;
@@ -80,9 +80,10 @@ impl LiveConfig {
         self
     }
 
-    fn shard_config(&self) -> ShardConfig {
+    fn shard_config(&self, shard_id: usize) -> ShardConfig {
         ShardConfig {
             system: self.system,
+            shard_id: shard_id as u32,
             ssd_capacity_sectors: self.ssd_capacity_sectors,
             stream_len: self.stream_len,
             pause_below: self.pause_below,
@@ -90,6 +91,53 @@ impl LiveConfig {
             flush_check: self.flush_check,
             seek: self.seek,
         }
+    }
+}
+
+/// Aggregate of what [`LiveEngine::open`] recovered, one entry per shard.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    pub shards: Vec<ShardRecovery>,
+}
+
+impl RecoveryReport {
+    /// Every shard reopened via the clean-shutdown short circuit.
+    pub fn clean(&self) -> bool {
+        self.shards.iter().all(|s| s.clean)
+    }
+
+    pub fn records_replayed(&self) -> u64 {
+        self.shards.iter().map(|s| s.records_replayed).sum()
+    }
+
+    pub fn records_skipped(&self) -> u64 {
+        self.shards.iter().map(|s| s.records_skipped).sum()
+    }
+
+    pub fn torn_discarded(&self) -> u64 {
+        self.shards.iter().map(|s| s.torn_discarded).sum()
+    }
+
+    pub fn bytes_recovered(&self) -> u64 {
+        self.shards.iter().map(|s| s.bytes_recovered).sum()
+    }
+
+    pub fn sectors_scanned(&self) -> i64 {
+        self.shards.iter().map(|s| s.sectors_scanned).sum()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "recovery: {} | {} records replayed ({} MiB), {} settled-skipped, {} torn stretches \
+             discarded, {} sectors scanned over {} shards",
+            if self.clean() { "clean (no scan)" } else { "dirty (log replay)" },
+            self.records_replayed(),
+            self.bytes_recovered() / (1 << 20),
+            self.records_skipped(),
+            self.torn_discarded(),
+            self.sectors_scanned(),
+            self.shards.len(),
+        )
     }
 }
 
@@ -127,21 +175,50 @@ impl LiveEngine {
         mut backends: impl FnMut(usize) -> (Box<dyn Backend>, Box<dyn Backend>),
     ) -> Self {
         assert!(cfg.shards >= 1, "need at least one shard");
-        let stripe = StripeLayout { stripe_sectors: cfg.stripe_sectors, n_nodes: cfg.shards };
-        let shard_cfg = cfg.shard_config();
         let mut shards = Vec::with_capacity(cfg.shards);
-        let mut flushers = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let (ssd, hdd) = backends(i);
-            let shard = Arc::new(Shard::new(&shard_cfg, ssd, hdd));
-            let worker = Arc::clone(&shard);
+            shards.push(Arc::new(Shard::new(&cfg.shard_config(i), ssd, hdd)));
+        }
+        Self::spawn_flushers(cfg, shards)
+    }
+
+    /// Reopen an engine over backends holding a previous run's state —
+    /// the crash-recovery path (see [`Shard::recover`]). The topology
+    /// (`shards`, `ssd_capacity_sectors`) must match the run that wrote
+    /// the backends: records and superblocks are stamped with their
+    /// shard id, and a mismatched layout is rejected or scans empty.
+    ///
+    /// Clean shutdowns short-circuit (no log scan); dirty reopens replay
+    /// every surviving acknowledged write, which then drains through the
+    /// normal flush path. Either way the engine accepts new submits.
+    pub fn open(
+        cfg: &LiveConfig,
+        mut backends: impl FnMut(usize) -> (Box<dyn Backend>, Box<dyn Backend>),
+    ) -> io::Result<(Self, RecoveryReport)> {
+        assert!(cfg.shards >= 1, "need at least one shard");
+        let mut shards = Vec::with_capacity(cfg.shards);
+        let mut report = RecoveryReport::default();
+        for i in 0..cfg.shards {
+            let (ssd, hdd) = backends(i);
+            let (shard, rec) = Shard::recover(&cfg.shard_config(i), ssd, hdd)?;
+            report.shards.push(rec);
+            shards.push(Arc::new(shard));
+        }
+        Ok((Self::spawn_flushers(cfg, shards), report))
+    }
+
+    fn spawn_flushers(cfg: &LiveConfig, shards: Vec<Arc<Shard>>) -> Self {
+        let stripe = StripeLayout { stripe_sectors: cfg.stripe_sectors, n_nodes: cfg.shards };
+        let mut flushers = Vec::with_capacity(shards.len());
+        for (i, shard) in shards.iter().enumerate() {
+            let worker = Arc::clone(shard);
             flushers.push(
                 thread::Builder::new()
                     .name(format!("ssdup-flusher-{i}"))
                     .spawn(move || worker.flusher_loop())
                     .expect("spawn flusher thread"),
             );
-            shards.push(shard);
         }
         Self { shards, flushers, stripe }
     }
@@ -169,6 +246,19 @@ impl LiveEngine {
         }
         let mut pairs = pairs.into_iter();
         Ok(Self::with_backends(cfg, move |_| pairs.next().expect("one backend pair per shard")))
+    }
+
+    /// Reopen a previous [`LiveEngine::file`] run's images under `dir`
+    /// *without truncating them* and recover: `ssdup live --recover`.
+    pub fn open_file(cfg: &LiveConfig, dir: &Path) -> io::Result<(Self, RecoveryReport)> {
+        let mut pairs = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let ssd = FileBackend::open_existing(&dir.join(format!("shard{i}-ssd.log")))?;
+            let hdd = FileBackend::open_existing(&dir.join(format!("shard{i}-hdd.img")))?;
+            pairs.push((Box::new(ssd) as Box<dyn Backend>, Box::new(hdd) as Box<dyn Backend>));
+        }
+        let mut pairs = pairs.into_iter();
+        Self::open(cfg, move |_| pairs.next().expect("one backend pair per shard"))
     }
 
     pub fn shards(&self) -> usize {
@@ -388,10 +478,17 @@ impl LiveEngine {
         crate::live::shard::ssd_ratio(&self.stats())
     }
 
-    /// Drain, stop the flusher threads, and return the final stats.
+    /// Drain, persist clean superblocks, stop the flusher threads, and
+    /// return the final stats. This is the **orderly** shutdown: the
+    /// next [`LiveEngine::open`] over the same backends short-circuits
+    /// without a log scan. Dropping the engine instead (a crash) leaves
+    /// the superblocks dirty, and the next open replays the logs.
     pub fn shutdown(mut self) -> Vec<ShardStats> {
         self.drain();
         let stats = self.stats();
+        for shard in &self.shards {
+            shard.finalize_clean();
+        }
         for shard in &self.shards {
             shard.request_shutdown();
         }

@@ -31,7 +31,13 @@
 //! * [`payload`] — deterministic sector contents (optionally versioned
 //!   per write) so every byte on the HDD backends can be re-derived and
 //!   checked after a run — including *which* copy of a rewritten sector
-//!   survived.
+//!   survived;
+//! * [`record`] — the **crash-consistent log format**: self-describing
+//!   record frames (magic, shard, region, LBA, length, monotone
+//!   sequence, CRC-32C over header + payload), the per-shard superblock
+//!   (epoch, clean-shutdown flag, flush watermarks, file table), and the
+//!   recovery scanner that validates frames, discards torn stretches,
+//!   and re-synchronizes past them.
 //!
 //! Concurrency model: a shard has exactly one lock — its core mutex —
 //! and **no thread ever holds it across device I/O**. Ingest runs
@@ -59,16 +65,51 @@
 //! that order is meaningful), but once a claim is made, no older write
 //! can resurface under it — in-flight direct writes are waited out
 //! rather than raced.
+//!
+//! # Durability contract
+//!
+//! The engine distinguishes three states per write, in order:
+//!
+//! 1. **Submitted** — `LiveEngine::submit` was called but has not
+//!    returned. Nothing is promised: a crash may keep all, part (at
+//!    sector granularity), or none of the bytes. A torn record frame is
+//!    detected by its checksum at recovery and discarded whole.
+//! 2. **Acknowledged (published)** — `submit` returned. The write is
+//!    **durable**: its framed record (SSD route) or its HDD bytes
+//!    (direct route) were written *and synced* before the claim
+//!    published, and for the first write of each file the file-table
+//!    superblock was synced before that. [`LiveEngine::open`] restores
+//!    every acknowledged write byte-exactly after a crash, however
+//!    ungraceful — this is what the crash-injection tests kill-and-check.
+//! 3. **Flushed** — the flusher settled the (surviving) buffered copy
+//!    onto the HDD. The superblock's flush watermark is persisted
+//!    *before* the log region recycles, so recovery never replays a
+//!    settled record over newer data, and never loses one that had not
+//!    settled. After [`LiveEngine::shutdown`] (drain + clean
+//!    superblock), reopening short-circuits without any log scan.
+//!
+//! Recovery replays surviving records in their claim (sequence) order,
+//! so the newest-copy-wins semantics above carry across a restart:
+//! rewrites recover to exactly the version an uncrashed run would have
+//! settled. Detection/routing state is deliberately soft — a recovered
+//! shard starts with a fresh detector and policy history.
+//!
+//! Limit: the file→extent table is persisted in one superblock sector,
+//! so a live shard supports at most [`record::MAX_SB_FILES`] distinct
+//! files; the 58th first-touch fails the shard with a named error (the
+//! paper's workloads use one shared file per application).
 
 pub mod backend;
 pub mod engine;
 pub mod loadgen;
 pub mod ownership;
 pub mod payload;
+pub mod record;
 pub mod shard;
 
-pub use backend::{Backend, FileBackend, MemBackend, SyntheticLatency};
-pub use engine::{LiveConfig, LiveEngine, VerifyReport};
+pub use backend::{Backend, FileBackend, MemBackend, MemStore, SyntheticLatency};
+pub use engine::{LiveConfig, LiveEngine, RecoveryReport, VerifyReport};
 pub use loadgen::{run as run_load, run_with as run_load_with, LiveReport};
 pub use ownership::{OwnershipMap, Tier};
-pub use shard::{Shard, ShardConfig, ShardStats};
+pub use record::{LiveRecord, RecordHeader, Superblock};
+pub use shard::{Shard, ShardConfig, ShardRecovery, ShardStats};

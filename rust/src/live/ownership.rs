@@ -91,6 +91,32 @@ impl OwnershipMap {
         Self { map: AvlTree::new(), direct: Vec::new(), next_ticket: 1 }
     }
 
+    /// Crash recovery: rebuild the map by replaying surviving log records
+    /// in **sequence order** — each `(lba, size, region, ssd_offset)`
+    /// claim supersedes the overlapped parts of earlier ones, exactly as
+    /// the original reserve order did (claim order is fixed under the
+    /// shard's core lock, and the on-SSD record sequence captures it).
+    /// Every replayed claim is published: recovery only replays records
+    /// whose device bytes passed their checksum.
+    ///
+    /// Returns the map plus the sectors superseded *during replay*
+    /// (rewrites whose stale copy also survived in the log) — the shard
+    /// books them so `buffered == flushed + superseded` stays exact
+    /// across a recovery drain.
+    pub fn rebuild_from_replay(
+        records: impl IntoIterator<Item = (u64, i64, i64, usize, i64)>,
+    ) -> (Self, i64) {
+        let mut map = Self::new();
+        let mut superseded = 0;
+        let mut last_seq = 0;
+        for (seq, lba, size, region, ssd_offset) in records {
+            debug_assert!(seq > last_seq, "replay must be in strict sequence order");
+            last_seq = seq;
+            superseded += map.claim(lba, size, Tier::Ssd { region, ssd_offset });
+        }
+        (map, superseded)
+    }
+
     /// Number of live (SSD-resident) extents.
     pub fn len(&self) -> usize {
         self.map.len()
@@ -529,6 +555,26 @@ mod tests {
         assert_eq!(m.publish(b, 0, 10), 10);
         assert_eq!(m.resolve(0, 10), vec![(0, 10, ssd(0, 10))]);
         assert_eq!(m.ssd_sectors(), 10);
+    }
+
+    #[test]
+    fn rebuild_from_replay_applies_newest_wins_in_sequence_order() {
+        // the same stream the live path would produce: a rewrite (seq 3)
+        // landing inside an earlier extent (seq 1), plus a disjoint one
+        let records = vec![
+            (1u64, 0i64, 100i64, 0usize, 1i64),
+            (2, 500, 10, 0, 102),
+            (3, 30, 40, 1, 1),
+        ];
+        let (m, superseded) = OwnershipMap::rebuild_from_replay(records);
+        assert_eq!(superseded, 40, "the rewritten middle is booked as superseded");
+        assert_eq!(
+            m.resolve(0, 100),
+            vec![(0, 30, ssd(0, 1)), (30, 40, ssd(1, 1)), (70, 30, ssd(0, 71))]
+        );
+        assert_eq!(m.resolve(500, 10), vec![(500, 10, ssd(0, 102))]);
+        assert!(!m.pending_overlaps(0, 600), "replayed claims are published");
+        assert_eq!(m.ssd_sectors() + superseded, 150);
     }
 
     #[test]

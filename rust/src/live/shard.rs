@@ -44,7 +44,26 @@
 //! are absent — stale-flush suppression by construction), and reads
 //! resolve through the same map, waiting out claims whose device bytes
 //! are still in flight (a pending claim has no readable copy anywhere).
+//!
+//! **Crash consistency.** Every buffered extent is persisted as a framed
+//! record (`live::record`): one self-describing header sector — magic,
+//! shard, region, LBA, length, a monotone sequence assigned in the claim
+//! critical section, and a CRC-32C over header + payload — followed by
+//! the payload. The publish step syncs the SSD backend before the claim
+//! is acknowledged, so **acknowledged means durable**; recovery can only
+//! lose writes that never returned to their client. A per-shard
+//! superblock (two alternating slots past the region logs) persists the
+//! flush watermarks — rewritten, synced, *before* a flushed region's map
+//! entries are released and its slots recycled — plus the file table
+//! (rewritten on first touch of a new file, the one place the shard
+//! holds its core lock across device I/O, because the extent mapping
+//! must be durable before any byte of the file can be acknowledged) and
+//! the clean-shutdown flag. [`Shard::recover`] reverses all of this:
+//! clean superblocks short-circuit, dirty ones trigger a checksum-
+//! validated scan of both region logs, and surviving records replay in
+//! sequence order to rebuild the ownership map and pipeline state.
 
+use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -56,6 +75,9 @@ use crate::device::SeekModel;
 use crate::fs::{FileTable, SubRequest};
 use crate::live::backend::Backend;
 use crate::live::ownership::{OwnershipMap, Tier};
+use crate::live::record::{
+    scan_region, LiveRecord, RecordHeader, Superblock, HEADER_SECTORS, MAX_SB_FILES,
+};
 use crate::redirector::{AdaptivePolicy, AlwaysHdd, AlwaysSsd, RoutePolicy, WatermarkPolicy};
 use crate::server::config::SystemKind;
 use crate::types::{sectors_to_bytes, Route, SECTOR_BYTES};
@@ -71,6 +93,9 @@ const CHUNK_BYTES: usize = 1 << 20;
 #[derive(Clone, Copy, Debug)]
 pub struct ShardConfig {
     pub system: SystemKind,
+    /// stable shard identity, stamped into every record frame and the
+    /// superblock — recovery refuses logs that belong to another shard
+    pub shard_id: u32,
     /// whole-SSD budget in sectors; each pipeline region gets half
     pub ssd_capacity_sectors: i64,
     pub stream_len: usize,
@@ -79,6 +104,32 @@ pub struct ShardConfig {
     /// re-check interval for paused flushes and condvar waits
     pub flush_check: Duration,
     pub seek: SeekModel,
+}
+
+/// What [`Shard::recover`] found and rebuilt — per shard.
+#[derive(Clone, Debug, Default)]
+pub struct ShardRecovery {
+    /// superblock said the last shutdown drained cleanly: the log scan
+    /// was skipped entirely
+    pub clean: bool,
+    /// surviving records replayed into the ownership map
+    pub records_replayed: u64,
+    /// valid records skipped because their region's flush watermark says
+    /// they are already settled on the HDD
+    pub records_skipped: u64,
+    /// torn/invalid log stretches discarded (one count per stretch)
+    pub torn_discarded: u64,
+    /// valid-looking records discarded because their LBA belongs to no
+    /// file in the recovered table (only an unacknowledged write can be
+    /// orphaned: a file's table entry is durable before its first ack)
+    pub orphaned: u64,
+    /// payload bytes put back under ownership (they re-enter the stats
+    /// as buffered bytes and drain through the normal flush path)
+    pub bytes_recovered: u64,
+    /// log sectors walked by the scan (0 on a clean reopen)
+    pub sectors_scanned: i64,
+    /// file-table entries restored from the superblock
+    pub files_restored: usize,
 }
 
 /// Counters a shard accumulates; snapshot via [`Shard::stats`].
@@ -150,6 +201,18 @@ struct ShardCore {
     /// for its region's count to hit zero before snapshotting: those
     /// slots' device bytes are still being written by client threads.
     pending_slots: [u64; REGIONS],
+    /// next record sequence (monotone per shard; 0 is never assigned, so
+    /// a zero watermark means "nothing flushed")
+    next_seq: u64,
+    /// highest sequence reserved into each region's current log
+    /// generation — the flush watermark persisted before the region is
+    /// recycled (reset to 0 at release)
+    region_max_seq: [u64; REGIONS],
+    /// in-memory image of the on-SSD superblock (epoch, watermarks,
+    /// clean flag, file table); every device rewrite snapshots it here
+    /// under the core lock, so a later epoch always carries a superset
+    /// of earlier state
+    sb: Superblock,
     drained: bool,
     shutdown: bool,
     /// set on a backend I/O error, with the cause; waiters surface it
@@ -189,15 +252,44 @@ pub struct Shard {
     direct_inflight: AtomicU64,
     strategy: FlushStrategy,
     half_sectors: i64,
+    /// largest payload a region can frame: half minus the header sector
+    max_buffer_sectors: i64,
     use_ssd: bool,
     flush_check: Duration,
+    shard_id: u32,
+    /// byte offset of the superblock slots (just past both region logs)
+    sb_base: u64,
+    /// Serializes superblock device writes; holds the highest epoch
+    /// already written + synced and the slot to write next. Epoch order
+    /// is fixed under the core lock, but writers reach the device in any
+    /// order: a writer whose snapshot epoch is not newer than the
+    /// recorded one **skips** its write — the durable superblock already
+    /// carries a superset of its state (later epochs snapshot `core.sb`
+    /// after earlier mutations). The slot alternates per *physical*
+    /// write (never by epoch parity — epochs can skip), so consecutive
+    /// durable superblocks always sit in different slots and a torn
+    /// write can never destroy the newest surviving one. Leaf lock:
+    /// never acquired before taking `core` — the first-touch path takes
+    /// it *while* holding core, the flusher takes it with no other lock
+    /// held.
+    sb_lock: Mutex<SbWriter>,
+}
+
+/// Device-write-order state for the superblock (guarded by `sb_lock`).
+struct SbWriter {
+    /// highest epoch durably written
+    last_epoch: u64,
+    /// slot the next physical write targets
+    next_slot: usize,
 }
 
 /// Outcome of the routing/claim critical section of [`Shard::submit`]:
 /// which device write this client owes, and the ticket to publish after.
+/// `ssd_offset` is the record frame's *header* slot; the payload follows
+/// at `ssd_offset + HEADER_SECTORS` (what the ownership map tracks).
 enum Claimed {
     Direct { dest: u64, ticket: u64 },
-    Slot { region: usize, ssd_offset: i64, ticket: u64 },
+    Slot { region: usize, ssd_offset: i64, ticket: u64, seq: u64 },
 }
 
 fn policy_for(system: SystemKind, history: usize) -> Box<dyn RoutePolicy + Send> {
@@ -253,28 +345,52 @@ fn copy_runs(extents: Vec<(i64, i64, i64)>, region_base: u64, chunk_cap: usize) 
 }
 
 impl Shard {
+    /// A fresh shard over empty (or to-be-overwritten) backends. No
+    /// superblock is written until the first flush, first new file, or
+    /// shutdown — recovery treats "no valid superblock" as a dirty
+    /// device with zero watermarks, which scans to exactly what was
+    /// framed so far.
     pub fn new(cfg: &ShardConfig, ssd: Box<dyn Backend>, hdd: Box<dyn Backend>) -> Self {
+        let writer = SbWriter { last_epoch: 0, next_slot: 0 };
+        Self::assemble(cfg, ssd, hdd, Self::fresh_core(cfg), writer)
+    }
+
+    fn fresh_core(cfg: &ShardConfig) -> ShardCore {
         let policy = policy_for(cfg.system, cfg.history);
         let route = policy.initial_route();
+        ShardCore {
+            files: FileTable::new(),
+            grouper: StreamGrouper::new(cfg.stream_len),
+            detector: NativeDetector::new(cfg.seek),
+            policy,
+            route,
+            pipeline: Pipeline::new(cfg.ssd_capacity_sectors),
+            own: OwnershipMap::new(),
+            pending_slots: [0; REGIONS],
+            next_seq: 1,
+            region_max_seq: [0; REGIONS],
+            sb: Superblock::fresh(cfg.shard_id),
+            drained: false,
+            shutdown: false,
+            failed: None,
+            stats: ShardStats::default(),
+        }
+    }
+
+    fn assemble(
+        cfg: &ShardConfig,
+        ssd: Box<dyn Backend>,
+        hdd: Box<dyn Backend>,
+        core: ShardCore,
+        sb_writer: SbWriter,
+    ) -> Self {
         let strategy = match cfg.system {
             SystemKind::SsdupPlus => FlushStrategy::TrafficAware { pause_below: cfg.pause_below },
             _ => FlushStrategy::Immediate,
         };
+        let half = cfg.ssd_capacity_sectors / 2;
         Shard {
-            core: Mutex::new(ShardCore {
-                files: FileTable::new(),
-                grouper: StreamGrouper::new(cfg.stream_len),
-                detector: NativeDetector::new(cfg.seek),
-                policy,
-                route,
-                pipeline: Pipeline::new(cfg.ssd_capacity_sectors),
-                own: OwnershipMap::new(),
-                pending_slots: [0; REGIONS],
-                drained: false,
-                shutdown: false,
-                failed: None,
-                stats: ShardStats::default(),
-            }),
+            core: Mutex::new(core),
             ssd,
             hdd,
             space: Condvar::new(),
@@ -283,10 +399,141 @@ impl Shard {
             read_pins: [AtomicU64::new(0), AtomicU64::new(0)],
             direct_inflight: AtomicU64::new(0),
             strategy,
-            half_sectors: cfg.ssd_capacity_sectors / 2,
+            half_sectors: half,
+            max_buffer_sectors: half - HEADER_SECTORS,
             use_ssd: cfg.system.uses_ssd(),
             flush_check: cfg.flush_check,
+            shard_id: cfg.shard_id,
+            sb_base: 2 * half as u64 * SECTOR_BYTES,
+            sb_lock: Mutex::new(sb_writer),
         }
+    }
+
+    /// Write `sb` into the alternation slot and sync, unless a newer
+    /// epoch is already durable (see the `sb_lock` field docs). Callers
+    /// pass the guard so the decision, the write, and the slot flip are
+    /// atomic.
+    fn write_superblock(&self, w: &mut SbWriter, sb: &Superblock) -> io::Result<()> {
+        if sb.epoch <= w.last_epoch {
+            return Ok(());
+        }
+        sb.write_to(self.ssd.as_ref(), self.sb_base, w.next_slot)?;
+        self.ssd.sync()?;
+        w.last_epoch = sb.epoch;
+        w.next_slot = 1 - w.next_slot;
+        Ok(())
+    }
+
+    /// Reopen a shard over backends that already hold a previous run's
+    /// state: read the superblock, and — unless it records a clean
+    /// shutdown — scan both region logs, validate every record frame,
+    /// discard torn stretches, skip records the flush watermarks prove
+    /// settled, and replay the survivors in sequence order to rebuild
+    /// the ownership map and pipeline. The recovered data drains through
+    /// the normal flush path; new submits are accepted as usual.
+    ///
+    /// A dirty superblock (epoch bumped, clean flag off) is persisted
+    /// before the shard is returned, so a crash right after a *clean*
+    /// reopen can never be short-circuited into ignoring new records.
+    pub fn recover(
+        cfg: &ShardConfig,
+        ssd: Box<dyn Backend>,
+        hdd: Box<dyn Backend>,
+    ) -> io::Result<(Self, ShardRecovery)> {
+        let half = cfg.ssd_capacity_sectors / 2;
+        let sb_base = 2 * half as u64 * SECTOR_BYTES;
+        let found = Superblock::read(ssd.as_ref(), sb_base, cfg.shard_id)?;
+        let (mut sb, found_slot) = match found {
+            Some((sb, slot)) => (sb, Some(slot)),
+            None => (Superblock::fresh(cfg.shard_id), None),
+        };
+        let mut core = Self::fresh_core(cfg);
+        let mut rec = ShardRecovery { clean: sb.clean, ..ShardRecovery::default() };
+        for &(file, slot) in &sb.files {
+            core.files.restore_entry(file, slot);
+        }
+        rec.files_restored = sb.files.len();
+        core.next_seq = sb.last_seq.max(sb.watermark[0]).max(sb.watermark[1]) + 1;
+        if !sb.clean {
+            let mut scans = Vec::with_capacity(REGIONS);
+            for r in 0..REGIONS {
+                let base = r as u64 * half as u64 * SECTOR_BYTES;
+                scans.push(scan_region(
+                    ssd.as_ref(),
+                    base,
+                    half,
+                    cfg.shard_id,
+                    r as u32,
+                    sb.watermark[r],
+                )?);
+            }
+            // merge live records across regions in sequence order; drop
+            // orphans (LBAs outside every recovered file extent — such a
+            // record's first-touch superblock never became durable, so
+            // its write was never acknowledged)
+            let mut live: Vec<LiveRecord> = Vec::new();
+            for s in &scans {
+                for l in &s.live {
+                    if core.files.owns_lba(l.lba) {
+                        live.push(*l);
+                    } else {
+                        rec.orphaned += 1;
+                    }
+                }
+                rec.records_skipped += s.skipped;
+                rec.torn_discarded += s.torn;
+                rec.sectors_scanned += s.scanned_sectors;
+            }
+            live.sort_unstable_by_key(|l| l.seq);
+            rec.records_replayed = live.len() as u64;
+            let recovered_sectors: i64 = live.iter().map(|l| l.size).sum();
+            rec.bytes_recovered = sectors_to_bytes(recovered_sectors);
+            let (own, replay_superseded) = OwnershipMap::rebuild_from_replay(
+                live.iter().map(|l| (l.seq, l.lba, l.size, l.region, l.payload_slot)),
+            );
+            core.own = own;
+            // pipeline topology: regions restore over their scanned log
+            // tails; if both hold live data, the one with the *older*
+            // records is queued for flushing first — recovery must
+            // preserve fill-order flushing or the watermark skip rule
+            // breaks (see the module docs)
+            let min_seq = |s: &crate::live::record::ScanReport| s.live.first().map(|l| l.seq);
+            let (active, queue): (usize, Vec<usize>) = match (min_seq(&scans[0]), min_seq(&scans[1]))
+            {
+                (Some(a), Some(b)) if a < b => (1, vec![0]),
+                (Some(_), Some(_)) => (0, vec![1]),
+                (None, Some(_)) => (1, vec![]),
+                _ => (0, vec![]),
+            };
+            core.pipeline.restore([scans[0].cursor, scans[1].cursor], active, &queue);
+            for (r, s) in scans.iter().enumerate() {
+                core.region_max_seq[r] = s.max_live_seq;
+                core.next_seq = core.next_seq.max(s.max_live_seq + 1);
+            }
+            // recovered bytes re-enter the accounting as ingested +
+            // buffered (with replay-time supersession booked), so the
+            // `buffered == flushed + superseded` conservation holds
+            // across the recovery drain
+            core.stats.bytes_in = rec.bytes_recovered;
+            core.stats.ssd_bytes_buffered = rec.bytes_recovered;
+            core.stats.superseded_bytes = sectors_to_bytes(replay_superseded);
+        }
+        // persist the dirty mark *before* accepting traffic: new records
+        // framed after this open must never hide behind a stale clean
+        // flag at the next recovery. Write into the slot NOT holding the
+        // recovered superblock, so a crash mid-write here still falls
+        // back to it.
+        sb.epoch += 1;
+        sb.clean = false;
+        let write_slot = match found_slot {
+            Some(s) => 1 - s,
+            None => 0,
+        };
+        sb.write_to(ssd.as_ref(), sb_base, write_slot)?;
+        ssd.sync()?;
+        let writer = SbWriter { last_epoch: sb.epoch, next_slot: 1 - write_slot };
+        core.sb = sb;
+        Ok((Self::assemble(cfg, ssd, hdd, core, writer), rec))
     }
 
     /// Timed wait on `cv` that surfaces a shard failure or shutdown
@@ -336,16 +583,48 @@ impl Shard {
             // good once a drain completes, so a later submit could buffer
             // bytes that no one would ever flush — fail loudly instead
             assert!(!core.drained, "submit after drain: the live engine is one burst per engine");
-            let lba = core.files.lba(sub.parent.file, sub.local_offset);
+            let (lba, new_file) = core.files.lba_or_new(sub.parent.file, sub.local_offset);
             debug_assert!(lba <= i32::MAX as i64, "LBA exceeds detector i32 space");
+            if new_file {
+                // first touch of a file allocates its disk extent — the
+                // mapping every future byte of the file depends on. It
+                // must be durable before anything in the extent can be
+                // acknowledged, and before any *other* client can route
+                // through it, so this rare event (once per file, ever)
+                // is the one place the core lock is held across device
+                // I/O: superblock rewrite + sync under the lock.
+                let n_files = core.files.files();
+                if n_files > MAX_SB_FILES {
+                    // the table must fit one superblock sector; fail the
+                    // shard through the established protocol instead of
+                    // poisoning the core mutex deeper in the encoder
+                    self.fail_and_panic(
+                        core,
+                        format!(
+                            "live shard file-table limit exceeded: {n_files} files > \
+                             {MAX_SB_FILES} (one superblock sector of entries)"
+                        ),
+                    );
+                }
+                core.sb.epoch += 1;
+                core.sb.clean = false;
+                core.sb.files = core.files.entries();
+                let sb = core.sb.clone();
+                let mut last_written = self.sb_lock.lock().unwrap();
+                if let Err(e) = self.write_superblock(&mut last_written, &sb) {
+                    drop(last_written);
+                    self.fail_and_panic(core, format!("superblock write (new file): {e}"));
+                }
+            }
             core.stats.bytes_in += payload.len() as u64;
             let claimed = loop {
                 // (re)decide the route against the map as it is *now*:
                 // every wait below drops the lock, so other clients'
                 // claims, publishes, and flushes can shift the picture
                 // between passes — including the policy route itself
-                let mut route = if !self.use_ssd || size > self.half_sectors {
-                    // a sub-request larger than a region could never
+                let mut route = if !self.use_ssd || size > self.max_buffer_sectors {
+                    // a sub-request larger than a region can frame (its
+                    // payload plus the record header sector) could never
                     // buffer: route it directly to HDD (safety valve)
                     Route::Hdd
                 } else {
@@ -358,7 +637,7 @@ impl Shard {
                 // regions keeps last-write-wins on the HDD.
                 let mut absorbed = false;
                 if route == Route::Hdd && self.use_ssd && core.own.overlaps_ssd(lba, size) {
-                    if size <= self.half_sectors {
+                    if size <= self.max_buffer_sectors {
                         route = Route::Ssd;
                         absorbed = true;
                     } else {
@@ -399,8 +678,13 @@ impl Shard {
                         break Claimed::Direct { dest: lba as u64 * SECTOR_BYTES, ticket };
                     }
                     Route::Ssd => {
-                        let outcome =
-                            core.pipeline.buffer(sub.parent.file, sub.local_offset as i64, size);
+                        // the log slot covers the record frame: one
+                        // header sector plus the payload
+                        let outcome = core.pipeline.buffer(
+                            sub.parent.file,
+                            sub.local_offset as i64,
+                            size + HEADER_SECTORS,
+                        );
                         let (region, ssd_offset, filled) = match outcome {
                             BufferOutcome::Buffered { region, ssd_offset } => {
                                 (region, ssd_offset, false)
@@ -419,9 +703,15 @@ impl Shard {
                         };
                         // reserve in the same lock hold as the slot: the
                         // map never lags the pipeline, and the claim's
-                        // order is fixed here even though its bytes land
-                        // later
-                        let (stale, ticket) = core.own.reserve(lba, size, region, ssd_offset);
+                        // order — like the record sequence assigned here,
+                        // which recovery replays in — is fixed even
+                        // though the bytes land later. The map tracks the
+                        // payload slot (past the header sector).
+                        let seq = core.next_seq;
+                        core.next_seq += 1;
+                        core.region_max_seq[region] = core.region_max_seq[region].max(seq);
+                        let (stale, ticket) =
+                            core.own.reserve(lba, size, region, ssd_offset + HEADER_SECTORS);
                         core.pending_slots[region] += 1;
                         core.stats.superseded_bytes += sectors_to_bytes(stale);
                         core.stats.ssd_bytes_buffered += payload.len() as u64;
@@ -431,7 +721,7 @@ impl Shard {
                         if filled {
                             self.work.notify_all(); // a region is ready to flush
                         }
-                        break Claimed::Slot { region, ssd_offset, ticket };
+                        break Claimed::Slot { region, ssd_offset, ticket, seq };
                     }
                 }
             };
@@ -448,10 +738,13 @@ impl Shard {
         };
 
         // ---- device write, no lock held: this is where concurrent
-        // clients of one shard overlap their transfers ----
+        // clients of one shard overlap their transfers. Both routes end
+        // in a sync barrier before the publish: an acknowledged write is
+        // a durable write, which is exactly the set recovery promises to
+        // restore ----
         match claimed {
             Claimed::Direct { dest, ticket } => {
-                let wrote = self.hdd.write_at(dest, payload);
+                let wrote = self.hdd.write_at(dest, payload).and_then(|_| self.hdd.sync());
                 // ---- critical section 2: publish ----
                 {
                     let mut core = self.core.lock().unwrap();
@@ -466,9 +759,27 @@ impl Shard {
                     self.work.notify_all();
                 }
             }
-            Claimed::Slot { region, ssd_offset, ticket } => {
+            Claimed::Slot { region, ssd_offset, ticket, seq } => {
                 let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
-                let wrote = self.ssd.write_at(base + ssd_offset as u64 * SECTOR_BYTES, payload);
+                let header = RecordHeader {
+                    shard: self.shard_id,
+                    region: region as u32,
+                    size,
+                    lba,
+                    seq,
+                    pos: ssd_offset,
+                }
+                .encode(payload);
+                let wrote = self
+                    .ssd
+                    .write_at(base + ssd_offset as u64 * SECTOR_BYTES, &header)
+                    .and_then(|_| {
+                        self.ssd.write_at(
+                            base + (ssd_offset + HEADER_SECTORS) as u64 * SECTOR_BYTES,
+                            payload,
+                        )
+                    })
+                    .and_then(|_| self.ssd.sync());
                 // ---- critical section 2: publish ----
                 {
                     let mut core = self.core.lock().unwrap();
@@ -477,6 +788,9 @@ impl Shard {
                         self.fail_and_panic(core, format!("ssd backend write: {e}"));
                     }
                     core.own.publish(ticket, lba, size);
+                    // feed the recovery rewind guard: these log sectors
+                    // now hold a durable, acknowledged record
+                    core.pipeline.mark_published(region, ssd_offset + HEADER_SECTORS + size);
                 }
                 // readers waiting on this range, writers waiting out an
                 // overlap, and a flusher waiting for the region's
@@ -501,9 +815,15 @@ impl Shard {
     /// Read back `buf.len()` bytes the shard's HDD holds for
     /// `(file, local_offset)` — verification path. Unlike [`Shard::read`]
     /// this deliberately ignores buffered copies; only meaningful after a
-    /// drain.
+    /// drain. A file the shard has never written reads as zeros — the
+    /// lookup never creates an extent (a read-minted entry would not be
+    /// persisted, and the file's later first write would skip the
+    /// superblock first-touch and be orphaned at recovery).
     pub fn read_hdd(&self, file: u32, local_offset: i32, buf: &mut [u8]) {
-        let lba = self.core.lock().unwrap().files.lba(file, local_offset);
+        let Some(lba) = self.core.lock().unwrap().files.lookup(file, local_offset) else {
+            buf.fill(0);
+            return;
+        };
         // no lock across the device read; result inspected after
         self.hdd.read_at(lba as u64 * SECTOR_BYTES, buf).expect("hdd backend read");
     }
@@ -529,7 +849,13 @@ impl Shard {
         }
         let (lba, segs, pinned) = {
             let mut core = self.core.lock().unwrap();
-            let lba = core.files.lba(file, local_offset);
+            // never-written files read as zeros without minting an extent
+            // (see `read_hdd` on why reads must not touch the table)
+            let Some(lba) = core.files.lookup(file, local_offset) else {
+                drop(core);
+                buf.fill(0);
+                return;
+            };
             loop {
                 if let Some(msg) = core.failed.clone() {
                     drop(core); // release before panicking: no poisoning
@@ -671,11 +997,47 @@ impl Shard {
                 }
             }
 
+            // ---- durability + watermark: the flushed bytes must be
+            // durable on the HDD, and the advanced watermark durable on
+            // the SSD, *before* the region's map entries are released
+            // and its log slots recycled. Ordering matters twice over:
+            // a crash after release-without-watermark would replay this
+            // region's records over newer direct writes (release opens
+            // the range to direct routing — resurrection), and a
+            // watermark without the HDD sync could skip records whose
+            // flushed copy never became durable ----
+            if let Err(e) = self.hdd.sync() {
+                self.fail(format!("flusher: hdd sync: {e}"));
+                return;
+            }
+            let sb = {
+                let mut core = self.core.lock().unwrap();
+                core.sb.epoch += 1;
+                core.sb.clean = false;
+                let max_seq = core.region_max_seq[region];
+                core.sb.watermark[region] = core.sb.watermark[region].max(max_seq);
+                core.sb.last_seq = core.next_seq - 1;
+                core.sb.files = core.files.entries();
+                core.sb.clone()
+            };
+            {
+                // a newer epoch already durable implies this watermark is
+                // too (later snapshots carry every earlier mutation), so
+                // a skipped write still satisfies the ordering above
+                let mut last_written = self.sb_lock.lock().unwrap();
+                if let Err(e) = self.write_superblock(&mut last_written, &sb) {
+                    drop(last_written);
+                    self.fail(format!("flusher: superblock write: {e}"));
+                    return;
+                }
+            }
+
             // ---- complete: settle the surviving extents (their newest
             // copy is the HDD one now), wait out readers still pinning
             // the region, free it, wake blocked ingest ----
             {
                 let mut core = self.core.lock().unwrap();
+                core.region_max_seq[region] = 0;
                 // account flushed bytes from the map at completion, not
                 // from what the copy loop moved: an extent superseded
                 // *mid-copy* was already booked into superseded_bytes by
@@ -772,6 +1134,27 @@ impl Shard {
         self.hdd.sync().expect("hdd sync");
     }
 
+    /// After a full drain: persist a **clean** superblock (watermarks at
+    /// the last sequence, clean flag set), so the next
+    /// [`Shard::recover`] short-circuits without scanning the logs.
+    /// Orderly-shutdown only — a crash leaves the dirty superblock, and
+    /// recovery scans.
+    pub(crate) fn finalize_clean(&self) {
+        let sb = {
+            let mut core = self.core.lock().unwrap();
+            debug_assert!(!core.pipeline.dirty(), "clean superblock before the drain completed");
+            let last = core.next_seq - 1;
+            core.sb.epoch += 1;
+            core.sb.clean = true;
+            core.sb.last_seq = last;
+            core.sb.watermark = [last, last];
+            core.sb.files = core.files.entries();
+            core.sb.clone()
+        };
+        let mut last_written = self.sb_lock.lock().unwrap();
+        self.write_superblock(&mut last_written, &sb).expect("clean superblock write");
+    }
+
     pub(crate) fn request_shutdown(&self) {
         self.core.lock().unwrap().shutdown = true;
         self.work.notify_all();
@@ -792,6 +1175,7 @@ mod tests {
     fn cfg(system: SystemKind, capacity_sectors: i64) -> ShardConfig {
         ShardConfig {
             system,
+            shard_id: 0,
             ssd_capacity_sectors: capacity_sectors,
             stream_len: 1024, // no detection flips mid-test
             pause_below: 0.45,
@@ -826,8 +1210,10 @@ mod tests {
 
     #[test]
     fn shutdown_while_blocked_panics_instead_of_dropping_bytes() {
-        // no flusher thread: both regions fill and stay unavailable
-        let shard = Arc::new(mem_shard(SystemKind::OrangeFsBB, 256));
+        // no flusher thread: both regions fill and stay unavailable.
+        // Each region (129 sectors) holds exactly one framed 128-sector
+        // record (1 header sector + payload).
+        let shard = Arc::new(mem_shard(SystemKind::OrangeFsBB, 258));
         shard.submit(&sub(1, 0, 128), &gen_payload(1, 0, 128, 1)); // fills region 0
         shard.submit(&sub(1, 128, 128), &gen_payload(1, 128, 128, 1)); // fills region 1
         let worker = Arc::clone(&shard);
@@ -1037,6 +1423,149 @@ mod tests {
         assert_eq!(runs[0].len, CHUNK_BYTES);
         assert_eq!(runs[1].len, 7 * sb as usize);
         assert_eq!(runs[1].hdd_byte, CHUNK_BYTES as u64);
+    }
+
+    #[test]
+    fn recover_replays_a_dirty_log_and_preserves_rewrites() {
+        use crate::live::backend::MemStore;
+        // build a shard over shared stores, buffer data (including a
+        // rewrite), then abandon it without any drain — the crash
+        let ssd_store = MemStore::new(false);
+        let hdd_store = MemStore::new(false);
+        let c = cfg(SystemKind::OrangeFsBB, 4096);
+        {
+            let shard = Shard::new(
+                &c,
+                Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
+                Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
+            );
+            shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1));
+            shard.submit(&sub(1, 16, 32), &gen_payload(1, 16, 32, 2)); // rewrite
+            shard.submit(&sub(2, 0, 8), &gen_payload(2, 0, 8, 1)); // second file
+            // no drain, no shutdown: the shard is simply dropped
+        }
+        let (shard, rec) = Shard::recover(
+            &c,
+            Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
+            Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
+        )
+        .expect("recover");
+        assert!(!rec.clean);
+        assert_eq!(rec.records_replayed, 3);
+        assert_eq!(rec.torn_discarded, 2, "one hunted zero stretch per region log");
+        assert_eq!(rec.orphaned, 0);
+        assert_eq!(rec.files_restored, 2, "file table came back from the superblock");
+        assert_eq!(rec.bytes_recovered, (64 + 32 + 8) * SECTOR_BYTES);
+        // the recovered view serves the newest copies mid-burst…
+        let s = SECTOR_BYTES as usize;
+        let mut got = vec![0u8; 64 * s];
+        shard.read(1, 0, &mut got);
+        assert_eq!(got[..16 * s], gen_payload(1, 0, 64, 1)[..16 * s]);
+        assert_eq!(got[16 * s..48 * s], gen_payload(1, 16, 32, 2)[..]);
+        assert_eq!(got[48 * s..], gen_payload(1, 0, 64, 1)[48 * s..]);
+        let mut f2 = vec![0u8; 8 * s];
+        shard.read(2, 0, &mut f2);
+        assert_eq!(f2, gen_payload(2, 0, 8, 1));
+        // …and they drain byte-exactly through the normal flush path,
+        // with conservation intact (recovered bytes count as buffered,
+        // the replay-superseded rewrite as superseded)
+        shard.begin_drain();
+        shard.flusher_loop();
+        let mut hdd = vec![0u8; 64 * s];
+        shard.read_hdd(1, 0, &mut hdd);
+        assert_eq!(hdd, got, "recovered data must settle byte-exactly");
+        let st = shard.stats();
+        assert_eq!(st.superseded_bytes, 32 * SECTOR_BYTES, "replay supersession booked");
+        assert_eq!(st.flushed_bytes + st.superseded_bytes, st.ssd_bytes_buffered);
+    }
+
+    #[test]
+    fn clean_shutdown_recovers_without_scanning() {
+        use crate::live::backend::MemStore;
+        let ssd_store = MemStore::new(false);
+        let hdd_store = MemStore::new(false);
+        let c = cfg(SystemKind::OrangeFsBB, 4096);
+        {
+            let shard = Shard::new(
+                &c,
+                Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
+                Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
+            );
+            shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1));
+            shard.begin_drain();
+            shard.flusher_loop(); // drain to HDD
+            shard.sync();
+            shard.finalize_clean();
+        }
+        let (shard, rec) = Shard::recover(
+            &c,
+            Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
+            Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
+        )
+        .expect("recover");
+        assert!(rec.clean);
+        assert_eq!(rec.sectors_scanned, 0, "clean reopen must not scan the log");
+        assert_eq!(rec.records_replayed, 0);
+        assert_eq!(rec.files_restored, 1);
+        // the drained data reads back from the HDD through the restored
+        // file table
+        let mut got = vec![0u8; 64 * SECTOR_BYTES as usize];
+        shard.read(1, 0, &mut got);
+        assert_eq!(got, gen_payload(1, 0, 64, 1));
+        // and new writes work: their sequences resume past the old ones
+        shard.submit(&sub(1, 100, 8), &gen_payload(1, 100, 8, 3));
+        let mut more = vec![0u8; 8 * SECTOR_BYTES as usize];
+        shard.read(1, 100, &mut more);
+        assert_eq!(more, gen_payload(1, 100, 8, 3));
+    }
+
+    #[test]
+    fn recovery_after_clean_reopen_sees_new_writes() {
+        use crate::live::backend::MemStore;
+        // clean shutdown, reopen, write WITHOUT another shutdown, crash:
+        // the dirty mark written at reopen must force a scan that finds
+        // the new records — a stale clean flag here would lose them
+        let ssd_store = MemStore::new(false);
+        let hdd_store = MemStore::new(false);
+        let c = cfg(SystemKind::OrangeFsBB, 4096);
+        {
+            let shard = Shard::new(
+                &c,
+                Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
+                Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
+            );
+            shard.submit(&sub(1, 0, 16), &gen_payload(1, 0, 16, 1));
+            shard.begin_drain();
+            shard.flusher_loop();
+            shard.sync();
+            shard.finalize_clean();
+        }
+        {
+            let (shard, rec) = Shard::recover(
+                &c,
+                Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
+                Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
+            )
+            .expect("first recover");
+            assert!(rec.clean);
+            shard.submit(&sub(1, 50, 8), &gen_payload(1, 50, 8, 2));
+            // crash again: drop without shutdown
+        }
+        let (shard, rec) = Shard::recover(
+            &c,
+            Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
+            Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
+        )
+        .expect("second recover");
+        assert!(!rec.clean, "the reopen marked the superblock dirty");
+        assert_eq!(rec.records_replayed, 1, "the post-reopen write survives");
+        let mut got = vec![0u8; 8 * SECTOR_BYTES as usize];
+        shard.read(1, 50, &mut got);
+        assert_eq!(got, gen_payload(1, 50, 8, 2));
+        // the pre-shutdown data is still on the HDD
+        let mut old = vec![0u8; 16 * SECTOR_BYTES as usize];
+        shard.read(1, 0, &mut old);
+        assert_eq!(old, gen_payload(1, 0, 16, 1));
     }
 
     #[test]

@@ -20,7 +20,7 @@ use ssdup::workload::Workload;
 
 const VALUE_OPTS: &[&str] = &[
     "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
-    "queue", "shards", "backend", "clients", "dir",
+    "queue", "shards", "backend", "clients", "dir", "crash-at",
 ];
 
 fn main() {
@@ -56,7 +56,9 @@ fn main() {
                  ssdup live --shards 4 --backend mem|file [--dir DIR]\n\
                  \x20          [--pattern mixed|contig|random|strided|rewrite]\n\
                  \x20          [--procs 16] [--size-mib 1024] [--ssd-mib 64] [--clients 8]\n\
-                 \x20          [--no-verify] [--keep]\n"
+                 \x20          [--no-verify] [--keep]\n\
+                 \x20          [--crash-at N]   kill the process (no shutdown) after N acked requests\n\
+                 \x20          [--recover]      reopen --dir images, replay the log, drain\n"
             );
             2
         }
@@ -225,6 +227,46 @@ fn cmd_live(args: &Args) -> i32 {
     let seed: u64 = args.get_parse("seed", 7).unwrap_or(7);
     let pattern = args.get_or("pattern", "mixed");
 
+    let crash_at: Option<u64> = match args.get("crash-at") {
+        Some(v) => match v.parse() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!("error: --crash-at expects a request count, got '{v}'");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let cfg = LiveConfig::new(system).with_shards(shards).with_ssd_mib(ssd_mib);
+
+    // --recover: reopen a previous `--backend file` run's images (same
+    // --shards/--ssd-mib as the crashed run), replay the log, drain the
+    // recovered data to the HDD images, and shut down cleanly. No
+    // workload is generated or verified here — the recovered bytes
+    // predate this process.
+    if args.has("recover") {
+        let (Some(dir), "file") = (args.get("dir"), backend) else {
+            eprintln!("--recover requires --backend file --dir DIR (the crashed run's images)");
+            return 2;
+        };
+        let (engine, report) = match LiveEngine::open_file(&cfg, std::path::Path::new(dir)) {
+            Ok(pair) => pair,
+            Err(e) => {
+                eprintln!("error: cannot reopen backends under {dir}: {e}");
+                return 1;
+            }
+        };
+        println!("{}", report.summary());
+        engine.drain();
+        let stats = engine.shutdown();
+        let flushed: u64 = stats.iter().map(|s| s.flushed_bytes).sum();
+        println!(
+            "recovered data drained: {} MiB settled on the HDD images; clean superblocks written",
+            flushed / (1 << 20)
+        );
+        return 0;
+    }
+
     let total_sectors = (size_mib * 1024 * 1024 / 512) as i64;
     let Some((workload, versioned)) = live_workload(pattern, procs, total_sectors, req_kb * 2, seed)
     else {
@@ -232,7 +274,6 @@ fn cmd_live(args: &Args) -> i32 {
         return 2;
     };
 
-    let cfg = LiveConfig::new(system).with_shards(shards).with_ssd_mib(ssd_mib);
     let mut created_dir: Option<std::path::PathBuf> = None;
     let engine = match backend {
         "mem" => LiveEngine::mem(&cfg, SyntheticLatency::ssd(), SyntheticLatency::hdd()),
@@ -271,6 +312,62 @@ fn cmd_live(args: &Args) -> i32 {
         clients,
         ssd_mib
     );
+
+    // --crash-at N: submit closed-loop (single client) until N requests
+    // have been acknowledged, then kill the process on the spot — no
+    // drain, no shutdown, flushers mid-flight. The images under --dir
+    // are left exactly as a power cut would: reopen them with --recover.
+    if let Some(limit) = crash_at {
+        if backend != "file" {
+            eprintln!("--crash-at requires --backend file (a mem backend dies with the process)");
+            return 2;
+        }
+        let dir_note = args.get("dir").map(str::to_owned).or_else(|| {
+            created_dir.as_ref().map(|d| d.display().to_string())
+        });
+        let mut acked = 0u64;
+        let mut buf: Vec<u8> = Vec::new();
+        let mut cursors = vec![0usize; workload.processes.len()];
+        loop {
+            let mut progressed = false;
+            for (pi, proc) in workload.processes.iter().enumerate() {
+                if cursors[pi] >= proc.reqs.len() {
+                    continue;
+                }
+                let req = proc.reqs[cursors[pi]];
+                let gen = if versioned {
+                    live::payload::write_gen(proc.proc_id, cursors[pi] as u32)
+                } else {
+                    0
+                };
+                cursors[pi] += 1;
+                progressed = true;
+                buf.resize(req.bytes() as usize, 0);
+                live::payload::fill_gen(req.file, req.offset as i64, gen, &mut buf);
+                engine.submit(req, &buf);
+                acked += 1;
+                if acked >= limit {
+                    println!("crash-at: {acked} requests acknowledged — dying without shutdown");
+                    if let Some(d) = &dir_note {
+                        println!(
+                            "recover with: ssdup live --recover --backend file --dir {d} \
+                             --shards {shards} --ssd-mib {ssd_mib}"
+                        );
+                    }
+                    // a real crash: no drain, no clean superblock, no
+                    // destructors — flusher threads die mid-I/O
+                    std::process::exit(41);
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        println!("crash-at {limit} never reached ({acked} requests in the whole workload)");
+        engine.shutdown();
+        return 2;
+    }
+
     let report = live::run_load_with(&engine, &workload, clients, versioned);
     println!("{}", report.summary());
     for (i, s) in report.shards.iter().enumerate() {

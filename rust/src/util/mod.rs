@@ -3,6 +3,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod crc;
 pub mod json;
 pub mod prng;
 pub mod quickcheck;

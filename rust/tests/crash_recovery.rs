@@ -1,0 +1,333 @@
+//! Crash-injection tests for the crash-consistent SSD log: kill the
+//! engine mid-burst — no drain, no shutdown, flushers mid-flight — then
+//! reopen via `LiveEngine::open` and hold it to the durability contract:
+//!
+//! * **every acknowledged write is byte-exact** after recovery (an ack
+//!   happens only after the framed record and its sync barrier hit the
+//!   backend, so acknowledged ⇒ durable ⇒ replayed);
+//! * **torn tails are discarded whole**: a write in flight at the crash
+//!   either recovers completely (its frame validated) or disappears at
+//!   record granularity — never as garbage or a half-old half-new
+//!   sector;
+//! * **clean shutdowns short-circuit**: reopening after
+//!   `LiveEngine::shutdown` scans zero log sectors.
+//!
+//! The in-memory crash rig uses `MemStore`'s snapshot mode: writes land
+//! in a volatile overlay, the publish-path `sync` merges them durable,
+//! and `freeze()` clones the durable pages *while writer threads are
+//! mid-write* — a genuine power-loss image with torn in-flight records,
+//! zero external dependencies. The file rig kills by abandoning the
+//! engine (drop without shutdown) and reopening the images from disk.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ssdup::live::{
+    payload, LiveConfig, LiveEngine, MemBackend, MemStore, SyntheticLatency,
+};
+use ssdup::server::SystemKind;
+use ssdup::types::{Request, SECTOR_BYTES};
+use ssdup::util::prng::Prng;
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+
+/// writer lanes (one file each, so lanes never interact)
+const LANES: usize = 3;
+/// rewrite slots per lane
+const SLOTS: usize = 16;
+/// sectors per slot write (stripes split each across both shards)
+const SLOT_SECTORS: i32 = 8;
+/// hard cap on writes per lane (the crash usually fires much earlier)
+const MAX_WRITES: usize = 300;
+
+fn lane_file(lane: usize) -> u32 {
+    lane as u32 + 1
+}
+
+/// Per-lane write log. The lane's writer is single-threaded, so acks
+/// happen in issue order: `issued[..acked]` is exactly the acknowledged
+/// prefix, and `issued[acked..]` the (at most one) write in flight.
+#[derive(Default)]
+struct LaneLog {
+    issued: Vec<(usize, u64)>, // (slot, gen)
+    acked: usize,
+}
+
+fn crash_cfg(ssd_sectors: i64) -> LiveConfig {
+    // everything routes to the SSD log (frames + flush churn on a tiny
+    // SSD); 4-sector stripes split every slot write across both shards,
+    // so sub-records can tear independently
+    let mut cfg = LiveConfig::new(SystemKind::OrangeFsBB).with_shards(2);
+    cfg.ssd_capacity_sectors = ssd_sectors;
+    cfg.stripe_sectors = 4;
+    cfg.flush_check = Duration::from_millis(1);
+    cfg
+}
+
+/// One seeded crash point: run concurrent rewrite lanes over
+/// snapshot-mode stores, freeze mid-flight, reopen from the frozen
+/// image, and check the contract lane by lane, sector by sector.
+fn crash_and_recover_mem(seed: u64) {
+    let cfg = crash_cfg(if seed % 2 == 0 { 256 } else { 1 << 16 });
+    let stores: Vec<(Arc<MemStore>, Arc<MemStore>)> =
+        (0..cfg.shards).map(|_| (MemStore::new(true), MemStore::new(true))).collect();
+    let engine = {
+        let stores = stores.clone();
+        LiveEngine::with_backends(&cfg, move |i| {
+            (
+                // a little SSD dwell keeps writes in flight long enough
+                // for the freeze to catch them mid-record
+                Box::new(MemBackend::over(
+                    Arc::clone(&stores[i].0),
+                    SyntheticLatency { per_op_us: 150, us_per_mib: 0 },
+                )) as Box<dyn ssdup::live::Backend>,
+                Box::new(MemBackend::over(Arc::clone(&stores[i].1), SyntheticLatency::ZERO))
+                    as Box<dyn ssdup::live::Backend>,
+            )
+        })
+    };
+
+    let logs: Vec<Mutex<LaneLog>> = (0..LANES).map(|_| Mutex::new(LaneLog::default())).collect();
+    let stop = AtomicBool::new(false);
+    let sector = SECTOR_BYTES as usize;
+    let crash_threshold = 24 + (seed * 7) % 40; // seeded mid-burst point
+
+    // `snapshot` is each lane's log as of *just before* the freeze — its
+    // `acked` prefix is the set recovery must restore. The final `logs`
+    // (read after the writers join) hold every generation ever issued,
+    // which is the candidate set for sectors that kept moving between
+    // the snapshot and the freeze.
+    type LaneSnapshot = (Vec<(usize, u64)>, usize);
+    let (snapshot, frozen): (Vec<LaneSnapshot>, Vec<(Arc<MemStore>, Arc<MemStore>)>) =
+        std::thread::scope(|s| {
+        let engine = &engine;
+        let stop = &stop;
+        let logs = &logs;
+        for lane in 0..LANES {
+            s.spawn(move || {
+                let mut rng = Prng::new(seed * 1000 + lane as u64);
+                let mut buf = vec![0u8; SLOT_SECTORS as usize * sector];
+                for i in 0..MAX_WRITES {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let slot = rng.gen_range(SLOTS as u64) as usize;
+                    let gen = payload::write_gen(lane as u32, i as u32);
+                    let off = slot as i32 * SLOT_SECTORS;
+                    payload::fill_gen(lane_file(lane), off as i64, gen, &mut buf);
+                    logs[lane].lock().unwrap().issued.push((slot, gen));
+                    engine.submit(
+                        Request {
+                            app: lane as u16,
+                            proc_id: lane as u32,
+                            file: lane_file(lane),
+                            offset: off,
+                            size: SLOT_SECTORS,
+                        },
+                        &buf,
+                    );
+                    logs[lane].lock().unwrap().acked += 1;
+                }
+            });
+        }
+        // wait for the seeded number of acknowledged writes, then crash
+        loop {
+            let total: usize = logs.iter().map(|l| l.lock().unwrap().acked).sum();
+            if total as u64 >= crash_threshold || stop.load(Ordering::Relaxed) {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(300));
+        }
+            // ---- the crash. Order matters: snapshot the ack logs
+            // FIRST, then freeze the stores — anything acked before the
+            // log snapshot finished its sync barrier before the freeze,
+            // so it must be in the frozen image ----
+            let snapshot: Vec<LaneSnapshot> = logs
+                .iter()
+                .map(|l| {
+                    let log = l.lock().unwrap();
+                    (log.issued.clone(), log.acked)
+                })
+                .collect();
+            let frozen: Vec<(Arc<MemStore>, Arc<MemStore>)> =
+                stores.iter().map(|(ssd, hdd)| (ssd.freeze(), hdd.freeze())).collect();
+            stop.store(true, Ordering::Relaxed);
+            (snapshot, frozen) // writer threads join at scope end
+        });
+    drop(engine); // the old engine dies; the frozen image is the truth
+
+    // ---- reopen from the power-loss image ----
+    let pairs = frozen.clone();
+    let (recovered, report) = LiveEngine::open(&cfg, move |i| {
+        (
+            Box::new(MemBackend::over(Arc::clone(&pairs[i].0), SyntheticLatency::ZERO))
+                as Box<dyn ssdup::live::Backend>,
+            Box::new(MemBackend::over(Arc::clone(&pairs[i].1), SyntheticLatency::ZERO))
+                as Box<dyn ssdup::live::Backend>,
+        )
+    })
+    .expect("recovery must succeed");
+    assert!(!report.clean(), "seed {seed}: a crash is never a clean shutdown");
+    assert!(report.sectors_scanned() > 0, "seed {seed}: dirty reopen must scan the logs");
+
+    // ---- the contract, sector by sector ----
+    let mut buf = vec![0u8; SLOT_SECTORS as usize * sector];
+    for lane in 0..LANES {
+        let log = logs[lane].lock().unwrap(); // complete issue history (writers joined)
+        let (snap_issued, snap_acked) = &snapshot[lane];
+        for slot in 0..SLOTS {
+            // candidate generations: everything the lane *ever* issued
+            // for this slot (writes between the snapshot and the freeze
+            // may have become durable too — they are newer, not wrong).
+            // The floor is the newest generation acknowledged before the
+            // snapshot: monotone gens, so the last acked occurrence is
+            // the max, and recovery may never fall below it.
+            let candidates: Vec<u64> =
+                log.issued.iter().filter(|(s, _)| *s == slot).map(|&(_, g)| g).collect();
+            let last_acked: Option<u64> = snap_issued[..*snap_acked]
+                .iter()
+                .filter(|(s, _)| *s == slot)
+                .map(|&(_, g)| g)
+                .last();
+            let off = slot as i32 * SLOT_SECTORS;
+            recovered.read(lane_file(lane), off, &mut buf);
+            for k in 0..SLOT_SECTORS as usize {
+                let sec = &buf[k * sector..(k + 1) * sector];
+                let sec_idx = off as i64 + k as i64;
+                let floor = last_acked.unwrap_or(0);
+                let ok = (last_acked.is_none() && sec.iter().all(|&b| b == 0))
+                    || candidates.iter().any(|&g| {
+                        g >= floor && payload::sector_matches(lane_file(lane), sec_idx, g, sec)
+                    });
+                assert!(
+                    ok,
+                    "seed {seed}: lane {lane} slot {slot} sector {sec_idx} recovered to bytes \
+                     that are neither the last acknowledged generation ({last_acked:?}) nor a \
+                     newer issued one — acknowledged data was lost or a torn record leaked"
+                );
+            }
+        }
+    }
+
+    // the recovered data must also drain through the normal flush path
+    // and settle identically on the HDD
+    let mut before = vec![0u8; SLOT_SECTORS as usize * sector];
+    recovered.read(lane_file(0), 0, &mut before);
+    recovered.drain();
+    recovered.read(lane_file(0), 0, &mut buf);
+    assert_eq!(buf, before, "seed {seed}: the drain must not change recovered contents");
+    recovered.shutdown();
+}
+
+#[test]
+fn mem_snapshot_crashes_at_eight_seeded_points_recover_acknowledged_writes() {
+    for seed in 0..8 {
+        crash_and_recover_mem(seed);
+    }
+}
+
+#[test]
+fn file_backend_killed_mid_burst_recovers_and_verifies() {
+    let dir = std::env::temp_dir().join(format!("ssdup-crash-{}", std::process::id()));
+    // sparse random burst, small SSD: several flush cycles happen before
+    // the kill, so recovery sees settled regions (watermark skips),
+    // still-buffered records (replay), and a dirty superblock
+    let sectors = 16_384; // 8 MiB
+    let w = ior_spanned(0, IorPattern::SegmentedRandom, 4, sectors, sectors * 16, 128, 21);
+    let mut cfg = LiveConfig::new(SystemKind::OrangeFsBB).with_shards(2).with_ssd_mib(1);
+    cfg.flush_check = Duration::from_millis(1);
+    {
+        let engine = LiveEngine::file(&cfg, &dir).expect("create file backends");
+        // submit everything but never drain: at the "kill" below, some
+        // regions have flushed (their watermarks persisted), the rest of
+        // the burst is still buffered in the log
+        let mut buf: Vec<u8> = Vec::new();
+        for proc in &w.processes {
+            for req in &proc.reqs {
+                buf.resize(req.bytes() as usize, 0);
+                payload::fill(req.file, req.offset as i64, &mut buf);
+                engine.submit(*req, &buf);
+            }
+        }
+        // CRASH: drop without drain or shutdown — the flushers die
+        // wherever they are, the superblock stays dirty
+    }
+    let (engine, report) = LiveEngine::open_file(&cfg, &dir).expect("reopen images");
+    assert!(!report.clean(), "an abandoned engine must reopen dirty");
+    // every write was acknowledged, so every byte must be served — from
+    // the replayed log or the HDD — before any new drain
+    let sector = SECTOR_BYTES as usize;
+    let mut got = vec![0u8; 128 * sector];
+    let mut expect = vec![0u8; 128 * sector];
+    for proc in &w.processes {
+        for req in &proc.reqs {
+            payload::fill(req.file, req.offset as i64, &mut expect);
+            engine.read(req.file, req.offset, &mut got);
+            assert_eq!(
+                got, expect,
+                "acknowledged write at offset {} lost or corrupted by the crash",
+                req.offset
+            );
+        }
+    }
+    // and after draining, the standard whole-workload verifier agrees
+    engine.drain();
+    let verify = engine.verify_workload(&w);
+    assert!(verify.is_ok(), "post-recovery drain verification failed: {verify:?}");
+    engine.shutdown();
+
+    // a clean shutdown happened above: the next reopen short-circuits
+    let (engine, report) = LiveEngine::open_file(&cfg, &dir).expect("clean reopen");
+    assert!(report.clean(), "orderly shutdown must leave clean superblocks");
+    assert_eq!(report.sectors_scanned(), 0, "clean reopen must not scan any log");
+    assert_eq!(report.records_replayed(), 0);
+    // the data is still there, through the recovered file table
+    let req = w.processes[0].reqs[0];
+    payload::fill(req.file, req.offset as i64, &mut expect);
+    engine.read(req.file, req.offset, &mut got);
+    assert_eq!(got, expect, "clean reopen must still serve the settled data");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn recovery_rejects_a_foreign_shard_log() {
+    // shard ids are stamped into records and superblocks: reopening a
+    // log with the wrong topology must not silently replay garbage.
+    // Here shard 1's image is fed to a 1-shard engine (which expects
+    // shard id 0 everywhere): nothing validates, nothing is replayed.
+    let store = MemStore::new(false);
+    let hdd = MemStore::new(false);
+    let cfg_two = crash_cfg(4096);
+    {
+        let stores = vec![
+            (MemStore::new(false), MemStore::new(false)),
+            (Arc::clone(&store), Arc::clone(&hdd)),
+        ];
+        let engine = LiveEngine::with_backends(&cfg_two, move |i| {
+            (
+                Box::new(MemBackend::over(Arc::clone(&stores[i].0), SyntheticLatency::ZERO))
+                    as Box<dyn ssdup::live::Backend>,
+                Box::new(MemBackend::over(Arc::clone(&stores[i].1), SyntheticLatency::ZERO))
+                    as Box<dyn ssdup::live::Backend>,
+            )
+        });
+        let mut buf = vec![0u8; 8 * SECTOR_BYTES as usize];
+        payload::fill(1, 0, &mut buf);
+        engine.submit(Request { app: 0, proc_id: 0, file: 1, offset: 0, size: 8 }, &buf);
+        // crash without shutdown
+    }
+    let mut cfg_one = crash_cfg(4096);
+    cfg_one.shards = 1;
+    let (engine, report) = LiveEngine::open(&cfg_one, |_| {
+        (
+            Box::new(MemBackend::over(Arc::clone(&store), SyntheticLatency::ZERO))
+                as Box<dyn ssdup::live::Backend>,
+            Box::new(MemBackend::over(Arc::clone(&hdd), SyntheticLatency::ZERO))
+                as Box<dyn ssdup::live::Backend>,
+        )
+    })
+    .expect("open succeeds");
+    assert_eq!(report.records_replayed(), 0, "foreign-shard records must not replay");
+    engine.shutdown();
+}

@@ -9,7 +9,7 @@ use ssdup::buffer::{AvlTree, BufferOutcome, Pipeline};
 use ssdup::detector::native::detect_stream;
 use ssdup::device::{Hdd, HddConfig};
 use ssdup::fs::StripeLayout;
-use ssdup::live::{payload, LiveConfig, LiveEngine, SyntheticLatency};
+use ssdup::live::{payload, LiveConfig, LiveEngine, OwnershipMap, SyntheticLatency, Tier};
 use ssdup::redirector::{AdaptivePolicy, PercentList, RoutePolicy};
 use ssdup::server::SystemKind;
 use ssdup::types::{Detection, Request, SECTOR_BYTES};
@@ -247,6 +247,63 @@ fn prop_striping_conserves_and_localizes() {
         let total: i32 = subs.iter().map(|s| s.size).sum();
         total == len
             && subs.iter().all(|s| s.node < nodes && s.size > 0 && s.local_offset >= 0)
+    });
+}
+
+#[test]
+fn prop_recovered_ownership_matches_btreemap_model_at_any_crash_point() {
+    // the crash-recovery replay invariant: truncate a record stream at a
+    // random crash point (recovery never sees records past the torn
+    // tail), replay the survivors in sequence order through
+    // `OwnershipMap::rebuild_from_replay`, and the result must equal a
+    // per-sector BTreeMap model of "last writer wins"
+    forall(13, 200, "ownership replay model", |rng: &mut Prng, size| {
+        let records = rng.range(1, 2 + size * 4);
+        let seed = rng.next_u64();
+        (records, seed)
+    }, |&(records, seed)| {
+        let mut rng = Prng::new(seed);
+        const SPAN: i64 = 800;
+        // generate the full record stream the way a shard would: seqs
+        // strictly monotone, per-region log slots allocated densely
+        let mut next_slot = [0i64; 2];
+        let full: Vec<(u64, i64, i64, usize, i64)> = (0..records)
+            .map(|i| {
+                let lba = rng.gen_range(SPAN as u64) as i64;
+                let sz = 1 + rng.gen_range(48) as i64;
+                let region = rng.gen_range(2) as usize;
+                let slot = next_slot[region];
+                next_slot[region] += sz;
+                (i as u64 + 1, lba, sz, region, slot)
+            })
+            .collect();
+        // crash: only a prefix of the stream survives
+        let survive = rng.gen_range(records as u64 + 1) as usize;
+        let stream = &full[..survive];
+        let (map, _superseded) = OwnershipMap::rebuild_from_replay(stream.iter().copied());
+        // model: per-sector last writer
+        let mut model: std::collections::BTreeMap<i64, (usize, i64)> =
+            std::collections::BTreeMap::new();
+        for &(_, lba, sz, region, slot) in stream {
+            for s in 0..sz {
+                model.insert(lba + s, (region, slot + s));
+            }
+        }
+        // compare sector by sector over the whole span
+        for (seg_lba, seg_size, tier) in map.resolve(0, SPAN + 64) {
+            for s in 0..seg_size {
+                let sector = seg_lba + s;
+                let expect = model.get(&sector).copied();
+                let got = match tier {
+                    Tier::Hdd => None,
+                    Tier::Ssd { region, ssd_offset } => Some((region, ssd_offset + s)),
+                };
+                if got != expect {
+                    return false;
+                }
+            }
+        }
+        true
     });
 }
 
