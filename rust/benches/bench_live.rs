@@ -201,6 +201,89 @@ fn main() {
         );
     }
 
+    section("group commit: fsync batching, 4 clients on ONE shard (FileBackend)");
+    if Bench::should_run("live/group-commit") {
+        // A/B the publish-path durability barrier: per-record fsync (the
+        // PR-4 baseline) vs group commit, on real files where fsync has a
+        // real price. Same burst, same 4 closed-loop clients, one shard;
+        // the SSD budget holds the burst so the ingest path dominates.
+        // 64 KiB requests keep enough publishes in flight to batch.
+        let mib: i64 = if fast { 6 } else { 24 };
+        let sectors = mib * 2048;
+        let wg = ior_spanned(0, IorPattern::SegmentedRandom, 4, sectors, sectors * 8, 128, 37);
+        let gbytes = wg.total_bytes() as f64;
+        // (mbps, syncs, writes_per_sync) per mode
+        let mut modes: Vec<(&'static str, f64, u64, f64)> = Vec::new();
+        for (on, label) in [(false, "off"), (true, "on")] {
+            let dir =
+                std::env::temp_dir().join(format!("ssdup-bench-gc-{label}-{}", std::process::id()));
+            // a modest leader window helps where fsync is cheap (tmpfs)
+            let window = std::time::Duration::from_micros(if on { 500 } else { 0 });
+            let mut last = (0.0f64, 0u64, 0.0f64);
+            b.run(&format!("live/group-commit-{label}"), gbytes, || {
+                std::fs::remove_dir_all(&dir).ok();
+                let cfg = LiveConfig::new(SystemKind::OrangeFsBB)
+                    .with_shards(1)
+                    .with_ssd_mib(mib as u64 * 2)
+                    .with_group_commit(on)
+                    .with_group_commit_window(window);
+                let engine = LiveEngine::file(&cfg, &dir).expect("file backends");
+                let report = live::run_load(&engine, &wg, 4);
+                engine.shutdown();
+                last = (report.throughput_mbps(), report.syncs(), report.writes_per_sync());
+                bb(last.0)
+            });
+            std::fs::remove_dir_all(&dir).ok();
+            modes.push((label, last.0, last.1, last.2));
+        }
+        if let (Some(off), Some(on)) =
+            (modes.iter().find(|m| m.0 == "off"), modes.iter().find(|m| m.0 == "on"))
+        {
+            println!(
+                "\ngroup commit: off {:.1} MB/s over {} fsyncs -> on {:.1} MB/s over {} fsyncs \
+                 ({:.1} writes/sync, {:.2}x fewer fsyncs)",
+                off.1,
+                off.2,
+                on.1,
+                on.2,
+                on.3,
+                off.2 as f64 / (on.2 as f64).max(1.0),
+            );
+            out.insert("syncs".into(), Json::Num(on.2 as f64));
+            out.insert("writes_per_sync".into(), Json::Num(on.3));
+            out.insert(
+                "group_commit".into(),
+                Json::obj(vec![
+                    (
+                        "off",
+                        Json::obj(vec![
+                            ("mbps", Json::Num(off.1)),
+                            ("syncs", Json::Num(off.2 as f64)),
+                            ("writes_per_sync", Json::Num(off.3)),
+                        ]),
+                    ),
+                    (
+                        "on",
+                        Json::obj(vec![
+                            ("mbps", Json::Num(on.1)),
+                            ("syncs", Json::Num(on.2 as f64)),
+                            ("writes_per_sync", Json::Num(on.3)),
+                        ]),
+                    ),
+                ]),
+            );
+            // the smoke contract (blocking in CI's SSDUP_BENCH_FAST=1
+            // step): 4 concurrent publishers must share barriers
+            assert!(
+                on.3 > 1.0,
+                "group commit failed to batch: {:.2} writes/sync ({} syncs; ungrouped baseline {})",
+                on.3,
+                on.2,
+                off.2
+            );
+        }
+    }
+
     section("mid-burst read latency (pinned-extent reads vs concurrent ingest)");
     if Bench::should_run("live/read-latency") {
         let hist = read_latency(if fast { 200 } else { 2000 });

@@ -61,6 +61,32 @@ pub trait Backend: Send + Sync {
     fn kind(&self) -> &'static str;
 }
 
+/// Any shared handle to a backend is itself a backend: the whole API is
+/// `&self`, so an `Arc<T>` forwards every call. This is what lets a
+/// caller keep an inspection handle to a backend that a wrapper (like
+/// the group-commit sequencer) owns.
+impl<T: Backend + ?Sized> Backend for Arc<T> {
+    fn write_at(&self, offset: u64, data: &[u8]) -> io::Result<()> {
+        (**self).write_at(offset, data)
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        (**self).read_at(offset, buf)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        (**self).bytes_written()
+    }
+
+    fn sync(&self) -> io::Result<()> {
+        (**self).sync()
+    }
+
+    fn kind(&self) -> &'static str {
+        (**self).kind()
+    }
+}
+
 /// Synthetic service time applied per [`MemBackend`] operation: a fixed
 /// per-op cost plus a bandwidth term. Mirrors the cost structure of the
 /// simulator's device models closely enough for shard-scaling benches.

@@ -1,0 +1,468 @@
+//! Group commit: one device sync barrier for many concurrent publishers.
+//!
+//! The durability contract (acknowledged ⇒ durable) requires every
+//! publish path to put a `sync()` between its device writes and its
+//! acknowledgment. Doing that literally — one `sync` per record — means
+//! N concurrent clients of a shard issue N fsyncs where one device
+//! barrier would cover all of them: the classic fsync amplification that
+//! batched burst buffers coalesce away. [`GroupSync`] is that
+//! coalescing layer, wrapped around each backend:
+//!
+//! * every completed [`Backend::write_at`] advances a **completed-writes
+//!   watermark** — a publisher's *ticket* is the watermark value when it
+//!   enters [`GroupSync::barrier`], i.e. "everything I wrote is below
+//!   this";
+//! * the first waiter not yet covered becomes the **leader**: it
+//!   snapshots the watermark (the cutoff), runs the one real
+//!   `inner.sync()`, and publishes the cutoff as the new **synced-up-to
+//!   watermark**;
+//! * every waiter whose ticket the cutoff covers is released by that
+//!   single sync; waiters that ticketed later wait for the next leader
+//!   (at most one extra sync — while a sync is in flight, arrivals
+//!   accumulate behind it, which is where the batching comes from even
+//!   with a zero window).
+//!
+//! This is sound because a device `sync` is a *global* barrier: it makes
+//! every write completed before it **started** durable, not just the
+//! caller's (`fdatasync` flushes the file, [`MemStore`'s] snapshot sync
+//! merges the whole overlay). So a sync whose start-snapshot covers a
+//! ticket covers all of that ticket's writes.
+//!
+//! The optional **batching window** trades ack latency for bigger
+//! batches: an elected leader waits up to the window for *in-flight*
+//! writes to land (and ticket) before issuing its sync. A lone writer is
+//! never delayed — with nothing in flight, the leader syncs immediately
+//! — and the wait is bounded by the window regardless.
+//!
+//! A failed sync is **sticky**: every current and future waiter gets the
+//! error (their writes may not be durable, so releasing them as "covered"
+//! would forge acknowledgments). The shard turns that into its
+//! established fail-and-panic protocol.
+//!
+//! [`MemStore`'s]: crate::live::backend::MemStore
+
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::live::backend::Backend;
+
+/// State under the sequencer mutex. The counters are monotone: `synced`
+/// chases `completed`, and a barrier with ticket `t` may return as soon
+/// as `synced >= t`.
+struct CommitState {
+    /// `write_at` calls currently inside the device (started, not done)
+    in_flight: u64,
+    /// `write_at` calls completed — the ticket source
+    completed: u64,
+    /// highest completed-watermark covered by a finished sync
+    synced: u64,
+    /// a leader is running (or about to run) the device sync
+    leader: bool,
+    /// first sync error, sticky: no later barrier may claim coverage
+    failed: Option<String>,
+}
+
+/// A [`Backend`] wrapper that coalesces concurrent publishers' sync
+/// barriers into single device syncs (see the module docs). All the
+/// positional I/O passes straight through; only [`GroupSync::barrier`]
+/// adds behavior.
+pub struct GroupSync {
+    inner: Box<dyn Backend>,
+    state: Mutex<CommitState>,
+    cv: Condvar,
+    /// max time an elected leader waits for in-flight writes to land
+    window: Duration,
+    /// `false` = per-record sync (the ungrouped baseline, for the bench
+    /// A/B and as an escape hatch): every barrier runs its own sync
+    enabled: bool,
+    /// device syncs actually issued (leaders + passthrough `sync` calls)
+    syncs: AtomicU64,
+    /// barriers requested (≈ acknowledged publishes); `barriers / syncs`
+    /// is the batching factor
+    barriers: AtomicU64,
+}
+
+impl GroupSync {
+    pub fn new(inner: Box<dyn Backend>, enabled: bool, window: Duration) -> Self {
+        Self {
+            inner,
+            state: Mutex::new(CommitState {
+                in_flight: 0,
+                completed: 0,
+                synced: 0,
+                leader: false,
+                failed: None,
+            }),
+            cv: Condvar::new(),
+            window,
+            enabled,
+            syncs: AtomicU64::new(0),
+            barriers: AtomicU64::new(0),
+        }
+    }
+
+    /// Device syncs issued so far.
+    pub fn syncs(&self) -> u64 {
+        self.syncs.load(Ordering::Relaxed)
+    }
+
+    /// Barriers requested so far (each a would-be fsync without grouping).
+    pub fn barriers(&self) -> u64 {
+        self.barriers.load(Ordering::Relaxed)
+    }
+
+    /// Block until every `write_at` this thread completed before the call
+    /// is covered by a **finished** device sync, running that sync itself
+    /// if it is elected leader. Returns the sticky sync error if any
+    /// covering sync failed — the caller's bytes may not be durable.
+    pub fn barrier(&self) -> io::Result<()> {
+        self.barriers.fetch_add(1, Ordering::Relaxed);
+        if !self.enabled {
+            // ungrouped baseline: the caller pays its own fsync
+            self.syncs.fetch_add(1, Ordering::Relaxed);
+            return self.inner.sync();
+        }
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.completed;
+        loop {
+            if let Some(msg) = &st.failed {
+                return Err(io::Error::other(msg.clone()));
+            }
+            if st.synced >= ticket {
+                return Ok(());
+            }
+            if st.leader {
+                st = self.cv.wait(st).unwrap();
+                continue;
+            }
+            // ---- elected leader ----
+            st.leader = true;
+            if !self.window.is_zero() {
+                // bounded batching window: let in-flight writes land (and
+                // their publishers ticket) so this sync covers them too.
+                // With nothing in flight a lone writer skips this wait.
+                let deadline = Instant::now() + self.window;
+                while st.in_flight > 0 && st.failed.is_none() {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+                }
+            }
+            let cutoff = st.completed; // >= ticket: the leader covers itself
+            drop(st);
+            let result = self.inner.sync();
+            self.syncs.fetch_add(1, Ordering::Relaxed);
+            st = self.state.lock().unwrap();
+            st.leader = false;
+            match result {
+                Ok(()) => st.synced = st.synced.max(cutoff),
+                Err(e) => {
+                    st.failed.get_or_insert(format!("group sync: {e}"));
+                }
+            }
+            self.cv.notify_all();
+            // loop re-checks: covered (ticket <= cutoff) or sticky error
+        }
+    }
+}
+
+impl Backend for GroupSync {
+    fn write_at(&self, offset: u64, data: &[u8]) -> io::Result<()> {
+        if !self.enabled {
+            // ungrouped mode never consults the counters: keep the
+            // baseline's write path free of sequencer lock traffic
+            return self.inner.write_at(offset, data);
+        }
+        self.state.lock().unwrap().in_flight += 1;
+        let result = self.inner.write_at(offset, data);
+        let mut st = self.state.lock().unwrap();
+        st.in_flight -= 1;
+        st.completed += 1;
+        // a leader may be sitting in its batching window waiting for
+        // exactly this write to land
+        let wake = st.leader;
+        drop(st);
+        if wake {
+            self.cv.notify_all();
+        }
+        result
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        self.inner.read_at(offset, buf)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    /// Plain passthrough sync (drain/shutdown paths that are not
+    /// publisher barriers). Counted, so `syncs` is the device fsync total.
+    fn sync(&self) -> io::Result<()> {
+        self.syncs.fetch_add(1, Ordering::Relaxed);
+        self.inner.sync()
+    }
+
+    fn kind(&self) -> &'static str {
+        self.inner.kind()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    use super::*;
+
+    /// Mock device with exact fsync semantics: a sync snapshots the set
+    /// of written-but-uncovered offsets at its **start** and marks them
+    /// durable at its **end** — precisely the claim a real barrier
+    /// makes, no more. `gate` (when armed) parks the first sync until
+    /// released, so tests can pile followers behind a leader
+    /// deterministically.
+    struct MockDevice {
+        state: Mutex<MockState>,
+        cv: Condvar,
+        fail_syncs: bool,
+    }
+
+    struct MockState {
+        /// offsets written, not yet covered by a finished sync
+        pending: Vec<u64>,
+        durable: HashSet<u64>,
+        writes: u64,
+        /// 0 = open, 1 = armed, 2 = armed and reached (sync parked)
+        gate: u8,
+    }
+
+    impl MockDevice {
+        fn new() -> Self {
+            Self {
+                state: Mutex::new(MockState {
+                    pending: Vec::new(),
+                    durable: HashSet::new(),
+                    writes: 0,
+                    gate: 0,
+                }),
+                cv: Condvar::new(),
+                fail_syncs: false,
+            }
+        }
+
+        /// First sync will park until [`MockDevice::release`].
+        fn armed() -> Self {
+            let b = Self::new();
+            b.state.lock().unwrap().gate = 1;
+            b
+        }
+
+        fn failing() -> Self {
+            let mut b = Self::new();
+            b.fail_syncs = true;
+            b
+        }
+
+        fn wait_sync_parked(&self) {
+            let mut st = self.state.lock().unwrap();
+            while st.gate != 2 {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+
+        fn release(&self) {
+            self.state.lock().unwrap().gate = 0;
+            self.cv.notify_all();
+        }
+
+        fn is_durable(&self, offset: u64) -> bool {
+            self.state.lock().unwrap().durable.contains(&offset)
+        }
+    }
+
+    impl Backend for MockDevice {
+        fn write_at(&self, offset: u64, _data: &[u8]) -> io::Result<()> {
+            let mut st = self.state.lock().unwrap();
+            st.writes += 1;
+            st.pending.push(offset);
+            Ok(())
+        }
+
+        fn read_at(&self, _offset: u64, buf: &mut [u8]) -> io::Result<()> {
+            buf.fill(0);
+            Ok(())
+        }
+
+        fn bytes_written(&self) -> u64 {
+            self.state.lock().unwrap().writes
+        }
+
+        fn sync(&self) -> io::Result<()> {
+            // a sync covers exactly the writes completed before it
+            // started: snapshot first, then (maybe) park on the gate —
+            // writes landing while parked are NOT covered
+            let mut st = self.state.lock().unwrap();
+            let snap: Vec<u64> = st.pending.drain(..).collect();
+            if st.gate == 1 {
+                st.gate = 2;
+                self.cv.notify_all();
+                while st.gate != 0 {
+                    st = self.cv.wait(st).unwrap();
+                }
+            }
+            if self.fail_syncs {
+                // a failed sync promises nothing: its snapshot is lost
+                return Err(io::Error::other("injected sync failure"));
+            }
+            st.durable.extend(snap);
+            Ok(())
+        }
+
+        fn kind(&self) -> &'static str {
+            "mock"
+        }
+    }
+
+    /// `Arc<MockDevice>` is itself a `Backend` (blanket impl in
+    /// `backend.rs`), so the sequencer can own one handle while the
+    /// test keeps another.
+    fn grouped(mock: &Arc<MockDevice>, window: Duration) -> GroupSync {
+        GroupSync::new(Box::new(Arc::clone(mock)), true, window)
+    }
+
+    #[test]
+    fn one_leader_sync_releases_every_queued_follower() {
+        // deterministic leader/follower choreography: A leads and parks
+        // inside the device sync; B, C, D write + barrier behind it; one
+        // more sync covers all three. 4 publishers, exactly 2 fsyncs.
+        let mock = Arc::new(MockDevice::armed());
+        let gs = Arc::new(grouped(&mock, Duration::ZERO));
+        std::thread::scope(|s| {
+            let leader = {
+                let gs = Arc::clone(&gs);
+                let mock = Arc::clone(&mock);
+                s.spawn(move || {
+                    gs.write_at(100, b"a").unwrap();
+                    gs.barrier().unwrap();
+                    assert!(mock.is_durable(100), "leader released without its own coverage");
+                })
+            };
+            mock.wait_sync_parked(); // A is leader, inside inner.sync()
+            let followers: Vec<_> = (0..3u64)
+                .map(|i| {
+                    let gs = Arc::clone(&gs);
+                    let mock = Arc::clone(&mock);
+                    s.spawn(move || {
+                        gs.write_at(i, b"f").unwrap();
+                        gs.barrier().unwrap();
+                        // released only by a sync that started after this
+                        // write completed — and *finished*
+                        assert!(
+                            mock.is_durable(i),
+                            "follower {i} released before a covering barrier completed"
+                        );
+                    })
+                })
+                .collect();
+            // all four ticketed (A parked + 3 followers queued behind it)
+            while gs.barriers() < 4 {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            mock.release();
+            leader.join().unwrap();
+            for f in followers {
+                f.join().unwrap();
+            }
+        });
+        assert_eq!(gs.barriers(), 4);
+        assert_eq!(gs.syncs(), 2, "leader's sync + one follower-elected sync");
+    }
+
+    #[test]
+    fn concurrent_publishers_never_release_early_and_syncs_stay_bounded() {
+        // property run: every barrier must find its own offset durable on
+        // release, and total syncs can never exceed total barriers (each
+        // sync has exactly one leader, and a leader leads at most once
+        // per barrier). Exercised with and without a batching window.
+        for window_us in [0u64, 300] {
+            let mock = Arc::new(MockDevice::new());
+            let gs = grouped(&mock, Duration::from_micros(window_us));
+            const THREADS: u64 = 8;
+            const ROUNDS: u64 = 25;
+            std::thread::scope(|s| {
+                for t in 0..THREADS {
+                    let gs = &gs;
+                    let mock = &mock;
+                    s.spawn(move || {
+                        for r in 0..ROUNDS {
+                            let offset = t * ROUNDS + r; // globally unique
+                            gs.write_at(offset, b"x").unwrap();
+                            gs.barrier().unwrap();
+                            assert!(
+                                mock.is_durable(offset),
+                                "t{t} r{r}: barrier returned before a sync covered the write"
+                            );
+                        }
+                    });
+                }
+            });
+            assert_eq!(gs.barriers(), THREADS * ROUNDS);
+            assert!(
+                gs.syncs() <= gs.barriers(),
+                "window {window_us}us: {} syncs > {} barriers",
+                gs.syncs(),
+                gs.barriers()
+            );
+            assert!(gs.syncs() >= 1);
+        }
+    }
+
+    #[test]
+    fn lone_writer_is_not_delayed_by_the_batching_window() {
+        // nothing in flight at election: the leader must skip the window
+        // wait entirely, not burn it down
+        let mock = Arc::new(MockDevice::new());
+        let gs = grouped(&mock, Duration::from_secs(5));
+        let t0 = Instant::now();
+        gs.write_at(0, b"solo").unwrap();
+        gs.barrier().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "lone barrier waited the batching window: {:?}",
+            t0.elapsed()
+        );
+        assert!(mock.is_durable(0));
+        assert_eq!(gs.syncs(), 1);
+    }
+
+    #[test]
+    fn disabled_mode_syncs_once_per_barrier() {
+        let mock = Arc::new(MockDevice::new());
+        let gs = GroupSync::new(Box::new(Arc::clone(&mock)), false, Duration::ZERO);
+        for i in 0..5u64 {
+            gs.write_at(i, b"x").unwrap();
+            gs.barrier().unwrap();
+            assert!(mock.is_durable(i));
+        }
+        assert_eq!(gs.syncs(), 5, "ungrouped baseline is one fsync per barrier");
+        assert_eq!(gs.barriers(), 5);
+    }
+
+    #[test]
+    fn sync_failure_is_sticky_for_every_later_barrier() {
+        let mock = Arc::new(MockDevice::failing());
+        let gs = grouped(&mock, Duration::ZERO);
+        gs.write_at(0, b"x").unwrap();
+        assert!(gs.barrier().is_err(), "leader must surface its own sync failure");
+        assert!(!mock.is_durable(0));
+        gs.write_at(1, b"y").unwrap();
+        assert!(
+            gs.barrier().is_err(),
+            "a failed sync may never be forgotten: later writes are not durable either"
+        );
+    }
+}

@@ -41,6 +41,17 @@ pub struct LiveConfig {
     pub history: usize,
     pub flush_check: Duration,
     pub seek: SeekModel,
+    /// group commit: concurrent publishers of a shard share device sync
+    /// barriers instead of issuing one fsync per record (`false` = the
+    /// ungrouped per-record-sync baseline; the durability contract is
+    /// identical either way)
+    pub group_commit: bool,
+    /// how long an elected group-commit leader waits for in-flight
+    /// writes to land before syncing. Zero (the default) batches only
+    /// what naturally accumulates behind a running sync; a small window
+    /// trades ack latency for bigger batches. A lone writer is never
+    /// delayed — with nothing in flight the leader syncs immediately.
+    pub group_commit_window: Duration,
 }
 
 impl Default for LiveConfig {
@@ -61,6 +72,8 @@ impl LiveConfig {
             history: 64,
             flush_check: Duration::from_millis(20),
             seek: SeekModel::default(),
+            group_commit: true,
+            group_commit_window: Duration::ZERO,
         }
     }
 
@@ -80,6 +93,18 @@ impl LiveConfig {
         self
     }
 
+    /// Toggle group commit (`false` = per-record fsync baseline).
+    pub fn with_group_commit(mut self, on: bool) -> Self {
+        self.group_commit = on;
+        self
+    }
+
+    /// Batching window for elected group-commit leaders.
+    pub fn with_group_commit_window(mut self, window: Duration) -> Self {
+        self.group_commit_window = window;
+        self
+    }
+
     fn shard_config(&self, shard_id: usize) -> ShardConfig {
         ShardConfig {
             system: self.system,
@@ -90,6 +115,8 @@ impl LiveConfig {
             history: self.history,
             flush_check: self.flush_check,
             seek: self.seek,
+            group_commit: self.group_commit,
+            group_commit_window: self.group_commit_window,
         }
     }
 }

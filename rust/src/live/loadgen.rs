@@ -67,13 +67,33 @@ impl LiveReport {
         crate::live::shard::ssd_ratio(&self.shards)
     }
 
+    /// Device syncs issued across all shards (SSD + HDD).
+    pub fn syncs(&self) -> u64 {
+        self.shards.iter().map(|s| s.syncs).sum()
+    }
+
+    /// Aggregate group-commit batching factor: durability barriers
+    /// requested per device sync actually issued (≈1 without group
+    /// commit, >1 when concurrent publishers shared barriers).
+    pub fn writes_per_sync(&self) -> f64 {
+        let syncs = self.syncs();
+        if syncs == 0 {
+            0.0
+        } else {
+            self.shards.iter().map(|s| s.sync_barriers).sum::<u64>() as f64 / syncs as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "{:<34} {:>8.2} MB/s ingest ({:>7.2} MB/s drained)  ssd {:>5.1}%  lat {}",
+            "{:<34} {:>8.2} MB/s ingest ({:>7.2} MB/s drained)  ssd {:>5.1}%  \
+             {} syncs ({:.1} w/s)  lat {}",
             self.workload,
             self.throughput_mbps(),
             self.drained_throughput_mbps(),
             self.ssd_ratio() * 100.0,
+            self.syncs(),
+            self.writes_per_sync(),
             self.latency.summary(),
         )
     }

@@ -18,6 +18,11 @@
 //!   (`&self`) I/O**: in-memory (tests/benches, with synthetic device
 //!   latency and sharded page locks) and real files (`pwrite`/`pread`,
 //!   `ssdup live --backend file`);
+//! * [`commit`] — the **group-commit sequencer** ([`GroupSync`]): wraps
+//!   each backend so concurrent publishers share device sync barriers —
+//!   one elected leader runs the fsync, a synced-up-to watermark
+//!   releases every waiter the barrier covers — instead of issuing one
+//!   fsync per record;
 //! * [`shard`] — one live I/O node: detector + policy + two-region
 //!   pipeline + SSD/HDD backend pair + background flusher with the
 //!   paper's traffic-aware pause gate (§2.4.2);
@@ -73,20 +78,37 @@
 //! 1. **Submitted** — `LiveEngine::submit` was called but has not
 //!    returned. Nothing is promised: a crash may keep all, part (at
 //!    sector granularity), or none of the bytes. A torn record frame is
-//!    detected by its checksum at recovery and discarded whole.
+//!    detected by its checksum at recovery and discarded whole. In
+//!    particular, a write frozen **between its device write and its
+//!    covering barrier** is still only submitted — its bytes sit in the
+//!    device cache and are allowed to vanish.
 //! 2. **Acknowledged (published)** — `submit` returned. The write is
 //!    **durable**: its framed record (SSD route) or its HDD bytes
-//!    (direct route) were written *and synced* before the claim
-//!    published, and for the first write of each file the file-table
-//!    superblock was synced before that. [`LiveEngine::open`] restores
-//!    every acknowledged write byte-exactly after a crash, however
-//!    ungraceful — this is what the crash-injection tests kill-and-check.
+//!    (direct route) are covered by a **completed group-commit barrier**
+//!    — a device sync that started after the bytes landed finished
+//!    before the claim published — and for the first write of each file
+//!    the file-table superblock was barriered before that.
+//!    "Covered by a completed barrier" rather than "ran its own fsync"
+//!    is the group-commit refinement ([`commit::GroupSync`]): N
+//!    concurrent publishers of a shard are released by one shared
+//!    device sync (a sync is a device-global barrier, so one covers
+//!    them all), cutting the publish path's fsync count by the batching
+//!    factor (`ShardStats::writes_per_sync`) without weakening the
+//!    promise. [`LiveEngine::open`] restores every acknowledged write
+//!    byte-exactly after a crash, however ungraceful — this is what the
+//!    crash-injection tests kill-and-check, including freezes injected
+//!    between a record's device write and its barrier.
+//!    A `group_commit_window > 0` lets an elected barrier leader wait
+//!    (boundedly) for in-flight writes to land before syncing: bigger
+//!    batches, at the cost of up to one window of added ack latency
+//!    under concurrency — a lone writer always syncs immediately.
 //! 3. **Flushed** — the flusher settled the (surviving) buffered copy
-//!    onto the HDD. The superblock's flush watermark is persisted
-//!    *before* the log region recycles, so recovery never replays a
-//!    settled record over newer data, and never loses one that had not
-//!    settled. After [`LiveEngine::shutdown`] (drain + clean
-//!    superblock), reopening short-circuits without any log scan.
+//!    onto the HDD, waited out a covering HDD barrier, and only then
+//!    persisted the superblock's flush watermark — all *before* the log
+//!    region recycles, so recovery never replays a settled record over
+//!    newer data, and never loses one that had not settled. After
+//!    [`LiveEngine::shutdown`] (drain + clean superblock), reopening
+//!    short-circuits without any log scan.
 //!
 //! Recovery replays surviving records in their claim (sequence) order,
 //! so the newest-copy-wins semantics above carry across a restart:
@@ -100,6 +122,7 @@
 //! paper's workloads use one shared file per application).
 
 pub mod backend;
+pub mod commit;
 pub mod engine;
 pub mod loadgen;
 pub mod ownership;
@@ -108,6 +131,7 @@ pub mod record;
 pub mod shard;
 
 pub use backend::{Backend, FileBackend, MemBackend, MemStore, SyntheticLatency};
+pub use commit::GroupSync;
 pub use engine::{LiveConfig, LiveEngine, RecoveryReport, VerifyReport};
 pub use loadgen::{run as run_load, run_with as run_load_with, LiveReport};
 pub use ownership::{OwnershipMap, Tier};

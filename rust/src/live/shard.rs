@@ -49,9 +49,13 @@
 //! record (`live::record`): one self-describing header sector — magic,
 //! shard, region, LBA, length, a monotone sequence assigned in the claim
 //! critical section, and a CRC-32C over header + payload — followed by
-//! the payload. The publish step syncs the SSD backend before the claim
-//! is acknowledged, so **acknowledged means durable**; recovery can only
-//! lose writes that never returned to their client. A per-shard
+//! the payload. The publish step waits on a **group-commit barrier**
+//! ([`crate::live::commit::GroupSync`]) before the claim is
+//! acknowledged: a device sync that started after the record's bytes
+//! landed has completed — usually one sync shared by every publisher in
+//! flight, instead of one fsync per record — so **acknowledged means
+//! durable**; recovery can only lose writes that never returned to
+//! their client. A per-shard
 //! superblock (two alternating slots past the region logs) persists the
 //! flush watermarks — rewritten, synced, *before* a flushed region's map
 //! entries are released and its slots recycled — plus the file table
@@ -74,13 +78,14 @@ use crate::detector::stream::StreamGrouper;
 use crate::device::SeekModel;
 use crate::fs::{FileTable, SubRequest};
 use crate::live::backend::Backend;
+use crate::live::commit::GroupSync;
 use crate::live::ownership::{OwnershipMap, Tier};
 use crate::live::record::{
     scan_region, LiveRecord, RecordHeader, Superblock, HEADER_SECTORS, MAX_SB_FILES,
 };
 use crate::redirector::{AdaptivePolicy, AlwaysHdd, AlwaysSsd, RoutePolicy, WatermarkPolicy};
 use crate::server::config::SystemKind;
-use crate::types::{sectors_to_bytes, Route, SECTOR_BYTES};
+use crate::types::{sectors_to_bytes, Detection, Route, SECTOR_BYTES};
 
 /// Number of pipeline regions (fixed by the two-region design, §2.4).
 const REGIONS: usize = 2;
@@ -104,6 +109,13 @@ pub struct ShardConfig {
     /// re-check interval for paused flushes and condvar waits
     pub flush_check: Duration,
     pub seek: SeekModel,
+    /// group commit: coalesce concurrent publishers' durability barriers
+    /// into shared device syncs (`false` = one fsync per record, the
+    /// ungrouped baseline)
+    pub group_commit: bool,
+    /// how long an elected group-commit leader waits for in-flight
+    /// writes to land before syncing (zero = natural batching only)
+    pub group_commit_window: Duration,
 }
 
 /// What [`Shard::recover`] found and rebuilt — per shard.
@@ -159,6 +171,12 @@ pub struct ShardStats {
     /// valve forcing an overlap out through the flusher) — one count per
     /// wait, never booked when a re-check finds the path already clear
     pub blocked_waits: u64,
+    /// device syncs actually issued (SSD + HDD), group-commit leaders and
+    /// drain/shutdown syncs included
+    pub syncs: u64,
+    /// durability barriers requested by publish/flush paths — each one a
+    /// would-be fsync without group commit
+    pub sync_barriers: u64,
     pub pct_sum: f64,
 }
 
@@ -169,6 +187,17 @@ impl ShardStats {
             0.0
         } else {
             self.pct_sum / self.streams as f64
+        }
+    }
+
+    /// Barriers satisfied per device sync — the group-commit batching
+    /// factor (≈1 when ungrouped or single-client; >1 when concurrent
+    /// publishers share barriers).
+    pub fn writes_per_sync(&self) -> f64 {
+        if self.syncs == 0 {
+            0.0
+        } else {
+            self.sync_barriers as f64 / self.syncs as f64
         }
     }
 }
@@ -221,13 +250,27 @@ struct ShardCore {
     stats: ShardStats,
 }
 
+impl ShardCore {
+    /// Book one completed detection stream: the counters and the policy
+    /// re-route live in one place so the ingest and drain close paths
+    /// can never drift apart in their accounting.
+    fn account_stream(&mut self, det: &Detection) {
+        self.stats.streams += 1;
+        self.stats.pct_sum += det.percentage as f64;
+        self.route = self.policy.on_stream(det);
+    }
+}
+
 pub struct Shard {
     core: Mutex<ShardCore>,
     /// concurrent (`&self`) backends: ingest clients, the flusher, and
     /// readers all issue positional I/O directly — there is deliberately
-    /// no device mutex anywhere in the shard
-    ssd: Box<dyn Backend>,
-    hdd: Box<dyn Backend>,
+    /// no device mutex anywhere in the shard. Each backend sits behind a
+    /// [`GroupSync`] sequencer: publish paths call `barrier()` instead of
+    /// `sync()`, so concurrent publishers share device syncs
+    /// (acknowledged = covered by a completed barrier)
+    ssd: GroupSync,
+    hdd: GroupSync,
     /// signalled when the flusher frees a region (blocked ingest, drain)
     space: Condvar,
     /// signalled when flush work appears, the pause gate may open, or a
@@ -287,9 +330,29 @@ struct SbWriter {
 /// which device write this client owes, and the ticket to publish after.
 /// `ssd_offset` is the record frame's *header* slot; the payload follows
 /// at `ssd_offset + HEADER_SECTORS` (what the ownership map tracks).
-enum Claimed {
-    Direct { dest: u64, ticket: u64 },
+enum Claimed<'a> {
+    Direct { dest: u64, ticket: u64, gate: DirectGate<'a> },
     Slot { region: usize, ssd_offset: i64, ticket: u64, seq: u64 },
+}
+
+/// RAII restore of `direct_inflight`: taken in the claim critical
+/// section right after the increment, dropped once the direct write's
+/// outcome is published — **including** the failure path, where
+/// `fail_and_panic` unwinds through it. Without the guard, a failed HDD
+/// write left the counter elevated forever, and the traffic-aware gate
+/// (`direct > 0`) never reopened for the other threads of a
+/// still-draining engine.
+struct DirectGate<'a> {
+    shard: &'a Shard,
+}
+
+impl Drop for DirectGate<'_> {
+    fn drop(&mut self) {
+        if self.shard.direct_inflight.fetch_sub(1, Ordering::Release) == 1 {
+            // direct traffic ebbed: the traffic-aware gate may open
+            self.shard.work.notify_all();
+        }
+    }
 }
 
 fn policy_for(system: SystemKind, history: usize) -> Box<dyn RoutePolicy + Send> {
@@ -391,8 +454,8 @@ impl Shard {
         let half = cfg.ssd_capacity_sectors / 2;
         Shard {
             core: Mutex::new(core),
-            ssd,
-            hdd,
+            ssd: GroupSync::new(ssd, cfg.group_commit, cfg.group_commit_window),
+            hdd: GroupSync::new(hdd, cfg.group_commit, cfg.group_commit_window),
             space: Condvar::new(),
             work: Condvar::new(),
             published: Condvar::new(),
@@ -409,16 +472,18 @@ impl Shard {
         }
     }
 
-    /// Write `sb` into the alternation slot and sync, unless a newer
-    /// epoch is already durable (see the `sb_lock` field docs). Callers
-    /// pass the guard so the decision, the write, and the slot flip are
-    /// atomic.
+    /// Write `sb` into the alternation slot and wait for a covering sync
+    /// barrier, unless a newer epoch is already durable (see the
+    /// `sb_lock` field docs). Callers pass the guard so the decision, the
+    /// write, and the slot flip are atomic. The barrier coalesces with
+    /// concurrent publishers' — a superblock rewrite rides the same
+    /// device sync as the records landing around it.
     fn write_superblock(&self, w: &mut SbWriter, sb: &Superblock) -> io::Result<()> {
         if sb.epoch <= w.last_epoch {
             return Ok(());
         }
-        sb.write_to(self.ssd.as_ref(), self.sb_base, w.next_slot)?;
-        self.ssd.sync()?;
+        sb.write_to(&self.ssd, self.sb_base, w.next_slot)?;
+        self.ssd.barrier()?;
         w.last_epoch = sb.epoch;
         w.next_slot = 1 - w.next_slot;
         Ok(())
@@ -672,10 +737,13 @@ impl Shard {
                         core.stats.hdd_direct_bytes += payload.len() as u64;
                         // counted inside the critical section that decided
                         // the route, so the flusher's gate sees the direct
-                        // traffic the moment it exists
+                        // traffic the moment it exists; the RAII gate
+                        // restores the counter on every exit path, a
+                        // failed write's unwind included
                         self.direct_inflight.fetch_add(1, Ordering::Release);
+                        let gate = DirectGate { shard: self };
                         let ticket = core.own.claim_direct(lba, size);
-                        break Claimed::Direct { dest: lba as u64 * SECTOR_BYTES, ticket };
+                        break Claimed::Direct { dest: lba as u64 * SECTOR_BYTES, ticket, gate };
                     }
                     Route::Ssd => {
                         // the log slot covers the record frame: one
@@ -728,9 +796,7 @@ impl Shard {
             // server-side detection feeds on the post-striping disk address
             if let Some(stream) = core.grouper.push_parts(sub.parent.app, lba as i32, sub.size) {
                 let det = core.detector.detect(&stream.reqs);
-                core.stats.streams += 1;
-                core.stats.pct_sum += det.percentage as f64;
-                core.route = core.policy.on_stream(&det);
+                core.account_stream(&det);
                 // a route change can unpause the traffic-aware flusher
                 self.work.notify_all();
             }
@@ -739,12 +805,13 @@ impl Shard {
 
         // ---- device write, no lock held: this is where concurrent
         // clients of one shard overlap their transfers. Both routes end
-        // in a sync barrier before the publish: an acknowledged write is
-        // a durable write, which is exactly the set recovery promises to
-        // restore ----
+        // in a group-commit barrier before the publish — the write is
+        // covered by a *completed* device sync, usually one shared with
+        // other in-flight publishers: an acknowledged write is a durable
+        // write, which is exactly the set recovery promises to restore ----
         match claimed {
-            Claimed::Direct { dest, ticket } => {
-                let wrote = self.hdd.write_at(dest, payload).and_then(|_| self.hdd.sync());
+            Claimed::Direct { dest, ticket, gate } => {
+                let wrote = self.hdd.write_at(dest, payload).and_then(|_| self.hdd.barrier());
                 // ---- critical section 2: publish ----
                 {
                     let mut core = self.core.lock().unwrap();
@@ -754,10 +821,11 @@ impl Shard {
                     }
                 }
                 self.published.notify_all();
-                if self.direct_inflight.fetch_sub(1, Ordering::Release) == 1 {
-                    // direct traffic ebbed: the traffic-aware gate may open
-                    self.work.notify_all();
-                }
+                // the gate decrements `direct_inflight` (and may reopen
+                // the traffic-aware flusher) — after the publish, so the
+                // flusher never sees the count drop before the claim
+                // resolved
+                drop(gate);
             }
             Claimed::Slot { region, ssd_offset, ticket, seq } => {
                 let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
@@ -779,7 +847,7 @@ impl Shard {
                             payload,
                         )
                     })
-                    .and_then(|_| self.ssd.sync());
+                    .and_then(|_| self.ssd.barrier());
                 // ---- critical section 2: publish ----
                 {
                     let mut core = self.core.lock().unwrap();
@@ -915,7 +983,13 @@ impl Shard {
     }
 
     pub fn stats(&self) -> ShardStats {
-        self.core.lock().unwrap().stats.clone()
+        let mut stats = self.core.lock().unwrap().stats.clone();
+        // the group-commit sequencers keep their own lock-free counters;
+        // fold them into the snapshot so `sync_barriers / syncs` is the
+        // shard's observed batching factor
+        stats.syncs = self.ssd.syncs() + self.hdd.syncs();
+        stats.sync_barriers = self.ssd.barriers() + self.hdd.barriers();
+        stats
     }
 
     /// Background flusher: runs on its own thread until shutdown, or until
@@ -1005,8 +1079,11 @@ impl Shard {
             // region's records over newer direct writes (release opens
             // the range to direct routing — resurrection), and a
             // watermark without the HDD sync could skip records whose
-            // flushed copy never became durable ----
-            if let Err(e) = self.hdd.sync() {
+            // flushed copy never became durable. A group-commit barrier
+            // gives exactly that — on return, a device sync that started
+            // after the copy runs landed has *completed* (often one
+            // shared with concurrent direct-route publishers) ----
+            if let Err(e) = self.hdd.barrier() {
                 self.fail(format!("flusher: hdd sync: {e}"));
                 return;
             }
@@ -1096,9 +1173,7 @@ impl Shard {
             core.drained = true;
             if let Some(stream) = core.grouper.flush_partial() {
                 let det = core.detector.detect(&stream.reqs);
-                core.stats.streams += 1;
-                core.stats.pct_sum += det.percentage as f64;
-                core.route = core.policy.on_stream(&det);
+                core.account_stream(&det);
             }
             core.pipeline.enqueue_residual_flush();
         }
@@ -1182,6 +1257,8 @@ mod tests {
             history: 64,
             flush_check: Duration::from_millis(1),
             seek: SeekModel::default(),
+            group_commit: true,
+            group_commit_window: Duration::ZERO,
         }
     }
 
@@ -1229,6 +1306,129 @@ mod tests {
             handle.join().is_err(),
             "a write dropped by shutdown must panic, not vanish"
         );
+    }
+
+    /// Backend whose writes always fail — drives the publish error paths.
+    struct FailingBackend;
+
+    impl Backend for FailingBackend {
+        fn write_at(&self, _offset: u64, _data: &[u8]) -> std::io::Result<()> {
+            Err(std::io::Error::other("injected write failure"))
+        }
+
+        fn read_at(&self, _offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+            buf.fill(0);
+            Ok(())
+        }
+
+        fn bytes_written(&self) -> u64 {
+            0
+        }
+
+        fn sync(&self) -> std::io::Result<()> {
+            Ok(())
+        }
+
+        fn kind(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    #[test]
+    fn failed_direct_write_restores_the_inflight_counter() {
+        // OrangeFs routes straight to the HDD; the write fails and the
+        // submit panics through `fail_and_panic`. The RAII gate must
+        // still restore `direct_inflight` during the unwind — before it,
+        // the counter stayed elevated forever and the traffic-aware gate
+        // (`direct > 0`) never reopened for other threads of a
+        // still-draining engine.
+        let shard = Arc::new(Shard::new(
+            &cfg(SystemKind::OrangeFs, 4096),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+            Box::new(FailingBackend),
+        ));
+        let worker = Arc::clone(&shard);
+        let handle = std::thread::spawn(move || {
+            worker.submit(&sub(1, 0, 8), &gen_payload(1, 0, 8, 1));
+        });
+        assert!(handle.join().is_err(), "a failed direct write must panic, not ack");
+        assert_eq!(
+            shard.direct_inflight.load(Ordering::Acquire),
+            0,
+            "the direct-inflight counter must be restored on the error path"
+        );
+    }
+
+    /// [`MemBackend`] wrapper with a slow `sync` — a real fsync cost, so
+    /// concurrent barriers pile up behind the leader's device sync.
+    struct SlowSync {
+        inner: MemBackend,
+        dwell: Duration,
+    }
+
+    impl Backend for SlowSync {
+        fn write_at(&self, offset: u64, data: &[u8]) -> std::io::Result<()> {
+            self.inner.write_at(offset, data)
+        }
+
+        fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+            self.inner.read_at(offset, buf)
+        }
+
+        fn bytes_written(&self) -> u64 {
+            self.inner.bytes_written()
+        }
+
+        fn sync(&self) -> std::io::Result<()> {
+            std::thread::sleep(self.dwell);
+            self.inner.sync()
+        }
+
+        fn kind(&self) -> &'static str {
+            "slowsync"
+        }
+    }
+
+    #[test]
+    fn concurrent_publishers_share_sync_barriers() {
+        // 8 clients publishing to one shard's SSD log where each device
+        // sync dwells 10 ms: while one leader's sync runs, the other
+        // publishers' barriers queue behind it and the next sync covers
+        // them all — group commit must finish with fewer device syncs
+        // than acknowledgments (per-record sync makes them equal by
+        // construction). Same scheduler-independence idiom as the
+        // high-water-mark test above: the dwell is long enough that a
+        // non-batching run cannot happen by timing accident.
+        let c = cfg(SystemKind::OrangeFsBB, 1 << 16);
+        let shard = Arc::new(Shard::new(
+            &c,
+            Box::new(SlowSync {
+                inner: MemBackend::new(SyntheticLatency::ZERO),
+                dwell: Duration::from_millis(10),
+            }),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+        ));
+        std::thread::scope(|s| {
+            for t in 0..8u32 {
+                let shard = Arc::clone(&shard);
+                s.spawn(move || {
+                    for k in 0..4 {
+                        let off = (t as i32 * 4 + k) * 16;
+                        shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+                    }
+                });
+            }
+        });
+        let stats = shard.stats();
+        // 32 record publishes + 1 first-touch superblock barrier
+        assert_eq!(stats.sync_barriers, 33, "every publish takes exactly one barrier");
+        assert!(
+            stats.syncs < stats.sync_barriers,
+            "concurrent publishers must share syncs: {} syncs for {} barriers",
+            stats.syncs,
+            stats.sync_barriers
+        );
+        assert!(stats.writes_per_sync() > 1.0);
     }
 
     #[test]

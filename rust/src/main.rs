@@ -20,7 +20,7 @@ use ssdup::workload::Workload;
 
 const VALUE_OPTS: &[&str] = &[
     "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
-    "queue", "shards", "backend", "clients", "dir", "crash-at",
+    "queue", "shards", "backend", "clients", "dir", "crash-at", "group-commit-window",
 ];
 
 fn main() {
@@ -57,6 +57,8 @@ fn main() {
                  \x20          [--pattern mixed|contig|random|strided|rewrite]\n\
                  \x20          [--procs 16] [--size-mib 1024] [--ssd-mib 64] [--clients 8]\n\
                  \x20          [--no-verify] [--keep]\n\
+                 \x20          [--group-commit-window US]  leader batching window (default 0)\n\
+                 \x20          [--no-group-commit]         per-record fsync baseline\n\
                  \x20          [--crash-at N]   kill the process (no shutdown) after N acked requests\n\
                  \x20          [--recover]      reopen --dir images, replay the log, drain\n"
             );
@@ -237,7 +239,14 @@ fn cmd_live(args: &Args) -> i32 {
         },
         None => None,
     };
-    let cfg = LiveConfig::new(system).with_shards(shards).with_ssd_mib(ssd_mib);
+    // group commit defaults on; --no-group-commit is the per-record-sync
+    // baseline, --group-commit-window (µs) trades ack latency for batch
+    let window_us: u64 = args.get_parse("group-commit-window", 0).unwrap_or(0);
+    let cfg = LiveConfig::new(system)
+        .with_shards(shards)
+        .with_ssd_mib(ssd_mib)
+        .with_group_commit(!args.has("no-group-commit"))
+        .with_group_commit_window(std::time::Duration::from_micros(window_us));
 
     // --recover: reopen a previous `--backend file` run's images (same
     // --shards/--ssd-mib as the crashed run), replay the log, drain the
@@ -374,7 +383,7 @@ fn cmd_live(args: &Args) -> i32 {
         println!(
             "  shard {i}: in {} MiB | ssd {} MiB | direct {} MiB | flushed {} MiB | \
              superseded {} MiB | {} rerouted | {} streams (rp {:.1}%) | {} flushes, \
-             {} pauses ({:.2}s), {} blocked waits",
+             {} pauses ({:.2}s), {} blocked waits | {} syncs ({:.1} writes/sync)",
             s.bytes_in / (1 << 20),
             s.ssd_bytes_buffered / (1 << 20),
             s.hdd_direct_bytes / (1 << 20),
@@ -387,6 +396,8 @@ fn cmd_live(args: &Args) -> i32 {
             s.flush_pauses,
             s.flush_pause_us as f64 / 1e6,
             s.blocked_waits,
+            s.syncs,
+            s.writes_per_sync(),
         );
     }
 

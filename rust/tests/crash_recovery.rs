@@ -9,6 +9,10 @@
 //!   either recovers completely (its frame validated) or disappears at
 //!   record granularity — never as garbage or a half-old half-new
 //!   sector;
+//! * **a write frozen between its device write and its covering
+//!   group-commit barrier is still unacknowledged** and is allowed to
+//!   vanish — the deterministic `PausePoint` rig parks the writer at
+//!   exactly that instant and freezes the power-loss image around it;
 //! * **clean shutdowns short-circuit**: reopening after
 //!   `LiveEngine::shutdown` scans zero log sectors.
 //!
@@ -19,8 +23,8 @@
 //! zero external dependencies. The file rig kills by abandoning the
 //! engine (drop without shutdown) and reopening the images from disk.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use ssdup::live::{
@@ -223,6 +227,223 @@ fn crash_and_recover_mem(seed: u64) {
 fn mem_snapshot_crashes_at_eight_seeded_points_recover_acknowledged_writes() {
     for seed in 0..8 {
         crash_and_recover_mem(seed);
+    }
+}
+
+/// Deterministic freeze point: after the `trigger`-th completed SSD
+/// `write_at`, the writing thread parks *before returning into the
+/// shard* — i.e. between a record's device write and its covering
+/// group-commit barrier — until the test releases it.
+struct PausePoint {
+    trigger: u64,
+    hits: AtomicU64,
+    /// 0 = armed, 1 = reached (writer parked), 2 = released
+    state: Mutex<u8>,
+    cv: Condvar,
+}
+
+impl PausePoint {
+    fn new(trigger: u64) -> Arc<Self> {
+        Arc::new(Self { trigger, hits: AtomicU64::new(0), state: Mutex::new(0), cv: Condvar::new() })
+    }
+
+    fn maybe_pause(&self) {
+        if self.hits.fetch_add(1, Ordering::SeqCst) + 1 != self.trigger {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        *st = 1;
+        self.cv.notify_all();
+        while *st != 2 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn wait_paused(&self) {
+        let mut st = self.state.lock().unwrap();
+        while *st == 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        *self.state.lock().unwrap() = 2;
+        self.cv.notify_all();
+    }
+}
+
+/// [`MemBackend`] wrapper that parks the writing thread at the pause
+/// point — after its device write completed, before its barrier runs.
+struct PauseBackend {
+    inner: MemBackend,
+    point: Arc<PausePoint>,
+}
+
+impl ssdup::live::Backend for PauseBackend {
+    fn write_at(&self, offset: u64, data: &[u8]) -> std::io::Result<()> {
+        self.inner.write_at(offset, data)?;
+        self.point.maybe_pause();
+        Ok(())
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        self.inner.read_at(offset, buf)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn sync(&self) -> std::io::Result<()> {
+        self.inner.sync()
+    }
+
+    fn kind(&self) -> &'static str {
+        "pause"
+    }
+}
+
+/// One seeded freeze *between a record's device write and its covering
+/// barrier*: the paused write must not have been acknowledged, its
+/// record is allowed to vanish, and every write acknowledged before the
+/// freeze must come back byte-exact. With a single closed-loop writer
+/// the outcome is fully deterministic — nothing can have merged the
+/// paused record durable — so the check is exact equality with the last
+/// acknowledged generation per slot, not just membership in a candidate
+/// set.
+fn freeze_between_write_and_barrier(seed: u64) {
+    const SLOTS: usize = 8;
+    const MAX: usize = 120;
+    // hit 1 is the first-touch superblock write; record k's header and
+    // payload are hits 2k and 2k+1, so the stride parks the writer at
+    // varying depths, after a header write or after a payload write.
+    // Note what this rig does NOT vary: under the volatile-overlay model
+    // neither parity leaves partial record bytes in the frozen image
+    // (nothing synced them), so the record is absent whole either way —
+    // torn-frame handling is the mem-snapshot suite's job above; this
+    // test pins the ack boundary itself.
+    let trigger = 2 + seed * 3;
+    let mut cfg = LiveConfig::new(SystemKind::OrangeFsBB).with_shards(1);
+    cfg.ssd_capacity_sectors = 1 << 16; // the burst stays buffered
+    cfg.flush_check = Duration::from_millis(1);
+    let ssd_store = MemStore::new(true);
+    let hdd_store = MemStore::new(true);
+    let point = PausePoint::new(trigger);
+    let engine = {
+        let ssd = Arc::clone(&ssd_store);
+        let hdd = Arc::clone(&hdd_store);
+        let point = Arc::clone(&point);
+        LiveEngine::with_backends(&cfg, move |_| {
+            (
+                Box::new(PauseBackend {
+                    inner: MemBackend::over(Arc::clone(&ssd), SyntheticLatency::ZERO),
+                    point: Arc::clone(&point),
+                }) as Box<dyn ssdup::live::Backend>,
+                Box::new(MemBackend::over(Arc::clone(&hdd), SyntheticLatency::ZERO))
+                    as Box<dyn ssdup::live::Backend>,
+            )
+        })
+    };
+    let log = Mutex::new(LaneLog::default());
+    let stop = AtomicBool::new(false);
+    let sector = SECTOR_BYTES as usize;
+    let (snap_issued, snap_acked, frozen_ssd, frozen_hdd) = std::thread::scope(|s| {
+        let engine = &engine;
+        let stop = &stop;
+        let log = &log;
+        s.spawn(move || {
+            let mut rng = Prng::new(seed);
+            let mut buf = vec![0u8; SLOT_SECTORS as usize * sector];
+            for i in 0..MAX {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let slot = rng.gen_range(SLOTS as u64) as usize;
+                let gen = payload::write_gen(0, i as u32);
+                let off = slot as i32 * SLOT_SECTORS;
+                payload::fill_gen(1, off as i64, gen, &mut buf);
+                log.lock().unwrap().issued.push((slot, gen));
+                engine.submit(
+                    Request { app: 0, proc_id: 0, file: 1, offset: off, size: SLOT_SECTORS },
+                    &buf,
+                );
+                log.lock().unwrap().acked += 1;
+            }
+        });
+        point.wait_paused();
+        // ---- the crash: the writer sits between its device write and
+        // its barrier. Snapshot the ack log first, then the power-loss
+        // image; only then release the writer ----
+        let (issued, acked) = {
+            let l = log.lock().unwrap();
+            (l.issued.clone(), l.acked)
+        };
+        let frozen_ssd = ssd_store.freeze();
+        let frozen_hdd = hdd_store.freeze();
+        stop.store(true, Ordering::Relaxed);
+        point.release();
+        (issued, acked, frozen_ssd, frozen_hdd)
+    });
+    drop(engine);
+
+    // the frozen write was issued but not acknowledged — the contract
+    // places it firmly in "submitted", where it may vanish
+    assert_eq!(
+        snap_issued.len(),
+        snap_acked + 1,
+        "trigger {trigger}: exactly one write must be in flight at the freeze"
+    );
+
+    let (recovered, report) = LiveEngine::open(&cfg, move |_| {
+        (
+            Box::new(MemBackend::over(Arc::clone(&frozen_ssd), SyntheticLatency::ZERO))
+                as Box<dyn ssdup::live::Backend>,
+            Box::new(MemBackend::over(Arc::clone(&frozen_hdd), SyntheticLatency::ZERO))
+                as Box<dyn ssdup::live::Backend>,
+        )
+    })
+    .expect("recovery must succeed");
+    assert!(!report.clean(), "trigger {trigger}: a freeze is never a clean shutdown");
+    assert_eq!(
+        report.records_replayed(),
+        snap_acked as u64,
+        "trigger {trigger}: exactly the acknowledged records replay — the unsynced \
+         in-flight record must not resurface, and no acked one may be lost"
+    );
+
+    let mut buf = vec![0u8; SLOT_SECTORS as usize * sector];
+    for slot in 0..SLOTS {
+        let floor: Option<u64> = snap_issued[..snap_acked]
+            .iter()
+            .filter(|(s, _)| *s == slot)
+            .map(|&(_, g)| g)
+            .last();
+        let off = slot as i32 * SLOT_SECTORS;
+        recovered.read(1, off, &mut buf);
+        match floor {
+            None => assert!(
+                buf.iter().all(|&b| b == 0),
+                "trigger {trigger}: slot {slot} was never acknowledged and must read as zeros \
+                 — an unacknowledged (unsynced) record leaked through recovery"
+            ),
+            Some(gen) => {
+                let mut expect = vec![0u8; buf.len()];
+                payload::fill_gen(1, off as i64, gen, &mut expect);
+                assert_eq!(
+                    buf, expect,
+                    "trigger {trigger}: slot {slot} must recover byte-exactly to its last \
+                     acknowledged generation {gen}"
+                );
+            }
+        }
+    }
+    recovered.shutdown();
+}
+
+#[test]
+fn freeze_between_device_write_and_barrier_keeps_exactly_the_acked_prefix() {
+    for seed in 0..6 {
+        freeze_between_write_and_barrier(seed);
     }
 }
 

@@ -1,0 +1,175 @@
+//! Zero-dependency property tests for the group-commit sequencer
+//! ([`GroupSync`]) against a counting mock backend, driven through the
+//! public API only. The properties under test are the two that make
+//! group commit *correct* and *worth having*:
+//!
+//! 1. **No early release.** A waiter leaves `barrier()` only after a
+//!    device sync that **started after its writes completed** has
+//!    **finished**. The mock models exactly what a real fsync promises:
+//!    at sync *start* it snapshots the offsets written so far, at sync
+//!    *end* it marks that snapshot durable — so every publisher can
+//!    assert its own offset is durable the instant its barrier returns,
+//!    under any interleaving.
+//! 2. **Bounded sync count.** Every sync has exactly one leader, and a
+//!    leader leads at most once per barrier, so total device syncs can
+//!    never exceed total barriers — the ungrouped per-record-sync count
+//!    is the worst case, never exceeded.
+//!
+//! The deterministic leader/follower choreography (exact sync counts,
+//! lone-writer latency, sticky failures) lives in `live/commit.rs`'s
+//! unit tests; this file shakes the same invariants under scheduler
+//! noise: many writers, mixed batching windows, seeded think-time
+//! jitter, and a sync that dwells long enough for real pile-ups.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ssdup::live::{Backend, GroupSync};
+use ssdup::util::prng::Prng;
+
+/// Mock device with exact fsync semantics (snapshot at sync start,
+/// durable at sync end) plus a dwell so concurrent barriers pile up
+/// behind a running sync.
+struct MockDevice {
+    state: Mutex<MockState>,
+    syncs_started: AtomicU64,
+    dwell: Duration,
+}
+
+struct MockState {
+    /// offsets written but not yet covered by a finished sync
+    pending: Vec<u64>,
+    durable: HashSet<u64>,
+    writes: u64,
+}
+
+impl MockDevice {
+    fn new(dwell: Duration) -> Self {
+        Self {
+            state: Mutex::new(MockState { pending: Vec::new(), durable: HashSet::new(), writes: 0 }),
+            syncs_started: AtomicU64::new(0),
+            dwell,
+        }
+    }
+
+    fn is_durable(&self, offset: u64) -> bool {
+        self.state.lock().unwrap().durable.contains(&offset)
+    }
+}
+
+impl Backend for MockDevice {
+    fn write_at(&self, offset: u64, _data: &[u8]) -> std::io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        st.writes += 1;
+        st.pending.push(offset);
+        Ok(())
+    }
+
+    fn read_at(&self, _offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        buf.fill(0);
+        Ok(())
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.state.lock().unwrap().writes
+    }
+
+    fn sync(&self) -> std::io::Result<()> {
+        self.syncs_started.fetch_add(1, Ordering::SeqCst);
+        // snapshot at start: writes landing during the dwell are NOT
+        // covered by this sync — exactly a real device barrier
+        let snap: Vec<u64> = {
+            let mut st = self.state.lock().unwrap();
+            st.pending.drain(..).collect()
+        };
+        if !self.dwell.is_zero() {
+            std::thread::sleep(self.dwell);
+        }
+        self.state.lock().unwrap().durable.extend(snap);
+        Ok(())
+    }
+
+    fn kind(&self) -> &'static str {
+        "mock"
+    }
+}
+
+/// One property run: `threads` ticketed writers, each doing `rounds`
+/// write→barrier cycles at globally unique offsets with seeded
+/// think-time jitter. `Arc<MockDevice>` is itself a `Backend` (blanket
+/// impl), so the sequencer owns one handle while the test keeps another.
+fn run_property(threads: u64, rounds: u64, window: Duration, seed: u64) {
+    let mock = Arc::new(MockDevice::new(Duration::from_micros(300)));
+    let gs = GroupSync::new(Box::new(Arc::clone(&mock)), true, window);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let gs = &gs;
+            let mock = &mock;
+            s.spawn(move || {
+                let mut rng = Prng::new(seed * 1000 + t);
+                for r in 0..rounds {
+                    let offset = t * rounds + r; // globally unique
+                    gs.write_at(offset, b"payload").unwrap();
+                    gs.barrier().unwrap();
+                    // property 1: released only after a sync that started
+                    // after this write completed has finished
+                    assert!(
+                        mock.is_durable(offset),
+                        "writer {t} round {r}: released before a covering sync finished"
+                    );
+                    if rng.gen_range(4) == 0 {
+                        std::thread::sleep(Duration::from_micros(rng.gen_range(200)));
+                    }
+                }
+            });
+        }
+    });
+    // property 2: never more device syncs than barriers (the ungrouped
+    // worst case), and the sequencer agrees with the device's count
+    let barriers = threads * rounds;
+    assert_eq!(gs.barriers(), barriers);
+    assert!(
+        gs.syncs() <= barriers,
+        "window {window:?}: {} syncs exceed {} barriers",
+        gs.syncs(),
+        barriers
+    );
+    assert_eq!(
+        gs.syncs(),
+        mock.syncs_started.load(Ordering::SeqCst),
+        "sequencer sync count must match the device's"
+    );
+    assert!(gs.syncs() >= 1, "at least one device sync must have happened");
+}
+
+#[test]
+fn no_waiter_releases_early_and_syncs_never_exceed_writers() {
+    for seed in 0..3 {
+        run_property(8, 16, Duration::ZERO, seed);
+    }
+}
+
+#[test]
+fn batching_window_preserves_both_properties() {
+    for seed in 0..3 {
+        run_property(8, 16, Duration::from_micros(400), seed);
+    }
+}
+
+#[test]
+fn single_writer_many_rounds_is_exact() {
+    // with one writer there is nothing to batch: every barrier leads its
+    // own sync immediately (the window must not delay it), durability in
+    // lockstep
+    let mock = Arc::new(MockDevice::new(Duration::ZERO));
+    let gs = GroupSync::new(Box::new(Arc::clone(&mock)), true, Duration::from_millis(50));
+    for r in 0..32u64 {
+        gs.write_at(r * 512, b"x").unwrap();
+        gs.barrier().unwrap();
+        assert!(mock.is_durable(r * 512));
+    }
+    assert_eq!(gs.syncs(), 32, "a lone writer's barriers cannot share syncs");
+    assert_eq!(gs.barriers(), 32);
+}
