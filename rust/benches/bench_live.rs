@@ -433,6 +433,74 @@ fn main() {
         );
     }
 
+    section("observability: tracing overhead (same load, collector off vs on)");
+    if Bench::should_run("live/obs-overhead") {
+        // A/B the trace collector on the mixed load: off is the default
+        // (one relaxed atomic load per span — the overhead contract), on
+        // records every span into the per-thread rings. The off-mode
+        // number doubles as the cross-PR baseline in BENCH_live.json;
+        // the assert is a generous non-flaky floor, not a microbenchmark.
+        let wo = mixed(if fast { 8 } else { 32 }, 41);
+        let obytes = wo.total_bytes() as f64;
+        let mut mbps_off = 0.0f64;
+        let mut mbps_on = 0.0f64;
+        let mut events = 0u64;
+        let mut dropped = 0u64;
+        let mut stages: Option<Json> = None;
+        let mut dominant = String::new();
+        for on in [false, true] {
+            let label = if on { "on" } else { "off" };
+            let mut last = 0.0;
+            b.run(&format!("live/obs-{label}"), obytes, || {
+                let cfg = LiveConfig::new(SystemKind::SsdupPlus)
+                    .with_shards(2)
+                    .with_ssd_mib(32)
+                    .with_trace(on);
+                let engine = LiveEngine::mem(&cfg, SyntheticLatency::ssd(), SyntheticLatency::hdd());
+                let report = live::run_load(&engine, &wo, 8);
+                let obs = Arc::clone(engine.trace());
+                engine.shutdown();
+                if on {
+                    events = obs.drain().len() as u64;
+                    dropped = obs.dropped_events();
+                    dominant =
+                        report.stages.dominant_ack_stage().map(|s| s.name()).unwrap_or("?").into();
+                    stages = Some(report.stages.to_json());
+                }
+                last = report.throughput_mbps();
+                bb(last)
+            });
+            if on {
+                mbps_on = last;
+            } else {
+                mbps_off = last;
+            }
+        }
+        println!(
+            "\nobs overhead: trace off {mbps_off:.1} MB/s -> on {mbps_on:.1} MB/s \
+             ({events} events, {dropped} dropped; dominant ack stage: {dominant})"
+        );
+        out.insert(
+            "obs".into(),
+            Json::obj(vec![
+                ("mbps_off", Json::Num(mbps_off)),
+                ("mbps_on", Json::Num(mbps_on)),
+                ("events", Json::Num(events as f64)),
+                ("dropped", Json::Num(dropped as f64)),
+            ]),
+        );
+        if let Some(s) = stages {
+            out.insert("stage_latency_us".into(), s);
+        }
+        // smoke contract: recording spans must not wreck throughput (the
+        // synthetic device latency dominates; a wide margin keeps CI
+        // machines from flaking this)
+        assert!(
+            mbps_on >= mbps_off * 0.5,
+            "tracing overhead out of bounds: {mbps_off:.1} MB/s off vs {mbps_on:.1} MB/s on"
+        );
+    }
+
     section("live engine on real files (FileBackend, page-cached)");
     if Bench::should_run("live/file-shards-4") {
         let dir = std::env::temp_dir().join(format!("ssdup-bench-live-{}", std::process::id()));

@@ -30,7 +30,10 @@
 //! * [`fs`], [`workload`], [`util`] — OrangeFS-like striping, the
 //!   paper's benchmark workloads, and the in-tree substrate (PRNG, JSON,
 //!   CLI, bench harness, thread pool) the offline image can't pull from
-//!   crates.io.
+//!   crates.io;
+//! * [`obs`] — zero-dependency observability for the live engine:
+//!   lock-free tracing (Chrome-trace export), per-stage ack-latency
+//!   attribution, and interval snapshot telemetry.
 //!
 //! Start at [`live`] for the running system, [`server`] for the simulated
 //! I/O node, or [`experiments`] for the paper's tables and figures.
@@ -49,6 +52,7 @@ pub mod buffer;
 pub mod detector;
 pub mod experiments;
 pub mod live;
+pub mod obs;
 pub mod redirector;
 pub mod runtime;
 pub mod server;

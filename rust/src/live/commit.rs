@@ -43,10 +43,11 @@
 
 use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::live::backend::Backend;
+use crate::obs::{Stage, TraceCollector};
 
 /// State under the sequencer mutex. The counters are monotone: `synced`
 /// chases `completed`, and a barrier with ticket `t` may return as soon
@@ -82,6 +83,9 @@ pub struct GroupSync {
     /// barriers requested (≈ acknowledged publishes); `barriers / syncs`
     /// is the batching factor
     barriers: AtomicU64,
+    /// trace sink for barrier-wait spans: every `barrier()` — publisher,
+    /// flusher, or superblock — shows up on the shard's timeline
+    trace: Option<(Arc<TraceCollector>, u32)>,
 }
 
 impl GroupSync {
@@ -100,7 +104,15 @@ impl GroupSync {
             enabled,
             syncs: AtomicU64::new(0),
             barriers: AtomicU64::new(0),
+            trace: None,
         }
+    }
+
+    /// Attach a trace collector: barrier calls emit `barrier_wait` spans
+    /// tagged with `shard` while the collector is enabled.
+    pub fn with_trace(mut self, obs: Arc<TraceCollector>, shard: u32) -> Self {
+        self.trace = Some((obs, shard));
+        self
     }
 
     /// Device syncs issued so far.
@@ -118,6 +130,18 @@ impl GroupSync {
     /// if it is elected leader. Returns the sticky sync error if any
     /// covering sync failed — the caller's bytes may not be durable.
     pub fn barrier(&self) -> io::Result<()> {
+        let t0 = match &self.trace {
+            Some((obs, _)) if obs.is_enabled() => Some(Instant::now()),
+            _ => None,
+        };
+        let result = self.barrier_inner();
+        if let (Some(t0), Some((obs, shard))) = (t0, &self.trace) {
+            obs.emit(Stage::BarrierWait, *shard, t0, Instant::now());
+        }
+        result
+    }
+
+    fn barrier_inner(&self) -> io::Result<()> {
         self.barriers.fetch_add(1, Ordering::Relaxed);
         if !self.enabled {
             // ungrouped baseline: the caller pays its own fsync

@@ -22,6 +22,7 @@ use crate::fs::StripeLayout;
 use crate::live::backend::{Backend, FileBackend, MemBackend, SyntheticLatency};
 use crate::live::payload;
 use crate::live::shard::{Shard, ShardConfig, ShardRecovery, ShardStats};
+use crate::obs::{StageSet, TraceCollector, DEFAULT_RING_EVENTS};
 use crate::server::config::SystemKind;
 use crate::types::{mib_to_sectors, Request, SECTOR_BYTES};
 use crate::workload::Workload;
@@ -52,6 +53,10 @@ pub struct LiveConfig {
     /// trades ack latency for bigger batches. A lone writer is never
     /// delayed — with nothing in flight the leader syncs immediately.
     pub group_commit_window: Duration,
+    /// create the engine's trace collector *enabled*: every pipeline
+    /// stage emits span events (`ssdup live --trace out.json`). Off by
+    /// default — a disabled collector costs one atomic load per span.
+    pub trace: bool,
 }
 
 impl Default for LiveConfig {
@@ -74,6 +79,7 @@ impl LiveConfig {
             seek: SeekModel::default(),
             group_commit: true,
             group_commit_window: Duration::ZERO,
+            trace: false,
         }
     }
 
@@ -102,6 +108,13 @@ impl LiveConfig {
     /// Batching window for elected group-commit leaders.
     pub fn with_group_commit_window(mut self, window: Duration) -> Self {
         self.group_commit_window = window;
+        self
+    }
+
+    /// Enable trace-event collection from construction on (so recovery
+    /// replay spans are captured too).
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace = on;
         self
     }
 
@@ -193,21 +206,36 @@ pub struct LiveEngine {
     shards: Vec<Arc<Shard>>,
     flushers: Vec<JoinHandle<()>>,
     stripe: StripeLayout,
+    /// one collector for all shards (and their group-commit sequencers);
+    /// clone the `Arc` before `shutdown` to drain events afterwards
+    obs: Arc<TraceCollector>,
 }
 
 impl LiveEngine {
+    fn collector(cfg: &LiveConfig) -> Arc<TraceCollector> {
+        let obs = Arc::new(TraceCollector::new(DEFAULT_RING_EVENTS));
+        obs.set_enabled(cfg.trace);
+        obs
+    }
+
     /// Build an engine over caller-provided `(ssd, hdd)` backend pairs.
     pub fn with_backends(
         cfg: &LiveConfig,
         mut backends: impl FnMut(usize) -> (Box<dyn Backend>, Box<dyn Backend>),
     ) -> Self {
         assert!(cfg.shards >= 1, "need at least one shard");
+        let obs = Self::collector(cfg);
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let (ssd, hdd) = backends(i);
-            shards.push(Arc::new(Shard::new(&cfg.shard_config(i), ssd, hdd)));
+            shards.push(Arc::new(Shard::new_with_obs(
+                &cfg.shard_config(i),
+                ssd,
+                hdd,
+                Arc::clone(&obs),
+            )));
         }
-        Self::spawn_flushers(cfg, shards)
+        Self::spawn_flushers(cfg, shards, obs)
     }
 
     /// Reopen an engine over backends holding a previous run's state —
@@ -224,18 +252,20 @@ impl LiveEngine {
         mut backends: impl FnMut(usize) -> (Box<dyn Backend>, Box<dyn Backend>),
     ) -> io::Result<(Self, RecoveryReport)> {
         assert!(cfg.shards >= 1, "need at least one shard");
+        let obs = Self::collector(cfg);
         let mut shards = Vec::with_capacity(cfg.shards);
         let mut report = RecoveryReport::default();
         for i in 0..cfg.shards {
             let (ssd, hdd) = backends(i);
-            let (shard, rec) = Shard::recover(&cfg.shard_config(i), ssd, hdd)?;
+            let (shard, rec) =
+                Shard::recover_with_obs(&cfg.shard_config(i), ssd, hdd, Arc::clone(&obs))?;
             report.shards.push(rec);
             shards.push(Arc::new(shard));
         }
-        Ok((Self::spawn_flushers(cfg, shards), report))
+        Ok((Self::spawn_flushers(cfg, shards, obs), report))
     }
 
-    fn spawn_flushers(cfg: &LiveConfig, shards: Vec<Arc<Shard>>) -> Self {
+    fn spawn_flushers(cfg: &LiveConfig, shards: Vec<Arc<Shard>>, obs: Arc<TraceCollector>) -> Self {
         let stripe = StripeLayout { stripe_sectors: cfg.stripe_sectors, n_nodes: cfg.shards };
         let mut flushers = Vec::with_capacity(shards.len());
         for (i, shard) in shards.iter().enumerate() {
@@ -247,7 +277,7 @@ impl LiveEngine {
                     .expect("spawn flusher thread"),
             );
         }
-        Self { shards, flushers, stripe }
+        Self { shards, flushers, stripe, obs }
     }
 
     /// All-in-memory engine (unit tests, benches).
@@ -498,6 +528,22 @@ impl LiveEngine {
     /// Snapshot per-shard statistics.
     pub fn stats(&self) -> Vec<ShardStats> {
         self.shards.iter().map(|s| s.stats()).collect()
+    }
+
+    /// The engine's trace collector. Clone the `Arc` before
+    /// [`LiveEngine::shutdown`] (which consumes the engine) to drain and
+    /// export the trace afterwards.
+    pub fn trace(&self) -> &Arc<TraceCollector> {
+        &self.obs
+    }
+
+    /// Merged per-stage ack-latency attribution across all shards.
+    pub fn stage_latency(&self) -> StageSet {
+        let mut total = StageSet::new();
+        for shard in &self.shards {
+            total.merge(&shard.stage_latency());
+        }
+        total
     }
 
     /// Fraction of ingested bytes that went through the SSD buffer.

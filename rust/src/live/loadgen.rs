@@ -16,12 +16,15 @@
 //! per-app completion and wakes waiters when a predecessor finishes.
 
 use std::collections::HashMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::live::engine::LiveEngine;
 use crate::live::payload;
 use crate::live::shard::ShardStats;
+use crate::obs::{Counters, Snapshotter, StageSet};
 use crate::server::metrics::LatencyHistogram;
 use crate::util::threadpool::scoped_map;
 use crate::workload::{ProcessWorkload, Workload};
@@ -43,6 +46,8 @@ pub struct LiveReport {
     pub requests: u64,
     pub latency: LatencyHistogram,
     pub shards: Vec<ShardStats>,
+    /// per-stage ack-latency attribution, merged across shards
+    pub stages: StageSet,
 }
 
 impl LiveReport {
@@ -97,6 +102,20 @@ impl LiveReport {
             self.latency.summary(),
         )
     }
+
+    /// Multi-line per-stage latency decomposition (p50/p95/p99 per
+    /// pipeline stage plus the dominant ack stage).
+    pub fn stage_summary(&self) -> String {
+        self.stages.summary()
+    }
+}
+
+/// How to emit periodic telemetry snapshots during a run: every
+/// `interval`, one JSON line (throughput, writes/sync, blocked-wait
+/// delta, flusher state, SSD occupancy) is written to `out`.
+pub struct SnapshotOptions {
+    pub interval: Duration,
+    pub out: Box<dyn Write + Send>,
 }
 
 /// Outcome of asking the gate whether a dependent process may start.
@@ -215,6 +234,63 @@ pub fn run_with(
     clients: usize,
     versioned: bool,
 ) -> LiveReport {
+    run_reported(engine, workload, clients, versioned, None)
+}
+
+/// Like [`run_with`], optionally emitting periodic telemetry snapshots
+/// while the run is in flight: a sampler thread snapshots the engine's
+/// counters every `snapshots.interval` and writes one JSON line per tick
+/// (plus a final tick at the end of the drain). The sampler only reads
+/// engine stats — it never touches the data path.
+pub fn run_reported(
+    engine: &LiveEngine,
+    workload: &Workload,
+    clients: usize,
+    versioned: bool,
+    snapshots: Option<SnapshotOptions>,
+) -> LiveReport {
+    let Some(snap) = snapshots else {
+        return run_inner(engine, workload, clients, versioned);
+    };
+    let stop = AtomicBool::new(false);
+    let stop = &stop;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let SnapshotOptions { interval, mut out } = snap;
+        s.spawn(move || {
+            let mut snapper = Snapshotter::new();
+            // sleep in short chunks so the final tick lands promptly
+            // once the run completes, regardless of the interval
+            let chunk = interval.max(Duration::from_millis(1)).min(Duration::from_millis(10));
+            loop {
+                let mut slept = Duration::ZERO;
+                while slept < interval && !stop.load(Ordering::Acquire) {
+                    std::thread::sleep(chunk);
+                    slept += chunk;
+                }
+                let line = snapper.tick(
+                    Counters::from_stats(&engine.stats(), engine.trace().dropped_events()),
+                    t0.elapsed(),
+                );
+                let _ = writeln!(out, "{line}");
+                // the last line is always a fresh end-of-run snapshot
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+        });
+        let report = run_inner(engine, workload, clients, versioned);
+        stop.store(true, Ordering::Release);
+        report
+    })
+}
+
+fn run_inner(
+    engine: &LiveEngine,
+    workload: &Workload,
+    clients: usize,
+    versioned: bool,
+) -> LiveReport {
     let clients = clients.max(1);
     assert_acyclic(workload);
     // deal processes round-robin onto client threads
@@ -316,6 +392,7 @@ pub fn run_with(
         requests: workload.total_requests() as u64,
         latency,
         shards: engine.stats(),
+        stages: engine.stage_latency(),
     }
 }
 
@@ -376,6 +453,72 @@ mod tests {
         let verify = engine.verify_workload(&w);
         assert!(verify.is_ok(), "{verify:?}");
         engine.shutdown();
+    }
+
+    #[test]
+    fn snapshot_reporter_emits_parseable_json_lines() {
+        use std::sync::Arc;
+
+        // Write target shared with the sampler thread so the test can
+        // inspect what it wrote after the run.
+        #[derive(Clone)]
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl Write for SharedBuf {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(2).with_ssd_mib(16);
+        let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+        let w = ior(0, IorPattern::SegmentedContiguous, 4, 16_384, DEFAULT_REQ_SECTORS, 5);
+        let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+        let report = run_reported(
+            &engine,
+            &w,
+            4,
+            false,
+            Some(SnapshotOptions {
+                interval: Duration::from_millis(5),
+                out: Box::new(buf.clone()),
+            }),
+        );
+        engine.shutdown();
+
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines.is_empty(), "sampler must emit at least the final tick");
+        for line in &lines {
+            let j = crate::util::json::Json::parse(line).unwrap_or_else(|e| {
+                panic!("snapshot line must be valid JSON ({e:?}): {line}")
+            });
+            for key in ["seq", "mbps", "writes_per_sync", "ssd_occupancy_bytes"] {
+                assert!(j.get(key).is_some(), "snapshot line missing {key}: {line}");
+            }
+        }
+        // the final tick is taken after ingest finished, so its running
+        // total covers every submitted byte
+        let last = crate::util::json::Json::parse(lines.last().unwrap()).unwrap();
+        let bytes_in = last.get("bytes_in").and_then(|v| v.as_f64()).unwrap() as u64;
+        assert_eq!(bytes_in, report.total_bytes);
+    }
+
+    #[test]
+    fn report_carries_stage_decomposition() {
+        use crate::obs::Stage;
+        let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(1).with_ssd_mib(16);
+        let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+        let w = ior(0, IorPattern::SegmentedContiguous, 2, 8_192, DEFAULT_REQ_SECTORS, 5);
+        let report = run(&engine, &w, 2);
+        engine.shutdown();
+        assert_eq!(report.stages.get(Stage::Submit).count(), report.requests);
+        assert_eq!(report.stages.get(Stage::Publish).count(), report.requests);
+        assert!(report.stages.dominant_ack_stage().is_some());
+        assert!(report.stage_summary().contains("dominant ack stage"));
     }
 
     #[test]

@@ -120,6 +120,35 @@
 //! so a live shard supports at most [`record::MAX_SB_FILES`] distinct
 //! files; the 58th first-touch fails the shard with a named error (the
 //! paper's workloads use one shared file per application).
+//!
+//! # Observability
+//!
+//! The engine is instrumented end to end by [`crate::obs`] — zero
+//! dependencies, like everything else in the crate:
+//!
+//! * **Stage taxonomy** ([`crate::obs::Stage`]) — every pipeline stage
+//!   is named and timed: `submit` (whole ack path) decomposes into
+//!   `route` → `reserve` → `ssd_write`/`hdd_write` → `barrier_wait` →
+//!   `publish`; reads into `read_resolve` → `read_device`; the flusher
+//!   reports `flush_run` (SSD→HDD copy time) and `flush_pause` (gate
+//!   time); `sb_write` and `replay` cover superblock rewrites and
+//!   recovery.
+//! * **Per-stage latency attribution** — each shard folds every span
+//!   into per-stage [`crate::server::metrics::LatencyHistogram`]s;
+//!   [`LiveReport::stage_summary`] prints the p50/p95/p99 decomposition
+//!   of ack latency and names the dominant stage. Attribution is always
+//!   on: its cost is a handful of `Instant::now` reads plus one
+//!   uncontended leaf-mutex fold per operation.
+//! * **Tracing** ([`crate::obs::TraceCollector`]) — `ssdup live --trace
+//!   out.json` records every span into lock-free per-thread rings
+//!   (overflow drops events, never blocks the data path) and exports
+//!   Chrome `chrome://tracing` / Perfetto JSON. Disabled tracing costs
+//!   one relaxed atomic load per span — the overhead contract
+//!   `bench_live` asserts.
+//! * **Snapshots** ([`crate::obs::Snapshotter`]) — `ssdup live
+//!   --stats-interval MS` emits one JSON line per interval (throughput,
+//!   writes/sync, blocked waits, flusher duty cycle, SSD occupancy) from
+//!   a sampler thread that only reads counters.
 
 pub mod backend;
 pub mod commit;
@@ -133,7 +162,10 @@ pub mod shard;
 pub use backend::{Backend, FileBackend, MemBackend, MemStore, SyntheticLatency};
 pub use commit::GroupSync;
 pub use engine::{LiveConfig, LiveEngine, RecoveryReport, VerifyReport};
-pub use loadgen::{run as run_load, run_with as run_load_with, LiveReport};
+pub use loadgen::{
+    run as run_load, run_reported as run_load_reported, run_with as run_load_with, LiveReport,
+    SnapshotOptions,
+};
 pub use ownership::{OwnershipMap, Tier};
 pub use record::{LiveRecord, RecordHeader, Superblock};
 pub use shard::{Shard, ShardConfig, ShardRecovery, ShardStats};

@@ -69,7 +69,7 @@
 
 use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::buffer::{BufferOutcome, FlushStrategy, Pipeline};
@@ -83,6 +83,7 @@ use crate::live::ownership::{OwnershipMap, Tier};
 use crate::live::record::{
     scan_region, LiveRecord, RecordHeader, Superblock, HEADER_SECTORS, MAX_SB_FILES,
 };
+use crate::obs::{Stage, StageSet, TraceCollector, DEFAULT_RING_EVENTS};
 use crate::redirector::{AdaptivePolicy, AlwaysHdd, AlwaysSsd, RoutePolicy, WatermarkPolicy};
 use crate::server::config::SystemKind;
 use crate::types::{sectors_to_bytes, Detection, Route, SECTOR_BYTES};
@@ -167,6 +168,11 @@ pub struct ShardStats {
     pub flush_runs: u64,
     pub flush_pauses: u64,
     pub flush_pause_us: u64,
+    /// time the flusher spent actually copying SSD→HDD (gathering log
+    /// segments + the sequential HDD write, per coalesced run) — the
+    /// companion of `flush_pause_us`, so the pause/copy duty cycle is
+    /// computable ([`ShardStats::flush_duty_cycle`])
+    pub flush_run_us: u64,
     /// waits actually taken by blocked ingest (region backpressure or the
     /// valve forcing an overlap out through the flusher) — one count per
     /// wait, never booked when a re-check finds the path already clear
@@ -198,6 +204,17 @@ impl ShardStats {
             0.0
         } else {
             self.sync_barriers as f64 / self.syncs as f64
+        }
+    }
+
+    /// Fraction of flusher wall time spent copying (vs paused by the
+    /// traffic-aware gate). 0.0 when the flusher never ran at all.
+    pub fn flush_duty_cycle(&self) -> f64 {
+        let total = self.flush_run_us + self.flush_pause_us;
+        if total == 0 {
+            0.0
+        } else {
+            self.flush_run_us as f64 / total as f64
         }
     }
 }
@@ -316,6 +333,13 @@ pub struct Shard {
     /// it *while* holding core, the flusher takes it with no other lock
     /// held.
     sb_lock: Mutex<SbWriter>,
+    /// trace collector (shared with the engine's other shards): span
+    /// emission is gated on its enabled flag, one atomic load per span
+    obs: Arc<TraceCollector>,
+    /// per-stage ack-latency attribution histograms. Leaf lock: taken
+    /// for one batched fold at a time, never while acquiring any other
+    /// shard lock (`core` or `sb_lock` may be held *around* it).
+    stage_lat: Mutex<StageSet>,
 }
 
 /// Device-write-order state for the superblock (guarded by `sb_lock`).
@@ -414,8 +438,19 @@ impl Shard {
     /// device with zero watermarks, which scans to exactly what was
     /// framed so far.
     pub fn new(cfg: &ShardConfig, ssd: Box<dyn Backend>, hdd: Box<dyn Backend>) -> Self {
+        Self::new_with_obs(cfg, ssd, hdd, Arc::new(TraceCollector::new(DEFAULT_RING_EVENTS)))
+    }
+
+    /// [`Shard::new`] with a shared trace collector (the engine passes
+    /// one collector to all of its shards).
+    pub fn new_with_obs(
+        cfg: &ShardConfig,
+        ssd: Box<dyn Backend>,
+        hdd: Box<dyn Backend>,
+        obs: Arc<TraceCollector>,
+    ) -> Self {
         let writer = SbWriter { last_epoch: 0, next_slot: 0 };
-        Self::assemble(cfg, ssd, hdd, Self::fresh_core(cfg), writer)
+        Self::assemble(cfg, ssd, hdd, Self::fresh_core(cfg), writer, obs)
     }
 
     fn fresh_core(cfg: &ShardConfig) -> ShardCore {
@@ -446,6 +481,7 @@ impl Shard {
         hdd: Box<dyn Backend>,
         core: ShardCore,
         sb_writer: SbWriter,
+        obs: Arc<TraceCollector>,
     ) -> Self {
         let strategy = match cfg.system {
             SystemKind::SsdupPlus => FlushStrategy::TrafficAware { pause_below: cfg.pause_below },
@@ -454,8 +490,10 @@ impl Shard {
         let half = cfg.ssd_capacity_sectors / 2;
         Shard {
             core: Mutex::new(core),
-            ssd: GroupSync::new(ssd, cfg.group_commit, cfg.group_commit_window),
-            hdd: GroupSync::new(hdd, cfg.group_commit, cfg.group_commit_window),
+            ssd: GroupSync::new(ssd, cfg.group_commit, cfg.group_commit_window)
+                .with_trace(Arc::clone(&obs), cfg.shard_id),
+            hdd: GroupSync::new(hdd, cfg.group_commit, cfg.group_commit_window)
+                .with_trace(Arc::clone(&obs), cfg.shard_id),
             space: Condvar::new(),
             work: Condvar::new(),
             published: Condvar::new(),
@@ -469,6 +507,33 @@ impl Shard {
             shard_id: cfg.shard_id,
             sb_base: 2 * half as u64 * SECTOR_BYTES,
             sb_lock: Mutex::new(sb_writer),
+            obs,
+            stage_lat: Mutex::new(StageSet::new()),
+        }
+    }
+
+    /// Snapshot of the per-stage ack-latency attribution histograms.
+    pub fn stage_latency(&self) -> StageSet {
+        self.stage_lat.lock().unwrap().clone()
+    }
+
+    /// Fold a batch of completed spans into the attribution histograms
+    /// (one leaf-lock acquisition) and emit them as trace events when
+    /// the collector is enabled. `skip_trace` names stages another layer
+    /// already traces (the group-commit sequencer emits `barrier_wait`).
+    fn book_spans(&self, spans: &[(Stage, Instant, Instant)], skip_trace: Option<Stage>) {
+        {
+            let mut lat = self.stage_lat.lock().unwrap();
+            for &(stage, t0, t1) in spans {
+                lat.record(stage, t1.duration_since(t0).as_micros() as u64);
+            }
+        }
+        if self.obs.is_enabled() {
+            for &(stage, t0, t1) in spans {
+                if Some(stage) != skip_trace {
+                    self.obs.emit(stage, self.shard_id, t0, t1);
+                }
+            }
         }
     }
 
@@ -482,8 +547,10 @@ impl Shard {
         if sb.epoch <= w.last_epoch {
             return Ok(());
         }
+        let t0 = Instant::now();
         sb.write_to(&self.ssd, self.sb_base, w.next_slot)?;
         self.ssd.barrier()?;
+        self.book_spans(&[(Stage::SbWrite, t0, Instant::now())], None);
         w.last_epoch = sb.epoch;
         w.next_slot = 1 - w.next_slot;
         Ok(())
@@ -505,6 +572,19 @@ impl Shard {
         ssd: Box<dyn Backend>,
         hdd: Box<dyn Backend>,
     ) -> io::Result<(Self, ShardRecovery)> {
+        Self::recover_with_obs(cfg, ssd, hdd, Arc::new(TraceCollector::new(DEFAULT_RING_EVENTS)))
+    }
+
+    /// [`Shard::recover`] with a shared trace collector; the replay span
+    /// (superblock read + log scan + record replay) lands on the trace
+    /// when the collector was created enabled.
+    pub fn recover_with_obs(
+        cfg: &ShardConfig,
+        ssd: Box<dyn Backend>,
+        hdd: Box<dyn Backend>,
+        obs: Arc<TraceCollector>,
+    ) -> io::Result<(Self, ShardRecovery)> {
+        let t_replay = Instant::now();
         let half = cfg.ssd_capacity_sectors / 2;
         let sb_base = 2 * half as u64 * SECTOR_BYTES;
         let found = Superblock::read(ssd.as_ref(), sb_base, cfg.shard_id)?;
@@ -598,7 +678,11 @@ impl Shard {
         ssd.sync()?;
         let writer = SbWriter { last_epoch: sb.epoch, next_slot: 1 - write_slot };
         core.sb = sb;
-        Ok((Self::assemble(cfg, ssd, hdd, core, writer), rec))
+        let shard = Self::assemble(cfg, ssd, hdd, core, writer, obs);
+        // one span for the whole reopen: superblock read, log scan,
+        // replay, and the dirty-mark persist (near-zero on a clean open)
+        shard.book_spans(&[(Stage::Replay, t_replay, Instant::now())], None);
+        Ok((shard, rec))
     }
 
     /// Timed wait on `cv` that surfaces a shard failure or shutdown
@@ -640,6 +724,11 @@ impl Shard {
     pub fn submit(&self, sub: &SubRequest, payload: &[u8]) {
         let size = sub.size as i64;
         debug_assert_eq!(payload.len() as u64, sub.bytes());
+        // stage attribution boundaries: adjacent, non-overlapping spans
+        // sharing their edge timestamps, so per-stage sums reconstruct
+        // the whole submit latency (see obs::stages)
+        let t_submit = Instant::now();
+        let mut t_routed: Option<Instant> = None;
 
         // ---- critical section 1: route + reserve + claim ----
         let (lba, claimed) = {
@@ -732,6 +821,10 @@ impl Shard {
                     core = self.wait_or_die(&self.published, core, payload.len());
                     continue;
                 }
+                // route decided and every wait behind us (a retry pass
+                // restamps): submit→here is Route, here→lock drop is
+                // Reserve
+                t_routed = Some(Instant::now());
                 match route {
                     Route::Hdd => {
                         core.stats.hdd_direct_bytes += payload.len() as u64;
@@ -802,6 +895,8 @@ impl Shard {
             }
             (lba, claimed)
         };
+        let t_routed = t_routed.expect("claim loop stamps the route boundary before breaking");
+        let t_reserved = Instant::now();
 
         // ---- device write, no lock held: this is where concurrent
         // clients of one shard overlap their transfers. Both routes end
@@ -811,7 +906,10 @@ impl Shard {
         // write, which is exactly the set recovery promises to restore ----
         match claimed {
             Claimed::Direct { dest, ticket, gate } => {
-                let wrote = self.hdd.write_at(dest, payload).and_then(|_| self.hdd.barrier());
+                let wrote = self.hdd.write_at(dest, payload);
+                let t_dev = Instant::now();
+                let wrote = wrote.and_then(|_| self.hdd.barrier());
+                let t_barrier = Instant::now();
                 // ---- critical section 2: publish ----
                 {
                     let mut core = self.core.lock().unwrap();
@@ -826,6 +924,7 @@ impl Shard {
                 // flusher never sees the count drop before the claim
                 // resolved
                 drop(gate);
+                self.book_submit(Stage::HddWrite, t_submit, t_routed, t_reserved, t_dev, t_barrier);
             }
             Claimed::Slot { region, ssd_offset, ticket, seq } => {
                 let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
@@ -846,8 +945,10 @@ impl Shard {
                             base + (ssd_offset + HEADER_SECTORS) as u64 * SECTOR_BYTES,
                             payload,
                         )
-                    })
-                    .and_then(|_| self.ssd.barrier());
+                    });
+                let t_dev = Instant::now();
+                let wrote = wrote.and_then(|_| self.ssd.barrier());
+                let t_barrier = Instant::now();
                 // ---- critical section 2: publish ----
                 {
                     let mut core = self.core.lock().unwrap();
@@ -865,8 +966,36 @@ impl Shard {
                 // reserved slots all key off publishes
                 self.published.notify_all();
                 self.work.notify_all();
+                self.book_submit(Stage::SsdWrite, t_submit, t_routed, t_reserved, t_dev, t_barrier);
             }
         }
+    }
+
+    /// Fold one acknowledged write's stage decomposition (see the
+    /// timestamps stamped in [`Shard::submit`]); the group-commit layer
+    /// already emits `barrier_wait` trace events, so only its histogram
+    /// is fed here.
+    fn book_submit(
+        &self,
+        dev: Stage,
+        t_submit: Instant,
+        t_routed: Instant,
+        t_reserved: Instant,
+        t_dev: Instant,
+        t_barrier: Instant,
+    ) {
+        let t_published = Instant::now();
+        self.book_spans(
+            &[
+                (Stage::Route, t_submit, t_routed),
+                (Stage::Reserve, t_routed, t_reserved),
+                (dev, t_reserved, t_dev),
+                (Stage::BarrierWait, t_dev, t_barrier),
+                (Stage::Publish, t_barrier, t_published),
+                (Stage::Submit, t_submit, t_published),
+            ],
+            Some(Stage::BarrierWait),
+        );
     }
 
     /// Record a failure, release the core lock, wake all waiters, and
@@ -915,6 +1044,7 @@ impl Shard {
         if sectors == 0 {
             return;
         }
+        let t_read = Instant::now();
         let (lba, segs, pinned) = {
             let mut core = self.core.lock().unwrap();
             // never-written files read as zeros without minting an extent
@@ -956,6 +1086,7 @@ impl Shard {
             }
             (lba, segs, pinned)
         };
+        let t_resolved = Instant::now();
         let mut result = Ok(());
         for (seg_lba, seg_size, tier) in segs {
             let dst = (seg_lba - lba) as usize * sector;
@@ -979,6 +1110,10 @@ impl Shard {
                 self.work.notify_all();
             }
         }
+        self.book_spans(
+            &[(Stage::ReadResolve, t_read, t_resolved), (Stage::ReadDevice, t_resolved, Instant::now())],
+            None,
+        );
         result.expect("shard backend read");
     }
 
@@ -1048,10 +1183,12 @@ impl Shard {
             // ---- gate + copy, no lock held: one gate check and one
             // sequential HDD write per coalesced run, gathered from the
             // log with cheap SSD reads ----
+            let mut run_us = 0u64;
             for run in runs {
                 if !self.gate_run() {
                     return; // shutdown while paused
                 }
+                let t_run = Instant::now();
                 let mut pos = 0usize;
                 let mut read = Ok(());
                 for &(ssd_byte, len) in &run.segs {
@@ -1069,6 +1206,9 @@ impl Shard {
                     self.fail(format!("flusher: hdd backend write: {e}"));
                     return;
                 }
+                let t_done = Instant::now();
+                run_us += t_done.duration_since(t_run).as_micros() as u64;
+                self.book_spans(&[(Stage::FlushRun, t_run, t_done)], None);
             }
 
             // ---- durability + watermark: the flushed bytes must be
@@ -1114,6 +1254,7 @@ impl Shard {
             // the region, free it, wake blocked ingest ----
             {
                 let mut core = self.core.lock().unwrap();
+                core.stats.flush_run_us += run_us;
                 core.region_max_seq[region] = 0;
                 // account flushed bytes from the map at completion, not
                 // from what the copy loop moved: an extent superseded
@@ -1160,7 +1301,10 @@ impl Shard {
             core = self.work.wait_timeout(core, self.flush_check).unwrap().0;
         }
         if let Some(t0) = paused_at {
-            core.stats.flush_pause_us += t0.elapsed().as_micros() as u64;
+            let t_resumed = Instant::now();
+            core.stats.flush_pause_us += t_resumed.duration_since(t0).as_micros() as u64;
+            drop(core);
+            self.book_spans(&[(Stage::FlushPause, t0, t_resumed)], None);
         }
         true
     }
@@ -1803,5 +1947,147 @@ mod tests {
             stats.ssd_bytes_buffered,
             "conservation: buffered == flushed + superseded"
         );
+    }
+
+    #[test]
+    fn empty_shard_stats_keep_every_ratio_finite() {
+        // a shard that never saw a request (or a report over zero
+        // shards) must answer 0.0 from every derived ratio — never NaN
+        // or infinity from a zero denominator
+        let stats = ShardStats::default();
+        assert_eq!(stats.mean_percentage(), 0.0);
+        assert_eq!(stats.writes_per_sync(), 0.0);
+        assert_eq!(stats.flush_duty_cycle(), 0.0);
+        assert!(stats.mean_percentage().is_finite());
+        assert!(stats.writes_per_sync().is_finite());
+        assert!(stats.flush_duty_cycle().is_finite());
+        assert_eq!(ssd_ratio(&[]), 0.0);
+        assert_eq!(ssd_ratio(&[stats]), 0.0);
+        // a freshly constructed shard reports the same zeros
+        let shard = mem_shard(SystemKind::SsdupPlus, 4096);
+        let live = shard.stats();
+        assert_eq!(live.mean_percentage(), 0.0);
+        assert_eq!(live.writes_per_sync(), 0.0);
+        assert_eq!(live.flush_duty_cycle(), 0.0);
+    }
+
+    /// [`MemBackend`] wrapper whose writes block on a shared gate while
+    /// it is armed — holds a direct HDD write in flight for as long as
+    /// the test wants, so the traffic-aware pause is driven
+    /// deterministically instead of raced against wall-clock timing.
+    struct StallingBackend {
+        inner: MemBackend,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl Backend for StallingBackend {
+        fn write_at(&self, offset: u64, data: &[u8]) -> std::io::Result<()> {
+            let (armed, cv) = &*self.gate;
+            let mut held = armed.lock().unwrap();
+            while *held {
+                held = cv.wait(held).unwrap();
+            }
+            drop(held);
+            self.inner.write_at(offset, data)
+        }
+
+        fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+            self.inner.read_at(offset, buf)
+        }
+
+        fn bytes_written(&self) -> u64 {
+            self.inner.bytes_written()
+        }
+
+        fn sync(&self) -> std::io::Result<()> {
+            self.inner.sync()
+        }
+
+        fn kind(&self) -> &'static str {
+            "stalling"
+        }
+    }
+
+    #[test]
+    fn traffic_gate_pause_books_both_sides_of_the_duty_cycle() {
+        // each region holds exactly four 16-sector records (16 payload +
+        // 1 header sectors each): 2 * 4 * 17 = 136
+        let mut c = cfg(SystemKind::SsdupPlus, 136);
+        c.stream_len = 4;
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let shard = Arc::new(Shard::new(
+            &c,
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+            Box::new(StallingBackend {
+                inner: MemBackend::new(SyntheticLatency::ZERO),
+                gate: Arc::clone(&gate),
+            }),
+        ));
+        // window 1: sparse -> pct 1.0 -> route flips to SSD. These four
+        // go direct to the (not yet armed) HDD.
+        for off in [0, 10_000, 50_000, 90_000] {
+            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+        }
+        // window 2: contiguous and SSD-routed — fills region 0 exactly,
+        // and detects as pct 0.0 (< pause_below), flipping the route
+        // back to HDD afterwards
+        for k in 0..4 {
+            let off = 500_000 + k * 16;
+            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+        }
+        // rewrite of a buffered extent: absorbed into the log, lands in
+        // region 1, and thereby queues the full region 0 for the flusher
+        shard.submit(&sub(1, 500_016, 16), &gen_payload(1, 500_016, 16, 2));
+        assert_eq!(shard.stats().rerouted_writes, 1, "rewrite absorbed into the log");
+        // arm the gate, then hold one direct HDD write in flight
+        *gate.0.lock().unwrap() = true;
+        std::thread::scope(|s| {
+            let writer = Arc::clone(&shard);
+            s.spawn(move || {
+                writer.submit(&sub(2, 0, 16), &gen_payload(2, 0, 16, 1));
+            });
+            let t0 = Instant::now();
+            let deadline = Duration::from_secs(10);
+            while shard.direct_inflight.load(Ordering::Acquire) == 0 {
+                assert!(t0.elapsed() < deadline, "direct write never reached the device");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            // last stream pct 0.0 < pause_below, a direct write in
+            // flight, not drained: the flusher must pause before
+            // touching region 0
+            let flusher = Arc::clone(&shard);
+            s.spawn(move || flusher.flusher_loop());
+            while shard.stats().flush_pauses == 0 {
+                assert!(t0.elapsed() < deadline, "flusher never paused");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            // let the pause accrue measurable wall time, then release
+            std::thread::sleep(Duration::from_millis(5));
+            {
+                let (armed, cv) = &*gate;
+                *armed.lock().unwrap() = false;
+                cv.notify_all();
+            }
+            while shard.stats().flush_run_us == 0 {
+                assert!(t0.elapsed() < deadline, "flusher never resumed after the release");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            // drain region 1 so the flusher loop exits and the scope
+            // can join
+            shard.begin_drain();
+        });
+        let stats = shard.stats();
+        assert!(stats.flush_pauses >= 1, "the gate must have paused at least once");
+        assert!(stats.flush_pause_us > 0, "paused wall time must be booked");
+        assert!(stats.flush_run_us > 0, "copy wall time must be booked");
+        let duty = stats.flush_duty_cycle();
+        assert!(
+            duty > 0.0 && duty < 1.0,
+            "duty cycle must reflect both sides of the gate: {duty}"
+        );
+        // both sides are also attributed as latency stages
+        let lat = shard.stage_latency();
+        assert!(lat.get(Stage::FlushPause).count() >= 1);
+        assert!(lat.get(Stage::FlushRun).count() >= 1);
     }
 }

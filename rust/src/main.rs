@@ -5,6 +5,7 @@
 //!   list           list experiment ids
 //!   run            run one simulation (system/pattern/procs flags)
 //!   live           run the real-time sharded engine on a live workload
+//!   trace-check    validate a --trace export (CI smoke: stages present?)
 //!   runtime-info   verify artifacts + PJRT round-trip
 //!   version        print version
 
@@ -21,6 +22,7 @@ use ssdup::workload::Workload;
 const VALUE_OPTS: &[&str] = &[
     "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
     "queue", "shards", "backend", "clients", "dir", "crash-at", "group-commit-window",
+    "trace", "stats-interval", "require",
 ];
 
 fn main() {
@@ -41,6 +43,7 @@ fn main() {
         }
         Some("run") => cmd_run(&args),
         Some("live") => cmd_live(&args),
+        Some("trace-check") => cmd_trace_check(&args),
         Some("runtime-info") => cmd_runtime_info(),
         Some("version") => {
             println!("ssdup {}", ssdup::version());
@@ -48,7 +51,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: ssdup <exp|list|run|live|runtime-info|version> [flags]\n\
+                "usage: ssdup <exp|list|run|live|trace-check|runtime-info|version> [flags]\n\
                  \n\
                  ssdup exp all [--scale 8] [--seed N] [--json out.json]\n\
                  ssdup exp fig11 --scale 4\n\
@@ -59,8 +62,11 @@ fn main() {
                  \x20          [--no-verify] [--keep]\n\
                  \x20          [--group-commit-window US]  leader batching window (default 0)\n\
                  \x20          [--no-group-commit]         per-record fsync baseline\n\
+                 \x20          [--trace OUT.json]     record spans, export chrome://tracing JSON\n\
+                 \x20          [--stats-interval MS]  emit JSON-line telemetry snapshots on stderr\n\
                  \x20          [--crash-at N]   kill the process (no shutdown) after N acked requests\n\
-                 \x20          [--recover]      reopen --dir images, replay the log, drain\n"
+                 \x20          [--recover]      reopen --dir images, replay the log, drain\n\
+                 ssdup trace-check OUT.json [--require submit,route,...]  validate a trace export\n"
             );
             2
         }
@@ -228,6 +234,8 @@ fn cmd_live(args: &Args) -> i32 {
     let clients: usize = args.get_parse("clients", 8).unwrap_or(8);
     let seed: u64 = args.get_parse("seed", 7).unwrap_or(7);
     let pattern = args.get_or("pattern", "mixed");
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    let stats_ms: u64 = args.get_parse("stats-interval", 0).unwrap_or(0);
 
     let crash_at: Option<u64> = match args.get("crash-at") {
         Some(v) => match v.parse() {
@@ -246,7 +254,8 @@ fn cmd_live(args: &Args) -> i32 {
         .with_shards(shards)
         .with_ssd_mib(ssd_mib)
         .with_group_commit(!args.has("no-group-commit"))
-        .with_group_commit_window(std::time::Duration::from_micros(window_us));
+        .with_group_commit_window(std::time::Duration::from_micros(window_us))
+        .with_trace(trace_path.is_some());
 
     // --recover: reopen a previous `--backend file` run's images (same
     // --shards/--ssd-mib as the crashed run), replay the log, drain the
@@ -267,12 +276,18 @@ fn cmd_live(args: &Args) -> i32 {
         };
         println!("{}", report.summary());
         engine.drain();
+        let obs = std::sync::Arc::clone(engine.trace());
         let stats = engine.shutdown();
         let flushed: u64 = stats.iter().map(|s| s.flushed_bytes).sum();
         println!(
             "recovered data drained: {} MiB settled on the HDD images; clean superblocks written",
             flushed / (1 << 20)
         );
+        if let Some(path) = &trace_path {
+            if !write_trace(&obs, path) {
+                return 1;
+            }
+        }
         return 0;
     }
 
@@ -377,13 +392,18 @@ fn cmd_live(args: &Args) -> i32 {
         return 2;
     }
 
-    let report = live::run_load_with(&engine, &workload, clients, versioned);
+    let snapshots = (stats_ms > 0).then(|| live::SnapshotOptions {
+        interval: std::time::Duration::from_millis(stats_ms),
+        out: Box::new(std::io::stderr()) as Box<dyn std::io::Write + Send>,
+    });
+    let report = live::run_load_reported(&engine, &workload, clients, versioned, snapshots);
     println!("{}", report.summary());
     for (i, s) in report.shards.iter().enumerate() {
         println!(
             "  shard {i}: in {} MiB | ssd {} MiB | direct {} MiB | flushed {} MiB | \
              superseded {} MiB | {} rerouted | {} streams (rp {:.1}%) | {} flushes, \
-             {} pauses ({:.2}s), {} blocked waits | {} syncs ({:.1} writes/sync)",
+             {} pauses ({:.2}s), runs {:.2}s (duty {:.0}%), {} blocked waits | \
+             {} syncs ({:.1} writes/sync)",
             s.bytes_in / (1 << 20),
             s.ssd_bytes_buffered / (1 << 20),
             s.hdd_direct_bytes / (1 << 20),
@@ -395,10 +415,23 @@ fn cmd_live(args: &Args) -> i32 {
             s.flushes,
             s.flush_pauses,
             s.flush_pause_us as f64 / 1e6,
+            s.flush_run_us as f64 / 1e6,
+            s.flush_duty_cycle() * 100.0,
             s.blocked_waits,
             s.syncs,
             s.writes_per_sync(),
         );
+    }
+    println!("\nper-stage ack latency:\n{}", report.stage_summary());
+
+    // under --trace, read a sample request back through the engine so the
+    // export also carries the read-path stages (the load generator is
+    // write-only)
+    if trace_path.is_some() {
+        if let Some(req) = workload.processes.iter().find_map(|p| p.reqs.first()) {
+            let mut buf = vec![0u8; req.bytes() as usize];
+            engine.read(req.file, req.offset, &mut buf);
+        }
     }
 
     let mut code = 0;
@@ -417,13 +450,107 @@ fn cmd_live(args: &Args) -> i32 {
             code = 1;
         }
     }
+    let obs = std::sync::Arc::clone(engine.trace());
     engine.shutdown();
+    if let Some(path) = &trace_path {
+        if !write_trace(&obs, path) {
+            code = 1;
+        }
+    }
     if let Some(dir) = created_dir {
         if !args.has("keep") {
             std::fs::remove_dir_all(&dir).ok();
         } else {
             println!("kept backend dir: {}", dir.display());
         }
+    }
+    code
+}
+
+/// Drain the collector and export Chrome-trace JSON. Runs after
+/// `shutdown` so the rings also hold the final drain's flush/superblock
+/// spans. Returns false on I/O failure.
+fn write_trace(obs: &ssdup::obs::TraceCollector, path: &std::path::Path) -> bool {
+    let events = obs.drain();
+    let dropped = obs.dropped_events();
+    let json = ssdup::obs::chrome_trace_json(&events, dropped);
+    match std::fs::write(path, json.to_string()) {
+        Ok(()) => {
+            println!("trace: {} events ({dropped} dropped) -> {}", events.len(), path.display());
+            true
+        }
+        Err(e) => {
+            eprintln!("error: cannot write trace {}: {e}", path.display());
+            false
+        }
+    }
+}
+
+/// `ssdup trace-check FILE [--require a,b,c]` — CI smoke validation of a
+/// `--trace` export: the file must parse as JSON, and every required
+/// stage must have at least one event. Defaults to the write-ack path.
+fn cmd_trace_check(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: ssdup trace-check FILE [--require stage,stage,...]");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("error: {path} is not valid JSON: {e:?}");
+            return 1;
+        }
+    };
+    let Some(events) = json.get("traceEvents").and_then(|v| v.as_arr()) else {
+        eprintln!("error: {path} has no traceEvents array");
+        return 1;
+    };
+    let mut counts: std::collections::BTreeMap<&str, u64> = std::collections::BTreeMap::new();
+    for ev in events {
+        if let Some(name) = ev.get("name").and_then(|v| v.as_str()) {
+            *counts.entry(name).or_insert(0) += 1;
+        }
+    }
+    let dropped = json
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(|v| v.as_i64())
+        .unwrap_or(0);
+    println!("{path}: {} events, {} stages, {dropped} dropped", events.len(), counts.len());
+    for (name, n) in &counts {
+        println!("  {name:<14} {n}");
+    }
+    let required: Vec<String> = match args.get("require") {
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect(),
+        None => ["submit", "route", "reserve", "barrier_wait", "publish"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    let mut code = 0;
+    for stage in &required {
+        if ssdup::obs::Stage::from_name(stage).is_none() {
+            eprintln!("trace-check: '{stage}' is not a known stage name");
+            code = 2;
+        } else if counts.get(stage.as_str()).copied().unwrap_or(0) == 0 {
+            eprintln!("trace-check: required stage '{stage}' has no events");
+            code = 1;
+        }
+    }
+    if code == 0 {
+        println!("trace-check: OK ({} required stages present)", required.len());
     }
     code
 }

@@ -1,0 +1,34 @@
+//! Zero-dependency observability for the live engine: where does a p99
+//! write spend its time, and what is the flusher doing *right now*?
+//!
+//! Three cooperating pieces, all built on the standard library only:
+//!
+//! * [`trace`] — a lock-free per-thread trace collector. Instrumented
+//!   code emits compact timestamped spans into fixed-capacity SPSC
+//!   rings; overflow drops events (counted, never blocking) and a
+//!   *disabled* collector costs one atomic load per span. Drained
+//!   events export as Chrome `chrome://tracing` JSON
+//!   (`ssdup live --trace out.json`).
+//! * [`stages`] — the pipeline-stage taxonomy ([`Stage`]) and per-stage
+//!   latency attribution ([`StageSet`]): every acknowledged write's
+//!   route/reserve/device/barrier/publish spans fold into per-shard
+//!   [`crate::server::metrics::LatencyHistogram`]s, so a run can print
+//!   a p50/p95/p99 *decomposition* of ack latency and name the dominant
+//!   stage.
+//! * [`snapshot`] — the interval reporter: counter snapshots diffed on
+//!   a cadence (`ssdup live --stats-interval MS`) into machine-readable
+//!   JSON lines — throughput, writes-per-sync, blocked waits, flusher
+//!   duty cycle, SSD occupancy.
+//!
+//! Stage attribution (a few `Instant::now()` reads and one leaf-mutex
+//! histogram fold per operation) is always on; trace *event emission* is
+//! what the enabled flag gates. See the "Observability" section in
+//! [`crate::live`] for the stage taxonomy and the overhead contract.
+
+pub mod snapshot;
+pub mod stages;
+pub mod trace;
+
+pub use snapshot::{Counters, Snapshotter};
+pub use stages::{Stage, StageSet, N_STAGES};
+pub use trace::{chrome_trace_json, TraceCollector, TraceEvent, DEFAULT_RING_EVENTS};

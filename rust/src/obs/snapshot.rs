@@ -1,0 +1,209 @@
+//! Periodic snapshot reporter: interval-diffed counter snapshots emitted
+//! as machine-readable JSON lines (one object per line on stderr via
+//! `ssdup live --stats-interval MS`) — the live telemetry feed a future
+//! autotuner consumes instead of end-of-run totals.
+//!
+//! The diff logic is pure (counters in, JSON out) so it is unit-testable
+//! without an engine; `loadgen` drives it from a sampler thread that
+//! snapshots `ShardStats` on an interval. All derived rates guard the
+//! zero denominator and report 0.0 rather than NaN/inf.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::live::shard::ShardStats;
+use crate::util::json::Json;
+
+/// The counter totals one interval tick sees (summed over shards).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    pub bytes_in: u64,
+    pub ssd_bytes_buffered: u64,
+    pub flushed_bytes: u64,
+    pub superseded_bytes: u64,
+    pub blocked_waits: u64,
+    pub flushes: u64,
+    pub flush_runs: u64,
+    pub flush_pauses: u64,
+    pub flush_pause_us: u64,
+    pub flush_run_us: u64,
+    pub syncs: u64,
+    pub sync_barriers: u64,
+    pub dropped_trace_events: u64,
+}
+
+impl Counters {
+    /// Collapse per-shard stats into one snapshot.
+    pub fn from_stats(stats: &[ShardStats], dropped_trace_events: u64) -> Self {
+        let mut c = Counters { dropped_trace_events, ..Default::default() };
+        for s in stats {
+            c.bytes_in += s.bytes_in;
+            c.ssd_bytes_buffered += s.ssd_bytes_buffered;
+            c.flushed_bytes += s.flushed_bytes;
+            c.superseded_bytes += s.superseded_bytes;
+            c.blocked_waits += s.blocked_waits;
+            c.flushes += s.flushes;
+            c.flush_runs += s.flush_runs;
+            c.flush_pauses += s.flush_pauses;
+            c.flush_pause_us += s.flush_pause_us;
+            c.flush_run_us += s.flush_run_us;
+            c.syncs += s.syncs;
+            c.sync_barriers += s.sync_barriers;
+        }
+        c
+    }
+
+    /// Bytes currently resident in the SSD logs (buffered minus what the
+    /// flusher settled or superseded away).
+    pub fn ssd_occupancy_bytes(&self) -> u64 {
+        self.ssd_bytes_buffered.saturating_sub(self.flushed_bytes + self.superseded_bytes)
+    }
+}
+
+/// Interval differ: keeps the previous tick's counters and turns each
+/// new snapshot into one JSON line of deltas and rates.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshotter {
+    prev: Counters,
+    elapsed: Duration,
+    seq: u64,
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den <= 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+impl Snapshotter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold in one tick: `cur` is the running total, `since_start` the
+    /// wall clock since the run began. Returns the JSON-line object for
+    /// the interval since the previous tick.
+    pub fn tick(&mut self, cur: Counters, since_start: Duration) -> Json {
+        let interval = since_start.saturating_sub(self.elapsed);
+        let interval_s = interval.as_secs_f64();
+        let d = |cur_v: u64, prev_v: u64| cur_v.saturating_sub(prev_v);
+        let bytes = d(cur.bytes_in, self.prev.bytes_in);
+        let barriers = d(cur.sync_barriers, self.prev.sync_barriers);
+        let syncs = d(cur.syncs, self.prev.syncs);
+        let obj = BTreeMap::from([
+            ("seq".to_string(), Json::Num(self.seq as f64)),
+            ("t_s".to_string(), Json::Num(since_start.as_secs_f64())),
+            ("interval_s".to_string(), Json::Num(interval_s)),
+            // throughput over the interval, MB/s (1e6 bytes per second)
+            ("mbps".to_string(), Json::Num(ratio(bytes as f64 / 1e6, interval_s))),
+            ("bytes_in".to_string(), Json::Num(cur.bytes_in as f64)),
+            (
+                "writes_per_sync".to_string(),
+                Json::Num(ratio(barriers as f64, syncs as f64)),
+            ),
+            ("blocked_waits".to_string(), Json::Num(d(cur.blocked_waits, self.prev.blocked_waits) as f64)),
+            ("flushes".to_string(), Json::Num(d(cur.flushes, self.prev.flushes) as f64)),
+            ("flush_runs".to_string(), Json::Num(d(cur.flush_runs, self.prev.flush_runs) as f64)),
+            ("flush_pauses".to_string(), Json::Num(d(cur.flush_pauses, self.prev.flush_pauses) as f64)),
+            (
+                "flush_run_ms".to_string(),
+                Json::Num(d(cur.flush_run_us, self.prev.flush_run_us) as f64 / 1e3),
+            ),
+            (
+                "flush_pause_ms".to_string(),
+                Json::Num(d(cur.flush_pause_us, self.prev.flush_pause_us) as f64 / 1e3),
+            ),
+            ("ssd_occupancy_bytes".to_string(), Json::Num(cur.ssd_occupancy_bytes() as f64)),
+            (
+                "dropped_trace_events".to_string(),
+                Json::Num(cur.dropped_trace_events as f64),
+            ),
+        ]);
+        self.prev = cur;
+        self.elapsed = since_start;
+        self.seq += 1;
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get_num(j: &Json, key: &str) -> f64 {
+        j.get(key).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("missing {key}: {j}"))
+    }
+
+    #[test]
+    fn first_tick_reports_totals_as_deltas() {
+        let mut s = Snapshotter::new();
+        let cur = Counters {
+            bytes_in: 10_000_000,
+            ssd_bytes_buffered: 8_000_000,
+            flushed_bytes: 1_000_000,
+            superseded_bytes: 500_000,
+            syncs: 10,
+            sync_barriers: 40,
+            blocked_waits: 3,
+            ..Default::default()
+        };
+        let j = s.tick(cur, Duration::from_secs(2));
+        assert_eq!(get_num(&j, "seq"), 0.0);
+        assert!((get_num(&j, "mbps") - 5.0).abs() < 1e-9);
+        assert_eq!(get_num(&j, "writes_per_sync"), 4.0);
+        assert_eq!(get_num(&j, "blocked_waits"), 3.0);
+        assert_eq!(get_num(&j, "ssd_occupancy_bytes"), 6_500_000.0);
+    }
+
+    #[test]
+    fn second_tick_diffs_against_first() {
+        let mut s = Snapshotter::new();
+        let a = Counters { bytes_in: 1_000_000, syncs: 2, sync_barriers: 10, ..Default::default() };
+        s.tick(a, Duration::from_secs(1));
+        let b = Counters {
+            bytes_in: 3_000_000,
+            syncs: 2, // no new syncs this interval
+            sync_barriers: 10,
+            flush_pauses: 1,
+            flush_pause_us: 2_500,
+            flush_runs: 2,
+            flush_run_us: 7_500,
+            ..Default::default()
+        };
+        let j = s.tick(b, Duration::from_secs(2));
+        assert_eq!(get_num(&j, "seq"), 1.0);
+        assert!((get_num(&j, "mbps") - 2.0).abs() < 1e-9);
+        assert_eq!(get_num(&j, "writes_per_sync"), 0.0, "zero denominator yields 0.0");
+        assert!((get_num(&j, "flush_pause_ms") - 2.5).abs() < 1e-9);
+        assert!((get_num(&j, "flush_run_ms") - 7.5).abs() < 1e-9);
+        assert_eq!(get_num(&j, "flush_runs"), 2.0);
+    }
+
+    #[test]
+    fn zero_everything_is_all_zeros_not_nan() {
+        let mut s = Snapshotter::new();
+        let j = s.tick(Counters::default(), Duration::ZERO);
+        for key in ["mbps", "writes_per_sync", "interval_s", "flush_pause_ms"] {
+            let v = get_num(&j, key);
+            assert_eq!(v, 0.0, "{key} must be 0.0, got {v}");
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn counters_fold_shard_stats() {
+        let mut a = ShardStats::default();
+        a.bytes_in = 100;
+        a.flush_run_us = 7;
+        let mut b = ShardStats::default();
+        b.bytes_in = 50;
+        b.flush_pause_us = 3;
+        let c = Counters::from_stats(&[a, b], 9);
+        assert_eq!(c.bytes_in, 150);
+        assert_eq!(c.flush_run_us, 7);
+        assert_eq!(c.flush_pause_us, 3);
+        assert_eq!(c.dropped_trace_events, 9);
+    }
+}

@@ -1,0 +1,263 @@
+//! Per-stage latency attribution: the fixed pipeline-stage taxonomy and
+//! a bundle of per-stage [`LatencyHistogram`]s.
+//!
+//! Every acknowledged write is decomposed into adjacent, non-overlapping
+//! stage spans (route → reserve → device write → barrier wait → publish)
+//! whose durations are folded into a per-shard [`StageSet`]. Because the
+//! spans share their boundary timestamps, the per-stage sums add up to
+//! the total submit latency (up to one microsecond of truncation per
+//! stage), which is what lets `LiveReport` print a p50/p95/p99
+//! *decomposition* of ack latency and name the dominant stage.
+//!
+//! The same taxonomy labels the trace events emitted by
+//! [`crate::obs::trace`], so a Chrome-trace timeline and the histogram
+//! decomposition always speak the same language.
+
+use crate::server::metrics::LatencyHistogram;
+
+/// One pipeline stage of the live engine. The discriminant doubles as
+/// the index into [`StageSet`] and the compact stage id carried by trace
+/// events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Stage {
+    /// Whole `Shard::submit` call: entry to acknowledged (published).
+    Submit = 0,
+    /// Stream grouping + route decision, *including* any valve/absorb
+    /// waits that force another routing pass — time spent blocked on
+    /// backpressure is routing time, not device time.
+    Route = 1,
+    /// Slot + ownership claim under the core lock (reserve phase).
+    Reserve = 2,
+    /// Unlocked SSD log append (header + payload sectors).
+    SsdWrite = 3,
+    /// Unlocked direct HDD write.
+    HddWrite = 4,
+    /// Group-commit barrier: from barrier entry until a covering device
+    /// sync completed (shared-leader wait included).
+    BarrierWait = 5,
+    /// Publish critical section: re-acquire the core lock, mark the
+    /// claim durable, wake waiters.
+    Publish = 6,
+    /// Read resolve/pin critical section (waits for in-flight overlaps).
+    ReadResolve = 7,
+    /// Unlocked read segment transfers (SSD and HDD tiers).
+    ReadDevice = 8,
+    /// One coalesced flusher copy run: SSD read + HDD write of a run.
+    FlushRun = 9,
+    /// Traffic-aware flush gate pause (§2.4.2): random traffic present,
+    /// directs in flight, flusher held off the HDD.
+    FlushPause = 10,
+    /// Superblock slot write + covering barrier.
+    SbWrite = 11,
+    /// Recovery: superblock read + region scan + record replay.
+    Replay = 12,
+}
+
+/// Number of stages (length of [`Stage::ALL`]).
+pub const N_STAGES: usize = 13;
+
+impl Stage {
+    /// Every stage, in discriminant order.
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Submit,
+        Stage::Route,
+        Stage::Reserve,
+        Stage::SsdWrite,
+        Stage::HddWrite,
+        Stage::BarrierWait,
+        Stage::Publish,
+        Stage::ReadResolve,
+        Stage::ReadDevice,
+        Stage::FlushRun,
+        Stage::FlushPause,
+        Stage::SbWrite,
+        Stage::Replay,
+    ];
+
+    /// The additive components of an acknowledged write: these spans are
+    /// adjacent and partition a `Submit` span, so their sums reconcile
+    /// with the `Submit` total.
+    pub const ACK_COMPONENTS: [Stage; 5] =
+        [Stage::Route, Stage::Reserve, Stage::SsdWrite, Stage::BarrierWait, Stage::Publish];
+
+    /// Stable snake_case name (trace event `name`, JSON keys, CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Route => "route",
+            Stage::Reserve => "reserve",
+            Stage::SsdWrite => "ssd_write",
+            Stage::HddWrite => "hdd_write",
+            Stage::BarrierWait => "barrier_wait",
+            Stage::Publish => "publish",
+            Stage::ReadResolve => "read_resolve",
+            Stage::ReadDevice => "read_device",
+            Stage::FlushRun => "flush_run",
+            Stage::FlushPause => "flush_pause",
+            Stage::SbWrite => "sb_write",
+            Stage::Replay => "replay",
+        }
+    }
+
+    /// Inverse of [`Stage::name`].
+    pub fn from_name(name: &str) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|s| s.name() == name)
+    }
+}
+
+/// One latency histogram per pipeline stage — a shard's (or a whole
+/// run's, after merging) ack-latency decomposition.
+#[derive(Clone, Debug)]
+pub struct StageSet {
+    hists: [LatencyHistogram; N_STAGES],
+}
+
+impl Default for StageSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StageSet {
+    pub fn new() -> Self {
+        Self { hists: std::array::from_fn(|_| LatencyHistogram::new()) }
+    }
+
+    #[inline]
+    pub fn record(&mut self, stage: Stage, us: u64) {
+        self.hists[stage as usize].record(us);
+    }
+
+    pub fn get(&self, stage: Stage) -> &LatencyHistogram {
+        &self.hists[stage as usize]
+    }
+
+    /// Fold another set in (per-shard sets -> run total).
+    pub fn merge(&mut self, other: &StageSet) {
+        for (a, b) in self.hists.iter_mut().zip(&other.hists) {
+            a.merge(b);
+        }
+    }
+
+    /// Total recorded time across the additive ack components — the
+    /// reconstruction of total ack latency from its parts.
+    pub fn ack_component_sum_us(&self) -> u64 {
+        let mut total = 0u64;
+        for s in Stage::ACK_COMPONENTS {
+            total += self.get(s).sum_us();
+        }
+        total += self.get(Stage::HddWrite).sum_us(); // alternative of SsdWrite
+        total
+    }
+
+    /// The ack component where acknowledged writes spent the most total
+    /// time. `None` until a write has been recorded.
+    pub fn dominant_ack_stage(&self) -> Option<Stage> {
+        let mut best: Option<(Stage, u64)> = None;
+        for s in Stage::ACK_COMPONENTS.into_iter().chain([Stage::HddWrite]) {
+            let sum = self.get(s).sum_us();
+            if sum > 0 && best.map(|(_, b)| sum > b).unwrap_or(true) {
+                best = Some((s, sum));
+            }
+        }
+        best.map(|(s, _)| s)
+    }
+
+    /// Multi-line p50/p95/p99 decomposition table for every stage that
+    /// recorded at least one span, dominant ack stage named at the end.
+    pub fn summary(&self) -> String {
+        let mut out = String::from(
+            "stage           count      p50us      p95us      p99us     mean_us\n",
+        );
+        for s in Stage::ALL {
+            let h = self.get(s);
+            if h.count() == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<14} {:>6} {:>10} {:>10} {:>10} {:>11.1}\n",
+                s.name(),
+                h.count(),
+                h.p50(),
+                h.p95(),
+                h.p99(),
+                h.mean_us(),
+            ));
+        }
+        match self.dominant_ack_stage() {
+            Some(s) => out.push_str(&format!("dominant ack stage: {}\n", s.name())),
+            None => out.push_str("dominant ack stage: none (no writes recorded)\n"),
+        }
+        out
+    }
+
+    /// Machine-readable form for `BENCH_live.json`:
+    /// `{stage: {count, p50_us, p95_us, p99_us, mean_us, sum_us}}`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut stages = std::collections::BTreeMap::new();
+        for s in Stage::ALL {
+            let h = self.get(s);
+            if h.count() == 0 {
+                continue;
+            }
+            stages.insert(
+                s.name().to_string(),
+                Json::Obj(std::collections::BTreeMap::from([
+                    ("count".to_string(), Json::Num(h.count() as f64)),
+                    ("p50_us".to_string(), Json::Num(h.p50() as f64)),
+                    ("p95_us".to_string(), Json::Num(h.p95() as f64)),
+                    ("p99_us".to_string(), Json::Num(h.p99() as f64)),
+                    ("mean_us".to_string(), Json::Num(h.mean_us())),
+                    ("sum_us".to_string(), Json::Num(h.sum_us() as f64)),
+                ])),
+            );
+        }
+        Json::Obj(stages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_round_trip() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_name(s.name()), Some(s), "{}", s.name());
+        }
+        assert_eq!(Stage::from_name("bogus"), None);
+        // discriminants are the ALL indices (trace events rely on this)
+        for (i, s) in Stage::ALL.into_iter().enumerate() {
+            assert_eq!(s as usize, i);
+        }
+    }
+
+    #[test]
+    fn record_merge_and_dominant() {
+        let mut a = StageSet::new();
+        a.record(Stage::Route, 5);
+        a.record(Stage::SsdWrite, 100);
+        a.record(Stage::Submit, 110);
+        let mut b = StageSet::new();
+        b.record(Stage::SsdWrite, 300);
+        a.merge(&b);
+        assert_eq!(a.get(Stage::SsdWrite).count(), 2);
+        assert_eq!(a.get(Stage::SsdWrite).sum_us(), 400);
+        assert_eq!(a.dominant_ack_stage(), Some(Stage::SsdWrite));
+        let s = a.summary();
+        assert!(s.contains("ssd_write"), "{s}");
+        assert!(s.contains("dominant ack stage: ssd_write"), "{s}");
+        assert!(!s.contains("hdd_write"), "empty stages are omitted: {s}");
+    }
+
+    #[test]
+    fn empty_set_is_quiet() {
+        let s = StageSet::new();
+        assert_eq!(s.dominant_ack_stage(), None);
+        assert_eq!(s.ack_component_sum_us(), 0);
+        assert!(s.summary().contains("none"));
+        assert_eq!(s.to_json().to_string(), "{}");
+    }
+}

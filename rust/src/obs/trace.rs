@@ -1,0 +1,358 @@
+//! Lock-free per-thread trace collector with Chrome-trace export.
+//!
+//! Every instrumented thread owns a fixed-capacity single-producer /
+//! single-consumer ring of compact [`TraceEvent`]s; the collector drains
+//! all rings on demand. The hot path never blocks and never allocates:
+//! a full ring **drops** the event and bumps a shared `dropped_events`
+//! counter, and a *disabled* collector costs exactly one atomic load per
+//! span ([`TraceCollector::is_enabled`]).
+//!
+//! Rings are registered lazily the first time a thread emits into a
+//! given collector; a thread-local cache maps collector id → ring so the
+//! steady-state emit path is: atomic enabled check, TLS lookup, one slot
+//! write, one `Release` store.
+//!
+//! Export is the Chrome `chrome://tracing` / Perfetto JSON event format:
+//! complete (`"ph":"X"`) events with microsecond timestamps relative to
+//! the collector's epoch, `pid` = shard id, `tid` = ring (thread) id.
+
+use std::cell::{RefCell, UnsafeCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs::stages::Stage;
+use crate::util::json::Json;
+
+/// Default per-thread ring capacity, in events (~16K events ≈ 0.5 MiB
+/// per instrumented thread).
+pub const DEFAULT_RING_EVENTS: usize = 16 * 1024;
+
+/// One completed span. Compact and `Copy` so ring slots are plain moves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub stage: Stage,
+    /// Shard the span ran on (Chrome trace `pid`).
+    pub shard: u32,
+    /// Ring (thread) id within the collector (Chrome trace `tid`).
+    pub tid: u32,
+    /// Span start, microseconds since the collector's epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Default for TraceEvent {
+    fn default() -> Self {
+        Self { stage: Stage::Submit, shard: 0, tid: 0, start_us: 0, dur_us: 0 }
+    }
+}
+
+/// Fixed-capacity SPSC event ring. Producer = the owning thread (via the
+/// thread-local cache), consumer = whoever holds the collector's
+/// registry lock in [`TraceCollector::drain`].
+struct Ring {
+    slots: Box<[UnsafeCell<TraceEvent>]>,
+    /// Next slot the producer writes (monotone; slot = head % capacity).
+    head: AtomicU64,
+    /// Next slot the consumer reads (monotone).
+    tail: AtomicU64,
+    tid: u32,
+}
+
+// SAFETY: the ring is SPSC by construction. The single producer (the
+// thread that registered the ring — rings are reached only through the
+// thread-local cache) writes a slot *before* publishing it with a
+// `Release` store of `head`; the single consumer (serialized by the
+// registry mutex in `drain`) `Acquire`-loads `head`, so it observes
+// fully written slots, and frees them with a `Release` store of `tail`
+// which the producer `Acquire`-loads before reusing a slot. Producer and
+// consumer never touch the same slot concurrently: the producer writes
+// only slots in `[head, tail + capacity)`, the consumer reads only
+// `[tail, head)`.
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(capacity: usize, tid: u32) -> Self {
+        let slots: Vec<UnsafeCell<TraceEvent>> =
+            (0..capacity.max(1)).map(|_| UnsafeCell::new(TraceEvent::default())).collect();
+        Self {
+            slots: slots.into_boxed_slice(),
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            tid,
+        }
+    }
+
+    /// Producer side: push or drop. Returns false when the ring was full
+    /// (the caller counts the drop); never blocks.
+    fn push(&self, ev: TraceEvent) -> bool {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head - tail >= self.slots.len() as u64 {
+            return false;
+        }
+        let idx = (head % self.slots.len() as u64) as usize;
+        // SAFETY: slot `idx` is unpublished (>= previous head, < tail +
+        // capacity), so the consumer will not read it until the Release
+        // store below, and no other producer exists.
+        unsafe { *self.slots[idx].get() = ev };
+        self.head.store(head + 1, Ordering::Release);
+        true
+    }
+
+    /// Consumer side: copy out everything published since the last drain.
+    fn drain_into(&self, out: &mut Vec<TraceEvent>) {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        while tail < head {
+            let idx = (tail % self.slots.len() as u64) as usize;
+            // SAFETY: `tail < head` means the slot was published by a
+            // Release store the Acquire load above synchronized with,
+            // and the producer will not reuse it until `tail` advances.
+            out.push(unsafe { *self.slots[idx].get() });
+            tail += 1;
+        }
+        self.tail.store(tail, Ordering::Release);
+    }
+}
+
+/// Collector ids are process-global so a thread can cache rings for any
+/// number of live collectors (one per engine, plus tests).
+static NEXT_COLLECTOR_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (collector id, this thread's ring in that collector).
+    static TLS_RINGS: RefCell<Vec<(u64, Arc<Ring>)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The per-engine trace collector: an enabled flag, an epoch, and the
+/// registry of per-thread rings.
+pub struct TraceCollector {
+    id: u64,
+    enabled: AtomicBool,
+    epoch: Instant,
+    ring_events: usize,
+    dropped: AtomicU64,
+    rings: Mutex<Vec<Arc<Ring>>>,
+}
+
+impl Default for TraceCollector {
+    fn default() -> Self {
+        Self::new(DEFAULT_RING_EVENTS)
+    }
+}
+
+impl TraceCollector {
+    /// A collector that starts *disabled*: spans cost one atomic load
+    /// until [`TraceCollector::set_enabled`] turns them on.
+    pub fn new(ring_events: usize) -> Self {
+        Self {
+            id: NEXT_COLLECTOR_ID.fetch_add(1, Ordering::Relaxed),
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            ring_events,
+            dropped: AtomicU64::new(0),
+            rings: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// The one branch a disabled collector costs on the hot path.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record a completed span. No-op (one atomic load) when disabled.
+    #[inline]
+    pub fn emit(&self, stage: Stage, shard: u32, start: Instant, end: Instant) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.emit_always(stage, shard, start, end);
+    }
+
+    fn emit_always(&self, stage: Stage, shard: u32, start: Instant, end: Instant) {
+        let ev = TraceEvent {
+            stage,
+            shard,
+            tid: 0, // stamped with the ring id below
+            start_us: start.duration_since(self.epoch).as_micros() as u64,
+            dur_us: end.duration_since(start).as_micros() as u64,
+        };
+        TLS_RINGS.with(|cell| {
+            let mut cached = cell.borrow_mut();
+            let ring = match cached.iter().find(|(id, _)| *id == self.id) {
+                Some((_, ring)) => Arc::clone(ring),
+                None => {
+                    let ring = self.register_ring();
+                    cached.push((self.id, Arc::clone(&ring)));
+                    // collectors come and go (one per engine); drop cache
+                    // entries whose collector can no longer be reached
+                    cached.retain(|(_, r)| Arc::strong_count(r) > 1);
+                    ring
+                }
+            };
+            if !ring.push(TraceEvent { tid: ring.tid, ..ev }) {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+
+    fn register_ring(&self) -> Arc<Ring> {
+        let mut rings = self.rings.lock().unwrap();
+        let ring = Arc::new(Ring::new(self.ring_events, rings.len() as u32));
+        rings.push(Arc::clone(&ring));
+        ring
+    }
+
+    /// Events dropped to ring overflow since construction.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain every ring, returning all buffered events ordered by start
+    /// time. Concurrent emitters keep running — they only ever touch the
+    /// producer end of their own ring.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let rings = self.rings.lock().unwrap();
+        let mut out = Vec::new();
+        for ring in rings.iter() {
+            ring.drain_into(&mut out);
+        }
+        out.sort_by_key(|e| (e.start_us, e.tid, e.stage as u8));
+        out
+    }
+}
+
+/// Render drained events as a Chrome `chrome://tracing` document
+/// (`traceEvents` array of complete `"X"` events; `dropped_events` noted
+/// in `otherData`).
+pub fn chrome_trace_json(events: &[TraceEvent], dropped_events: u64) -> Json {
+    let evs = events
+        .iter()
+        .map(|e| {
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::Str(e.stage.name().to_string())),
+                ("cat".to_string(), Json::Str("ssdup".to_string())),
+                ("ph".to_string(), Json::Str("X".to_string())),
+                ("ts".to_string(), Json::Num(e.start_us as f64)),
+                ("dur".to_string(), Json::Num(e.dur_us as f64)),
+                ("pid".to_string(), Json::Num(e.shard as f64)),
+                ("tid".to_string(), Json::Num(e.tid as f64)),
+            ]))
+        })
+        .collect();
+    Json::Obj(BTreeMap::from([
+        ("traceEvents".to_string(), Json::Arr(evs)),
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+        (
+            "otherData".to_string(),
+            Json::Obj(BTreeMap::from([(
+                "dropped_events".to_string(),
+                Json::Num(dropped_events as f64),
+            )])),
+        ),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn span(c: &TraceCollector, stage: Stage, shard: u32, start_us: u64, dur_us: u64) {
+        let start = c.epoch + Duration::from_micros(start_us);
+        c.emit(stage, shard, start, start + Duration::from_micros(dur_us));
+    }
+
+    #[test]
+    fn disabled_collector_emits_nothing() {
+        let c = TraceCollector::new(8);
+        span(&c, Stage::Submit, 0, 10, 5);
+        assert!(c.drain().is_empty());
+        assert_eq!(c.dropped_events(), 0);
+    }
+
+    #[test]
+    fn events_round_trip_in_order() {
+        let c = TraceCollector::new(64);
+        c.set_enabled(true);
+        span(&c, Stage::Route, 3, 20, 2);
+        span(&c, Stage::Submit, 3, 10, 15);
+        let evs = c.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].stage, Stage::Submit, "sorted by start_us");
+        assert_eq!(evs[0].start_us, 10);
+        assert_eq!(evs[0].dur_us, 15);
+        assert_eq!(evs[0].shard, 3);
+        assert_eq!(evs[1].stage, Stage::Route);
+        // second drain is empty (events consumed once)
+        assert!(c.drain().is_empty());
+        // and the ring keeps accepting afterwards
+        span(&c, Stage::Publish, 1, 40, 1);
+        assert_eq!(c.drain().len(), 1);
+    }
+
+    #[test]
+    fn overflow_drops_instead_of_blocking() {
+        let c = TraceCollector::new(4);
+        c.set_enabled(true);
+        for i in 0..10 {
+            span(&c, Stage::Submit, 0, i, 1);
+        }
+        assert_eq!(c.drain().len(), 4, "ring capacity bounds buffered events");
+        assert_eq!(c.dropped_events(), 6);
+        // drained slots are reusable
+        span(&c, Stage::Submit, 0, 99, 1);
+        assert_eq!(c.drain().len(), 1);
+        assert_eq!(c.dropped_events(), 6);
+    }
+
+    #[test]
+    fn threads_get_their_own_rings() {
+        let c = Arc::new(TraceCollector::new(1024));
+        c.set_enabled(true);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for i in 0..100 {
+                        span(&c, Stage::SsdWrite, t, i, 1);
+                    }
+                });
+            }
+        });
+        let evs = c.drain();
+        assert_eq!(evs.len(), 400);
+        let tids: std::collections::BTreeSet<u32> = evs.iter().map(|e| e.tid).collect();
+        assert_eq!(tids.len(), 4, "one ring per emitting thread: {tids:?}");
+        assert_eq!(c.dropped_events(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json() {
+        let c = TraceCollector::new(16);
+        c.set_enabled(true);
+        span(&c, Stage::FlushRun, 2, 100, 50);
+        let doc = chrome_trace_json(&c.drain(), 7);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("chrome trace must re-parse");
+        let evs = parsed.get("traceEvents").and_then(|j| j.as_arr()).expect("traceEvents");
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("name").and_then(|j| j.as_str()), Some("flush_run"));
+        assert_eq!(evs[0].get("ph").and_then(|j| j.as_str()), Some("X"));
+        assert_eq!(evs[0].get("ts").and_then(|j| j.as_f64()), Some(100.0));
+        assert_eq!(evs[0].get("dur").and_then(|j| j.as_f64()), Some(50.0));
+        assert_eq!(evs[0].get("pid").and_then(|j| j.as_f64()), Some(2.0));
+        assert_eq!(
+            parsed.get("otherData").and_then(|j| j.get("dropped_events")).and_then(|j| j.as_f64()),
+            Some(7.0)
+        );
+    }
+}

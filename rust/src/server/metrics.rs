@@ -14,7 +14,7 @@ const HIST_BUCKETS: usize = 512;
 /// Log-bucketed latency histogram (microseconds). HDR-style bucketing:
 /// fixed memory, ~12.5% worst-case value error, O(1) record, mergeable
 /// across load-generator threads.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LatencyHistogram {
     buckets: Vec<u64>,
     count: u64,
@@ -78,6 +78,20 @@ impl LatencyHistogram {
 
     pub fn max_us(&self) -> u64 {
         self.max_us
+    }
+
+    /// Exact total of recorded values — the additive quantity stage
+    /// attribution reconciles across histograms (sums are exact even
+    /// though quantiles are bucketed).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Bucket index a value falls into — the granularity unit for
+    /// "within one bucket" accuracy statements (property tests compare
+    /// `quantile()` against an exact reference through this).
+    pub fn bucket_of(us: u64) -> usize {
+        bucket_index(us)
     }
 
     /// Value at quantile `q` in [0, 1] (bucket lower bound; exact for

@@ -104,6 +104,19 @@ fn file_backend_drains_and_verifies_in_tempdir() {
         stats.iter().map(|s| s.flushes).sum::<u64>() >= 4,
         "small SSD must force multiple flush cycles"
     );
+    // the flusher accounts its copy time (companion of flush_pause_us,
+    // making the duty cycle computable)
+    let run_us: u64 = stats.iter().map(|s| s.flush_run_us).sum();
+    assert!(run_us > 0, "flush cycles must book SSD→HDD copy time");
+    for s in &stats {
+        let duty = s.flush_duty_cycle();
+        assert!(
+            (0.0..=1.0).contains(&duty),
+            "duty cycle must be a fraction, got {duty} (run {} us, pause {} us)",
+            s.flush_run_us,
+            s.flush_pause_us
+        );
+    }
     // the backends are real files on disk
     for i in 0..4 {
         assert!(dir.join(format!("shard{i}-ssd.log")).exists());
@@ -220,6 +233,102 @@ fn mid_burst_reads_see_writes_before_any_drain() {
     engine.read(9, 0, &mut got);
     assert_eq!(got, buf, "post-drain read matches");
     engine.shutdown();
+}
+
+#[test]
+fn stage_decomposition_reconciles_with_ack_latency() {
+    use ssdup::obs::Stage;
+    // mixed contiguous + random load so both device routes contribute
+    let w = Workload::concurrent(
+        "stage-mix",
+        ior(0, IorPattern::SegmentedContiguous, 2, 16_384, DEFAULT_REQ_SECTORS, 5),
+        ior_spanned(0, IorPattern::SegmentedRandom, 2, 16_384, 16_384 * 16, DEFAULT_REQ_SECTORS, 6),
+    );
+    let cfg = live_cfg(SystemKind::SsdupPlus, 2, 64);
+    let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+    let report = live::run_load(&engine, &w, 4);
+    engine.shutdown();
+
+    let stages = &report.stages;
+    assert_eq!(stages.get(Stage::Submit).count(), report.requests);
+    assert_eq!(stages.get(Stage::Route).count(), report.requests);
+    assert_eq!(stages.get(Stage::Publish).count(), report.requests);
+    assert_eq!(
+        stages.get(Stage::SsdWrite).count() + stages.get(Stage::HddWrite).count(),
+        report.requests,
+        "every ack took exactly one device route"
+    );
+    for s in Stage::ALL {
+        let h = stages.get(s);
+        assert!(h.p50() <= h.p95() && h.p95() <= h.p99(), "{} quantiles ordered", s.name());
+    }
+    // the ack components are adjacent spans sharing their boundary
+    // timestamps, so their sums reconstruct the total submit latency up
+    // to one microsecond of truncation per span (6 spans per ack)
+    let total = stages.get(Stage::Submit).sum_us();
+    let parts = stages.ack_component_sum_us();
+    let slack = 8 * report.requests + 16;
+    assert!(
+        parts <= total + slack && total <= parts + slack,
+        "stage sums must reconcile with ack latency: parts {parts} us vs total {total} us \
+         (slack {slack} us over {} requests)",
+        report.requests
+    );
+    assert!(stages.dominant_ack_stage().is_some());
+    let summary = report.stage_summary();
+    assert!(summary.contains("submit"), "{summary}");
+    assert!(summary.contains("dominant ack stage"), "{summary}");
+}
+
+#[test]
+fn trace_export_covers_every_pipeline_stage() {
+    use ssdup::obs::{chrome_trace_json, Stage};
+    // one shard, tracing on, small SSD + short streams: the random load
+    // bootstraps through the direct HDD route, flips to the SSD log once
+    // detection kicks in, and cycles the flusher; a read afterwards
+    // covers the read path. That pins down every stage but flush_pause
+    // (deterministically exercised in the shard unit tests) and replay
+    // (the crash-recovery path, exercised in CI's recover smoke run).
+    let sectors = 32_768; // 16 MiB
+    let w = ior_spanned(0, IorPattern::SegmentedRandom, 4, sectors, sectors * 16, DEFAULT_REQ_SECTORS, 3);
+    let mut cfg = live_cfg(SystemKind::SsdupPlus, 1, 8).with_trace(true);
+    cfg = cfg.with_stream_len(16);
+    let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
+    let report = live::run_load(&engine, &w, 4);
+    assert_eq!(report.requests, w.total_requests() as u64);
+    // read back one request's range through the engine (read stages)
+    let req = w.processes[0].reqs[0];
+    let mut buf = vec![0u8; req.bytes() as usize];
+    engine.read(req.file, req.offset, &mut buf);
+
+    let obs = std::sync::Arc::clone(engine.trace());
+    engine.shutdown(); // the final drain's flush + superblock spans land too
+    let events = obs.drain();
+    assert!(!events.is_empty());
+
+    let count = |stage: Stage| events.iter().filter(|e| e.stage == stage).count();
+    for stage in [
+        Stage::Submit,
+        Stage::Route,
+        Stage::Reserve,
+        Stage::SsdWrite,
+        Stage::HddWrite,
+        Stage::BarrierWait,
+        Stage::Publish,
+        Stage::ReadResolve,
+        Stage::ReadDevice,
+        Stage::FlushRun,
+        Stage::SbWrite,
+    ] {
+        assert!(count(stage) > 0, "trace must carry at least one {} span", stage.name());
+    }
+    assert_eq!(count(Stage::Submit) as u64, report.requests, "one submit span per ack");
+
+    // the export is loadable chrome://tracing JSON
+    let doc = chrome_trace_json(&events, obs.dropped_events());
+    let parsed = ssdup::util::json::Json::parse(&doc.to_string()).expect("trace JSON re-parses");
+    let evs = parsed.get("traceEvents").and_then(|j| j.as_arr()).expect("traceEvents array");
+    assert_eq!(evs.len(), events.len());
 }
 
 #[test]

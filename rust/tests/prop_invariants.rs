@@ -11,6 +11,7 @@ use ssdup::device::{Hdd, HddConfig};
 use ssdup::fs::StripeLayout;
 use ssdup::live::{payload, LiveConfig, LiveEngine, OwnershipMap, SyntheticLatency, Tier};
 use ssdup::redirector::{AdaptivePolicy, PercentList, RoutePolicy};
+use ssdup::server::metrics::LatencyHistogram;
 use ssdup::server::SystemKind;
 use ssdup::types::{Detection, Request, SECTOR_BYTES};
 use ssdup::util::prng::Prng;
@@ -304,6 +305,87 @@ fn prop_recovered_ownership_matches_btreemap_model_at_any_crash_point() {
             }
         }
         true
+    });
+}
+
+#[test]
+fn prop_histogram_quantile_within_one_bucket_of_sorted_reference() {
+    // the accuracy contract stage attribution relies on: for any value
+    // mix and any quantile, the histogram's answer lands in the same
+    // log-bucket as the exact order-statistic (off by at most one
+    // bucket), even though only 512 counters are kept. The exact
+    // reference uses the same rank definition as `quantile`:
+    // ceil(q * n), clamped to at least the first sample.
+    forall(21, 200, "histogram quantile accuracy", |rng: &mut Prng, size| {
+        let n = rng.range(1, 2 + size * 8);
+        let seed = rng.next_u64();
+        (n, seed)
+    }, |&(n, seed)| {
+        let mut rng = Prng::new(seed);
+        let mut h = LatencyHistogram::new();
+        let mut values: Vec<u64> = (0..n)
+            .map(|_| {
+                // span the interesting scales: exact sub-16us values,
+                // mid-range, and huge outliers (bounded below 2^50 so
+                // the histogram's exact running sum cannot overflow)
+                let shift = 14 + rng.gen_range(50) as u32;
+                rng.next_u64() >> shift
+            })
+            .collect();
+        for &v in &values {
+            h.record(v);
+        }
+        values.sort_unstable();
+        for q in [0.0, 0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let rank = ((q * n as f64).ceil() as usize).max(1).min(n);
+            let exact = values[rank - 1];
+            let got = h.quantile(q);
+            let be = LatencyHistogram::bucket_of(exact) as i64;
+            let bg = LatencyHistogram::bucket_of(got) as i64;
+            if (be - bg).abs() > 1 {
+                return false;
+            }
+            // and the bucket lower bound never overshoots the exact value
+            if got > exact {
+                return false;
+            }
+        }
+        h.count() == n as u64 && h.sum_us() == values.iter().sum::<u64>()
+    });
+}
+
+#[test]
+fn prop_histogram_merge_is_associative_and_order_free() {
+    // per-thread histograms fold into per-shard sets which fold into the
+    // run report: the result must not depend on fold shape or order
+    forall(22, 200, "histogram merge associativity", |rng: &mut Prng, size| {
+        let n = rng.range(3, 3 + size * 6);
+        let seed = rng.next_u64();
+        (n, seed)
+    }, |&(n, seed)| {
+        let mut rng = Prng::new(seed);
+        let mut parts = [LatencyHistogram::new(), LatencyHistogram::new(), LatencyHistogram::new()];
+        let mut all = LatencyHistogram::new();
+        for _ in 0..n {
+            let v = rng.next_u64() >> (14 + rng.gen_range(50) as u32);
+            parts[rng.gen_range(3) as usize].record(v);
+            all.record(v);
+        }
+        let [a, b, c] = parts;
+        // (a ∪ b) ∪ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ∪ (b ∪ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        // c ∪ b ∪ a (commuted)
+        let mut rev = c.clone();
+        rev.merge(&b);
+        rev.merge(&a);
+        left == right && left == rev && left == all
     });
 }
 
