@@ -1,8 +1,9 @@
 //! Live-engine benchmarks: shard- and client-scaling throughput on
 //! `MemBackend` with synthetic device latency (the sleeps model real
 //! device service times, so concurrency — not memcpy speed — dominates,
-//! exactly like a real deployment), mid-burst read latency, a
-//! rewrite-heavy section, and a `FileBackend` smoke bench.
+//! exactly like a real deployment), an IO-depth sweep at fixed worker
+//! count, mid-burst read latency, a rewrite-heavy section, and a
+//! `FileBackend` smoke bench.
 //!
 //! Run: `cargo bench --bench bench_live` (SSDUP_BENCH_FAST=1 to shrink —
 //! that mode also runs as a blocking CI smoke step).
@@ -280,6 +281,90 @@ fn main() {
                 on.3,
                 on.2,
                 off.2
+            );
+        }
+    }
+
+    section("io-depth sweep: in-flight writes per shard, fixed --io-workers (FileBackend)");
+    {
+        // vary the number of in-flight writes per shard (one closed-loop
+        // client = one write in flight) at a CONSTANT worker count: the
+        // submission queue decouples depth from thread count, so
+        // throughput must scale with depth while the 4 I/O workers and
+        // the shared group-commit barrier do the batching. Real files so
+        // fsync has a real price.
+        let mib: i64 = if fast { 6 } else { 24 };
+        let sectors = mib * 2048;
+        let wd = ior_spanned(0, IorPattern::SegmentedRandom, 16, sectors, sectors * 8, 128, 43);
+        let dbytes = wd.total_bytes() as f64;
+        // (depth, mbps, achieved high-water, achieved mean depth)
+        let mut depth_mbps: Vec<(usize, f64, u64, f64)> = Vec::new();
+        for depth in [1usize, 2, 4, 8, 16] {
+            let name = format!("live/io-depth-{depth}");
+            if Bench::should_run(&name) {
+                let dir = std::env::temp_dir()
+                    .join(format!("ssdup-bench-iodepth-{depth}-{}", std::process::id()));
+                let mut last = (0.0f64, 0u64, 0.0f64);
+                b.run(&name, dbytes, || {
+                    std::fs::remove_dir_all(&dir).ok();
+                    let cfg = LiveConfig::new(SystemKind::OrangeFsBB)
+                        .with_shards(1)
+                        .with_ssd_mib(mib as u64 * 2)
+                        .with_io_workers(4)
+                        .with_group_commit_window(std::time::Duration::from_micros(500));
+                    let engine = LiveEngine::file(&cfg, &dir).expect("file backends");
+                    let report = live::run_load(&engine, &wd, depth);
+                    engine.shutdown();
+                    last = (
+                        report.throughput_mbps(),
+                        report.io_depth_high_water(),
+                        report.io_mean_depth(),
+                    );
+                    bb(last.0)
+                });
+                std::fs::remove_dir_all(&dir).ok();
+                depth_mbps.push((depth, last.0, last.1, last.2));
+            }
+        }
+        if !depth_mbps.is_empty() {
+            out.insert(
+                "io_depth_sweep".into(),
+                Json::Arr(
+                    depth_mbps
+                        .iter()
+                        .map(|&(d, m, hw, mean)| {
+                            Json::obj(vec![
+                                ("depth", Json::Num(d as f64)),
+                                ("mbps", Json::Num(m)),
+                                ("achieved_depth_high_water", Json::Num(hw as f64)),
+                                ("achieved_mean_depth", Json::Num(mean)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        if let (Some(one), Some(eight)) = (
+            depth_mbps.iter().find(|(d, ..)| *d == 1),
+            depth_mbps.iter().find(|(d, ..)| *d == 8),
+        ) {
+            println!(
+                "\nio-depth scaling at 4 workers: depth 1 {:.1} MB/s -> depth 8 {:.1} MB/s \
+                 ({:.2}x; achieved depth hw {} mean {:.1})",
+                one.1,
+                eight.1,
+                eight.1 / one.1.max(1e-9),
+                eight.2,
+                eight.3,
+            );
+            // the smoke contract (blocking in CI's SSDUP_BENCH_FAST=1
+            // step): more in-flight writes at the same thread count must
+            // buy throughput, or the queue is not decoupling depth
+            assert!(
+                eight.1 > one.1,
+                "io-depth sweep failed to scale: depth 8 {:.1} MB/s <= depth 1 {:.1} MB/s",
+                eight.1,
+                one.1
             );
         }
     }

@@ -11,7 +11,14 @@
 //! * every completed [`Backend::write_at`] advances a **completed-writes
 //!   watermark** — a publisher's *ticket* is the watermark value when it
 //!   enters [`GroupSync::barrier`], i.e. "everything I wrote is below
-//!   this";
+//!   this". Queued I/O ([`IoQueue`]) drives the same watermark
+//!   *completion-side*: a worker books its batch with
+//!   [`GroupSync::begin_write`], performs the raw device writes, and
+//!   advances the watermark with [`GroupSync::note_write`], whose return
+//!   value is exactly the ticket covering the batch — the parked client
+//!   then waits on [`GroupSync::barrier_for`] with that ticket, so
+//!   barriers cover queued writes precisely (not merely "everything
+//!   completed by the time I woke up");
 //! * the first waiter not yet covered becomes the **leader**: it
 //!   snapshots the watermark (the cutoff), runs the one real
 //!   `inner.sync()`, and publishes the cutoff as the new **synced-up-to
@@ -40,6 +47,7 @@
 //! established fail-and-panic protocol.
 //!
 //! [`MemStore`'s]: crate::live::backend::MemStore
+//! [`IoQueue`]: crate::live::backend::IoQueue
 
 use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -125,23 +133,79 @@ impl GroupSync {
         self.barriers.load(Ordering::Relaxed)
     }
 
+    /// Book `n` writes as in flight **before** they reach the device —
+    /// the submission half of the completion-driven entry point used by
+    /// queued I/O. A leader sitting in its batching window sees queued
+    /// traffic exactly like inline writers' and waits for it (boundedly).
+    /// Must be balanced by a [`GroupSync::note_write`] of the same count.
+    /// No-op in ungrouped mode.
+    pub fn begin_write(&self, n: u64) {
+        if !self.enabled || n == 0 {
+            return;
+        }
+        self.state.lock().unwrap().in_flight += n;
+    }
+
+    /// Completion half: `n` booked writes finished on the device. Moves
+    /// them in-flight → completed and returns the new completed
+    /// watermark — the **ticket** a [`GroupSync::barrier_for`] needs to
+    /// cover exactly those writes. Returns 0 in ungrouped mode (tickets
+    /// are meaningless there; every barrier runs its own sync).
+    pub fn note_write(&self, n: u64) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.in_flight -= n;
+        st.completed += n;
+        let ticket = st.completed;
+        // a leader may be sitting in its batching window waiting for
+        // exactly these writes to land
+        let wake = st.leader;
+        drop(st);
+        if wake {
+            self.cv.notify_all();
+        }
+        ticket
+    }
+
+    /// Raw passthrough gather write with **no sequencer bookkeeping** —
+    /// for queue workers, whose batches are booked via
+    /// [`GroupSync::begin_write`] / [`GroupSync::note_write`] instead
+    /// (one booking may cover a whole vectored transfer).
+    pub fn write_vectored_raw(&self, offset: u64, bufs: &[&[u8]]) -> io::Result<()> {
+        self.inner.write_vectored_at(offset, bufs)
+    }
+
     /// Block until every `write_at` this thread completed before the call
     /// is covered by a **finished** device sync, running that sync itself
     /// if it is elected leader. Returns the sticky sync error if any
     /// covering sync failed — the caller's bytes may not be durable.
     pub fn barrier(&self) -> io::Result<()> {
+        self.barrier_traced(None)
+    }
+
+    /// Like [`GroupSync::barrier`], but waits for coverage of an explicit
+    /// `ticket` (a [`GroupSync::note_write`] return value) instead of
+    /// stamping the watermark at entry — the precise form for queued
+    /// writes, immune to unrelated completions inflating the wait.
+    pub fn barrier_for(&self, ticket: u64) -> io::Result<()> {
+        self.barrier_traced(Some(ticket))
+    }
+
+    fn barrier_traced(&self, ticket: Option<u64>) -> io::Result<()> {
         let t0 = match &self.trace {
             Some((obs, _)) if obs.is_enabled() => Some(Instant::now()),
             _ => None,
         };
-        let result = self.barrier_inner();
+        let result = self.barrier_inner(ticket);
         if let (Some(t0), Some((obs, shard))) = (t0, &self.trace) {
             obs.emit(Stage::BarrierWait, *shard, t0, Instant::now());
         }
         result
     }
 
-    fn barrier_inner(&self) -> io::Result<()> {
+    fn barrier_inner(&self, ticket: Option<u64>) -> io::Result<()> {
         self.barriers.fetch_add(1, Ordering::Relaxed);
         if !self.enabled {
             // ungrouped baseline: the caller pays its own fsync
@@ -149,7 +213,7 @@ impl GroupSync {
             return self.inner.sync();
         }
         let mut st = self.state.lock().unwrap();
-        let ticket = st.completed;
+        let ticket = ticket.unwrap_or(st.completed);
         loop {
             if let Some(msg) = &st.failed {
                 return Err(io::Error::other(msg.clone()));
@@ -474,6 +538,66 @@ mod tests {
         }
         assert_eq!(gs.syncs(), 5, "ungrouped baseline is one fsync per barrier");
         assert_eq!(gs.barriers(), 5);
+    }
+
+    #[test]
+    fn note_write_ticket_is_covered_exactly_by_barrier_for() {
+        let mock = Arc::new(MockDevice::new());
+        let gs = grouped(&mock, Duration::ZERO);
+        // completion-driven path: book, raw-write (a 2-buffer gather),
+        // complete, then wait on the returned ticket
+        gs.begin_write(2);
+        gs.write_vectored_raw(10, &[b"a", b"b"]).unwrap();
+        let ticket = gs.note_write(2);
+        assert_eq!(ticket, 2, "two completions advance the watermark to 2");
+        gs.barrier_for(ticket).unwrap();
+        assert!(mock.is_durable(10) && mock.is_durable(11));
+        // the same ticket is already covered: no second device sync
+        let syncs = gs.syncs();
+        gs.barrier_for(ticket).unwrap();
+        assert_eq!(gs.syncs(), syncs, "a covered ticket must not elect a new leader");
+    }
+
+    #[test]
+    fn leader_window_covers_queued_writes_and_is_cut_short_by_note_write() {
+        let mock = Arc::new(MockDevice::new());
+        let gs = Arc::new(grouped(&mock, Duration::from_secs(5)));
+        gs.write_at(0, b"x").unwrap();
+        gs.begin_write(1); // one queued write is in flight
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            let leader = {
+                let gs = Arc::clone(&gs);
+                s.spawn(move || gs.barrier().unwrap())
+            };
+            std::thread::sleep(Duration::from_millis(20));
+            // the "worker" completes the queued write inside the leader's
+            // window; its ticket lands under the same cutoff
+            gs.write_vectored_raw(7, &[b"q"]).unwrap();
+            let ticket = gs.note_write(1);
+            gs.barrier_for(ticket).unwrap();
+            leader.join().unwrap();
+        });
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "note_write must cut the window short, not burn it down: {:?}",
+            t0.elapsed()
+        );
+        assert!(mock.is_durable(0) && mock.is_durable(7));
+        assert_eq!(gs.syncs(), 1, "one sync covered the inline and the queued write");
+    }
+
+    #[test]
+    fn ungrouped_mode_note_write_is_inert_and_barrier_for_still_syncs() {
+        let mock = Arc::new(MockDevice::new());
+        let gs = GroupSync::new(Box::new(Arc::clone(&mock)), false, Duration::ZERO);
+        gs.begin_write(1);
+        gs.write_vectored_raw(3, &[b"z"]).unwrap();
+        let ticket = gs.note_write(1);
+        assert_eq!(ticket, 0, "no tickets in the per-record-fsync baseline");
+        gs.barrier_for(ticket).unwrap();
+        assert!(mock.is_durable(3), "baseline barrier_for pays its own fsync");
+        assert_eq!(gs.syncs(), 1);
     }
 
     #[test]

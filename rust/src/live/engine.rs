@@ -57,6 +57,12 @@ pub struct LiveConfig {
     /// stage emits span events (`ssdup live --trace out.json`). Off by
     /// default — a disabled collector costs one atomic load per span.
     pub trace: bool,
+    /// I/O worker threads per device queue (`--io-workers`): the small
+    /// pool driving each shard's submission queue, N ≪ clients
+    pub io_workers: usize,
+    /// per-device submission-queue depth (`--io-depth`): max
+    /// admitted-but-incomplete requests before enqueue backpressure
+    pub io_depth: usize,
 }
 
 impl Default for LiveConfig {
@@ -80,6 +86,8 @@ impl LiveConfig {
             group_commit: true,
             group_commit_window: Duration::ZERO,
             trace: false,
+            io_workers: 4,
+            io_depth: 64,
         }
     }
 
@@ -118,6 +126,20 @@ impl LiveConfig {
         self
     }
 
+    /// I/O worker threads per device queue.
+    pub fn with_io_workers(mut self, workers: usize) -> Self {
+        assert!(workers >= 1, "need at least one io worker");
+        self.io_workers = workers;
+        self
+    }
+
+    /// Per-device submission-queue depth (in-flight request bound).
+    pub fn with_io_depth(mut self, depth: usize) -> Self {
+        assert!(depth >= 1, "need a queue depth of at least one");
+        self.io_depth = depth;
+        self
+    }
+
     fn shard_config(&self, shard_id: usize) -> ShardConfig {
         ShardConfig {
             system: self.system,
@@ -130,6 +152,8 @@ impl LiveConfig {
             seek: self.seek,
             group_commit: self.group_commit,
             group_commit_window: self.group_commit_window,
+            io_workers: self.io_workers,
+            io_depth: self.io_depth,
         }
     }
 }

@@ -89,16 +89,42 @@ impl LiveReport {
         }
     }
 
+    /// Peak achieved submission-queue depth across all device queues.
+    pub fn io_depth_high_water(&self) -> u64 {
+        self.shards.iter().map(|s| s.io_depth_high_water).max().unwrap_or(0)
+    }
+
+    /// Mean achieved queue depth at enqueue, request-weighted across
+    /// shards.
+    pub fn io_mean_depth(&self) -> f64 {
+        let reqs: u64 = self.shards.iter().map(|s| s.io_reqs).sum();
+        if reqs == 0 {
+            return 0.0;
+        }
+        self.shards.iter().map(|s| s.io_mean_depth * s.io_reqs as f64).sum::<f64>()
+            / reqs as f64
+    }
+
+    /// Device writes saved by byte-adjacent coalescing in the I/O
+    /// queues (requests enqueued minus device writes issued).
+    pub fn io_coalesced(&self) -> u64 {
+        let reqs: u64 = self.shards.iter().map(|s| s.io_reqs).sum();
+        let dev: u64 = self.shards.iter().map(|s| s.io_device_writes).sum();
+        reqs.saturating_sub(dev)
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "{:<34} {:>8.2} MB/s ingest ({:>7.2} MB/s drained)  ssd {:>5.1}%  \
-             {} syncs ({:.1} w/s)  lat {}",
+             {} syncs ({:.1} w/s)  qd {:.1}/{}  lat {}",
             self.workload,
             self.throughput_mbps(),
             self.drained_throughput_mbps(),
             self.ssd_ratio() * 100.0,
             self.syncs(),
             self.writes_per_sync(),
+            self.io_mean_depth(),
+            self.io_depth_high_water(),
             self.latency.summary(),
         )
     }
@@ -517,6 +543,11 @@ mod tests {
         engine.shutdown();
         assert_eq!(report.stages.get(Stage::Submit).count(), report.requests);
         assert_eq!(report.stages.get(Stage::Publish).count(), report.requests);
+        // every acked write passed through the submission queue, so the
+        // queue stages decompose alongside the device stages
+        assert_eq!(report.stages.get(Stage::IoSubmit).count(), report.requests);
+        assert_eq!(report.stages.get(Stage::QueueWait).count(), report.requests);
+        assert!(report.io_depth_high_water() >= 1);
         assert!(report.stages.dominant_ack_stage().is_some());
         assert!(report.stage_summary().contains("dominant ack stage"));
     }

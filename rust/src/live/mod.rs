@@ -16,8 +16,11 @@
 //!
 //! * [`backend`] — pluggable byte stores with **concurrent positional
 //!   (`&self`) I/O**: in-memory (tests/benches, with synthetic device
-//!   latency and sharded page locks) and real files (`pwrite`/`pread`,
-//!   `ssdup live --backend file`);
+//!   latency, bounded-concurrency knee, and sharded page locks) and real
+//!   files (`pwrite`/`pread`, `ssdup live --backend file`) — plus the
+//!   **submission/completion queue** ([`backend::IoQueue`]): batched
+//!   submit, vectored coalescing, worker-pool drivers, completion
+//!   tokens;
 //! * [`commit`] — the **group-commit sequencer** ([`GroupSync`]): wraps
 //!   each backend so concurrent publishers share device sync barriers —
 //!   one elected leader runs the fsync, a synced-up-to watermark
@@ -46,13 +49,24 @@
 //!
 //! Concurrency model: a shard has exactly one lock — its core mutex —
 //! and **no thread ever holds it across device I/O**. Ingest runs
-//! reserve→publish (route + slot + ownership claim under the lock,
-//! device write unlocked, brief re-acquire to publish), reads run
-//! resolve→pin→read (the flusher waits out a region's reader pins before
-//! recycling its slots), and the flusher snapshots its copy set under
-//! the lock but moves every byte without it. Many clients submitting to
-//! one shard therefore overlap their device transfers, and mid-burst
-//! reads proceed concurrently with ingest and flushing.
+//! **reserve → enqueue → complete → barrier → publish**: route + slot +
+//! ownership claim under the lock, then the client thread *enqueues* its
+//! device write onto the shard's per-device submission queue
+//! ([`backend::IoQueue`]) and parks on a completion token instead of
+//! performing the I/O inline. A small pool of I/O workers (N ≪ clients,
+//! `--io-workers`) drains the queue — coalescing byte-adjacent requests
+//! into single vectored device writes — and delivers each completion
+//! with the group-commit ticket its batch advanced; the woken client
+//! waits out a barrier covering that ticket and briefly re-acquires the
+//! lock to publish. Queue depth (`--io-depth`) is therefore decoupled
+//! from thread count: many clients keep many writes in flight through
+//! few workers. Reads run resolve→pin→read inline (the flusher waits
+//! out a region's reader pins before recycling its slots), and the
+//! flusher snapshots its copy set under the lock but moves every byte
+//! through the same HDD queue, windowing several copy runs into one
+//! batch. Many clients submitting to one shard therefore overlap their
+//! device transfers, and mid-burst reads proceed concurrently with
+//! ingest and flushing.
 //!
 //! Semantics note: overwrites are fully supported, across routes and
 //! mid-burst. Every ingest claims its sector range in the shard's
@@ -128,8 +142,9 @@
 //!
 //! * **Stage taxonomy** ([`crate::obs::Stage`]) — every pipeline stage
 //!   is named and timed: `submit` (whole ack path) decomposes into
-//!   `route` → `reserve` → `ssd_write`/`hdd_write` → `barrier_wait` →
-//!   `publish`; reads into `read_resolve` → `read_device`; the flusher
+//!   `route` → `reserve` → `io_submit` → `queue_wait` →
+//!   `ssd_write`/`hdd_write` → `barrier_wait` → `publish`; reads into
+//!   `read_resolve` → `read_device`; the flusher
 //!   reports `flush_run` (SSD→HDD copy time) and `flush_pause` (gate
 //!   time); `sb_write` and `replay` cover superblock rewrites and
 //!   recovery.
@@ -159,7 +174,10 @@ pub mod payload;
 pub mod record;
 pub mod shard;
 
-pub use backend::{Backend, FileBackend, MemBackend, MemStore, SyntheticLatency};
+pub use backend::{
+    Backend, Completion, CompletionToken, FileBackend, IoQueue, IoQueueStats, IoReq, MemBackend,
+    MemStore, SyntheticLatency,
+};
 pub use commit::GroupSync;
 pub use engine::{LiveConfig, LiveEngine, RecoveryReport, VerifyReport};
 pub use loadgen::{

@@ -22,7 +22,7 @@ use ssdup::workload::Workload;
 const VALUE_OPTS: &[&str] = &[
     "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
     "queue", "shards", "backend", "clients", "dir", "crash-at", "group-commit-window",
-    "trace", "stats-interval", "require",
+    "trace", "stats-interval", "require", "io-workers", "io-depth",
 ];
 
 fn main() {
@@ -62,6 +62,8 @@ fn main() {
                  \x20          [--no-verify] [--keep]\n\
                  \x20          [--group-commit-window US]  leader batching window (default 0)\n\
                  \x20          [--no-group-commit]         per-record fsync baseline\n\
+                 \x20          [--io-workers N]  I/O worker threads per device queue (default 4)\n\
+                 \x20          [--io-depth N]    submission-queue depth per device (default 64)\n\
                  \x20          [--trace OUT.json]     record spans, export chrome://tracing JSON\n\
                  \x20          [--stats-interval MS]  emit JSON-line telemetry snapshots on stderr\n\
                  \x20          [--crash-at N]   kill the process (no shutdown) after N acked requests\n\
@@ -250,11 +252,15 @@ fn cmd_live(args: &Args) -> i32 {
     // group commit defaults on; --no-group-commit is the per-record-sync
     // baseline, --group-commit-window (µs) trades ack latency for batch
     let window_us: u64 = args.get_parse("group-commit-window", 0).unwrap_or(0);
+    let io_workers: usize = args.get_parse("io-workers", 4).unwrap_or(4).max(1);
+    let io_depth: usize = args.get_parse("io-depth", 64).unwrap_or(64).max(1);
     let cfg = LiveConfig::new(system)
         .with_shards(shards)
         .with_ssd_mib(ssd_mib)
         .with_group_commit(!args.has("no-group-commit"))
         .with_group_commit_window(std::time::Duration::from_micros(window_us))
+        .with_io_workers(io_workers)
+        .with_io_depth(io_depth)
         .with_trace(trace_path.is_some());
 
     // --recover: reopen a previous `--backend file` run's images (same
@@ -403,7 +409,8 @@ fn cmd_live(args: &Args) -> i32 {
             "  shard {i}: in {} MiB | ssd {} MiB | direct {} MiB | flushed {} MiB | \
              superseded {} MiB | {} rerouted | {} streams (rp {:.1}%) | {} flushes, \
              {} pauses ({:.2}s), runs {:.2}s (duty {:.0}%), {} blocked waits | \
-             {} syncs ({:.1} writes/sync)",
+             {} syncs ({:.1} writes/sync) | io {} reqs -> {} dev writes \
+             (depth hw {}, mean {:.1})",
             s.bytes_in / (1 << 20),
             s.ssd_bytes_buffered / (1 << 20),
             s.hdd_direct_bytes / (1 << 20),
@@ -420,6 +427,10 @@ fn cmd_live(args: &Args) -> i32 {
             s.blocked_waits,
             s.syncs,
             s.writes_per_sync(),
+            s.io_reqs,
+            s.io_device_writes,
+            s.io_depth_high_water,
+            s.io_mean_depth,
         );
     }
     println!("\nper-stage ack latency:\n{}", report.stage_summary());

@@ -52,10 +52,16 @@ pub enum Stage {
     SbWrite = 11,
     /// Recovery: superblock read + region scan + record replay.
     Replay = 12,
+    /// Build + enqueue of the request batch onto the shard's `IoQueue`
+    /// (includes any wait for a free depth slot under backpressure).
+    IoSubmit = 13,
+    /// Submission-queue residency: from enqueued until an I/O worker
+    /// started the batch's first device write.
+    QueueWait = 14,
 }
 
 /// Number of stages (length of [`Stage::ALL`]).
-pub const N_STAGES: usize = 13;
+pub const N_STAGES: usize = 15;
 
 impl Stage {
     /// Every stage, in discriminant order.
@@ -73,13 +79,22 @@ impl Stage {
         Stage::FlushPause,
         Stage::SbWrite,
         Stage::Replay,
+        Stage::IoSubmit,
+        Stage::QueueWait,
     ];
 
     /// The additive components of an acknowledged write: these spans are
     /// adjacent and partition a `Submit` span, so their sums reconcile
     /// with the `Submit` total.
-    pub const ACK_COMPONENTS: [Stage; 5] =
-        [Stage::Route, Stage::Reserve, Stage::SsdWrite, Stage::BarrierWait, Stage::Publish];
+    pub const ACK_COMPONENTS: [Stage; 7] = [
+        Stage::Route,
+        Stage::Reserve,
+        Stage::IoSubmit,
+        Stage::QueueWait,
+        Stage::SsdWrite,
+        Stage::BarrierWait,
+        Stage::Publish,
+    ];
 
     /// Stable snake_case name (trace event `name`, JSON keys, CLI).
     pub fn name(self) -> &'static str {
@@ -97,6 +112,8 @@ impl Stage {
             Stage::FlushPause => "flush_pause",
             Stage::SbWrite => "sb_write",
             Stage::Replay => "replay",
+            Stage::IoSubmit => "io_submit",
+            Stage::QueueWait => "queue_wait",
         }
     }
 

@@ -9,10 +9,14 @@
 //!   either recovers completely (its frame validated) or disappears at
 //!   record granularity — never as garbage or a half-old half-new
 //!   sector;
-//! * **a write frozen between its device write and its covering
-//!   group-commit barrier is still unacknowledged** and is allowed to
-//!   vanish — the deterministic `PausePoint` rig parks the writer at
-//!   exactly that instant and freezes the power-loss image around it;
+//! * **a write frozen anywhere inside the submission/completion queue is
+//!   still unacknowledged** and is allowed to vanish — the deterministic
+//!   `PausePoint` rig parks the I/O worker at exactly the chosen instant
+//!   (before the device write: the request sits in the submission queue
+//!   with nothing on the device; after it: the bytes landed but the
+//!   completion was never processed, so no barrier covers them) while
+//!   the client stays parked on its completion token, and freezes the
+//!   power-loss image around the stall;
 //! * **clean shutdowns short-circuit**: reopening after
 //!   `LiveEngine::shutdown` scans zero log sectors.
 //!
@@ -83,7 +87,7 @@ fn crash_and_recover_mem(seed: u64) {
                 // for the freeze to catch them mid-record
                 Box::new(MemBackend::over(
                     Arc::clone(&stores[i].0),
-                    SyntheticLatency { per_op_us: 150, us_per_mib: 0 },
+                    SyntheticLatency { per_op_us: 150, us_per_mib: 0, max_inflight: 0 },
                 )) as Box<dyn ssdup::live::Backend>,
                 Box::new(MemBackend::over(Arc::clone(&stores[i].1), SyntheticLatency::ZERO))
                     as Box<dyn ssdup::live::Backend>,
@@ -230,10 +234,12 @@ fn mem_snapshot_crashes_at_eight_seeded_points_recover_acknowledged_writes() {
     }
 }
 
-/// Deterministic freeze point: after the `trigger`-th completed SSD
-/// `write_at`, the writing thread parks *before returning into the
-/// shard* — i.e. between a record's device write and its covering
-/// group-commit barrier — until the test releases it.
+/// Deterministic freeze point: at the `trigger`-th SSD `write_at`, the
+/// writing thread parks until the test releases it. Since the async
+/// refactor the writing thread is a submission-queue I/O worker (the
+/// client thread stays parked on its completion token, so the write can
+/// never acknowledge while the worker is held) — except for the inline
+/// superblock write, which still parks the submitting thread itself.
 struct PausePoint {
     trigger: u64,
     hits: AtomicU64,
@@ -273,14 +279,22 @@ impl PausePoint {
 }
 
 /// [`MemBackend`] wrapper that parks the writing thread at the pause
-/// point — after its device write completed, before its barrier runs.
+/// point. `pause_before == false` parks *after* the device write
+/// completed, before its completion/barrier are processed;
+/// `pause_before == true` parks *before* any bytes move — the request
+/// was submitted to the queue but the device never saw it.
 struct PauseBackend {
     inner: MemBackend,
     point: Arc<PausePoint>,
+    pause_before: bool,
 }
 
 impl ssdup::live::Backend for PauseBackend {
     fn write_at(&self, offset: u64, data: &[u8]) -> std::io::Result<()> {
+        if self.pause_before {
+            self.point.maybe_pause();
+            return self.inner.write_at(offset, data);
+        }
         self.inner.write_at(offset, data)?;
         self.point.maybe_pause();
         Ok(())
@@ -303,20 +317,29 @@ impl ssdup::live::Backend for PauseBackend {
     }
 }
 
-/// One seeded freeze *between a record's device write and its covering
-/// barrier*: the paused write must not have been acknowledged, its
-/// record is allowed to vanish, and every write acknowledged before the
-/// freeze must come back byte-exact. With a single closed-loop writer
-/// the outcome is fully deterministic — nothing can have merged the
-/// paused record durable — so the check is exact equality with the last
+/// One seeded freeze inside the submission/completion pipeline. With
+/// `pause_before == false` the I/O worker stalls *between a record's
+/// device write and its completion/covering barrier* (the bytes landed
+/// but sit unsynced in the device cache); with `pause_before == true` it
+/// stalls *before the device write* (the request was enqueued but
+/// nothing reached the device — a submitted-but-unprocessed queue
+/// entry). Either way the paused write must not have been acknowledged
+/// (the client is still parked on its completion token), its record is
+/// allowed to vanish, and every write acknowledged before the freeze
+/// must come back byte-exact. With a single closed-loop writer the
+/// outcome is fully deterministic — nothing can have merged the paused
+/// record durable — so the check is exact equality with the last
 /// acknowledged generation per slot, not just membership in a candidate
 /// set.
-fn freeze_between_write_and_barrier(seed: u64) {
+fn freeze_in_queue(seed: u64, pause_before: bool) {
     const SLOTS: usize = 8;
     const MAX: usize = 120;
     // hit 1 is the first-touch superblock write; record k's header and
-    // payload are hits 2k and 2k+1, so the stride parks the writer at
-    // varying depths, after a header write or after a payload write.
+    // payload are hits 2k and 2k+1 (the queue coalesces them into one
+    // vectored transfer whose default-impl loop still counts each
+    // buffer), so the stride parks the worker at varying depths — at a
+    // header write or at a payload write, before or after the device
+    // write per `pause_before`.
     // Note what this rig does NOT vary: under the volatile-overlay model
     // neither parity leaves partial record bytes in the frozen image
     // (nothing synced them), so the record is absent whole either way —
@@ -338,6 +361,7 @@ fn freeze_between_write_and_barrier(seed: u64) {
                 Box::new(PauseBackend {
                     inner: MemBackend::over(Arc::clone(&ssd), SyntheticLatency::ZERO),
                     point: Arc::clone(&point),
+                    pause_before,
                 }) as Box<dyn ssdup::live::Backend>,
                 Box::new(MemBackend::over(Arc::clone(&hdd), SyntheticLatency::ZERO))
                     as Box<dyn ssdup::live::Backend>,
@@ -443,7 +467,16 @@ fn freeze_between_write_and_barrier(seed: u64) {
 #[test]
 fn freeze_between_device_write_and_barrier_keeps_exactly_the_acked_prefix() {
     for seed in 0..6 {
-        freeze_between_write_and_barrier(seed);
+        freeze_in_queue(seed, false);
+    }
+}
+
+#[test]
+fn freeze_of_a_submitted_but_unprocessed_queue_request_keeps_exactly_the_acked_prefix() {
+    // the request sits in the submission queue with nothing on the
+    // device: the write vanishes whole, and the acked prefix survives
+    for seed in 0..6 {
+        freeze_in_queue(seed, true);
     }
 }
 
