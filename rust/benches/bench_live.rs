@@ -79,7 +79,9 @@ fn read_latency(samples: usize) -> LatencyHistogram {
     for i in 0..preload_reqs {
         let off = i * DEFAULT_REQ_SECTORS;
         payload::fill(1, off as i64, &mut buf);
-        engine.submit(Request { app: 0, proc_id: 0, file: 1, offset: off, size: DEFAULT_REQ_SECTORS }, &buf);
+        engine
+            .submit(Request { app: 0, proc_id: 0, file: 1, offset: off, size: DEFAULT_REQ_SECTORS }, &buf)
+            .unwrap();
     }
     let stop = AtomicBool::new(false);
     let mut hist = LatencyHistogram::new();
@@ -93,7 +95,7 @@ fn read_latency(samples: usize) -> LatencyHistogram {
             while !stop.load(Ordering::Relaxed) {
                 payload::fill(2, off as i64, &mut wbuf);
                 let req = Request { app: 1, proc_id: 1, file: 2, offset: off, size: DEFAULT_REQ_SECTORS };
-                engine.submit(req, &wbuf);
+                engine.submit(req, &wbuf).unwrap();
                 off += DEFAULT_REQ_SECTORS;
             }
         });
@@ -104,7 +106,7 @@ fn read_latency(samples: usize) -> LatencyHistogram {
         for _ in 0..samples {
             let off = rng.gen_range(span) as i32;
             let t0 = Instant::now();
-            engine.read(1, off, &mut rbuf);
+            engine.read(1, off, &mut rbuf).unwrap();
             hist.record(t0.elapsed().as_micros() as u64);
         }
         stop.store(true, Ordering::Relaxed);
@@ -464,7 +466,7 @@ fn main() {
             for req in &proc.reqs {
                 buf.resize(req.bytes() as usize, 0);
                 payload::fill(req.file, req.offset as i64, &mut buf);
-                engine.submit(*req, &buf);
+                engine.submit(*req, &buf).unwrap();
                 ingested += req.bytes();
             }
         }
@@ -584,6 +586,71 @@ fn main() {
             mbps_on >= mbps_off * 0.5,
             "tracing overhead out of bounds: {mbps_off:.1} MB/s off vs {mbps_on:.1} MB/s on"
         );
+    }
+
+    section("fault matrix: 1% transient EIO on both devices, faults off vs on");
+    if Bench::should_run("live/fault-matrix") {
+        // A/B the fault-retry pipeline on the mixed load: off is the
+        // plain engine, on wraps both devices in a seeded 1% transient
+        // EIO script (each fault clears after 2 retries). Transients are
+        // absorbed below the completion token, so the contract is zero
+        // rejected writes and zero degraded shards — the A/B throughput
+        // pair tracks what fault absorption costs across PRs.
+        let wfm = mixed(if fast { 8 } else { 32 }, 47);
+        let fm_bytes = wfm.total_bytes() as f64;
+        let spec = live::FaultSpec::parse("ssd:eio:p=0.01:transient=2,hdd:eio:p=0.01:transient=2")
+            .expect("fault spec");
+        let mut mbps_off = 0.0f64;
+        let mut mbps_on = 0.0f64;
+        let mut retries = 0u64;
+        let mut transients = 0u64;
+        for on in [false, true] {
+            let label = if on { "on" } else { "off" };
+            let run_spec = if on { spec.clone() } else { live::FaultSpec::default() };
+            let mut last = 0.0;
+            b.run(&format!("live/faults-{label}"), fm_bytes, || {
+                let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(2).with_ssd_mib(32);
+                let engine = LiveEngine::mem_faulty(
+                    &cfg,
+                    SyntheticLatency::ssd(),
+                    SyntheticLatency::hdd(),
+                    &run_spec,
+                    53,
+                );
+                let report = live::run_load(&engine, &wfm, 8);
+                engine.shutdown();
+                if on {
+                    retries = report.io_retries();
+                    transients = report.transient_faults();
+                    assert_eq!(report.rejected, 0, "transient faults must not reject writes");
+                    assert_eq!(report.degraded_shards(), 0, "transient faults must not degrade shards");
+                }
+                last = report.throughput_mbps();
+                bb(last)
+            });
+            if on {
+                mbps_on = last;
+            } else {
+                mbps_off = last;
+            }
+        }
+        println!(
+            "\nfault matrix: faults off {mbps_off:.1} MB/s -> 1% EIO {mbps_on:.1} MB/s \
+             ({retries} retries absorbed, {transients} transient faults)"
+        );
+        out.insert(
+            "fault_matrix".into(),
+            Json::obj(vec![
+                ("mbps_off", Json::Num(mbps_off)),
+                ("mbps_on", Json::Num(mbps_on)),
+                ("io_retries", Json::Num(retries as f64)),
+                ("transient_faults", Json::Num(transients as f64)),
+            ]),
+        );
+        // smoke contract (blocking in CI's SSDUP_BENCH_FAST=1 step): the
+        // script must actually fire, and every fault must be retried to
+        // success rather than surfacing to a client
+        assert!(retries > 0, "fault script never fired: 0 retries under 1% transient EIO");
     }
 
     section("live engine on real files (FileBackend, page-cached)");

@@ -50,6 +50,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::live::commit::GroupSync;
+use crate::live::fault::{retry_transient, IoFault, RetryPolicy};
 
 /// A flat byte store with positional (`&self`) I/O. `Send + Sync` so a
 /// shard's clients, flusher, and readers can all hold it at once.
@@ -611,6 +612,13 @@ pub struct Completion {
     /// When an I/O worker started the batch's first device write: the
     /// `queue_wait` → device-write boundary for stage attribution.
     pub started: Instant,
+    /// Transient-fault retries the worker absorbed before this batch
+    /// landed (0 on the common path).
+    pub retries: u32,
+    /// Wall time (µs) the worker spent on the batch when it retried —
+    /// all attempts plus backoff sleeps; 0 when `retries == 0`. Feeds
+    /// the `fault_retry` stage so retry time is attributable.
+    pub retry_us: u64,
 }
 
 struct TokenState {
@@ -682,6 +690,10 @@ struct QueueShared {
     /// depth slot freed (submitters wait here)
     space: Condvar,
     depth: usize,
+    /// transient faults are retried with this backoff before a batch is
+    /// allowed to fail — below the completion token, so a retried batch
+    /// completes and tickets exactly like a clean one
+    retry: RetryPolicy,
     // ---- achieved-depth statistics (relaxed counters) ----
     reqs: AtomicU64,
     batches: AtomicU64,
@@ -691,6 +703,10 @@ struct QueueShared {
     depth_high_water: AtomicU64,
     /// sum of outstanding depth sampled at each enqueue (mean = /batches)
     depth_sum: AtomicU64,
+    /// batch re-attempts taken after transient faults
+    retries: AtomicU64,
+    /// transient device faults observed (retried or not)
+    transient_faults: AtomicU64,
 }
 
 /// Achieved-depth counters of one [`IoQueue`].
@@ -707,6 +723,11 @@ pub struct IoQueueStats {
     pub depth_high_water: u64,
     /// sum of the in-flight depth sampled at each enqueue
     pub depth_sum: u64,
+    /// batch re-attempts taken after transient faults
+    pub retries: u64,
+    /// transient device faults observed (each retried attempt that
+    /// failed transiently counts once)
+    pub transient_faults: u64,
 }
 
 impl IoQueueStats {
@@ -725,6 +746,8 @@ impl IoQueueStats {
         self.device_writes += other.device_writes;
         self.depth_high_water = self.depth_high_water.max(other.depth_high_water);
         self.depth_sum += other.depth_sum;
+        self.retries += other.retries;
+        self.transient_faults += other.transient_faults;
     }
 }
 
@@ -758,11 +781,14 @@ impl IoQueue {
             work: Condvar::new(),
             space: Condvar::new(),
             depth: depth.max(1),
+            retry: RetryPolicy::io_default(),
             reqs: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             device_writes: AtomicU64::new(0),
             depth_high_water: AtomicU64::new(0),
             depth_sum: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            transient_faults: AtomicU64::new(0),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -792,7 +818,7 @@ impl IoQueue {
         }
         if st.shutdown {
             drop(st);
-            finish_token(&cell, Err(io::Error::other("io queue shut down")));
+            finish_token(&cell, Err(IoFault::Shutdown.error("io queue shut down")));
             return token;
         }
         st.outstanding += n;
@@ -815,6 +841,8 @@ impl IoQueue {
             device_writes: sh.device_writes.load(Ordering::Relaxed),
             depth_high_water: sh.depth_high_water.load(Ordering::Relaxed),
             depth_sum: sh.depth_sum.load(Ordering::Relaxed),
+            retries: sh.retries.load(Ordering::Relaxed),
+            transient_faults: sh.transient_faults.load(Ordering::Relaxed),
         }
     }
 
@@ -836,12 +864,32 @@ impl IoQueue {
             // book the batch before its device writes so a group-commit
             // leader's batching window sees queued traffic, then advance
             // the watermark completion-side: the returned ticket covers
-            // exactly this batch
+            // exactly this batch. Transient faults are retried *inside*
+            // the begin/note pair: a retried batch still completes and
+            // tickets exactly once, so barrier coverage stays exact
+            // (positional writes are idempotent — re-running a batch is
+            // safe).
             sh.dev.begin_write(n);
             let started = Instant::now();
-            let result = Self::run_batch(sh, &batch.reqs);
+            let (result, retries) = retry_transient(&sh.retry, || Self::run_batch(sh, &batch.reqs));
+            let retry_us = if retries > 0 { started.elapsed().as_micros() as u64 } else { 0 };
+            let mut faults = retries as u64;
+            if let Err(e) = &result {
+                if IoFault::classify(e).is_transient() {
+                    faults += 1;
+                }
+            }
+            if retries > 0 {
+                sh.retries.fetch_add(retries as u64, Ordering::Relaxed);
+            }
+            if faults > 0 {
+                sh.transient_faults.fetch_add(faults, Ordering::Relaxed);
+            }
             let ticket = sh.dev.note_write(n);
-            finish_token(&batch.token, result.map(|()| Completion { ticket, started }));
+            finish_token(
+                &batch.token,
+                result.map(|()| Completion { ticket, started, retries, retry_us }),
+            );
             let mut st = sh.state.lock().unwrap();
             st.outstanding -= batch.reqs.len();
             drop(st);
@@ -882,7 +930,7 @@ impl IoQueue {
         sh.work.notify_all();
         sh.space.notify_all();
         for b in pending {
-            finish_token(&b.token, Err(io::Error::other("io queue shut down")));
+            finish_token(&b.token, Err(IoFault::Shutdown.error("io queue shut down")));
         }
     }
 }
@@ -1207,8 +1255,52 @@ mod tests {
         drop(q); // shutdown: fail pending, finish in-flight, join
         assert!(first.wait().is_ok(), "the in-flight batch finishes normally");
         for t in queued {
-            assert!(t.wait().is_err(), "a never-started batch must fail, not vanish");
+            let e = t.wait().expect_err("a never-started batch must fail, not vanish");
+            assert_eq!(
+                IoFault::classify(&e),
+                IoFault::Shutdown,
+                "shutdown rejection is typed, not a stringly device error"
+            );
         }
+    }
+
+    #[test]
+    fn io_queue_retries_transient_faults_below_the_completion_token() {
+        use crate::live::fault::FaultSpec;
+        // eio burst of 2 on writes only (offset-scoped so the barrier's
+        // sync stays clean): the worker must absorb both faults and
+        // deliver a normal completion with 2 retries booked
+        let store = MemStore::new(false);
+        let spec = FaultSpec::parse("ssd:eio:transient=2:max_off=1000000000").unwrap();
+        let inner = Box::new(MemBackend::over(Arc::clone(&store), SyntheticLatency::ZERO));
+        let dev = Arc::new(GroupSync::new(spec.wrap_ssd(inner, 11), true, Duration::ZERO));
+        let q = IoQueue::new(Arc::clone(&dev), 1, 8, "faulty");
+        let token = q.submit(vec![IoReq::owned(0, vec![9u8; 64].into_boxed_slice())]);
+        let comp = token.wait().unwrap();
+        dev.barrier_for(comp.ticket).unwrap();
+        assert_eq!(comp.retries, 2, "exactly the burst length absorbed");
+        let st = q.stats();
+        assert_eq!(st.retries, 2);
+        assert_eq!(st.transient_faults, 2);
+        let mut buf = [0u8; 64];
+        store.read(0, &mut buf);
+        assert_eq!(buf, [9u8; 64], "the write landed despite the storm");
+    }
+
+    #[test]
+    fn io_queue_surfaces_permanent_faults_without_retrying() {
+        use crate::live::fault::FaultSpec;
+        let store = MemStore::new(false);
+        let spec = FaultSpec::parse("ssd:dead@op=0").unwrap();
+        let inner = Box::new(MemBackend::over(Arc::clone(&store), SyntheticLatency::ZERO));
+        let dev = Arc::new(GroupSync::new(spec.wrap_ssd(inner, 5), true, Duration::ZERO));
+        let q = IoQueue::new(dev, 1, 8, "dead");
+        let e = q
+            .submit(vec![IoReq::owned(0, vec![1u8; 8].into_boxed_slice())])
+            .wait()
+            .expect_err("a dead device must fail the batch");
+        assert_eq!(IoFault::classify(&e), IoFault::Permanent);
+        assert_eq!(q.stats().retries, 0, "permanent faults are not retried");
     }
 
     #[test]

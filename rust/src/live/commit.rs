@@ -41,10 +41,14 @@
 //! never delayed — with nothing in flight, the leader syncs immediately
 //! — and the wait is bounded by the window regardless.
 //!
-//! A failed sync is **sticky**: every current and future waiter gets the
-//! error (their writes may not be durable, so releasing them as "covered"
-//! would forge acknowledgments). The shard turns that into its
-//! established fail-and-panic protocol.
+//! Sync failures are first classified ([`IoFault`]): transient faults
+//! are retried with bounded backoff ([`RetryPolicy::io_default`],
+//! counted in [`GroupSync::sync_retries`]) before the failure counts. A
+//! failure that survives the retries is **sticky**: every current and
+//! future waiter gets the error (their writes may not be durable, so
+//! releasing them as "covered" would forge acknowledgments). The shard
+//! turns that into a typed submit failure — or degraded-mode routing
+//! when the SSD tier is the one that died.
 //!
 //! [`MemStore`'s]: crate::live::backend::MemStore
 //! [`IoQueue`]: crate::live::backend::IoQueue
@@ -55,6 +59,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::live::backend::Backend;
+use crate::live::fault::{retry_transient, IoFault, RetryPolicy};
 use crate::obs::{Stage, TraceCollector};
 
 /// State under the sequencer mutex. The counters are monotone: `synced`
@@ -86,11 +91,19 @@ pub struct GroupSync {
     /// `false` = per-record sync (the ungrouped baseline, for the bench
     /// A/B and as an escape hatch): every barrier runs its own sync
     enabled: bool,
-    /// device syncs actually issued (leaders + passthrough `sync` calls)
+    /// transient sync faults are retried with this backoff before the
+    /// failure is allowed to go sticky
+    retry: RetryPolicy,
+    /// device syncs actually issued (leaders + passthrough `sync` calls;
+    /// a retried sync still counts once)
     syncs: AtomicU64,
     /// barriers requested (≈ acknowledged publishes); `barriers / syncs`
     /// is the batching factor
     barriers: AtomicU64,
+    /// sync re-attempts taken after transient faults
+    sync_retries: AtomicU64,
+    /// transient faults observed during device syncs
+    sync_transient_faults: AtomicU64,
     /// trace sink for barrier-wait spans: every `barrier()` — publisher,
     /// flusher, or superblock — shows up on the shard's timeline
     trace: Option<(Arc<TraceCollector>, u32)>,
@@ -110,8 +123,11 @@ impl GroupSync {
             cv: Condvar::new(),
             window,
             enabled,
+            retry: RetryPolicy::io_default(),
             syncs: AtomicU64::new(0),
             barriers: AtomicU64::new(0),
+            sync_retries: AtomicU64::new(0),
+            sync_transient_faults: AtomicU64::new(0),
             trace: None,
         }
     }
@@ -131,6 +147,37 @@ impl GroupSync {
     /// Barriers requested so far (each a would-be fsync without grouping).
     pub fn barriers(&self) -> u64 {
         self.barriers.load(Ordering::Relaxed)
+    }
+
+    /// Sync re-attempts taken after transient faults.
+    pub fn sync_retries(&self) -> u64 {
+        self.sync_retries.load(Ordering::Relaxed)
+    }
+
+    /// Transient faults observed during device syncs.
+    pub fn sync_transient_faults(&self) -> u64 {
+        self.sync_transient_faults.load(Ordering::Relaxed)
+    }
+
+    /// One logical device sync with transient faults retried per the
+    /// policy; the `syncs` counter advances once whatever the attempt
+    /// count, so the sync-amplification metric stays comparable.
+    fn sync_retried(&self) -> io::Result<()> {
+        self.syncs.fetch_add(1, Ordering::Relaxed);
+        let (result, retries) = retry_transient(&self.retry, || self.inner.sync());
+        let mut faults = u64::from(retries);
+        if let Err(e) = &result {
+            if IoFault::classify(e).is_transient() {
+                faults += 1;
+            }
+        }
+        if retries > 0 {
+            self.sync_retries.fetch_add(u64::from(retries), Ordering::Relaxed);
+        }
+        if faults > 0 {
+            self.sync_transient_faults.fetch_add(faults, Ordering::Relaxed);
+        }
+        result
     }
 
     /// Book `n` writes as in flight **before** they reach the device —
@@ -209,8 +256,7 @@ impl GroupSync {
         self.barriers.fetch_add(1, Ordering::Relaxed);
         if !self.enabled {
             // ungrouped baseline: the caller pays its own fsync
-            self.syncs.fetch_add(1, Ordering::Relaxed);
-            return self.inner.sync();
+            return self.sync_retried();
         }
         let mut st = self.state.lock().unwrap();
         let ticket = ticket.unwrap_or(st.completed);
@@ -242,8 +288,9 @@ impl GroupSync {
             }
             let cutoff = st.completed; // >= ticket: the leader covers itself
             drop(st);
-            let result = self.inner.sync();
-            self.syncs.fetch_add(1, Ordering::Relaxed);
+            // transient faults retried here, before the failure can go
+            // sticky and poison every future barrier on this device
+            let result = self.sync_retried();
             st = self.state.lock().unwrap();
             st.leader = false;
             match result {
@@ -289,10 +336,10 @@ impl Backend for GroupSync {
     }
 
     /// Plain passthrough sync (drain/shutdown paths that are not
-    /// publisher barriers). Counted, so `syncs` is the device fsync total.
+    /// publisher barriers). Counted, so `syncs` is the device fsync
+    /// total; transient faults are retried like a leader's sync.
     fn sync(&self) -> io::Result<()> {
-        self.syncs.fetch_add(1, Ordering::Relaxed);
-        self.inner.sync()
+        self.sync_retried()
     }
 
     fn kind(&self) -> &'static str {
@@ -326,6 +373,8 @@ mod tests {
         writes: u64,
         /// 0 = open, 1 = armed, 2 = armed and reached (sync parked)
         gate: u8,
+        /// this many syncs fail transiently (before covering anything)
+        transient_left: u64,
     }
 
     impl MockDevice {
@@ -336,6 +385,7 @@ mod tests {
                     durable: HashSet::new(),
                     writes: 0,
                     gate: 0,
+                    transient_left: 0,
                 }),
                 cv: Condvar::new(),
                 fail_syncs: false,
@@ -352,6 +402,13 @@ mod tests {
         fn failing() -> Self {
             let mut b = Self::new();
             b.fail_syncs = true;
+            b
+        }
+
+        /// The next `n` syncs fail with a transient fault.
+        fn transient_failing(n: u64) -> Self {
+            let b = Self::new();
+            b.state.lock().unwrap().transient_left = n;
             b
         }
 
@@ -394,6 +451,11 @@ mod tests {
             // started: snapshot first, then (maybe) park on the gate —
             // writes landing while parked are NOT covered
             let mut st = self.state.lock().unwrap();
+            if st.transient_left > 0 {
+                // fails before covering anything: pending stays pending
+                st.transient_left -= 1;
+                return Err(IoFault::Transient.error("injected transient sync failure"));
+            }
             let snap: Vec<u64> = st.pending.drain(..).collect();
             if st.gate == 1 {
                 st.gate = 2;
@@ -598,6 +660,26 @@ mod tests {
         gs.barrier_for(ticket).unwrap();
         assert!(mock.is_durable(3), "baseline barrier_for pays its own fsync");
         assert_eq!(gs.syncs(), 1);
+    }
+
+    #[test]
+    fn transient_sync_faults_are_retried_before_going_sticky() {
+        let mock = Arc::new(MockDevice::transient_failing(2));
+        let gs = grouped(&mock, Duration::ZERO);
+        gs.write_at(0, b"x").unwrap();
+        gs.barrier().unwrap();
+        assert!(mock.is_durable(0), "the barrier rode out both transient faults");
+        assert_eq!(gs.sync_retries(), 2);
+        assert_eq!(gs.sync_transient_faults(), 2);
+        assert_eq!(gs.syncs(), 1, "one logical sync despite the retries");
+        // a later clean barrier is unaffected — nothing went sticky
+        gs.write_at(1, b"y").unwrap();
+        gs.barrier().unwrap();
+        assert!(mock.is_durable(1));
+        // the passthrough sync path retries the same way
+        let gs = grouped(&Arc::new(MockDevice::transient_failing(1)), Duration::ZERO);
+        gs.sync().unwrap();
+        assert_eq!(gs.sync_retries(), 1);
     }
 
     #[test]

@@ -20,8 +20,9 @@ use std::time::Duration;
 use crate::device::SeekModel;
 use crate::fs::StripeLayout;
 use crate::live::backend::{Backend, FileBackend, MemBackend, SyntheticLatency};
+use crate::live::fault::FaultSpec;
 use crate::live::payload;
-use crate::live::shard::{Shard, ShardConfig, ShardRecovery, ShardStats};
+use crate::live::shard::{ReadError, Shard, ShardConfig, ShardRecovery, ShardStats, SubmitError};
 use crate::obs::{StageSet, TraceCollector, DEFAULT_RING_EVENTS};
 use crate::server::config::SystemKind;
 use crate::types::{mib_to_sectors, Request, SECTOR_BYTES};
@@ -210,11 +211,15 @@ impl RecoveryReport {
 pub struct VerifyReport {
     pub checked_bytes: u64,
     pub mismatched_sectors: u64,
+    /// Sub-ranges the verifier could not read back (device faults that
+    /// survived the retry budget). Unreadable ≠ mismatched, but either
+    /// fails [`VerifyReport::is_ok`].
+    pub read_errors: u64,
 }
 
 impl VerifyReport {
     pub fn is_ok(&self) -> bool {
-        self.mismatched_sectors == 0
+        self.mismatched_sectors == 0 && self.read_errors == 0
     }
 }
 
@@ -304,12 +309,48 @@ impl LiveEngine {
         Self { shards, flushers, stripe, obs }
     }
 
+    /// Per-shard fault seed: one base seed fans out into independent but
+    /// reproducible injection streams (the SSD/HDD split happens inside
+    /// [`FaultSpec::wrap_hdd`]).
+    fn fault_seed(seed: u64, shard: usize) -> u64 {
+        seed.wrapping_add((shard as u64).wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    /// Wrap one shard's backend pair in scripted fault injectors
+    /// (identity when `spec` has no clauses for a tier).
+    fn wrap_faults(
+        spec: &FaultSpec,
+        seed: u64,
+        shard: usize,
+        ssd: Box<dyn Backend>,
+        hdd: Box<dyn Backend>,
+    ) -> (Box<dyn Backend>, Box<dyn Backend>) {
+        let s = Self::fault_seed(seed, shard);
+        (spec.wrap_ssd(ssd, s), spec.wrap_hdd(hdd, s))
+    }
+
     /// All-in-memory engine (unit tests, benches).
     pub fn mem(cfg: &LiveConfig, ssd_latency: SyntheticLatency, hdd_latency: SyntheticLatency) -> Self {
-        Self::with_backends(cfg, |_| {
-            (
-                Box::new(MemBackend::new(ssd_latency)) as Box<dyn Backend>,
-                Box::new(MemBackend::new(hdd_latency)) as Box<dyn Backend>,
+        Self::mem_faulty(cfg, ssd_latency, hdd_latency, &FaultSpec::default(), 0)
+    }
+
+    /// [`LiveEngine::mem`] with scripted fault injection on the backends
+    /// (`ssdup live --fault-spec`): every shard gets its own seeded
+    /// injector pair so runs are reproducible.
+    pub fn mem_faulty(
+        cfg: &LiveConfig,
+        ssd_latency: SyntheticLatency,
+        hdd_latency: SyntheticLatency,
+        spec: &FaultSpec,
+        seed: u64,
+    ) -> Self {
+        Self::with_backends(cfg, |i| {
+            Self::wrap_faults(
+                spec,
+                seed,
+                i,
+                Box::new(MemBackend::new(ssd_latency)),
+                Box::new(MemBackend::new(hdd_latency)),
             )
         })
     }
@@ -317,13 +358,18 @@ impl LiveEngine {
     /// Real-file engine: per shard, an SSD log file and a sparse HDD image
     /// under `dir`.
     pub fn file(cfg: &LiveConfig, dir: &Path) -> io::Result<Self> {
+        Self::file_faulty(cfg, dir, &FaultSpec::default(), 0)
+    }
+
+    /// [`LiveEngine::file`] with scripted fault injection on the backends.
+    pub fn file_faulty(cfg: &LiveConfig, dir: &Path, spec: &FaultSpec, seed: u64) -> io::Result<Self> {
         // create all backends up front so I/O errors surface before any
         // flusher thread spawns
         let mut pairs = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let ssd = FileBackend::create(&dir.join(format!("shard{i}-ssd.log")))?;
             let hdd = FileBackend::create(&dir.join(format!("shard{i}-hdd.img")))?;
-            pairs.push((Box::new(ssd) as Box<dyn Backend>, Box::new(hdd) as Box<dyn Backend>));
+            pairs.push(Self::wrap_faults(spec, seed, i, Box::new(ssd), Box::new(hdd)));
         }
         let mut pairs = pairs.into_iter();
         Ok(Self::with_backends(cfg, move |_| pairs.next().expect("one backend pair per shard")))
@@ -332,11 +378,23 @@ impl LiveEngine {
     /// Reopen a previous [`LiveEngine::file`] run's images under `dir`
     /// *without truncating them* and recover: `ssdup live --recover`.
     pub fn open_file(cfg: &LiveConfig, dir: &Path) -> io::Result<(Self, RecoveryReport)> {
+        Self::open_file_faulty(cfg, dir, &FaultSpec::default(), 0)
+    }
+
+    /// [`LiveEngine::open_file`] with scripted fault injection — recovery
+    /// itself (superblock reads, log scans) runs through the injectors
+    /// too, so crash-under-faults drills exercise the replay path.
+    pub fn open_file_faulty(
+        cfg: &LiveConfig,
+        dir: &Path,
+        spec: &FaultSpec,
+        seed: u64,
+    ) -> io::Result<(Self, RecoveryReport)> {
         let mut pairs = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let ssd = FileBackend::open_existing(&dir.join(format!("shard{i}-ssd.log")))?;
             let hdd = FileBackend::open_existing(&dir.join(format!("shard{i}-hdd.img")))?;
-            pairs.push((Box::new(ssd) as Box<dyn Backend>, Box::new(hdd) as Box<dyn Backend>));
+            pairs.push(Self::wrap_faults(spec, seed, i, Box::new(ssd), Box::new(hdd)));
         }
         let mut pairs = pairs.into_iter();
         Self::open(cfg, move |_| pairs.next().expect("one backend pair per shard"))
@@ -354,7 +412,14 @@ impl LiveEngine {
     /// shard's sector-ownership map supersedes the stale copy, the
     /// flusher skips it, and [`LiveEngine::read`] serves the newest one
     /// (see the module docs).
-    pub fn submit(&self, req: Request, payload: &[u8]) {
+    ///
+    /// `Ok(())` means every sub-request's bytes reached a backend —
+    /// transient device faults were absorbed by retries below this
+    /// return. An `Err` rejects the *request*: sub-requests already
+    /// published on other shards stay durable (striping has no
+    /// cross-shard rollback), but the caller must not count the request
+    /// as acknowledged.
+    pub fn submit(&self, req: Request, payload: &[u8]) -> Result<(), SubmitError> {
         debug_assert_eq!(payload.len() as u64, req.bytes(), "payload must match request size");
         let sector = SECTOR_BYTES as usize;
         let stripe_len = self.stripe.stripe_sectors as i64;
@@ -375,8 +440,9 @@ impl LiveEngine {
                 k += run;
             }
             debug_assert_eq!(sub_buf.len() as u64, sub.bytes());
-            self.shards[sub.node].submit(&sub, &sub_buf);
+            self.shards[sub.node].submit(&sub, &sub_buf)?;
         }
+        Ok(())
     }
 
     /// Read `buf.len()` bytes of `file` starting at sector `offset`,
@@ -388,12 +454,12 @@ impl LiveEngine {
     /// concurrently with ingest, flushing, and each other.
     ///
     /// Never-written sectors read as zeros (HDD hole semantics).
-    pub fn read(&self, file: u32, offset: i32, buf: &mut [u8]) {
+    pub fn read(&self, file: u32, offset: i32, buf: &mut [u8]) -> Result<(), ReadError> {
         let sector = SECTOR_BYTES as usize;
         debug_assert_eq!(buf.len() % sector, 0, "reads are sector-aligned");
         let size = (buf.len() / sector) as i32;
         if size == 0 {
-            return;
+            return Ok(());
         }
         let req = Request { app: 0, proc_id: 0, file, offset, size };
         let stripe_len = self.stripe.stripe_sectors as i64;
@@ -402,7 +468,7 @@ impl LiveEngine {
             // read the whole sub-range from its shard, then scatter it
             // back through the stripe bijection (inverse of submit)
             sub_buf.resize(sub.bytes() as usize, 0);
-            self.shards[sub.node].read(sub.parent.file, sub.local_offset, &mut sub_buf);
+            self.shards[sub.node].read(sub.parent.file, sub.local_offset, &mut sub_buf)?;
             let mut k = 0i64;
             while k < sub.size as i64 {
                 let local = sub.local_offset as i64 + k;
@@ -415,6 +481,7 @@ impl LiveEngine {
                 k += run;
             }
         }
+        Ok(())
     }
 
     /// Settle every buffered byte onto the HDD backends and sync them.
@@ -453,7 +520,11 @@ impl LiveEngine {
                 payload::fill(req.file, req.offset as i64, &mut expect);
                 for sub in self.stripe.split(*req) {
                     got.resize(sub.bytes() as usize, 0);
-                    self.shards[sub.node].read_hdd(sub.parent.file, sub.local_offset, &mut got);
+                    let hdd = &self.shards[sub.node];
+                    if hdd.read_hdd(sub.parent.file, sub.local_offset, &mut got).is_err() {
+                        report.read_errors += 1;
+                        continue;
+                    }
                     // compare stripe-sized runs; only a mismatching run
                     // pays the per-sector recount
                     let mut k = 0i64;
@@ -530,7 +601,11 @@ impl LiveEngine {
                 let gen = payload::write_gen(proc.proc_id, idx as u32);
                 for sub in self.stripe.split(*req) {
                     got.resize(sub.bytes() as usize, 0);
-                    self.shards[sub.node].read_hdd(sub.parent.file, sub.local_offset, &mut got);
+                    let hdd = &self.shards[sub.node];
+                    if hdd.read_hdd(sub.parent.file, sub.local_offset, &mut got).is_err() {
+                        report.read_errors += 1;
+                        continue;
+                    }
                     for k in 0..sub.size as i64 {
                         let local = sub.local_offset as i64 + k;
                         let logical = logical_sector(&self.stripe, sub.node, local);
@@ -624,7 +699,7 @@ mod tests {
             payload::fill(file, off as i64, &mut buf);
             let req =
                 Request { app: 0, proc_id: 0, file, offset: off, size: DEFAULT_REQ_SECTORS };
-            engine.submit(req, &buf);
+            engine.submit(req, &buf).unwrap();
         }
     }
 
@@ -704,11 +779,11 @@ mod tests {
         let req = Request { app: 0, proc_id: 0, file: 1, offset: 0, size: n };
         let mut v1 = vec![0u8; n as usize * s];
         payload::fill_gen(1, 0, 1, &mut v1);
-        engine.submit(req, &v1);
+        engine.submit(req, &v1).unwrap();
 
         // SSD hit: served from the log, before any flush
         let mut got = vec![0u8; n as usize * s];
-        engine.read(1, 0, &mut got);
+        engine.read(1, 0, &mut got).unwrap();
         assert_eq!(got, v1, "mid-burst read must return the buffered copy");
         let flushed: u64 = engine.stats().iter().map(|st| st.flushed_bytes).sum();
         assert_eq!(flushed, 0, "nothing flushed yet: the read was an SSD hit");
@@ -718,8 +793,8 @@ mod tests {
         let mid = Request { app: 0, proc_id: 0, file: 1, offset: 128, size: 128 };
         let mut v2 = vec![0u8; 128 * s];
         payload::fill_gen(1, 128, 2, &mut v2);
-        engine.submit(mid, &v2);
-        engine.read(1, 0, &mut got);
+        engine.submit(mid, &v2).unwrap();
+        engine.read(1, 0, &mut got).unwrap();
         assert_eq!(got[..128 * s], v1[..128 * s]);
         assert_eq!(got[128 * s..256 * s], v2[..]);
         assert_eq!(got[256 * s..], v1[256 * s..]);
@@ -731,11 +806,11 @@ mod tests {
         engine.drain();
         let flushed: u64 = engine.stats().iter().map(|st| st.flushed_bytes).sum();
         assert!(flushed > 0, "drain moved the buffered data");
-        engine.read(1, 0, &mut got);
+        engine.read(1, 0, &mut got).unwrap();
         assert_eq!(got, expect, "post-drain read (HDD hit) must match");
         // never-written ranges read as zeros
         let mut hole = vec![0xAAu8; 2 * s];
-        engine.read(1, 4096, &mut hole);
+        engine.read(1, 4096, &mut hole).unwrap();
         assert!(hole.iter().all(|&b| b == 0), "holes read as zeros");
         engine.shutdown();
     }

@@ -1,0 +1,712 @@
+//! Typed I/O fault taxonomy, bounded retry/backoff, and a scriptable
+//! fault-injecting [`Backend`] wrapper — the live engine's fault layer.
+//!
+//! Three pieces, used across the whole I/O pipeline:
+//!
+//! * [`IoFault`] — the error taxonomy every I/O error is classified
+//!   into. Errors the engine makes itself (the injector, the queue's
+//!   shutdown path) carry the classification **in the error payload**
+//!   ([`FaultError`]), so it round-trips exactly; foreign errors fall
+//!   back to `io::ErrorKind` + `ENOSPC` heuristics. The classification
+//!   decides the response: transient faults are retried below the
+//!   completion token, device-full / permanent SSD faults flip the shard
+//!   into degraded (direct-to-HDD) mode, shutdown is surfaced as a typed
+//!   rejection, and anything else fails the shard loudly — never a
+//!   panic.
+//! * [`RetryPolicy`] — bounded exponential backoff: at most
+//!   `max_retries` re-attempts, each sleep doubling from `base` and
+//!   capped at `cap`, with the **total** sleep bounded by `budget`. The
+//!   property tests hold both bounds for arbitrary policies.
+//!   [`retry_transient`] is the shared run-one-op helper.
+//! * [`FaultBackend`] + [`FaultSpec`] — seeded, deterministic fault
+//!   injection over any [`Backend`], driven by a small spec string
+//!   (`ssdup live --fault-spec`):
+//!
+//!   ```text
+//!   spec    := clause (',' clause)*
+//!   clause  := ('ssd'|'hdd') ':' kind['@op=N'] (':' key '=' value)*
+//!   kind    := 'eio'     transient I/O errors on write/read/sync
+//!            | 'enospc'  device-full on writes
+//!            | 'slow'    injected latency spikes
+//!            | 'dead'    permanent device death
+//!   keys    := p=FLOAT       trigger probability per op   (default 1.0)
+//!              op=N          inert before the device's Nth op
+//!              transient=K   eio: K consecutive failures per burst,
+//!                            then one guaranteed success (default 1)
+//!              delay_us=N    slow: injected stall         (default 500)
+//!              min_off=N / max_off=N
+//!                            byte-offset window (offset-scoped clauses
+//!                            skip sync, which has no offset)
+//!   ```
+//!
+//!   Examples: `ssd:eio:p=0.01:transient=3` (1% transient-EIO storm,
+//!   each burst clears after 3 attempts), `hdd:dead@op=5000` (HDD dies
+//!   permanently at its 5000th op), `ssd:slow:p=0.1:delay_us=2000`.
+//!
+//! Determinism: every injection decision comes from one seeded [`Prng`]
+//! behind the wrapper's mutex, keyed only by the device's op order — the
+//! same single-threaded op sequence always faults at the same points,
+//! which is what the `transient=2`-succeeds-on-the-3rd-attempt unit
+//! tests rely on.
+
+use std::error::Error as StdError;
+use std::fmt;
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::live::backend::Backend;
+use crate::util::prng::Prng;
+
+/// `ENOSPC` on every Unix the engine targets (classification fallback
+/// for real device-full errors surfaced by the OS).
+const ENOSPC_ERRNO: i32 = 28;
+
+/// What kind of failure an `io::Error` represents — and therefore what
+/// the engine does about it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoFault {
+    /// Worth retrying with backoff (EINTR/EIO blips, timeouts).
+    Transient,
+    /// The device is out of space: writes to this tier are pointless,
+    /// route around it (SSD tier → degraded mode).
+    DeviceFull,
+    /// The device is gone or the error is not recoverable by retry.
+    Permanent,
+    /// Not a device fault at all: the queue/shard is shutting down and
+    /// the request was rejected, bytes undelivered.
+    Shutdown,
+}
+
+impl IoFault {
+    /// Classify an error. Engine-made errors carry their [`IoFault`] in
+    /// the payload and round-trip exactly; foreign errors fall back to
+    /// `ErrorKind` (+ raw `ENOSPC`), defaulting to [`IoFault::Permanent`]
+    /// — an unknown error must never be retried into a forged ack.
+    pub fn classify(e: &io::Error) -> IoFault {
+        if let Some(f) = e.get_ref().and_then(|inner| inner.downcast_ref::<FaultError>()) {
+            return f.fault;
+        }
+        if e.raw_os_error() == Some(ENOSPC_ERRNO) {
+            return IoFault::DeviceFull;
+        }
+        match e.kind() {
+            io::ErrorKind::Interrupted | io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => {
+                IoFault::Transient
+            }
+            _ => IoFault::Permanent,
+        }
+    }
+
+    pub fn is_transient(self) -> bool {
+        self == IoFault::Transient
+    }
+
+    pub fn is_shutdown(self) -> bool {
+        self == IoFault::Shutdown
+    }
+
+    /// Build an `io::Error` that classifies back to `self` exactly (the
+    /// taxonomy rides in the payload, not just the `ErrorKind`).
+    pub fn error(self, msg: impl Into<String>) -> io::Error {
+        let payload = FaultError { fault: self, msg: msg.into() };
+        match self {
+            IoFault::Transient => io::Error::new(io::ErrorKind::Interrupted, payload),
+            _ => io::Error::other(payload),
+        }
+    }
+}
+
+impl fmt::Display for IoFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let name = match self {
+            IoFault::Transient => "transient",
+            IoFault::DeviceFull => "device-full",
+            IoFault::Permanent => "permanent",
+            IoFault::Shutdown => "shutdown",
+        };
+        f.write_str(name)
+    }
+}
+
+/// Error payload carrying an exact [`IoFault`] classification.
+#[derive(Debug)]
+pub struct FaultError {
+    fault: IoFault,
+    msg: String,
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} [{}]", self.msg, self.fault)
+    }
+}
+
+impl StdError for FaultError {}
+
+/// Bounded exponential backoff for transient faults. Two independent
+/// hard bounds: at most `max_retries` re-attempts, and the sleeps sum to
+/// at most `budget` (each individual sleep doubles from `base`, capped
+/// at `cap`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub base: Duration,
+    pub cap: Duration,
+    pub budget: Duration,
+}
+
+impl RetryPolicy {
+    /// No retries at all: every fault surfaces on the first attempt.
+    pub const fn none() -> Self {
+        Self { max_retries: 0, base: Duration::ZERO, cap: Duration::ZERO, budget: Duration::ZERO }
+    }
+
+    /// Default for device I/O: rides out injected EIO storms (bursts of
+    /// a few consecutive failures) without stretching a run — worst case
+    /// ~20 ms of sleep per request.
+    pub fn io_default() -> Self {
+        Self {
+            max_retries: 8,
+            base: Duration::from_micros(50),
+            cap: Duration::from_millis(5),
+            budget: Duration::from_millis(20),
+        }
+    }
+
+    /// Sleep before retry number `attempt` (0-based), given the total
+    /// already slept — or `None` once either bound is exhausted.
+    pub fn delay(&self, attempt: u32, slept: Duration) -> Option<Duration> {
+        if attempt >= self.max_retries || slept >= self.budget {
+            return None;
+        }
+        let factor = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+        let exp = self.base.saturating_mul(factor);
+        Some(exp.min(self.cap).min(self.budget - slept))
+    }
+}
+
+/// Run `op`, retrying transient faults per `policy` with backoff.
+/// Returns the final result plus the number of retries taken (0 when the
+/// first attempt decided it) — callers book the count into their stats.
+pub fn retry_transient<T>(
+    policy: &RetryPolicy,
+    mut op: impl FnMut() -> io::Result<T>,
+) -> (io::Result<T>, u32) {
+    let mut retries = 0u32;
+    let mut slept = Duration::ZERO;
+    loop {
+        match op() {
+            Ok(v) => return (Ok(v), retries),
+            Err(e) => {
+                if !IoFault::classify(&e).is_transient() {
+                    return (Err(e), retries);
+                }
+                match policy.delay(retries, slept) {
+                    Some(d) => {
+                        if !d.is_zero() {
+                            std::thread::sleep(d);
+                        }
+                        slept += d;
+                        retries += 1;
+                    }
+                    None => return (Err(e), retries),
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FaultKind {
+    Eio,
+    Enospc,
+    Slow,
+    Dead,
+}
+
+/// Which device operation a clause is being consulted for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DevOp {
+    Write,
+    Read,
+    Sync,
+}
+
+/// One parsed fault clause (see the module docs for the grammar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultClause {
+    kind: FaultKind,
+    p: f64,
+    at_op: u64,
+    transient: u32,
+    delay: Duration,
+    min_off: u64,
+    max_off: u64,
+}
+
+impl FaultClause {
+    fn applies(&self, op: DevOp, offset: Option<u64>) -> bool {
+        let kind_ok = match self.kind {
+            FaultKind::Enospc => op == DevOp::Write,
+            FaultKind::Eio | FaultKind::Slow | FaultKind::Dead => true,
+        };
+        if !kind_ok {
+            return false;
+        }
+        if self.min_off == 0 && self.max_off == u64::MAX {
+            return true; // unscoped: every op, sync included
+        }
+        match offset {
+            Some(off) => off >= self.min_off && off < self.max_off,
+            None => false, // offset-scoped clauses never hit sync
+        }
+    }
+}
+
+/// A parsed `--fault-spec`: per-tier clause lists. Empty spec = no
+/// injection (wrapping is the identity).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    ssd: Vec<FaultClause>,
+    hdd: Vec<FaultClause>,
+}
+
+impl FaultSpec {
+    /// Parse a spec string (grammar in the module docs). Errors name the
+    /// offending clause.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut parts = clause.split(':');
+            let device = parts.next().unwrap_or("");
+            let Some(kind_tok) = parts.next() else {
+                return Err(format!("fault spec '{clause}': missing fault kind"));
+            };
+            // `dead@op=5000` glues the activation op onto the kind token
+            let (kind_name, at_op) = match kind_tok.split_once('@') {
+                Some((k, at)) => {
+                    let n = at
+                        .strip_prefix("op=")
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .ok_or_else(|| format!("fault spec '{clause}': bad '@{at}' (want @op=N)"))?;
+                    (k, n)
+                }
+                None => (kind_tok, 0),
+            };
+            let kind = match kind_name {
+                "eio" => FaultKind::Eio,
+                "enospc" => FaultKind::Enospc,
+                "slow" => FaultKind::Slow,
+                "dead" => FaultKind::Dead,
+                other => {
+                    return Err(format!(
+                        "fault spec '{clause}': unknown kind '{other}' (eio|enospc|slow|dead)"
+                    ))
+                }
+            };
+            let mut c = FaultClause {
+                kind,
+                p: 1.0,
+                at_op,
+                transient: 1,
+                delay: Duration::from_micros(500),
+                min_off: 0,
+                max_off: u64::MAX,
+            };
+            for param in parts {
+                let Some((key, val)) = param.split_once('=') else {
+                    return Err(format!(
+                        "fault spec '{clause}': bad param '{param}' (want key=value)"
+                    ));
+                };
+                let bad = || format!("fault spec '{clause}': bad value in '{param}'");
+                match key {
+                    "p" => {
+                        c.p = val.parse().map_err(|_| bad())?;
+                        if !(0.0..=1.0).contains(&c.p) {
+                            return Err(format!("fault spec '{clause}': p must be in [0,1]"));
+                        }
+                    }
+                    "op" => c.at_op = val.parse().map_err(|_| bad())?,
+                    "transient" => {
+                        c.transient = val.parse::<u32>().map_err(|_| bad())?.max(1);
+                    }
+                    "delay_us" => {
+                        c.delay = Duration::from_micros(val.parse().map_err(|_| bad())?);
+                    }
+                    "min_off" => c.min_off = val.parse().map_err(|_| bad())?,
+                    "max_off" => c.max_off = val.parse().map_err(|_| bad())?,
+                    other => {
+                        return Err(format!("fault spec '{clause}': unknown param '{other}'"));
+                    }
+                }
+            }
+            match device {
+                "ssd" => spec.ssd.push(c),
+                "hdd" => spec.hdd.push(c),
+                other => {
+                    return Err(format!(
+                        "fault spec '{clause}': unknown device '{other}' (ssd|hdd)"
+                    ))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ssd.is_empty() && self.hdd.is_empty()
+    }
+
+    /// Wrap a shard's SSD backend. Identity when no `ssd:` clauses
+    /// parsed; `seed` should be derived per shard so streams stay
+    /// independent but deterministic.
+    pub fn wrap_ssd(&self, inner: Box<dyn Backend>, seed: u64) -> Box<dyn Backend> {
+        Self::wrap(inner, &self.ssd, seed)
+    }
+
+    /// Wrap a shard's HDD backend (see [`FaultSpec::wrap_ssd`]).
+    pub fn wrap_hdd(&self, inner: Box<dyn Backend>, seed: u64) -> Box<dyn Backend> {
+        Self::wrap(inner, &self.hdd, seed ^ 0x9E37_79B9_7F4A_7C15)
+    }
+
+    fn wrap(inner: Box<dyn Backend>, clauses: &[FaultClause], seed: u64) -> Box<dyn Backend> {
+        if clauses.is_empty() {
+            inner
+        } else {
+            Box::new(FaultBackend::new(inner, clauses.to_vec(), seed))
+        }
+    }
+}
+
+struct InjectState {
+    rng: Prng,
+    /// per-clause remaining failures in the current eio burst
+    pending: Vec<u32>,
+    /// per-clause one-op grace after a burst drains: the attempt after
+    /// `transient` consecutive failures succeeds whatever `p` says
+    grace: Vec<bool>,
+}
+
+/// Seeded, deterministic fault injector over any [`Backend`]. Every
+/// operation consults the clause list in order; the first clause that
+/// triggers decides the op's fate (error / stall), otherwise the op
+/// forwards to the wrapped backend untouched.
+pub struct FaultBackend {
+    inner: Box<dyn Backend>,
+    clauses: Vec<FaultClause>,
+    ops: AtomicU64,
+    injected: AtomicU64,
+    state: Mutex<InjectState>,
+}
+
+impl FaultBackend {
+    pub fn new(inner: Box<dyn Backend>, clauses: Vec<FaultClause>, seed: u64) -> Self {
+        let n = clauses.len();
+        Self {
+            inner,
+            clauses,
+            ops: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+            state: Mutex::new(InjectState {
+                rng: Prng::new(seed),
+                pending: vec![0; n],
+                grace: vec![false; n],
+            }),
+        }
+    }
+
+    /// Faults injected so far (test/debug visibility).
+    pub fn injected_faults(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Device operations seen so far (test/debug visibility).
+    pub fn ops_seen(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    fn inject(&self) -> u64 {
+        self.injected.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Consult every clause for one device op; `Ok(())` means forward.
+    fn gate(&self, op: DevOp, offset: Option<u64>) -> io::Result<()> {
+        let op_index = self.ops.fetch_add(1, Ordering::Relaxed);
+        for (i, c) in self.clauses.iter().enumerate() {
+            if op_index < c.at_op || !c.applies(op, offset) {
+                continue;
+            }
+            match c.kind {
+                FaultKind::Dead => {
+                    self.inject();
+                    return Err(IoFault::Permanent
+                        .error(format!("injected: device dead since op {}", c.at_op)));
+                }
+                FaultKind::Eio => {
+                    let mut st = self.state.lock().unwrap();
+                    if st.pending[i] == 0 {
+                        if st.grace[i] {
+                            st.grace[i] = false;
+                            continue;
+                        }
+                        if !st.rng.chance(c.p) {
+                            continue;
+                        }
+                        // a fresh burst: `transient` consecutive failures
+                        st.pending[i] = c.transient;
+                    }
+                    st.pending[i] -= 1;
+                    if st.pending[i] == 0 {
+                        st.grace[i] = true;
+                    }
+                    drop(st);
+                    self.inject();
+                    return Err(IoFault::Transient.error("injected: transient EIO"));
+                }
+                FaultKind::Enospc => {
+                    if self.state.lock().unwrap().rng.chance(c.p) {
+                        self.inject();
+                        return Err(IoFault::DeviceFull.error("injected: device full"));
+                    }
+                }
+                FaultKind::Slow => {
+                    let hit = self.state.lock().unwrap().rng.chance(c.p);
+                    if hit {
+                        self.inject();
+                        if !c.delay.is_zero() {
+                            // stall outside the state lock
+                            std::thread::sleep(c.delay);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Backend for FaultBackend {
+    fn write_at(&self, offset: u64, data: &[u8]) -> io::Result<()> {
+        self.gate(DevOp::Write, Some(offset))?;
+        self.inner.write_at(offset, data)
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        self.gate(DevOp::Read, Some(offset))?;
+        self.inner.read_at(offset, buf)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn sync(&self) -> io::Result<()> {
+        self.gate(DevOp::Sync, None)?;
+        self.inner.sync()
+    }
+
+    fn kind(&self) -> &'static str {
+        self.inner.kind()
+    }
+
+    fn write_vectored_at(&self, offset: u64, bufs: &[&[u8]]) -> io::Result<()> {
+        self.gate(DevOp::Write, Some(offset))?;
+        self.inner.write_vectored_at(offset, bufs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::live::backend::{MemBackend, SyntheticLatency};
+
+    fn mem() -> Box<dyn Backend> {
+        Box::new(MemBackend::new(SyntheticLatency::ZERO))
+    }
+
+    #[test]
+    fn classification_round_trips_through_error_payload() {
+        for fault in
+            [IoFault::Transient, IoFault::DeviceFull, IoFault::Permanent, IoFault::Shutdown]
+        {
+            let e = fault.error("probe");
+            assert_eq!(IoFault::classify(&e), fault, "{fault}");
+            assert!(e.to_string().contains("probe"));
+        }
+    }
+
+    #[test]
+    fn classification_is_stable_across_error_kinds() {
+        use io::ErrorKind as K;
+        let transient = [K::Interrupted, K::TimedOut, K::WouldBlock];
+        for k in transient {
+            assert_eq!(IoFault::classify(&io::Error::from(k)), IoFault::Transient, "{k:?}");
+        }
+        let permanent = [
+            K::NotFound,
+            K::PermissionDenied,
+            K::BrokenPipe,
+            K::InvalidData,
+            K::UnexpectedEof,
+            K::Unsupported,
+            K::Other,
+        ];
+        for k in permanent {
+            assert_eq!(IoFault::classify(&io::Error::from(k)), IoFault::Permanent, "{k:?}");
+        }
+        // real ENOSPC from the OS classifies as device-full
+        let enospc = io::Error::from_raw_os_error(ENOSPC_ERRNO);
+        assert_eq!(IoFault::classify(&enospc), IoFault::DeviceFull);
+        // a stringly error someone made without the payload: permanent
+        assert_eq!(IoFault::classify(&io::Error::other("boom")), IoFault::Permanent);
+    }
+
+    #[test]
+    fn backoff_is_bounded_for_arbitrary_policies() {
+        let mut rng = Prng::new(99);
+        for case in 0..200 {
+            let policy = RetryPolicy {
+                max_retries: rng.gen_range(20) as u32,
+                base: Duration::from_micros(rng.gen_range(5_000)),
+                cap: Duration::from_micros(1 + rng.gen_range(20_000)),
+                budget: Duration::from_micros(rng.gen_range(50_000)),
+            };
+            let mut attempt = 0u32;
+            let mut slept = Duration::ZERO;
+            while let Some(d) = policy.delay(attempt, slept) {
+                assert!(d <= policy.cap, "case {case}: sleep above per-sleep cap");
+                slept += d;
+                attempt += 1;
+                assert!(slept <= policy.budget, "case {case}: total sleep above budget");
+                assert!(attempt <= policy.max_retries, "case {case}: attempts above cap");
+            }
+            // and the loop terminated — both bounds are hard stops
+            assert!(attempt <= policy.max_retries && slept <= policy.budget);
+        }
+    }
+
+    #[test]
+    fn backoff_delays_grow_until_capped() {
+        let p = RetryPolicy {
+            max_retries: 10,
+            base: Duration::from_micros(100),
+            cap: Duration::from_micros(450),
+            budget: Duration::from_secs(1),
+        };
+        assert_eq!(p.delay(0, Duration::ZERO), Some(Duration::from_micros(100)));
+        assert_eq!(p.delay(1, Duration::ZERO), Some(Duration::from_micros(200)));
+        assert_eq!(p.delay(2, Duration::ZERO), Some(Duration::from_micros(400)));
+        assert_eq!(p.delay(3, Duration::ZERO), Some(Duration::from_micros(450)), "capped");
+        assert_eq!(p.delay(10, Duration::ZERO), None, "attempt cap");
+        assert_eq!(p.delay(0, Duration::from_secs(1)), None, "budget spent");
+    }
+
+    #[test]
+    fn spec_grammar_parses_the_documented_examples() {
+        let spec = FaultSpec::parse("ssd:eio:p=0.01:transient=3,hdd:dead@op=5000").unwrap();
+        assert_eq!(spec.ssd.len(), 1);
+        assert_eq!(spec.hdd.len(), 1);
+        let eio = &spec.ssd[0];
+        assert_eq!(eio.kind, FaultKind::Eio);
+        assert!((eio.p - 0.01).abs() < 1e-12);
+        assert_eq!(eio.transient, 3);
+        let dead = &spec.hdd[0];
+        assert_eq!(dead.kind, FaultKind::Dead);
+        assert_eq!(dead.at_op, 5000);
+
+        let spec =
+            FaultSpec::parse("ssd:enospc:op=100:min_off=4096, hdd:slow:p=0.5:delay_us=250")
+                .unwrap();
+        assert_eq!(spec.ssd[0].kind, FaultKind::Enospc);
+        assert_eq!(spec.ssd[0].at_op, 100);
+        assert_eq!(spec.ssd[0].min_off, 4096);
+        assert_eq!(spec.hdd[0].delay, Duration::from_micros(250));
+
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+        for bad in [
+            "nvme:eio",
+            "ssd:badkind",
+            "ssd:eio:p=1.5",
+            "ssd:eio:frob=1",
+            "ssd:dead@banana",
+            "ssd",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn transient_two_fails_twice_then_succeeds() {
+        // p=1: the very first write starts a burst of exactly 2 failures;
+        // the 3rd attempt must succeed (the grace op), deterministically.
+        let spec = FaultSpec::parse("ssd:eio:transient=2").unwrap();
+        let dev = FaultBackend::new(mem(), spec.ssd.clone(), 7);
+        assert!(dev.write_at(0, b"x").is_err(), "attempt 1 fails");
+        assert!(dev.write_at(0, b"x").is_err(), "attempt 2 fails");
+        assert!(dev.write_at(0, b"x").is_ok(), "attempt 3 succeeds");
+        assert_eq!(dev.injected_faults(), 2, "exactly two faults injected");
+        // the retry helper sees the same schedule end to end
+        let dev = FaultBackend::new(mem(), spec.ssd.clone(), 7);
+        let policy = RetryPolicy { base: Duration::ZERO, ..RetryPolicy::io_default() };
+        let (result, retries) = retry_transient(&policy, || dev.write_at(0, b"x"));
+        assert!(result.is_ok());
+        assert_eq!(retries, 2, "succeeds on the 3rd attempt with 2 retries booked");
+    }
+
+    #[test]
+    fn dead_at_op_kills_every_later_operation() {
+        let spec = FaultSpec::parse("ssd:dead@op=3").unwrap();
+        let dev = FaultBackend::new(mem(), spec.ssd.clone(), 1);
+        for _ in 0..3 {
+            dev.write_at(0, b"ok").unwrap();
+        }
+        for _ in 0..5 {
+            let e = dev.write_at(0, b"no").unwrap_err();
+            assert_eq!(IoFault::classify(&e), IoFault::Permanent);
+        }
+        let mut buf = [0u8; 2];
+        assert!(dev.read_at(0, &mut buf).is_err(), "reads die too");
+        assert!(dev.sync().is_err(), "sync dies too");
+    }
+
+    #[test]
+    fn enospc_hits_writes_only_and_respects_offset_window() {
+        let spec = FaultSpec::parse("ssd:enospc:min_off=1024").unwrap();
+        let dev = FaultBackend::new(mem(), spec.ssd.clone(), 3);
+        dev.write_at(0, b"superblock area ok").unwrap();
+        dev.write_at(1023, b"x").unwrap(); // offset below the window
+        let e = dev.write_at(4096, b"log area").unwrap_err();
+        assert_eq!(IoFault::classify(&e), IoFault::DeviceFull);
+        let mut buf = [0u8; 4];
+        dev.read_at(4096, &mut buf).unwrap(); // reads unaffected
+        dev.sync().unwrap(); // offset-scoped clause skips sync
+    }
+
+    #[test]
+    fn seeded_injection_is_deterministic() {
+        let spec = FaultSpec::parse("ssd:eio:p=0.3").unwrap();
+        let run = |seed: u64| -> Vec<bool> {
+            let dev = FaultBackend::new(mem(), spec.ssd.clone(), seed);
+            (0..200).map(|i| dev.write_at(i * 8, b"deadbeef").is_err()).collect()
+        };
+        assert_eq!(run(42), run(42), "same seed, same fault schedule");
+        assert_ne!(run(42), run(43), "different seed, different schedule");
+        let faults = run(42).iter().filter(|&&f| f).count();
+        assert!(faults > 20 && faults < 120, "p=0.3 fault rate plausible ({faults}/200)");
+    }
+
+    #[test]
+    fn retry_transient_gives_up_on_permanent_faults() {
+        let calls = AtomicU64::new(0);
+        let (result, retries) = retry_transient(&RetryPolicy::io_default(), || {
+            calls.fetch_add(1, Ordering::Relaxed);
+            Err::<(), _>(IoFault::Permanent.error("dead"))
+        });
+        assert!(result.is_err());
+        assert_eq!(retries, 0);
+        assert_eq!(calls.load(Ordering::Relaxed), 1, "no retry on permanent");
+    }
+}

@@ -44,6 +44,10 @@ pub struct LiveReport {
     pub total_us: u64,
     pub total_bytes: u64,
     pub requests: u64,
+    /// requests the engine rejected with a typed error (shutdown or a
+    /// permanent device fault) instead of acknowledging — excluded from
+    /// the latency histogram, never counted as delivered
+    pub rejected: u64,
     pub latency: LatencyHistogram,
     pub shards: Vec<ShardStats>,
     /// per-stage ack-latency attribution, merged across shards
@@ -113,8 +117,23 @@ impl LiveReport {
         reqs.saturating_sub(dev)
     }
 
+    /// Device-level retries absorbed below the ack across all shards.
+    pub fn io_retries(&self) -> u64 {
+        self.shards.iter().map(|s| s.io_retries).sum()
+    }
+
+    /// Transient device faults observed (and re-driven) across shards.
+    pub fn transient_faults(&self) -> u64 {
+        self.shards.iter().map(|s| s.transient_faults).sum()
+    }
+
+    /// Shards flying degraded (SSD written off, direct-to-HDD routing).
+    pub fn degraded_shards(&self) -> u64 {
+        self.shards.iter().filter(|s| s.degraded).count() as u64
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<34} {:>8.2} MB/s ingest ({:>7.2} MB/s drained)  ssd {:>5.1}%  \
              {} syncs ({:.1} w/s)  qd {:.1}/{}  lat {}",
             self.workload,
@@ -126,7 +145,16 @@ impl LiveReport {
             self.io_mean_depth(),
             self.io_depth_high_water(),
             self.latency.summary(),
-        )
+        );
+        if self.io_retries() > 0 || self.rejected > 0 || self.degraded_shards() > 0 {
+            line.push_str(&format!(
+                "  faults: {} retries, {} rejected, {} degraded",
+                self.io_retries(),
+                self.rejected,
+                self.degraded_shards(),
+            ));
+        }
+        line
     }
 
     /// Multi-line per-stage latency decomposition (p50/p95/p99 per
@@ -334,6 +362,7 @@ fn run_inner(
             let gate = &gate;
             move || {
                 let mut hist = LatencyHistogram::new();
+                let mut rejected = 0u64;
                 let mut buf: Vec<u8> = Vec::new();
                 // a process with no requests is complete by definition
                 for proc in &group {
@@ -381,8 +410,13 @@ fn run_inner(
                         buf.resize(req.bytes() as usize, 0);
                         payload::fill_gen(req.file, req.offset as i64, gen, &mut buf);
                         let start = Instant::now();
-                        engine.submit(req, &buf);
-                        hist.record(start.elapsed().as_micros() as u64);
+                        // a rejected request is not acknowledged: count
+                        // it, keep its latency out of the histogram, and
+                        // press on — degraded engines keep accepting
+                        match engine.submit(req, &buf) {
+                            Ok(()) => hist.record(start.elapsed().as_micros() as u64),
+                            Err(_) => rejected += 1,
+                        }
                         if *cursor == proc.reqs.len() {
                             gate.mark_done(proc.app);
                         }
@@ -396,19 +430,21 @@ fn run_inner(
                         gate.park(cooldown.unwrap_or(GATE_POLL));
                     }
                 }
-                hist
+                (hist, rejected)
             }
         })
         .collect();
-    let hists = scoped_map(jobs);
+    let results = scoped_map(jobs);
     let ingest_us = t0.elapsed().as_micros() as u64;
 
     engine.drain();
     let total_us = t0.elapsed().as_micros() as u64;
 
     let mut latency = LatencyHistogram::new();
-    for h in &hists {
+    let mut rejected = 0u64;
+    for (h, r) in &results {
         latency.merge(h);
+        rejected += r;
     }
     LiveReport {
         workload: workload.name.clone(),
@@ -416,6 +452,7 @@ fn run_inner(
         total_us,
         total_bytes: workload.total_bytes(),
         requests: workload.total_requests() as u64,
+        rejected,
         latency,
         shards: engine.stats(),
         stages: engine.stage_latency(),
@@ -457,6 +494,8 @@ mod tests {
         assert!(report.throughput_mbps() > 0.0);
         assert!(report.throughput_mbps() >= report.drained_throughput_mbps());
         assert!(report.summary().contains("MB/s"));
+        assert_eq!(report.rejected, 0, "a fault-free run rejects nothing");
+        assert!(!report.summary().contains("faults:"), "quiet when nothing faulted");
         engine.shutdown();
     }
 

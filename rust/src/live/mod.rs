@@ -135,6 +135,49 @@
 //! files; the 58th first-touch fails the shard with a named error (the
 //! paper's workloads use one shared file per application).
 //!
+//! # Failure semantics
+//!
+//! Device errors are typed ([`fault::IoFault`]) and handled where they
+//! are cheapest to handle — the engine never panics on an I/O error:
+//!
+//! * **Transient faults** (EINTR/EIO blips, timeouts) are absorbed
+//!   *below* the acknowledgement: the I/O-queue workers, the group-sync
+//!   leaders, and the read paths re-drive the operation under a bounded
+//!   exponential-backoff budget ([`fault::RetryPolicy`]). A write that
+//!   published went through a completed barrier on its *final,
+//!   successful* attempt, so "acknowledged" means exactly what it means
+//!   in the durability contract above — faults or no faults. Retries
+//!   surface as `ShardStats::{io_retries, transient_faults}` and as the
+//!   `fault_retry` stage, never as client errors.
+//! * **Permanent SSD faults and SSD ENOSPC** flip the shard into sticky
+//!   **degraded mode**: the claim is aborted (bookkeeping rolled back),
+//!   the flag is persisted in the superblock, and every new write —
+//!   including the failed one, which re-enters the claim loop — routes
+//!   direct to HDD. Buffered data still settles through the flusher
+//!   (SSD *reads* still work after a write-side failure) and reads still
+//!   serve the newest copy. A degraded write that overlaps live buffered
+//!   data waits for those claims to settle rather than racing them, so
+//!   no stale copy can resurface. Recovery restores the degraded flag.
+//! * **Permanent HDD faults** fail the shard: the HDD is the home tier,
+//!   there is nothing left to route around. Every blocked and future
+//!   `submit`/`read` on the shard returns a typed rejection
+//!   ([`shard::SubmitError::Failed`] / [`shard::ReadError`]) naming the
+//!   original cause; acknowledged writes remain durable.
+//! * **Shutdown** is its own fault kind, not an `io::Error` string:
+//!   submits and reads racing a shutdown return
+//!   [`shard::SubmitError::Shutdown`] / [`shard::ReadError::Shutdown`].
+//!
+//! Fault injection is built in: `ssdup live --fault-spec` wraps every
+//! backend in a seeded, deterministic [`fault::FaultBackend`]. The
+//! grammar is comma-separated clauses of
+//! `device:kind[@op=N][:p=F][:op=N][:transient=K][:delay_us=N][:min_off=N][:max_off=N]`
+//! with `device` ∈ {`ssd`, `hdd`} and `kind` ∈ {`eio`, `enospc`,
+//! `slow`, `dead`} — e.g. `ssd:eio:p=0.01:transient=3` (1% of SSD ops
+//! fail EIO, each healing after 3 attempts), `hdd:dead@op=5000` (HDD
+//! dies permanently at its 5000th op), `ssd:enospc:p=0.02`. The
+//! fault-matrix suite (`tests/fault_injection.rs`) drives these scripts
+//! end to end and checks the promises above, crash-and-recover included.
+//!
 //! # Observability
 //!
 //! The engine is instrumented end to end by [`crate::obs`] — zero
@@ -168,6 +211,7 @@
 pub mod backend;
 pub mod commit;
 pub mod engine;
+pub mod fault;
 pub mod loadgen;
 pub mod ownership;
 pub mod payload;
@@ -180,10 +224,11 @@ pub use backend::{
 };
 pub use commit::GroupSync;
 pub use engine::{LiveConfig, LiveEngine, RecoveryReport, VerifyReport};
+pub use fault::{FaultBackend, FaultSpec, IoFault, RetryPolicy};
 pub use loadgen::{
     run as run_load, run_reported as run_load_reported, run_with as run_load_with, LiveReport,
     SnapshotOptions,
 };
 pub use ownership::{OwnershipMap, Tier};
 pub use record::{LiveRecord, RecordHeader, Superblock};
-pub use shard::{Shard, ShardConfig, ShardRecovery, ShardStats};
+pub use shard::{ReadError, Shard, ShardConfig, ShardRecovery, ShardStats, SubmitError};

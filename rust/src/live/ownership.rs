@@ -270,6 +270,26 @@ impl OwnershipMap {
         published
     }
 
+    /// A reserved write's device bytes will **never** land (the SSD slot
+    /// write failed for good): remove every surviving fragment of
+    /// `ticket`'s claim in `[lba, lba+size)` instead of publishing it.
+    /// The range reverts to "absent = HDD-owned", so a degraded-mode
+    /// re-route can claim it for the direct path immediately. Fragments
+    /// already superseded by newer claims are untouched, exactly like
+    /// [`OwnershipMap::publish`]. Returns the aborted sector count.
+    pub fn abort(&mut self, ticket: u64, lba: i64, size: i64) -> i64 {
+        debug_assert!(ticket != PUBLISHED, "abort without a ticket");
+        let mut aborted = 0;
+        for (k, e) in self.overlapping(lba, lba + size) {
+            if e.pending != ticket {
+                continue;
+            }
+            self.map.remove(k);
+            aborted += e.size;
+        }
+        aborted
+    }
+
     /// Register an in-flight direct-to-HDD write of `[lba, lba+size)`.
     /// The caller must have waited out any overlap first (no SSD-resident
     /// copy, no other in-flight direct write); the returned ticket is
@@ -575,6 +595,31 @@ mod tests {
         assert_eq!(m.resolve(500, 10), vec![(500, 10, ssd(0, 102))]);
         assert!(!m.pending_overlaps(0, 600), "replayed claims are published");
         assert_eq!(m.ssd_sectors() + superseded, 150);
+    }
+
+    #[test]
+    fn abort_removes_surviving_fragments_and_spares_newer_claims() {
+        let mut m = OwnershipMap::new();
+        let (_, a) = m.reserve(0, 100, 0, 0);
+        // a newer claim lands inside A's range while A is in flight
+        let (_, b) = m.reserve(30, 40, 1, 500);
+        // A's device write failed permanently: its fragments must vanish
+        assert_eq!(m.abort(a, 0, 100), 30 + 30);
+        assert!(!m.pending_overlaps(0, 30), "aborted head is HDD-owned again");
+        assert!(!m.pending_overlaps(70, 30), "aborted tail is HDD-owned again");
+        assert!(m.pending_overlaps(30, 40), "B's in-flight claim is untouched");
+        assert_eq!(m.publish(b, 30, 40), 40);
+        assert_eq!(
+            m.resolve(0, 100),
+            vec![(0, 30, Tier::Hdd), (30, 40, ssd(1, 500)), (70, 30, Tier::Hdd)]
+        );
+        // a fully superseded claim aborts to nothing
+        let (_, c) = m.reserve(200, 10, 0, 0);
+        let (stale, d) = m.reserve(200, 10, 0, 10);
+        assert_eq!(stale, 10);
+        assert_eq!(m.abort(c, 200, 10), 0, "nothing of C survived to abort");
+        assert_eq!(m.publish(d, 200, 10), 10);
+        assert_eq!(m.resolve(200, 10), vec![(200, 10, ssd(0, 10))]);
     }
 
     #[test]

@@ -46,8 +46,15 @@
 use std::io;
 
 use crate::live::backend::Backend;
+use crate::live::fault::{retry_transient, RetryPolicy};
 use crate::types::SECTOR_BYTES;
 use crate::util::crc::Crc32c;
+
+/// Recovery-path read with transient faults retried: a recovery running
+/// under an EIO storm must not mistake a blip for data loss.
+fn read_retried(dev: &dyn Backend, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+    retry_transient(&RetryPolicy::io_default(), || dev.read_at(offset, buf)).0
+}
 
 /// Record-frame magic ("SSDR").
 pub const RECORD_MAGIC: u32 = 0x5353_4452;
@@ -166,13 +173,25 @@ pub struct Superblock {
     /// set only by an orderly shutdown after a full drain: a clean
     /// reopen skips the log scan entirely
     pub clean: bool,
+    /// the shard entered sticky degraded mode (SSD tier failed): new
+    /// writes route direct-to-HDD, and a recovery must come back up
+    /// degraded instead of trusting the dead tier again
+    pub degraded: bool,
     /// the shard's file table as `(file, extent slot)` pairs
     pub files: Vec<(u32, u32)>,
 }
 
 impl Superblock {
     pub fn fresh(shard: u32) -> Self {
-        Self { shard, epoch: 0, last_seq: 0, watermark: [0, 0], clean: false, files: Vec::new() }
+        Self {
+            shard,
+            epoch: 0,
+            last_seq: 0,
+            watermark: [0, 0],
+            clean: false,
+            degraded: false,
+            files: Vec::new(),
+        }
     }
 
     /// Byte offset of slot `slot` (0 or 1) relative to the superblock
@@ -196,6 +215,7 @@ impl Superblock {
         sector[24..32].copy_from_slice(&self.watermark[0].to_le_bytes());
         sector[32..40].copy_from_slice(&self.watermark[1].to_le_bytes());
         sector[40] = self.clean as u8;
+        sector[41] = self.degraded as u8;
         sector[44..48].copy_from_slice(&(self.files.len() as u32).to_le_bytes());
         for (i, &(file, slot)) in self.files.iter().enumerate() {
             let at = 48 + i * 8;
@@ -240,6 +260,9 @@ impl Superblock {
                 u64::from_le_bytes(sector[32..40].try_into().unwrap()),
             ],
             clean: sector[40] != 0,
+            // byte 41 was zero padding before the fault layer, so old
+            // superblocks decode as not degraded
+            degraded: sector[41] != 0,
             files,
         })
     }
@@ -251,7 +274,7 @@ impl Superblock {
     /// tells the next writer where *not* to write.
     pub fn read(dev: &dyn Backend, base: u64, shard: u32) -> io::Result<Option<(Self, usize)>> {
         let mut buf = vec![0u8; sector_usize() * SUPERBLOCK_SECTORS as usize];
-        dev.read_at(base, &mut buf)?;
+        read_retried(dev, base, &mut buf)?;
         let a = Self::decode(&buf[..sector_usize()], shard).map(|sb| (sb, 0));
         let b = Self::decode(&buf[sector_usize()..], shard).map(|sb| (sb, 1));
         Ok(match (a, b) {
@@ -318,7 +341,7 @@ impl<'a> SectorReader<'a> {
         if idx < self.buf_start || idx >= self.buf_start + self.buf_sectors {
             let sectors = ((SCAN_CHUNK / sector_usize()) as i64).min(self.capacity - idx);
             let bytes = sectors as usize * sector_usize();
-            self.dev.read_at(self.base + idx as u64 * SECTOR_BYTES, &mut self.buf[..bytes])?;
+            read_retried(self.dev, self.base + idx as u64 * SECTOR_BYTES, &mut self.buf[..bytes])?;
             self.buf_start = idx;
             self.buf_sectors = sectors;
         }
@@ -366,7 +389,7 @@ pub fn scan_region(
                 let payload_base = base + (pos + HEADER_SECTORS) as u64 * SECTOR_BYTES;
                 while read < total {
                     let take = (total - read).min(payload.len());
-                    dev.read_at(payload_base + read as u64, &mut payload[..take])?;
+                    read_retried(dev, payload_base + read as u64, &mut payload[..take])?;
                     crc.update(&payload[..take]);
                     read += take;
                 }
@@ -485,6 +508,27 @@ mod tests {
         assert_eq!(Superblock::read(&dev, 0, 7).unwrap().unwrap(), (sb, 1));
         // wrong shard id: the superblock is not ours at all
         assert!(Superblock::read(&dev, 0, 8).unwrap().is_none());
+    }
+
+    #[test]
+    fn superblock_degraded_flag_round_trips_and_defaults_clear() {
+        let dev = mem();
+        let mut sb = Superblock::fresh(2);
+        sb.epoch = 5;
+        sb.degraded = true;
+        sb.write_to(&dev, 0, 0).unwrap();
+        let (got, _) = Superblock::read(&dev, 0, 2).unwrap().expect("valid slot");
+        assert!(got.degraded, "degraded flag survives a restart");
+        assert_eq!(got, sb);
+        // byte 41 was padding before the fault layer: a pre-fault-layer
+        // superblock (zeros there) must decode as not degraded
+        assert!(!Superblock::fresh(2).degraded);
+        let mut old = Superblock::fresh(2);
+        old.epoch = 9;
+        let mut sector = old.encode();
+        sector[41] = 0;
+        let decoded = Superblock::decode(&sector, 2).expect("still valid");
+        assert!(!decoded.degraded);
     }
 
     #[test]

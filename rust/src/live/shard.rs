@@ -69,7 +69,23 @@
 //! clean superblocks short-circuit, dirty ones trigger a checksum-
 //! validated scan of both region logs, and surviving records replay in
 //! sequence order to rebuild the ownership map and pipeline state.
+//!
+//! **Fault handling.** Transient device errors are absorbed *below* the
+//! acknowledgement: the queue workers, the group-commit syncs, and every
+//! read path retry with bounded exponential backoff
+//! ([`crate::live::fault::RetryPolicy`]) before an error surfaces. A
+//! write the SSD still refuses flips the shard into sticky **degraded
+//! mode** (recorded in the superblock): the failed claim is aborted and
+//! re-routed, and every new write goes direct to the HDD while the data
+//! already buffered keeps draining through the flusher. What remains —
+//! HDD backstop failures, shutdown racing a blocked write — surfaces as
+//! typed [`SubmitError`]/[`ReadError`] values, never panics. One
+//! visibility caveat: a reader racing the *unacknowledged* HDD retry of
+//! a degrading write can transiently observe the range's older HDD
+//! copy; once the retry lands (and always after the submit returns),
+//! reads are exact.
 
+use std::fmt;
 use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -82,6 +98,7 @@ use crate::device::SeekModel;
 use crate::fs::{FileTable, SubRequest};
 use crate::live::backend::{Backend, IoQueue, IoReq};
 use crate::live::commit::GroupSync;
+use crate::live::fault::{retry_transient, RetryPolicy};
 use crate::live::ownership::{OwnershipMap, Tier};
 use crate::live::record::{
     scan_region, LiveRecord, RecordHeader, Superblock, HEADER_SECTORS, MAX_SB_FILES,
@@ -204,6 +221,15 @@ pub struct ShardStats {
     pub io_depth_high_water: u64,
     /// mean in-flight request depth sampled at enqueue time
     pub io_mean_depth: f64,
+    /// device-level retries absorbed below the ack: queue-worker write
+    /// retries, group-commit sync retries, and inline read retries
+    pub io_retries: u64,
+    /// transient device faults observed — every retried fault plus any
+    /// transient error that survived its retry budget
+    pub transient_faults: u64,
+    /// sticky degraded mode: the SSD refused a write (or filled up) and
+    /// every new write now routes direct to the HDD
+    pub degraded: bool,
     pub pct_sum: f64,
 }
 
@@ -252,6 +278,52 @@ pub fn ssd_ratio(stats: &[ShardStats]) -> f64 {
     }
 }
 
+/// Why [`Shard::submit`] refused a write. Typed so callers decide what
+/// a rejection means — the shard itself never panics on an I/O fault.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// shutdown arrived while the write was still waiting for space or
+    /// an overlap to settle — the bytes were **not** delivered
+    Shutdown,
+    /// the shard failed permanently (the HDD backstop refused a write or
+    /// sync even after retries); the first cause is preserved verbatim
+    Failed(String),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Shutdown => write!(f, "shard shut down with the write undelivered"),
+            SubmitError::Failed(msg) => write!(f, "shard failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why [`Shard::read`] could not serve a range.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ReadError {
+    /// shutdown arrived while the read waited on an in-flight claim
+    Shutdown,
+    /// the shard failed permanently before the range resolved
+    Failed(String),
+    /// a device read error that survived the inline transient retries
+    Device(String),
+}
+
+impl fmt::Display for ReadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReadError::Shutdown => write!(f, "shard shut down while the read waited"),
+            ReadError::Failed(msg) => write!(f, "shard failed: {msg}"),
+            ReadError::Device(msg) => write!(f, "device read failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
 /// Everything guarded by the core mutex.
 struct ShardCore {
     files: FileTable,
@@ -285,6 +357,10 @@ struct ShardCore {
     /// set on a backend I/O error, with the cause; waiters surface it
     /// instead of polling work that can never finish
     failed: Option<String>,
+    /// sticky degraded mode: the SSD refused a write, so every new
+    /// write routes direct to the HDD (see [`Shard::submit`]); the
+    /// flusher keeps draining what was buffered before the failure
+    degraded: bool,
     stats: ShardStats,
 }
 
@@ -335,6 +411,10 @@ pub struct Shard {
     /// lock-free (`Release`) when the device reads finish, paired with
     /// the flusher's `Acquire` load before it recycles the region.
     read_pins: [AtomicU64; REGIONS],
+    /// inline transient-read retries absorbed by [`Shard::read`],
+    /// [`Shard::read_hdd`], and the flusher's log reads — folded into
+    /// the stats snapshot alongside the queue and sync retry counters
+    read_retries: AtomicU64,
     /// direct-to-HDD writes in flight (traffic-aware gate input).
     /// Ordering: increments happen inside the core critical section that
     /// decided the route, decrements after the unlocked device write;
@@ -388,16 +468,16 @@ struct SbWriter {
 /// at `ssd_offset + HEADER_SECTORS` (what the ownership map tracks).
 enum Claimed<'a> {
     Direct { dest: u64, ticket: u64, gate: DirectGate<'a> },
-    Slot { region: usize, ssd_offset: i64, ticket: u64, seq: u64 },
+    Slot { region: usize, ssd_offset: i64, ticket: u64, seq: u64, absorbed: bool },
 }
 
 /// RAII restore of `direct_inflight`: taken in the claim critical
 /// section right after the increment, dropped once the direct write's
-/// outcome is published — **including** the failure path, where
-/// `fail_and_panic` unwinds through it. Without the guard, a failed HDD
-/// write left the counter elevated forever, and the traffic-aware gate
-/// (`direct > 0`) never reopened for the other threads of a
-/// still-draining engine.
+/// outcome is published — **including** the failure path, where the
+/// typed `SubmitError` return skips the publish section. Without the
+/// guard, a failed HDD write left the counter elevated forever, and the
+/// traffic-aware gate (`direct > 0`) never reopened for the other
+/// threads of a still-draining engine.
 struct DirectGate<'a> {
     shard: &'a Shard,
 }
@@ -503,6 +583,7 @@ impl Shard {
             drained: false,
             shutdown: false,
             failed: None,
+            degraded: false,
             stats: ShardStats::default(),
         }
     }
@@ -543,6 +624,7 @@ impl Shard {
             work: Condvar::new(),
             published: Condvar::new(),
             read_pins: [AtomicU64::new(0), AtomicU64::new(0)],
+            read_retries: AtomicU64::new(0),
             direct_inflight: AtomicU64::new(0),
             strategy,
             half_sectors: half,
@@ -644,6 +726,10 @@ impl Shard {
         }
         rec.files_restored = sb.files.len();
         core.next_seq = sb.last_seq.max(sb.watermark[0]).max(sb.watermark[1]) + 1;
+        // a shard that degraded before the crash stays degraded: the SSD
+        // it gave up on is the same device it would be trusting again
+        core.degraded = sb.degraded;
+        core.stats.degraded = sb.degraded;
         if !sb.clean {
             let mut scans = Vec::with_capacity(REGIONS);
             for r in 0..REGIONS {
@@ -730,28 +816,23 @@ impl Shard {
         Ok((shard, rec))
     }
 
-    /// Timed wait on `cv` that surfaces a shard failure or shutdown
-    /// instead of sleeping on work that can never finish. `bytes` sizes
-    /// the undelivered-write panic message.
-    fn wait_or_die<'a>(
+    /// Timed wait on `cv` that surfaces a shard failure or shutdown as a
+    /// typed error instead of sleeping on work that can never finish —
+    /// the caller was never acknowledged, so vanishing silently would
+    /// turn a shutdown into data loss the client believes was written.
+    fn wait_or_err<'a>(
         &self,
         cv: &Condvar,
         core: MutexGuard<'a, ShardCore>,
-        bytes: usize,
-    ) -> MutexGuard<'a, ShardCore> {
+    ) -> Result<MutexGuard<'a, ShardCore>, SubmitError> {
         let core = cv.wait_timeout(core, self.flush_check).unwrap().0;
         if let Some(msg) = core.failed.clone() {
-            drop(core); // release before panicking: no poisoning
-            panic!("shard failed while a write waited: {msg}");
+            return Err(SubmitError::Failed(msg));
         }
         if core.shutdown {
-            // the caller was never acknowledged: vanishing silently here
-            // would turn a shutdown into data loss the client believes
-            // was written
-            drop(core);
-            panic!("shard shut down with a blocked write still pending ({bytes} bytes undelivered)");
+            return Err(SubmitError::Shutdown);
         }
-        core
+        Ok(core)
     }
 
     /// Ingest one sub-request with its payload. Blocks (physical
@@ -766,13 +847,41 @@ impl Shard {
     /// every sector is tracked in the ownership map, stale buffered
     /// copies are superseded, and a direct write over live buffered data
     /// is absorbed into the SSD log.
-    pub fn submit(&self, sub: &SubRequest, payload: &[u8]) {
+    ///
+    /// Returns `Err` only when the write was **not** acknowledged:
+    /// shutdown arrived while it waited, or the shard failed permanently
+    /// (HDD backstop). Transient device faults are retried below the
+    /// ack; an SSD that still refuses a write flips the shard into
+    /// sticky degraded mode and the claim re-routes direct to the HDD.
+    pub fn submit(&self, sub: &SubRequest, payload: &[u8]) -> Result<(), SubmitError> {
         let size = sub.size as i64;
         debug_assert_eq!(payload.len() as u64, sub.bytes());
         // stage attribution boundaries: adjacent, non-overlapping spans
         // sharing their edge timestamps, so per-stage sums reconstruct
         // the whole submit latency (see obs::stages)
         let t_submit = Instant::now();
+        // detection must see each sub-request once, not once per attempt
+        let mut feed_detector = true;
+        loop {
+            if self.submit_attempt(sub, payload, size, t_submit, &mut feed_detector)? {
+                return Ok(());
+            }
+            // the SSD refused the slot write: the shard degraded, and the
+            // aborted claim re-enters the loop to re-route via the HDD
+        }
+    }
+
+    /// One routing/claim/device/publish attempt of [`Shard::submit`]:
+    /// `Ok(true)` = acknowledged; `Ok(false)` = the claim was aborted
+    /// (SSD slot-write failure → degraded mode) and must be re-claimed.
+    fn submit_attempt(
+        &self,
+        sub: &SubRequest,
+        payload: &[u8],
+        size: i64,
+        t_submit: Instant,
+        feed_detector: &mut bool,
+    ) -> Result<bool, SubmitError> {
         let mut t_routed: Option<Instant> = None;
 
         // ---- critical section 1: route + reserve + claim ----
@@ -797,38 +906,47 @@ impl Shard {
                     // the table must fit one superblock sector; fail the
                     // shard through the established protocol instead of
                     // poisoning the core mutex deeper in the encoder
-                    self.fail_and_panic(
+                    return Err(self.fail_core(
                         core,
                         format!(
                             "live shard file-table limit exceeded: {n_files} files > \
                              {MAX_SB_FILES} (one superblock sector of entries)"
                         ),
-                    );
+                    ));
                 }
                 core.sb.epoch += 1;
                 core.sb.clean = false;
                 core.sb.files = core.files.entries();
-                let sb = core.sb.clone();
-                let mut last_written = self.sb_lock.lock().unwrap();
-                if let Err(e) = self.write_superblock(&mut last_written, &sb) {
-                    drop(last_written);
-                    self.fail_and_panic(core, format!("superblock write (new file): {e}"));
+                if !core.degraded {
+                    let sb = core.sb.clone();
+                    let mut last_written = self.sb_lock.lock().unwrap();
+                    if let Err(e) = self.write_superblock(&mut last_written, &sb) {
+                        // the mapping could not be made durable: degrade
+                        // instead of failing the shard. The file table
+                        // lives on in memory (and rides along with any
+                        // later superblock write that succeeds), but this
+                        // file's writes lose crash durability until one
+                        // does — the documented degraded-mode limitation.
+                        drop(last_written);
+                        self.degrade(&mut core, &format!("superblock write (new file): {e}"));
+                    }
                 }
             }
-            core.stats.bytes_in += payload.len() as u64;
             let claimed = loop {
                 // (re)decide the route against the map as it is *now*:
                 // every wait below drops the lock, so other clients'
                 // claims, publishes, and flushes can shift the picture
                 // between passes — including the policy route itself
-                let mut route = if !self.use_ssd || size > self.max_buffer_sectors {
-                    // a sub-request larger than a region can frame (its
-                    // payload plus the record header sector) could never
-                    // buffer: route it directly to HDD (safety valve)
-                    Route::Hdd
-                } else {
-                    core.route
-                };
+                let mut route =
+                    if core.degraded || !self.use_ssd || size > self.max_buffer_sectors {
+                        // degraded mode routes everything direct; a
+                        // sub-request larger than a region can frame
+                        // (payload plus the record header sector) could
+                        // never buffer either: direct to HDD
+                        Route::Hdd
+                    } else {
+                        core.route
+                    };
                 // overwrite safety: a direct write overlapping a live
                 // buffered extent would race the flusher for the same HDD
                 // sectors. Absorb it into the SSD log instead — the claim
@@ -836,13 +954,16 @@ impl Shard {
                 // regions keeps last-write-wins on the HDD.
                 let mut absorbed = false;
                 if route == Route::Hdd && self.use_ssd && core.own.overlaps_ssd(lba, size) {
-                    if size <= self.max_buffer_sectors {
+                    if !core.degraded && size <= self.max_buffer_sectors {
                         route = Route::Ssd;
                         absorbed = true;
                     } else {
-                        // valve-sized write over buffered data cannot be
-                        // absorbed: force the overlap out through the
-                        // flusher and retry. Only the active region needs
+                        // a valve-sized (or degraded-mode) write over
+                        // buffered data cannot be absorbed: force the
+                        // overlap out through the flusher and retry —
+                        // never write the HDD under a live buffered copy,
+                        // or a later flush would resurrect stale bytes.
+                        // Only the active region needs
                         // forcing — overlaps held by a pending/flushing
                         // region drain on their own. The blocked_wait is
                         // booked *after* this pass re-confirmed the
@@ -854,7 +975,7 @@ impl Shard {
                         }
                         core.stats.blocked_waits += 1;
                         self.work.notify_all();
-                        core = self.wait_or_die(&self.space, core, payload.len());
+                        core = self.wait_or_err(&self.space, core)?;
                         continue;
                     }
                 }
@@ -863,7 +984,7 @@ impl Shard {
                 // the older HDD bytes could otherwise surface after this
                 // claim's copy was flushed over them
                 if core.own.direct_overlaps(lba, size) {
-                    core = self.wait_or_die(&self.published, core, payload.len());
+                    core = self.wait_or_err(&self.published, core)?;
                     continue;
                 }
                 // route decided and every wait behind us (a retry pass
@@ -903,7 +1024,7 @@ impl Shard {
                                 // empty" — closed-loop backpressure
                                 core.stats.blocked_waits += 1;
                                 self.work.notify_all();
-                                core = self.wait_or_die(&self.space, core, payload.len());
+                                core = self.wait_or_err(&self.space, core)?;
                                 continue;
                             }
                         };
@@ -927,16 +1048,22 @@ impl Shard {
                         if filled {
                             self.work.notify_all(); // a region is ready to flush
                         }
-                        break Claimed::Slot { region, ssd_offset, ticket, seq };
+                        break Claimed::Slot { region, ssd_offset, ticket, seq, absorbed };
                     }
                 }
             };
-            // server-side detection feeds on the post-striping disk address
-            if let Some(stream) = core.grouper.push_parts(sub.parent.app, lba as i32, sub.size) {
-                let det = core.detector.detect(&stream.reqs);
-                core.account_stream(&det);
-                // a route change can unpause the traffic-aware flusher
-                self.work.notify_all();
+            // server-side detection feeds on the post-striping disk
+            // address — once per sub-request, not once per attempt
+            if *feed_detector {
+                *feed_detector = false;
+                if let Some(stream) =
+                    core.grouper.push_parts(sub.parent.app, lba as i32, sub.size)
+                {
+                    let det = core.detector.detect(&stream.reqs);
+                    core.account_stream(&det);
+                    // a route change can unpause the traffic-aware flusher
+                    self.work.notify_all();
+                }
             }
             (lba, claimed)
         };
@@ -960,21 +1087,29 @@ impl Shard {
                 let batch = vec![unsafe { IoReq::borrowed(dest, payload) }];
                 let (t, wrote) = self.queue_write(&self.hdd_q, &self.hdd, batch);
                 // ---- critical section 2: completion-publish ----
-                self.complete_publish(
-                    wrote,
-                    "hdd backend write",
-                    |core| core.own.finish_direct(ticket),
-                    |_core| {},
-                    false,
-                );
+                {
+                    let mut core = self.core.lock().unwrap();
+                    core.own.finish_direct(ticket);
+                    if let Err(e) = wrote {
+                        // the HDD is the backstop device: a write it
+                        // still refuses after the queue's transient
+                        // retries has nowhere left to go
+                        return Err(self.fail_core(core, format!("hdd backend write: {e}")));
+                    }
+                    core.stats.bytes_in += payload.len() as u64;
+                }
+                // readers and writers waiting out this in-flight direct
+                // write key off publishes
+                self.published.notify_all();
                 // the gate decrements `direct_inflight` (and may reopen
                 // the traffic-aware flusher) — after the publish, so the
                 // flusher never sees the count drop before the claim
                 // resolved
                 drop(gate);
                 self.book_submit(Stage::HddWrite, t_submit, t_routed, t_reserved, t);
+                Ok(true)
             }
-            Claimed::Slot { region, ssd_offset, ticket, seq } => {
+            Claimed::Slot { region, ssd_offset, ticket, seq, absorbed } => {
                 let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
                 let header = RecordHeader {
                     shard: self.shard_id,
@@ -1001,19 +1136,46 @@ impl Shard {
                 };
                 let (t, wrote) = self.queue_write(&self.ssd_q, &self.ssd, batch);
                 // ---- critical section 2: completion-publish ----
-                self.complete_publish(
-                    wrote,
-                    "ssd backend write",
-                    |core| core.pending_slots[region] -= 1,
-                    |core| {
-                        core.own.publish(ticket, lba, size);
-                        // feed the recovery rewind guard: these log
-                        // sectors now hold a durable, acknowledged record
-                        core.pipeline.mark_published(region, ssd_offset + HEADER_SECTORS + size);
-                    },
-                    true,
-                );
+                if let Err(e) = wrote {
+                    // the SSD refused the slot write even after the
+                    // queue's transient retries: abort the reservation
+                    // (its claim-time bookings roll back with it), flip
+                    // into sticky degraded mode, and re-claim via the
+                    // direct HDD route — re-entering the claim loop
+                    // keeps the overlap rules exact on the new route
+                    {
+                        let mut core = self.core.lock().unwrap();
+                        core.pending_slots[region] -= 1;
+                        core.own.abort(ticket, lba, size);
+                        core.stats.ssd_bytes_buffered -= payload.len() as u64;
+                        if absorbed {
+                            core.stats.rerouted_writes -= 1;
+                        }
+                        self.degrade(&mut core, &format!("ssd backend write: {e}"));
+                    }
+                    // a blocked writer may now route direct; the flusher
+                    // may be waiting on this region's reserved slots
+                    self.space.notify_all();
+                    self.published.notify_all();
+                    self.work.notify_all();
+                    return Ok(false);
+                }
+                {
+                    let mut core = self.core.lock().unwrap();
+                    core.pending_slots[region] -= 1;
+                    core.own.publish(ticket, lba, size);
+                    // feed the recovery rewind guard: these log sectors
+                    // now hold a durable, acknowledged record
+                    core.pipeline.mark_published(region, ssd_offset + HEADER_SECTORS + size);
+                    core.stats.bytes_in += payload.len() as u64;
+                }
+                // readers waiting on published ranges, writers waiting
+                // out an overlap, and a flusher waiting for its region's
+                // reserved slots all key off publishes
+                self.published.notify_all();
+                self.work.notify_all();
                 self.book_submit(Stage::SsdWrite, t_submit, t_routed, t_reserved, t);
+                Ok(true)
             }
         }
     }
@@ -1036,41 +1198,21 @@ impl Shard {
             // the worker's start stamp can race a hair ahead of
             // `t_enqueued` (it may pop the batch before `submit`
             // returns); clamp so the queue_wait span stays non-negative
-            Ok(c) => (c.started.max(t_enqueued), dev.barrier_for(c.ticket)),
+            Ok(c) => {
+                let t_started = c.started.max(t_enqueued);
+                if c.retry_us > 0 {
+                    // transient faults were absorbed below this token:
+                    // attribute the retried device dwell so fault storms
+                    // show up in the latency breakdown
+                    let t_end = t_started + Duration::from_micros(c.retry_us);
+                    self.book_spans(&[(Stage::FaultRetry, t_started, t_end)], None);
+                }
+                (t_started, dev.barrier_for(c.ticket))
+            }
             Err(e) => (t_enqueued, Err(e)),
         };
         let t_barrier = Instant::now();
         ([t_enqueued, t_started, t_dev, t_barrier], wrote)
-    }
-
-    /// The one completion-publish path both routes share: re-acquire the
-    /// core lock, release the claim's in-flight accounting (`book` —
-    /// always, success or failure), surface a failed write through the
-    /// shard's fail-and-panic protocol, publish the claim (`publish` —
-    /// success only), and wake the waiters keyed on publishes.
-    fn complete_publish(
-        &self,
-        wrote: io::Result<()>,
-        ctx: &str,
-        book: impl FnOnce(&mut ShardCore),
-        publish: impl FnOnce(&mut ShardCore),
-        wake_flusher: bool,
-    ) {
-        {
-            let mut core = self.core.lock().unwrap();
-            book(&mut core);
-            if let Err(e) = wrote {
-                self.fail_and_panic(core, format!("{ctx}: {e}"));
-            }
-            publish(&mut core);
-        }
-        // readers waiting on published ranges, writers waiting out an
-        // overlap, and a flusher waiting for a region's reserved slots
-        // all key off publishes
-        self.published.notify_all();
-        if wake_flusher {
-            self.work.notify_all();
-        }
     }
 
     /// Fold one acknowledged write's stage decomposition: route/reserve
@@ -1104,15 +1246,39 @@ impl Shard {
         );
     }
 
-    /// Record a failure, release the core lock, wake all waiters, and
-    /// panic in the calling thread — without poisoning any mutex.
-    fn fail_and_panic(&self, mut core: MutexGuard<'_, ShardCore>, msg: String) -> ! {
-        core.failed.get_or_insert(msg.clone());
+    /// Record a failure, release the core lock, wake every waiter, and
+    /// hand the (first) cause back as a typed error — no panic, no mutex
+    /// poisoning; every other thread surfaces the same cause.
+    fn fail_core(&self, mut core: MutexGuard<'_, ShardCore>, msg: String) -> SubmitError {
+        let msg = core.failed.get_or_insert(msg).clone();
         drop(core);
         self.space.notify_all();
         self.work.notify_all();
         self.published.notify_all();
-        panic!("shard failed: {msg}");
+        SubmitError::Failed(msg)
+    }
+
+    /// Flip the shard into sticky degraded mode: every new write routes
+    /// direct to the HDD from here on, while the flusher keeps draining
+    /// what was already buffered. The flag is persisted into the
+    /// superblock best-effort — the SSD that just failed may refuse this
+    /// write too, in which case a recovered shard simply re-degrades on
+    /// its next SSD failure. Idempotent; called with the core lock held
+    /// (the first-touch precedent for holding it across device I/O).
+    fn degrade(&self, core: &mut ShardCore, cause: &str) {
+        if core.degraded {
+            return;
+        }
+        eprintln!("shard {}: degraded, new writes route direct to HDD: {cause}", self.shard_id);
+        core.degraded = true;
+        core.stats.degraded = true;
+        core.sb.epoch += 1;
+        core.sb.clean = false;
+        core.sb.degraded = true;
+        core.sb.files = core.files.entries();
+        let sb = core.sb.clone();
+        let mut last_written = self.sb_lock.lock().unwrap();
+        let _ = self.write_superblock(&mut last_written, &sb);
     }
 
     /// Read back `buf.len()` bytes the shard's HDD holds for
@@ -1122,13 +1288,19 @@ impl Shard {
     /// lookup never creates an extent (a read-minted entry would not be
     /// persisted, and the file's later first write would skip the
     /// superblock first-touch and be orphaned at recovery).
-    pub fn read_hdd(&self, file: u32, local_offset: i32, buf: &mut [u8]) {
+    pub fn read_hdd(&self, file: u32, local_offset: i32, buf: &mut [u8]) -> Result<(), ReadError> {
         let Some(lba) = self.core.lock().unwrap().files.lookup(file, local_offset) else {
             buf.fill(0);
-            return;
+            return Ok(());
         };
-        // no lock across the device read; result inspected after
-        self.hdd.read_at(lba as u64 * SECTOR_BYTES, buf).expect("hdd backend read");
+        // no lock across the device read; transients retried inline
+        let (result, retries) = retry_transient(&RetryPolicy::io_default(), || {
+            self.hdd.read_at(lba as u64 * SECTOR_BYTES, buf)
+        });
+        if retries > 0 {
+            self.read_retries.fetch_add(retries as u64, Ordering::Relaxed);
+        }
+        result.map_err(|e| ReadError::Device(format!("hdd backend read: {e}")))
     }
 
     /// Read `buf.len()` bytes for `(file, local_offset)` from wherever
@@ -1143,12 +1315,12 @@ impl Shard {
     /// If part of the range is claimed by a write whose device bytes are
     /// still in flight, the read first waits for that claim to publish —
     /// a pending claim has no readable copy anywhere.
-    pub fn read(&self, file: u32, local_offset: i32, buf: &mut [u8]) {
+    pub fn read(&self, file: u32, local_offset: i32, buf: &mut [u8]) -> Result<(), ReadError> {
         let sector = SECTOR_BYTES as usize;
         debug_assert_eq!(buf.len() % sector, 0, "reads are sector-aligned");
         let sectors = (buf.len() / sector) as i64;
         if sectors == 0 {
-            return;
+            return Ok(());
         }
         let t_read = Instant::now();
         let (lba, segs, pinned) = {
@@ -1158,16 +1330,14 @@ impl Shard {
             let Some(lba) = core.files.lookup(file, local_offset) else {
                 drop(core);
                 buf.fill(0);
-                return;
+                return Ok(());
             };
             loop {
                 if let Some(msg) = core.failed.clone() {
-                    drop(core); // release before panicking: no poisoning
-                    panic!("shard read failed: {msg}");
+                    return Err(ReadError::Failed(msg));
                 }
                 if core.shutdown {
-                    drop(core);
-                    panic!("shard shut down while a read waited on an in-flight write");
+                    return Err(ReadError::Shutdown);
                 }
                 if !core.own.pending_overlaps(lba, sectors) {
                     break;
@@ -1198,19 +1368,27 @@ impl Shard {
             let dst = (seg_lba - lba) as usize * sector;
             let len = seg_size as usize * sector;
             let slice = &mut buf[dst..dst + len];
-            result = match tier {
-                Tier::Hdd => self.hdd.read_at(seg_lba as u64 * SECTOR_BYTES, slice),
+            let (r, retries) = match tier {
+                Tier::Hdd => retry_transient(&RetryPolicy::io_default(), || {
+                    self.hdd.read_at(seg_lba as u64 * SECTOR_BYTES, slice)
+                }),
                 Tier::Ssd { region, ssd_offset } => {
                     let base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
-                    self.ssd.read_at(base + ssd_offset as u64 * SECTOR_BYTES, slice)
+                    retry_transient(&RetryPolicy::io_default(), || {
+                        self.ssd.read_at(base + ssd_offset as u64 * SECTOR_BYTES, slice)
+                    })
                 }
             };
+            if retries > 0 {
+                self.read_retries.fetch_add(retries as u64, Ordering::Relaxed);
+            }
+            result = r;
             if result.is_err() {
                 break;
             }
         }
         // unpin before surfacing any error: a flusher waiting out our
-        // pins must not hang on a reader that is about to panic
+        // pins must not hang on a reader that is about to error out
         for (r, p) in pinned.iter().enumerate() {
             if *p && self.read_pins[r].fetch_sub(1, Ordering::Release) == 1 {
                 self.work.notify_all();
@@ -1220,7 +1398,7 @@ impl Shard {
             &[(Stage::ReadResolve, t_read, t_resolved), (Stage::ReadDevice, t_resolved, Instant::now())],
             None,
         );
-        result.expect("shard backend read");
+        result.map_err(|e| ReadError::Device(format!("shard backend read: {e}")))
     }
 
     pub fn stats(&self) -> ShardStats {
@@ -1237,6 +1415,15 @@ impl Shard {
         stats.io_device_writes = q.device_writes;
         stats.io_depth_high_water = q.depth_high_water;
         stats.io_mean_depth = q.mean_depth();
+        // fault absorption, folded from every retrying layer: the queue
+        // workers, the group-commit syncs, and the inline read paths
+        let read_retries = self.read_retries.load(Ordering::Relaxed);
+        stats.io_retries =
+            q.retries + self.ssd.sync_retries() + self.hdd.sync_retries() + read_retries;
+        stats.transient_faults = q.transient_faults
+            + self.ssd.sync_transient_faults()
+            + self.hdd.sync_transient_faults()
+            + read_retries;
         stats
     }
 
@@ -1312,7 +1499,13 @@ impl Shard {
                 let mut pos = 0usize;
                 let mut read = Ok(());
                 for &(ssd_byte, len) in &run.segs {
-                    read = self.ssd.read_at(ssd_byte, &mut buf[pos..pos + len]);
+                    let (r, retries) = retry_transient(&RetryPolicy::io_default(), || {
+                        self.ssd.read_at(ssd_byte, &mut buf[pos..pos + len])
+                    });
+                    if retries > 0 {
+                        self.read_retries.fetch_add(retries as u64, Ordering::Relaxed);
+                    }
+                    read = r;
                     if read.is_err() {
                         break;
                     }
@@ -1465,24 +1658,34 @@ impl Shard {
         self.published.notify_all();
     }
 
-    /// Block until every buffered byte has reached the HDD backend.
-    /// Panics (in the caller's thread) if the flusher hit a backend I/O
-    /// error — buffered data can then never drain.
+    /// Block until every buffered byte has reached the HDD backend —
+    /// or until the shard fails, in which case the buffered data can
+    /// never drain and the caller surfaces the cause through reads and
+    /// stats instead of hanging here forever.
     pub(crate) fn wait_drained(&self) {
         let mut core = self.core.lock().unwrap();
         while core.pipeline.dirty() {
-            if let Some(msg) = core.failed.clone() {
-                drop(core); // release before panicking: no poisoning
-                panic!("shard failed before drain completed: {msg}");
+            if core.failed.is_some() {
+                return;
             }
             core = self.space.wait_timeout(core, self.flush_check).unwrap().0;
         }
     }
 
-    /// Flush both backends to durable storage.
+    /// Flush both backends to durable storage. A failing SSD sync
+    /// degrades the shard (its syncs no longer mean anything); a failing
+    /// HDD sync is a backstop failure and marks the shard failed.
     pub(crate) fn sync(&self) {
-        self.ssd.sync().expect("ssd sync");
-        self.hdd.sync().expect("hdd sync");
+        let degraded = self.core.lock().unwrap().degraded;
+        if !degraded {
+            if let Err(e) = self.ssd.sync() {
+                let mut core = self.core.lock().unwrap();
+                self.degrade(&mut core, &format!("ssd sync: {e}"));
+            }
+        }
+        if let Err(e) = self.hdd.sync() {
+            self.fail(format!("hdd sync: {e}"));
+        }
     }
 
     /// After a full drain: persist a **clean** superblock (watermarks at
@@ -1493,7 +1696,11 @@ impl Shard {
     pub(crate) fn finalize_clean(&self) {
         let sb = {
             let mut core = self.core.lock().unwrap();
-            debug_assert!(!core.pipeline.dirty(), "clean superblock before the drain completed");
+            if core.failed.is_some() || core.pipeline.dirty() {
+                // an unfinished drain must leave the dirty superblock in
+                // place so the next open scans the logs
+                return;
+            }
             let last = core.next_seq - 1;
             core.sb.epoch += 1;
             core.sb.clean = true;
@@ -1503,7 +1710,9 @@ impl Shard {
             core.sb.clone()
         };
         let mut last_written = self.sb_lock.lock().unwrap();
-        self.write_superblock(&mut last_written, &sb).expect("clean superblock write");
+        // best-effort: a refused clean mark leaves the dirty superblock,
+        // and the next open simply scans instead of short-circuiting
+        let _ = self.write_superblock(&mut last_written, &sb);
     }
 
     pub(crate) fn request_shutdown(&self) {
@@ -1564,26 +1773,74 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_while_blocked_panics_instead_of_dropping_bytes() {
+    fn shutdown_while_blocked_surfaces_a_typed_rejection() {
         // no flusher thread: both regions fill and stay unavailable.
         // Each region (129 sectors) holds exactly one framed 128-sector
         // record (1 header sector + payload).
         let shard = Arc::new(mem_shard(SystemKind::OrangeFsBB, 258));
-        shard.submit(&sub(1, 0, 128), &gen_payload(1, 0, 128, 1)); // fills region 0
-        shard.submit(&sub(1, 128, 128), &gen_payload(1, 128, 128, 1)); // fills region 1
+        shard.submit(&sub(1, 0, 128), &gen_payload(1, 0, 128, 1)).unwrap(); // fills region 0
+        shard.submit(&sub(1, 128, 128), &gen_payload(1, 128, 128, 1)).unwrap(); // fills region 1
         let worker = Arc::clone(&shard);
         let handle = std::thread::spawn(move || {
             // both regions full, nobody flushing: blocks, then shutdown
-            // arrives — silently returning here would be data loss the
-            // caller was never told about
-            worker.submit(&sub(1, 256, 128), &gen_payload(1, 256, 128, 1));
+            // arrives — silently returning Ok here would be data loss
+            // the caller was never told about
+            worker.submit(&sub(1, 256, 128), &gen_payload(1, 256, 128, 1))
         });
         std::thread::sleep(Duration::from_millis(20));
         shard.request_shutdown();
-        assert!(
-            handle.join().is_err(),
-            "a write dropped by shutdown must panic, not vanish"
+        assert_eq!(
+            handle.join().expect("no panic on the rejection path"),
+            Err(SubmitError::Shutdown),
+            "a write dropped by shutdown must surface as a typed rejection"
         );
+    }
+
+    #[test]
+    fn read_racing_shutdown_surfaces_a_typed_rejection() {
+        // a read waiting out an in-flight (reserved, unpublished) claim
+        // when shutdown arrives must get a typed error, not panic. The
+        // claim is held in flight deterministically: the SSD stalls its
+        // device writes behind a gate.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let shard = Arc::new(Shard::new(
+            &cfg(SystemKind::OrangeFsBB, 4096),
+            Box::new(StallingBackend {
+                inner: MemBackend::new(SyntheticLatency::ZERO),
+                gate: Arc::clone(&gate),
+            }),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+        ));
+        // first touch while the gate is open: the file's superblock
+        // write must not stall under the core lock
+        shard.submit(&sub(1, 0, 8), &gen_payload(1, 0, 8, 1)).unwrap();
+        *gate.0.lock().unwrap() = true; // arm: the next claim stays pending
+        let writer = Arc::clone(&shard);
+        let write = std::thread::spawn(move || {
+            writer.submit(&sub(1, 100, 8), &gen_payload(1, 100, 8, 1))
+        });
+        // the claim books its bytes at reserve time: wait until it holds
+        let t0 = Instant::now();
+        while shard.stats().ssd_bytes_buffered < 16 * SECTOR_BYTES {
+            assert!(t0.elapsed() < Duration::from_secs(10), "claim never reserved");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let reader = Arc::clone(&shard);
+        let read = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 8 * SECTOR_BYTES as usize];
+            reader.read(1, 100, &mut buf)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        shard.request_shutdown();
+        assert_eq!(read.join().expect("no panic"), Err(ReadError::Shutdown));
+        // release the stalled device write: the claim publishes and the
+        // writer acks normally — shutdown never drops delivered bytes
+        {
+            let (armed, cv) = &*gate;
+            *armed.lock().unwrap() = false;
+            cv.notify_all();
+        }
+        assert_eq!(write.join().expect("no panic"), Ok(()));
     }
 
     /// Backend whose writes always fail — drives the publish error paths.
@@ -1615,26 +1872,60 @@ mod tests {
     #[test]
     fn failed_direct_write_restores_the_inflight_counter() {
         // OrangeFs routes straight to the HDD; the write fails and the
-        // submit panics through `fail_and_panic`. The RAII gate must
-        // still restore `direct_inflight` during the unwind — before it,
-        // the counter stayed elevated forever and the traffic-aware gate
-        // (`direct > 0`) never reopened for other threads of a
-        // still-draining engine.
+        // submit surfaces a typed failure through `fail_core`. The RAII
+        // gate must still restore `direct_inflight` on the error return
+        // — before it, the counter stayed elevated forever and the
+        // traffic-aware gate (`direct > 0`) never reopened for other
+        // threads of a still-draining engine.
         let shard = Arc::new(Shard::new(
             &cfg(SystemKind::OrangeFs, 4096),
             Box::new(MemBackend::new(SyntheticLatency::ZERO)),
             Box::new(FailingBackend),
         ));
         let worker = Arc::clone(&shard);
-        let handle = std::thread::spawn(move || {
-            worker.submit(&sub(1, 0, 8), &gen_payload(1, 0, 8, 1));
-        });
-        assert!(handle.join().is_err(), "a failed direct write must panic, not ack");
+        let handle =
+            std::thread::spawn(move || worker.submit(&sub(1, 0, 8), &gen_payload(1, 0, 8, 1)));
+        let result = handle.join().expect("no panic on the failure path");
+        assert!(
+            matches!(result, Err(SubmitError::Failed(_))),
+            "a failed direct write must surface a typed failure, got {result:?}"
+        );
         assert_eq!(
             shard.direct_inflight.load(Ordering::Acquire),
             0,
             "the direct-inflight counter must be restored on the error path"
         );
+    }
+
+    #[test]
+    fn ssd_write_failure_degrades_the_shard_and_reroutes_to_hdd() {
+        // the SSD dies for every log write (the superblock region past
+        // the region logs is spared, so the first-touch mapping and the
+        // degraded flag still persist); the HDD stays healthy. A write
+        // that would buffer must abort its claim, flip the shard into
+        // degraded mode, re-route direct to the HDD, and still ack.
+        use crate::live::fault::FaultSpec;
+        let c = cfg(SystemKind::OrangeFsBB, 4096);
+        let log_bytes = 4096 * SECTOR_BYTES; // both region logs
+        let spec =
+            FaultSpec::parse(&format!("ssd:dead:max_off={log_bytes}")).expect("valid spec");
+        let shard = Shard::new(
+            &c,
+            spec.wrap_ssd(Box::new(MemBackend::new(SyntheticLatency::ZERO)), 7),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+        );
+        shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1)).expect("degraded ack via HDD");
+        let stats = shard.stats();
+        assert!(stats.degraded, "the shard must report sticky degraded mode");
+        assert_eq!(stats.ssd_bytes_buffered, 0, "the aborted claim rolls its booking back");
+        assert_eq!(stats.hdd_direct_bytes, 64 * SECTOR_BYTES, "re-routed direct to the HDD");
+        // the re-routed bytes are immediately readable (resolved to HDD)
+        let mut got = vec![0u8; 64 * SECTOR_BYTES as usize];
+        shard.read(1, 0, &mut got).expect("degraded read");
+        assert_eq!(got, gen_payload(1, 0, 64, 1));
+        // later writes skip the SSD entirely — no further aborts needed
+        shard.submit(&sub(1, 100, 8), &gen_payload(1, 100, 8, 1)).expect("second degraded ack");
+        assert_eq!(shard.stats().hdd_direct_bytes, (64 + 8) * SECTOR_BYTES);
     }
 
     /// [`MemBackend`] wrapper with a slow `sync` — a real fsync cost, so
@@ -1692,7 +1983,7 @@ mod tests {
                 s.spawn(move || {
                     for k in 0..4 {
                         let off = (t as i32 * 4 + k) * 16;
-                        shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+                        shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1)).unwrap();
                     }
                 });
             }
@@ -1714,14 +2005,14 @@ mod tests {
         let shard = mem_shard(SystemKind::OrangeFsBB, 4096);
         let s = SECTOR_BYTES as usize;
         // first version buffers in the SSD log
-        shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1));
+        shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1)).unwrap();
         // mid-burst read returns it (SSD hit)
         let mut got = vec![0u8; 64 * s];
-        shard.read(1, 0, &mut got);
+        shard.read(1, 0, &mut got).unwrap();
         assert_eq!(got, gen_payload(1, 0, 64, 1));
         // overwrite part of it: the newest copy wins immediately
-        shard.submit(&sub(1, 16, 32), &gen_payload(1, 16, 32, 2));
-        shard.read(1, 0, &mut got);
+        shard.submit(&sub(1, 16, 32), &gen_payload(1, 16, 32, 2)).unwrap();
+        shard.read(1, 0, &mut got).unwrap();
         assert_eq!(got[..16 * s], gen_payload(1, 0, 64, 1)[..16 * s]);
         assert_eq!(got[16 * s..48 * s], gen_payload(1, 16, 32, 2)[..]);
         assert_eq!(got[48 * s..], gen_payload(1, 0, 64, 1)[48 * s..]);
@@ -1738,11 +2029,11 @@ mod tests {
         );
         // post-drain the HDD holds the merged newest content
         let mut hdd = vec![0u8; 64 * s];
-        shard.read_hdd(1, 0, &mut hdd);
+        shard.read_hdd(1, 0, &mut hdd).unwrap();
         assert_eq!(hdd, got, "HDD must match the newest-copy view");
         // and the ownership map is empty: reads now come from HDD
         let mut again = vec![0u8; 64 * s];
-        shard.read(1, 0, &mut again);
+        shard.read(1, 0, &mut again).unwrap();
         assert_eq!(again, got);
     }
 
@@ -1761,19 +2052,19 @@ mod tests {
         );
         // window 1: sparse offsets -> random (pct 1.0) -> route SSD next
         for off in [0, 10_000, 50_000, 90_000] {
-            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1)).unwrap();
         }
         // window 2: buffered in the log (route is SSD); contiguous run ->
         // pct 0.0 -> route flips back to HDD afterwards
         for k in 0..4 {
             let off = 200_000 + k * 16;
-            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1)).unwrap();
         }
         let mid = shard.stats();
         assert_eq!(mid.ssd_bytes_buffered, 4 * 16 * SECTOR_BYTES, "window 2 buffered");
         assert_eq!(mid.rerouted_writes, 0);
         // route is HDD now; rewrite a buffered extent -> must be absorbed
-        shard.submit(&sub(1, 200_016, 16), &gen_payload(1, 200_016, 16, 2));
+        shard.submit(&sub(1, 200_016, 16), &gen_payload(1, 200_016, 16, 2)).unwrap();
         let after = shard.stats();
         assert_eq!(after.rerouted_writes, 1, "cross-route rewrite absorbed into the log");
         assert_eq!(after.superseded_bytes, 16 * SECTOR_BYTES, "stale buffered copy superseded");
@@ -1781,13 +2072,13 @@ mod tests {
         // the newest copy is served mid-burst…
         let s = SECTOR_BYTES as usize;
         let mut got = vec![0u8; 16 * s];
-        shard.read(1, 200_016, &mut got);
+        shard.read(1, 200_016, &mut got).unwrap();
         assert_eq!(got, gen_payload(1, 200_016, 16, 2));
         // …and survives the drain byte-exactly
         shard.begin_drain();
         shard.flusher_loop();
         let mut hdd = vec![0u8; 16 * s];
-        shard.read_hdd(1, 200_016, &mut hdd);
+        shard.read_hdd(1, 200_016, &mut hdd).unwrap();
         assert_eq!(hdd, gen_payload(1, 200_016, 16, 2), "flusher must not resurrect the stale copy");
         let end = shard.stats();
         assert_eq!(
@@ -1859,7 +2150,7 @@ mod tests {
                 let shard = Arc::clone(&shard);
                 s.spawn(move || {
                     let off = t as i32 * 64;
-                    shard.submit(&sub(1, off, 64), &gen_payload(1, off, 64, 1));
+                    shard.submit(&sub(1, off, 64), &gen_payload(1, off, 64, 1)).unwrap();
                 });
             }
         });
@@ -1870,7 +2161,7 @@ mod tests {
         // all eight claims published and readable
         let s_bytes = SECTOR_BYTES as usize;
         let mut got = vec![0u8; 8 * 64 * s_bytes];
-        shard.read(1, 0, &mut got);
+        shard.read(1, 0, &mut got).unwrap();
         let mut expect = vec![0u8; 8 * 64 * s_bytes];
         payload::fill_gen(1, 0, 1, &mut expect);
         assert_eq!(got, expect);
@@ -1926,9 +2217,9 @@ mod tests {
                 Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
                 Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
             );
-            shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1));
-            shard.submit(&sub(1, 16, 32), &gen_payload(1, 16, 32, 2)); // rewrite
-            shard.submit(&sub(2, 0, 8), &gen_payload(2, 0, 8, 1)); // second file
+            shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1)).unwrap();
+            shard.submit(&sub(1, 16, 32), &gen_payload(1, 16, 32, 2)).unwrap(); // rewrite
+            shard.submit(&sub(2, 0, 8), &gen_payload(2, 0, 8, 1)).unwrap(); // second file
             // no drain, no shutdown: the shard is simply dropped
         }
         let (shard, rec) = Shard::recover(
@@ -1946,12 +2237,12 @@ mod tests {
         // the recovered view serves the newest copies mid-burst…
         let s = SECTOR_BYTES as usize;
         let mut got = vec![0u8; 64 * s];
-        shard.read(1, 0, &mut got);
+        shard.read(1, 0, &mut got).unwrap();
         assert_eq!(got[..16 * s], gen_payload(1, 0, 64, 1)[..16 * s]);
         assert_eq!(got[16 * s..48 * s], gen_payload(1, 16, 32, 2)[..]);
         assert_eq!(got[48 * s..], gen_payload(1, 0, 64, 1)[48 * s..]);
         let mut f2 = vec![0u8; 8 * s];
-        shard.read(2, 0, &mut f2);
+        shard.read(2, 0, &mut f2).unwrap();
         assert_eq!(f2, gen_payload(2, 0, 8, 1));
         // …and they drain byte-exactly through the normal flush path,
         // with conservation intact (recovered bytes count as buffered,
@@ -1959,7 +2250,7 @@ mod tests {
         shard.begin_drain();
         shard.flusher_loop();
         let mut hdd = vec![0u8; 64 * s];
-        shard.read_hdd(1, 0, &mut hdd);
+        shard.read_hdd(1, 0, &mut hdd).unwrap();
         assert_eq!(hdd, got, "recovered data must settle byte-exactly");
         let st = shard.stats();
         assert_eq!(st.superseded_bytes, 32 * SECTOR_BYTES, "replay supersession booked");
@@ -1978,7 +2269,7 @@ mod tests {
                 Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
                 Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
             );
-            shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1));
+            shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1)).unwrap();
             shard.begin_drain();
             shard.flusher_loop(); // drain to HDD
             shard.sync();
@@ -1997,12 +2288,12 @@ mod tests {
         // the drained data reads back from the HDD through the restored
         // file table
         let mut got = vec![0u8; 64 * SECTOR_BYTES as usize];
-        shard.read(1, 0, &mut got);
+        shard.read(1, 0, &mut got).unwrap();
         assert_eq!(got, gen_payload(1, 0, 64, 1));
         // and new writes work: their sequences resume past the old ones
-        shard.submit(&sub(1, 100, 8), &gen_payload(1, 100, 8, 3));
+        shard.submit(&sub(1, 100, 8), &gen_payload(1, 100, 8, 3)).unwrap();
         let mut more = vec![0u8; 8 * SECTOR_BYTES as usize];
-        shard.read(1, 100, &mut more);
+        shard.read(1, 100, &mut more).unwrap();
         assert_eq!(more, gen_payload(1, 100, 8, 3));
     }
 
@@ -2021,7 +2312,7 @@ mod tests {
                 Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO)),
                 Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO)),
             );
-            shard.submit(&sub(1, 0, 16), &gen_payload(1, 0, 16, 1));
+            shard.submit(&sub(1, 0, 16), &gen_payload(1, 0, 16, 1)).unwrap();
             shard.begin_drain();
             shard.flusher_loop();
             shard.sync();
@@ -2035,7 +2326,7 @@ mod tests {
             )
             .expect("first recover");
             assert!(rec.clean);
-            shard.submit(&sub(1, 50, 8), &gen_payload(1, 50, 8, 2));
+            shard.submit(&sub(1, 50, 8), &gen_payload(1, 50, 8, 2)).unwrap();
             // crash again: drop without shutdown
         }
         let (shard, rec) = Shard::recover(
@@ -2047,11 +2338,11 @@ mod tests {
         assert!(!rec.clean, "the reopen marked the superblock dirty");
         assert_eq!(rec.records_replayed, 1, "the post-reopen write survives");
         let mut got = vec![0u8; 8 * SECTOR_BYTES as usize];
-        shard.read(1, 50, &mut got);
+        shard.read(1, 50, &mut got).unwrap();
         assert_eq!(got, gen_payload(1, 50, 8, 2));
         // the pre-shutdown data is still on the HDD
         let mut old = vec![0u8; 16 * SECTOR_BYTES as usize];
-        shard.read(1, 0, &mut old);
+        shard.read(1, 0, &mut old).unwrap();
         assert_eq!(old, gen_payload(1, 0, 16, 1));
     }
 
@@ -2061,10 +2352,10 @@ mod tests {
         // region's extents fragment; the drain must still produce the
         // newest merged contents, with fewer copy runs than extents
         let shard = mem_shard(SystemKind::OrangeFsBB, 8192);
-        shard.submit(&sub(1, 0, 256), &gen_payload(1, 0, 256, 1));
+        shard.submit(&sub(1, 0, 256), &gen_payload(1, 0, 256, 1)).unwrap();
         for k in 0..8 {
             let off = k * 32 + 8;
-            shard.submit(&sub(1, off, 8), &gen_payload(1, off, 8, 2));
+            shard.submit(&sub(1, off, 8), &gen_payload(1, off, 8, 2)).unwrap();
         }
         let s = SECTOR_BYTES as usize;
         let mut expect = vec![0u8; 256 * s];
@@ -2078,7 +2369,7 @@ mod tests {
         shard.begin_drain();
         shard.flusher_loop();
         let mut hdd = vec![0u8; 256 * s];
-        shard.read_hdd(1, 0, &mut hdd);
+        shard.read_hdd(1, 0, &mut hdd).unwrap();
         assert_eq!(hdd, expect, "fragmented flush must merge to the newest view");
         let stats = shard.stats();
         // 256 sectors of LBA-contiguous newest data: the whole region
@@ -2169,25 +2460,25 @@ mod tests {
         // window 1: sparse -> pct 1.0 -> route flips to SSD. These four
         // go direct to the (not yet armed) HDD.
         for off in [0, 10_000, 50_000, 90_000] {
-            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1)).unwrap();
         }
         // window 2: contiguous and SSD-routed — fills region 0 exactly,
         // and detects as pct 0.0 (< pause_below), flipping the route
         // back to HDD afterwards
         for k in 0..4 {
             let off = 500_000 + k * 16;
-            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1));
+            shard.submit(&sub(1, off, 16), &gen_payload(1, off, 16, 1)).unwrap();
         }
         // rewrite of a buffered extent: absorbed into the log, lands in
         // region 1, and thereby queues the full region 0 for the flusher
-        shard.submit(&sub(1, 500_016, 16), &gen_payload(1, 500_016, 16, 2));
+        shard.submit(&sub(1, 500_016, 16), &gen_payload(1, 500_016, 16, 2)).unwrap();
         assert_eq!(shard.stats().rerouted_writes, 1, "rewrite absorbed into the log");
         // arm the gate, then hold one direct HDD write in flight
         *gate.0.lock().unwrap() = true;
         std::thread::scope(|s| {
             let writer = Arc::clone(&shard);
             s.spawn(move || {
-                writer.submit(&sub(2, 0, 16), &gen_payload(2, 0, 16, 1));
+                writer.submit(&sub(2, 0, 16), &gen_payload(2, 0, 16, 1)).unwrap();
             });
             let t0 = Instant::now();
             let deadline = Duration::from_secs(10);

@@ -22,7 +22,7 @@ use ssdup::workload::Workload;
 const VALUE_OPTS: &[&str] = &[
     "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
     "queue", "shards", "backend", "clients", "dir", "crash-at", "group-commit-window",
-    "trace", "stats-interval", "require", "io-workers", "io-depth",
+    "trace", "stats-interval", "require", "io-workers", "io-depth", "fault-spec",
 ];
 
 fn main() {
@@ -68,6 +68,8 @@ fn main() {
                  \x20          [--stats-interval MS]  emit JSON-line telemetry snapshots on stderr\n\
                  \x20          [--crash-at N]   kill the process (no shutdown) after N acked requests\n\
                  \x20          [--recover]      reopen --dir images, replay the log, drain\n\
+                 \x20          [--fault-spec S] scripted fault injection, e.g.\n\
+                 \x20                           ssd:eio:p=0.01:transient=3,hdd:dead@op=5000\n\
                  ssdup trace-check OUT.json [--require submit,route,...]  validate a trace export\n"
             );
             2
@@ -239,6 +241,19 @@ fn cmd_live(args: &Args) -> i32 {
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
     let stats_ms: u64 = args.get_parse("stats-interval", 0).unwrap_or(0);
 
+    // --fault-spec: wrap every backend in seeded deterministic fault
+    // injectors (grammar in live::fault); --seed varies the streams
+    let fault_spec = match args.get("fault-spec") {
+        Some(s) => match live::FaultSpec::parse(s) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+        None => live::FaultSpec::default(),
+    };
+
     let crash_at: Option<u64> = match args.get("crash-at") {
         Some(v) => match v.parse() {
             Ok(n) => Some(n),
@@ -273,10 +288,11 @@ fn cmd_live(args: &Args) -> i32 {
             eprintln!("--recover requires --backend file --dir DIR (the crashed run's images)");
             return 2;
         };
-        let (engine, report) = match LiveEngine::open_file(&cfg, std::path::Path::new(dir)) {
+        let dir = std::path::Path::new(dir);
+        let (engine, report) = match LiveEngine::open_file_faulty(&cfg, dir, &fault_spec, seed) {
             Ok(pair) => pair,
             Err(e) => {
-                eprintln!("error: cannot reopen backends under {dir}: {e}");
+                eprintln!("error: cannot reopen backends under {}: {e}", dir.display());
                 return 1;
             }
         };
@@ -289,6 +305,7 @@ fn cmd_live(args: &Args) -> i32 {
             "recovered data drained: {} MiB settled on the HDD images; clean superblocks written",
             flushed / (1 << 20)
         );
+        print_fault_line(&stats, 0);
         if let Some(path) = &trace_path {
             if !write_trace(&obs, path) {
                 return 1;
@@ -306,7 +323,13 @@ fn cmd_live(args: &Args) -> i32 {
 
     let mut created_dir: Option<std::path::PathBuf> = None;
     let engine = match backend {
-        "mem" => LiveEngine::mem(&cfg, SyntheticLatency::ssd(), SyntheticLatency::hdd()),
+        "mem" => LiveEngine::mem_faulty(
+            &cfg,
+            SyntheticLatency::ssd(),
+            SyntheticLatency::hdd(),
+            &fault_spec,
+            seed,
+        ),
         "file" => {
             let dir = match args.get("dir") {
                 Some(d) => std::path::PathBuf::from(d),
@@ -318,7 +341,7 @@ fn cmd_live(args: &Args) -> i32 {
                 }
             };
             println!("backend dir: {}", dir.display());
-            match LiveEngine::file(&cfg, &dir) {
+            match LiveEngine::file_faulty(&cfg, &dir, &fault_spec, seed) {
                 Ok(e) => e,
                 Err(e) => {
                     eprintln!("error: cannot create file backends: {e}");
@@ -374,7 +397,10 @@ fn cmd_live(args: &Args) -> i32 {
                 progressed = true;
                 buf.resize(req.bytes() as usize, 0);
                 live::payload::fill_gen(req.file, req.offset as i64, gen, &mut buf);
-                engine.submit(req, &buf);
+                if let Err(e) = engine.submit(req, &buf) {
+                    eprintln!("error: submit rejected before the crash point: {e}");
+                    return 1;
+                }
                 acked += 1;
                 if acked >= limit {
                     println!("crash-at: {acked} requests acknowledged — dying without shutdown");
@@ -404,13 +430,14 @@ fn cmd_live(args: &Args) -> i32 {
     });
     let report = live::run_load_reported(&engine, &workload, clients, versioned, snapshots);
     println!("{}", report.summary());
+    print_fault_line(&report.shards, report.rejected);
     for (i, s) in report.shards.iter().enumerate() {
         println!(
             "  shard {i}: in {} MiB | ssd {} MiB | direct {} MiB | flushed {} MiB | \
              superseded {} MiB | {} rerouted | {} streams (rp {:.1}%) | {} flushes, \
              {} pauses ({:.2}s), runs {:.2}s (duty {:.0}%), {} blocked waits | \
              {} syncs ({:.1} writes/sync) | io {} reqs -> {} dev writes \
-             (depth hw {}, mean {:.1})",
+             (depth hw {}, mean {:.1}) | {} retries{}",
             s.bytes_in / (1 << 20),
             s.ssd_bytes_buffered / (1 << 20),
             s.hdd_direct_bytes / (1 << 20),
@@ -431,6 +458,8 @@ fn cmd_live(args: &Args) -> i32 {
             s.io_device_writes,
             s.io_depth_high_water,
             s.io_mean_depth,
+            s.io_retries,
+            if s.degraded { " | DEGRADED (direct-to-HDD)" } else { "" },
         );
     }
     println!("\nper-stage ack latency:\n{}", report.stage_summary());
@@ -441,7 +470,7 @@ fn cmd_live(args: &Args) -> i32 {
     if trace_path.is_some() {
         if let Some(req) = workload.processes.iter().find_map(|p| p.reqs.first()) {
             let mut buf = vec![0u8; req.bytes() as usize];
-            engine.read(req.file, req.offset, &mut buf);
+            let _ = engine.read(req.file, req.offset, &mut buf);
         }
     }
 
@@ -456,8 +485,11 @@ fn cmd_live(args: &Args) -> i32 {
             let mib = v.checked_bytes / (1 << 20);
             println!("\nverify: OK — {mib} MiB re-derived and matched on the HDD backends");
         } else {
-            let (bad, total) = (v.mismatched_sectors, v.checked_bytes);
-            println!("\nverify: FAILED — {bad} mismatched sectors of {total} bytes checked");
+            let (bad, unread, total) = (v.mismatched_sectors, v.read_errors, v.checked_bytes);
+            println!(
+                "\nverify: FAILED — {bad} mismatched sectors, {unread} unreadable ranges \
+                 of {total} bytes checked"
+            );
             code = 1;
         }
     }
@@ -476,6 +508,19 @@ fn cmd_live(args: &Args) -> i32 {
         }
     }
     code
+}
+
+/// One greppable fault-handling line (CI's fault-matrix smoke parses
+/// `io_retries=`): retries absorbed, transient faults seen, shards that
+/// fell back to direct-to-HDD, requests rejected outright.
+fn print_fault_line(stats: &[ssdup::live::ShardStats], rejected: u64) {
+    let io_retries: u64 = stats.iter().map(|s| s.io_retries).sum();
+    let transient: u64 = stats.iter().map(|s| s.transient_faults).sum();
+    let degraded = stats.iter().filter(|s| s.degraded).count();
+    println!(
+        "faults: io_retries={io_retries} transient_faults={transient} \
+         degraded_shards={degraded} rejected={rejected}"
+    );
 }
 
 /// Drain the collector and export Chrome-trace JSON. Runs after

@@ -30,6 +30,9 @@ pub struct Counters {
     pub syncs: u64,
     pub sync_barriers: u64,
     pub dropped_trace_events: u64,
+    pub io_retries: u64,
+    pub transient_faults: u64,
+    pub degraded_shards: u64,
 }
 
 impl Counters {
@@ -49,6 +52,9 @@ impl Counters {
             c.flush_run_us += s.flush_run_us;
             c.syncs += s.syncs;
             c.sync_barriers += s.sync_barriers;
+            c.io_retries += s.io_retries;
+            c.transient_faults += s.transient_faults;
+            c.degraded_shards += s.degraded as u64;
         }
         c
     }
@@ -120,6 +126,15 @@ impl Snapshotter {
                 "dropped_trace_events".to_string(),
                 Json::Num(cur.dropped_trace_events as f64),
             ),
+            (
+                "io_retries".to_string(),
+                Json::Num(d(cur.io_retries, self.prev.io_retries) as f64),
+            ),
+            (
+                "transient_faults".to_string(),
+                Json::Num(d(cur.transient_faults, self.prev.transient_faults) as f64),
+            ),
+            ("degraded_shards".to_string(), Json::Num(cur.degraded_shards as f64)),
         ]);
         self.prev = cur;
         self.elapsed = since_start;
@@ -197,13 +212,19 @@ mod tests {
         let mut a = ShardStats::default();
         a.bytes_in = 100;
         a.flush_run_us = 7;
+        a.io_retries = 4;
+        a.degraded = true;
         let mut b = ShardStats::default();
         b.bytes_in = 50;
         b.flush_pause_us = 3;
+        b.transient_faults = 2;
         let c = Counters::from_stats(&[a, b], 9);
         assert_eq!(c.bytes_in, 150);
         assert_eq!(c.flush_run_us, 7);
         assert_eq!(c.flush_pause_us, 3);
         assert_eq!(c.dropped_trace_events, 9);
+        assert_eq!(c.io_retries, 4);
+        assert_eq!(c.transient_faults, 2);
+        assert_eq!(c.degraded_shards, 1, "one shard flies degraded");
     }
 }

@@ -58,10 +58,16 @@ pub enum Stage {
     /// Submission-queue residency: from enqueued until an I/O worker
     /// started the batch's first device write.
     QueueWait = 14,
+    /// Backoff sleeps spent re-driving transient device faults below the
+    /// completion token (sum per acknowledged batch). Overlaps
+    /// `SsdWrite`/`HddWrite` rather than partitioning `Submit`, so it is
+    /// *not* an ack component — it attributes how much of the device
+    /// stage was fault recovery.
+    FaultRetry = 15,
 }
 
 /// Number of stages (length of [`Stage::ALL`]).
-pub const N_STAGES: usize = 15;
+pub const N_STAGES: usize = 16;
 
 impl Stage {
     /// Every stage, in discriminant order.
@@ -81,6 +87,7 @@ impl Stage {
         Stage::Replay,
         Stage::IoSubmit,
         Stage::QueueWait,
+        Stage::FaultRetry,
     ];
 
     /// The additive components of an acknowledged write: these spans are
@@ -114,6 +121,7 @@ impl Stage {
             Stage::Replay => "replay",
             Stage::IoSubmit => "io_submit",
             Stage::QueueWait => "queue_wait",
+            Stage::FaultRetry => "fault_retry",
         }
     }
 

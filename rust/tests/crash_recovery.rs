@@ -124,16 +124,18 @@ fn crash_and_recover_mem(seed: u64) {
                     let off = slot as i32 * SLOT_SECTORS;
                     payload::fill_gen(lane_file(lane), off as i64, gen, &mut buf);
                     logs[lane].lock().unwrap().issued.push((slot, gen));
-                    engine.submit(
-                        Request {
-                            app: lane as u16,
-                            proc_id: lane as u32,
-                            file: lane_file(lane),
-                            offset: off,
-                            size: SLOT_SECTORS,
-                        },
-                        &buf,
-                    );
+                    engine
+                        .submit(
+                            Request {
+                                app: lane as u16,
+                                proc_id: lane as u32,
+                                file: lane_file(lane),
+                                offset: off,
+                                size: SLOT_SECTORS,
+                            },
+                            &buf,
+                        )
+                        .unwrap();
                     logs[lane].lock().unwrap().acked += 1;
                 }
             });
@@ -198,7 +200,7 @@ fn crash_and_recover_mem(seed: u64) {
                 .map(|&(_, g)| g)
                 .last();
             let off = slot as i32 * SLOT_SECTORS;
-            recovered.read(lane_file(lane), off, &mut buf);
+            recovered.read(lane_file(lane), off, &mut buf).unwrap();
             for k in 0..SLOT_SECTORS as usize {
                 let sec = &buf[k * sector..(k + 1) * sector];
                 let sec_idx = off as i64 + k as i64;
@@ -220,9 +222,9 @@ fn crash_and_recover_mem(seed: u64) {
     // the recovered data must also drain through the normal flush path
     // and settle identically on the HDD
     let mut before = vec![0u8; SLOT_SECTORS as usize * sector];
-    recovered.read(lane_file(0), 0, &mut before);
+    recovered.read(lane_file(0), 0, &mut before).unwrap();
     recovered.drain();
-    recovered.read(lane_file(0), 0, &mut buf);
+    recovered.read(lane_file(0), 0, &mut buf).unwrap();
     assert_eq!(buf, before, "seed {seed}: the drain must not change recovered contents");
     recovered.shutdown();
 }
@@ -387,10 +389,12 @@ fn freeze_in_queue(seed: u64, pause_before: bool) {
                 let off = slot as i32 * SLOT_SECTORS;
                 payload::fill_gen(1, off as i64, gen, &mut buf);
                 log.lock().unwrap().issued.push((slot, gen));
-                engine.submit(
-                    Request { app: 0, proc_id: 0, file: 1, offset: off, size: SLOT_SECTORS },
-                    &buf,
-                );
+                engine
+                    .submit(
+                        Request { app: 0, proc_id: 0, file: 1, offset: off, size: SLOT_SECTORS },
+                        &buf,
+                    )
+                    .unwrap();
                 log.lock().unwrap().acked += 1;
             }
         });
@@ -443,7 +447,7 @@ fn freeze_in_queue(seed: u64, pause_before: bool) {
             .map(|&(_, g)| g)
             .last();
         let off = slot as i32 * SLOT_SECTORS;
-        recovered.read(1, off, &mut buf);
+        recovered.read(1, off, &mut buf).unwrap();
         match floor {
             None => assert!(
                 buf.iter().all(|&b| b == 0),
@@ -500,7 +504,7 @@ fn file_backend_killed_mid_burst_recovers_and_verifies() {
             for req in &proc.reqs {
                 buf.resize(req.bytes() as usize, 0);
                 payload::fill(req.file, req.offset as i64, &mut buf);
-                engine.submit(*req, &buf);
+                engine.submit(*req, &buf).unwrap();
             }
         }
         // CRASH: drop without drain or shutdown — the flushers die
@@ -516,7 +520,7 @@ fn file_backend_killed_mid_burst_recovers_and_verifies() {
     for proc in &w.processes {
         for req in &proc.reqs {
             payload::fill(req.file, req.offset as i64, &mut expect);
-            engine.read(req.file, req.offset, &mut got);
+            engine.read(req.file, req.offset, &mut got).unwrap();
             assert_eq!(
                 got, expect,
                 "acknowledged write at offset {} lost or corrupted by the crash",
@@ -538,7 +542,7 @@ fn file_backend_killed_mid_burst_recovers_and_verifies() {
     // the data is still there, through the recovered file table
     let req = w.processes[0].reqs[0];
     payload::fill(req.file, req.offset as i64, &mut expect);
-    engine.read(req.file, req.offset, &mut got);
+    engine.read(req.file, req.offset, &mut got).unwrap();
     assert_eq!(got, expect, "clean reopen must still serve the settled data");
     engine.shutdown();
     std::fs::remove_dir_all(&dir).ok();
@@ -568,7 +572,9 @@ fn recovery_rejects_a_foreign_shard_log() {
         });
         let mut buf = vec![0u8; 8 * SECTOR_BYTES as usize];
         payload::fill(1, 0, &mut buf);
-        engine.submit(Request { app: 0, proc_id: 0, file: 1, offset: 0, size: 8 }, &buf);
+        engine
+            .submit(Request { app: 0, proc_id: 0, file: 1, offset: 0, size: 8 }, &buf)
+            .unwrap();
         // crash without shutdown
     }
     let mut cfg_one = crash_cfg(4096);

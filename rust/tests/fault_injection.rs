@@ -1,0 +1,240 @@
+//! Fault-injection scenario matrix: the seeded [`FaultSpec`] scripts from
+//! `--fault-spec` driven through the full engine, asserting the PR's
+//! robustness contract end to end — no panic under any script, every
+//! acknowledged write byte-exact (including across a crash and
+//! recovery), and a shard whose SSD dies or fills keeps accepting
+//! writes in sticky degraded mode.
+//!
+//! Scenarios: transient-EIO storm, slow device, SSD death, device full,
+//! crash + recovery under a storm, and the degraded flag surviving a
+//! crash via the superblock.
+
+use std::sync::Arc;
+
+use ssdup::live::{
+    self, payload, Backend, FaultSpec, LiveConfig, LiveEngine, MemBackend, MemStore, SyntheticLatency,
+};
+use ssdup::server::SystemKind;
+use ssdup::types::{Request, DEFAULT_REQ_SECTORS, SECTOR_BYTES};
+use ssdup::workload::ior::{ior_spanned, IorPattern};
+use ssdup::workload::Workload;
+
+/// A segmented-random burst (disjoint per-process segments, random order
+/// inside each), the shape SSDUP+ routes through the SSD buffer.
+fn random_burst(mib: i64, procs: u32, seed: u64) -> Workload {
+    let sectors = mib * 2048;
+    ior_spanned(0, IorPattern::SegmentedRandom, procs, sectors, sectors * 8, DEFAULT_REQ_SECTORS, seed)
+}
+
+/// Byte length of one shard's SSD log (both halves): offsets below this
+/// are record frames, offsets at or above it are the superblock slots.
+/// `dead`/`enospc` clauses scoped with `max_off=<this>` kill the log but
+/// spare the superblock, modeling a device whose data blocks fail while
+/// the metadata sectors survive.
+fn log_bytes(cfg: &LiveConfig) -> u64 {
+    2 * (cfg.ssd_capacity_sectors / 2) as u64 * SECTOR_BYTES
+}
+
+/// Transient EIO on both tiers: every fault must be retried to success
+/// below the completion token — zero rejected writes, zero degraded
+/// shards, and the drained data byte-exact.
+#[test]
+fn transient_eio_storm_absorbed_below_ack() {
+    let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(2).with_ssd_mib(32);
+    let spec = FaultSpec::parse("ssd:eio:p=0.05:transient=2,hdd:eio:p=0.02:transient=2").unwrap();
+    let engine = LiveEngine::mem_faulty(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO, &spec, 7);
+    let w = random_burst(8, 4, 11);
+    let report = live::run_load(&engine, &w, 4);
+    assert_eq!(report.rejected, 0, "transient faults must never reject a write");
+    assert!(report.io_retries() > 0, "a 5% EIO script must force retries");
+    assert!(report.transient_faults() > 0, "injected transients must be counted");
+    assert_eq!(report.degraded_shards(), 0, "transient faults must not degrade a shard");
+    let verify = engine.verify_workload(&w);
+    assert!(
+        verify.is_ok(),
+        "acked writes must drain byte-exact under the storm: {} mismatched, {} unreadable",
+        verify.mismatched_sectors,
+        verify.read_errors
+    );
+    // reads retry transients inline too: a write/read roundtrip under
+    // the same script returns the exact bytes
+    let mut buf = vec![0u8; 64 * SECTOR_BYTES as usize];
+    payload::fill(90, 0, &mut buf);
+    engine.submit(Request { app: 0, proc_id: 0, file: 90, offset: 0, size: 64 }, &buf).unwrap();
+    let mut got = vec![0u8; buf.len()];
+    engine.read(90, 0, &mut got).unwrap();
+    assert_eq!(got, buf, "read under transient EIO must return the acked bytes");
+    engine.shutdown();
+}
+
+/// `slow` clauses stall, never error: the run completes with no
+/// rejections, no degradation, and byte-exact data.
+#[test]
+fn slow_device_faults_only_add_latency() {
+    let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(1).with_ssd_mib(16);
+    let spec = FaultSpec::parse("ssd:slow:p=0.05:delay_us=200,hdd:slow:p=0.05:delay_us=200").unwrap();
+    let engine = LiveEngine::mem_faulty(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO, &spec, 13);
+    let w = random_burst(4, 4, 17);
+    let report = live::run_load(&engine, &w, 4);
+    assert_eq!(report.rejected, 0, "latency spikes must not reject writes");
+    assert_eq!(report.degraded_shards(), 0, "latency spikes must not degrade shards");
+    let verify = engine.verify_workload(&w);
+    assert!(verify.is_ok(), "slow-device run must still drain byte-exact");
+    engine.shutdown();
+}
+
+/// SSD log dead from the first op (superblock sectors spared): every
+/// shard flips into sticky degraded mode on its first buffered write,
+/// re-routes direct to the HDD, and still acknowledges everything.
+#[test]
+fn ssd_death_degrades_and_keeps_accepting_writes() {
+    let cfg = LiveConfig::new(SystemKind::OrangeFsBB).with_shards(2).with_ssd_mib(8);
+    let spec = FaultSpec::parse(&format!("ssd:dead:max_off={}", log_bytes(&cfg))).unwrap();
+    let engine = LiveEngine::mem_faulty(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO, &spec, 19);
+    let w = random_burst(4, 4, 23);
+    let report = live::run_load(&engine, &w, 4);
+    assert_eq!(report.rejected, 0, "degraded shards must keep acking via the HDD");
+    assert_eq!(report.degraded_shards(), 2, "a dead SSD must flip every shard it serves");
+    let verify = engine.verify_workload(&w);
+    assert!(
+        verify.is_ok(),
+        "degraded-mode writes must land byte-exact on the HDD: {} mismatched, {} unreadable",
+        verify.mismatched_sectors,
+        verify.read_errors
+    );
+    let stats = engine.shutdown();
+    assert!(stats.iter().all(|s| s.degraded), "degraded flag must be sticky in the stats");
+    assert!(stats.iter().any(|s| s.hdd_direct_bytes > 0), "rerouted writes must hit the HDD");
+}
+
+/// ENOSPC on every SSD log write: same sticky degraded contract as
+/// device death, through the `DeviceFull` classification instead.
+#[test]
+fn device_full_degrades_to_hdd() {
+    let cfg = LiveConfig::new(SystemKind::OrangeFsBB).with_shards(1).with_ssd_mib(8);
+    let spec = FaultSpec::parse(&format!("ssd:enospc:max_off={}", log_bytes(&cfg))).unwrap();
+    let engine = LiveEngine::mem_faulty(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO, &spec, 29);
+    let w = random_burst(4, 2, 31);
+    let report = live::run_load(&engine, &w, 2);
+    assert_eq!(report.rejected, 0, "a full SSD must degrade, not reject");
+    assert_eq!(report.degraded_shards(), 1, "ENOSPC must flip the shard into degraded mode");
+    let verify = engine.verify_workload(&w);
+    assert!(verify.is_ok(), "device-full run must still drain byte-exact");
+    engine.shutdown();
+}
+
+/// Crash mid-burst under a transient-EIO storm, then recover *with the
+/// storm still raging*: every write acknowledged before the crash must
+/// verify byte-exact after replay + drain (recovery reads retry
+/// transients just like the live path).
+#[test]
+fn acked_writes_survive_crash_and_recovery_under_storm() {
+    let shards = 2usize;
+    let cfg = LiveConfig::new(SystemKind::SsdupPlus).with_shards(shards).with_ssd_mib(32);
+    let spec = FaultSpec::parse("ssd:eio:p=0.05:transient=2,hdd:eio:p=0.05:transient=2").unwrap();
+    let stores: Vec<(Arc<MemStore>, Arc<MemStore>)> =
+        (0..shards).map(|_| (MemStore::new(true), MemStore::new(true))).collect();
+    let engine = {
+        let stores = stores.clone();
+        let spec = spec.clone();
+        LiveEngine::with_backends(&cfg, move |i| {
+            let seed = 0xBEEF + i as u64;
+            let ssd = Box::new(MemBackend::over(Arc::clone(&stores[i].0), SyntheticLatency::ZERO))
+                as Box<dyn Backend>;
+            let hdd = Box::new(MemBackend::over(Arc::clone(&stores[i].1), SyntheticLatency::ZERO))
+                as Box<dyn Backend>;
+            (spec.wrap_ssd(ssd, seed), spec.wrap_hdd(hdd, seed))
+        })
+    };
+    let w = random_burst(6, 4, 37);
+    let mut buf: Vec<u8> = Vec::new();
+    for proc in &w.processes {
+        for req in &proc.reqs {
+            buf.resize(req.bytes() as usize, 0);
+            payload::fill(req.file, req.offset as i64, &mut buf);
+            engine.submit(*req, &buf).unwrap();
+        }
+    }
+    let frozen: Vec<(Arc<MemStore>, Arc<MemStore>)> =
+        stores.iter().map(|(s, h)| (s.freeze(), h.freeze())).collect();
+    drop(engine); // crash: no drain, no clean superblock
+
+    let (recovered, report) = LiveEngine::open(&cfg, move |i| {
+        let seed = 0xFACE + i as u64;
+        let ssd = Box::new(MemBackend::over(Arc::clone(&frozen[i].0), SyntheticLatency::ZERO))
+            as Box<dyn Backend>;
+        let hdd = Box::new(MemBackend::over(Arc::clone(&frozen[i].1), SyntheticLatency::ZERO))
+            as Box<dyn Backend>;
+        (spec.wrap_ssd(ssd, seed), spec.wrap_hdd(hdd, seed))
+    })
+    .expect("recovery must succeed under transient faults");
+    assert!(!report.clean(), "a crash without shutdown must be a dirty reopen");
+    recovered.drain();
+    let verify = recovered.verify_workload(&w);
+    assert!(
+        verify.is_ok(),
+        "every pre-crash ack must survive recovery under the storm: {} mismatched, {} unreadable",
+        verify.mismatched_sectors,
+        verify.read_errors
+    );
+    recovered.shutdown();
+}
+
+/// The degraded flag is persisted in the superblock when the SSD dies
+/// and restored on recovery: a reopened shard does not trust the dead
+/// tier again, its pre-crash HDD data reads back exactly, and it keeps
+/// accepting new writes.
+#[test]
+fn degraded_flag_survives_crash_and_recovery() {
+    let cfg = LiveConfig::new(SystemKind::OrangeFsBB).with_shards(1).with_ssd_mib(8);
+    let spec = FaultSpec::parse(&format!("ssd:dead:max_off={}", log_bytes(&cfg))).unwrap();
+    let ssd_store = MemStore::new(true);
+    let hdd_store = MemStore::new(true);
+    let engine = {
+        let (ssd_store, hdd_store) = (Arc::clone(&ssd_store), Arc::clone(&hdd_store));
+        let spec = spec.clone();
+        LiveEngine::with_backends(&cfg, move |_| {
+            let ssd = Box::new(MemBackend::over(Arc::clone(&ssd_store), SyntheticLatency::ZERO))
+                as Box<dyn Backend>;
+            let hdd = Box::new(MemBackend::over(Arc::clone(&hdd_store), SyntheticLatency::ZERO))
+                as Box<dyn Backend>;
+            (spec.wrap_ssd(ssd, 41), hdd)
+        })
+    };
+    let reqs = 32i32;
+    let mut buf = vec![0u8; 64 * SECTOR_BYTES as usize];
+    for i in 0..reqs {
+        let off = i * 64;
+        payload::fill(1, off as i64, &mut buf);
+        engine.submit(Request { app: 0, proc_id: 0, file: 1, offset: off, size: 64 }, &buf).unwrap();
+    }
+    assert!(engine.stats()[0].degraded, "the dead SSD must degrade the shard before the crash");
+    let (ssd_img, hdd_img) = (ssd_store.freeze(), hdd_store.freeze());
+    drop(engine); // crash
+
+    // reopen over a healthy device: the superblock flag, not a live
+    // probe, must keep the shard off the SSD tier
+    let (recovered, _report) = LiveEngine::open(&cfg, move |_| {
+        (
+            Box::new(MemBackend::over(Arc::clone(&ssd_img), SyntheticLatency::ZERO)) as Box<dyn Backend>,
+            Box::new(MemBackend::over(Arc::clone(&hdd_img), SyntheticLatency::ZERO)) as Box<dyn Backend>,
+        )
+    })
+    .expect("reopen of a degraded shard");
+    assert!(recovered.stats()[0].degraded, "degraded flag must survive via the superblock");
+    let mut got = vec![0u8; buf.len()];
+    for i in 0..reqs {
+        let off = i * 64;
+        payload::fill(1, off as i64, &mut buf);
+        recovered.read(1, off, &mut got).unwrap();
+        assert_eq!(got, buf, "pre-crash degraded write at sector {off} must read back exactly");
+    }
+    // the recovered shard keeps accepting writes (still via the HDD)
+    let off = reqs * 64;
+    payload::fill(1, off as i64, &mut buf);
+    recovered.submit(Request { app: 0, proc_id: 0, file: 1, offset: off, size: 64 }, &buf).unwrap();
+    recovered.read(1, off, &mut got).unwrap();
+    assert_eq!(got, buf, "post-recovery write must ack and read back");
+    let stats = recovered.shutdown();
+    assert!(stats[0].degraded, "degraded mode stays sticky across the whole recovered run");
+}

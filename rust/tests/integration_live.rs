@@ -217,20 +217,28 @@ fn mid_burst_reads_see_writes_before_any_drain() {
     let engine = LiveEngine::mem(&cfg, SyntheticLatency::ZERO, SyntheticLatency::ZERO);
     let mut buf = vec![0u8; DEFAULT_REQ_SECTORS as usize * SECTOR_BYTES as usize];
     ssdup::live::payload::fill(9, 0, &mut buf);
-    engine.submit(
-        ssdup::types::Request { app: 0, proc_id: 0, file: 9, offset: 0, size: DEFAULT_REQ_SECTORS },
-        &buf,
-    );
+    engine
+        .submit(
+            ssdup::types::Request {
+                app: 0,
+                proc_id: 0,
+                file: 9,
+                offset: 0,
+                size: DEFAULT_REQ_SECTORS,
+            },
+            &buf,
+        )
+        .unwrap();
     let mut got = vec![0u8; buf.len()];
-    engine.read(9, 0, &mut got);
+    engine.read(9, 0, &mut got).unwrap();
     assert_eq!(got, buf, "read-your-write before drain");
     // unwritten neighbors read as zeros (sparse HDD hole semantics)
     let mut hole = vec![0xAAu8; 2 * SECTOR_BYTES as usize];
-    engine.read(9, 2 * DEFAULT_REQ_SECTORS, &mut hole);
+    engine.read(9, 2 * DEFAULT_REQ_SECTORS, &mut hole).unwrap();
     assert!(hole.iter().all(|&b| b == 0), "holes read as zeros");
     // and the same bytes survive the drain
     engine.drain();
-    engine.read(9, 0, &mut got);
+    engine.read(9, 0, &mut got).unwrap();
     assert_eq!(got, buf, "post-drain read matches");
     engine.shutdown();
 }
@@ -299,7 +307,7 @@ fn trace_export_covers_every_pipeline_stage() {
     // read back one request's range through the engine (read stages)
     let req = w.processes[0].reqs[0];
     let mut buf = vec![0u8; req.bytes() as usize];
-    engine.read(req.file, req.offset, &mut buf);
+    engine.read(req.file, req.offset, &mut buf).unwrap();
 
     let obs = std::sync::Arc::clone(engine.trace());
     engine.shutdown(); // the final drain's flush + superblock spans land too

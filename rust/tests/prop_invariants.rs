@@ -92,7 +92,9 @@ fn prop_live_cross_route_rewrites_stay_byte_exact() {
         for &s in &order {
             let offset = (s * req_sectors as i64) as i32;
             payload::fill_gen(1, offset as i64, 1, &mut buf);
-            engine.submit(Request { app: 0, proc_id: 0, file: 1, offset, size: req_sectors }, &buf);
+            engine
+                .submit(Request { app: 0, proc_id: 0, file: 1, offset, size: req_sectors }, &buf)
+                .unwrap();
         }
         // phase 2: rewrite a contiguous prefix in ascending order —
         // sequential traffic the redirector reliably sends to HDD, i.e.
@@ -100,7 +102,9 @@ fn prop_live_cross_route_rewrites_stay_byte_exact() {
         for s in 0..rewrites.min(slots as usize) as i64 {
             let offset = (s * req_sectors as i64) as i32;
             payload::fill_gen(1, offset as i64, 2, &mut buf);
-            engine.submit(Request { app: 0, proc_id: 0, file: 1, offset, size: req_sectors }, &buf);
+            engine
+                .submit(Request { app: 0, proc_id: 0, file: 1, offset, size: req_sectors }, &buf)
+                .unwrap();
             latest[s as usize] = 2;
         }
         engine.drain();
@@ -109,7 +113,7 @@ fn prop_live_cross_route_rewrites_stay_byte_exact() {
         let mut ok = true;
         for s in 0..slots {
             let offset = (s * req_sectors as i64) as i32;
-            engine.read(1, offset, &mut got);
+            engine.read(1, offset, &mut got).unwrap();
             for k in 0..req_sectors as i64 {
                 let sector = offset as i64 + k;
                 let sb = &got[k as usize * SECTOR_BYTES as usize..(k as usize + 1) * SECTOR_BYTES as usize];

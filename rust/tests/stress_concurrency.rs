@@ -127,7 +127,7 @@ fn concurrent_writers_readers_and_flusher_preserve_every_byte() {
                             offset: off,
                             size: SLOT_SECTORS,
                         };
-                        engine.submit(req, &buf);
+                        engine.submit(req, &buf).unwrap();
                         last[slot] = Some(gen);
                         // mid-run, once: a valve write larger than a
                         // region, straight over the live buffered slots —
@@ -145,7 +145,7 @@ fn concurrent_writers_readers_and_flusher_preserve_every_byte() {
                                 offset: 0,
                                 size: VALVE_SECTORS,
                             };
-                            engine.submit(req, &big);
+                            engine.submit(req, &big).unwrap();
                             valve = Some(gen);
                             // the valve covered every slot: it is now the
                             // newest copy everywhere until rewritten
@@ -177,7 +177,7 @@ fn concurrent_writers_readers_and_flusher_preserve_every_byte() {
                         };
                         let len = sectors as usize * sector;
                         buf[..len].fill(0xA5);
-                        engine.read(file_of(w), off, &mut buf[..len]);
+                        engine.read(file_of(w), off, &mut buf[..len]).unwrap();
                         for k in 0..sectors as i64 {
                             let sec = &buf[k as usize * sector..(k as usize + 1) * sector];
                             assert!(
@@ -218,7 +218,7 @@ fn concurrent_writers_readers_and_flusher_preserve_every_byte() {
         assert!(valve_gen[w].is_some(), "writer {w} issued its valve write");
         for slot in 0..SLOTS {
             let gen = last_gen[w][slot].expect("valve write covered every slot");
-            engine.read(file_of(w), slot_offset(slot), &mut buf);
+            engine.read(file_of(w), slot_offset(slot), &mut buf).unwrap();
             payload::fill_gen(file_of(w), slot_offset(slot) as i64, gen, &mut expect);
             assert_eq!(
                 buf, expect,
@@ -230,7 +230,7 @@ fn concurrent_writers_readers_and_flusher_preserve_every_byte() {
         let tail_sectors = VALVE_SECTORS - tail_off;
         let mut tail = vec![0u8; tail_sectors as usize * sector];
         let mut tail_expect = vec![0u8; tail_sectors as usize * sector];
-        engine.read(file_of(w), tail_off, &mut tail);
+        engine.read(file_of(w), tail_off, &mut tail).unwrap();
         payload::fill_gen(file_of(w), tail_off as i64, valve_gen[w].unwrap(), &mut tail_expect);
         assert_eq!(tail, tail_expect, "writer {w}: valve tail survives byte-exactly");
     }
@@ -312,7 +312,7 @@ fn many_clients_through_one_io_worker_preserve_every_byte() {
                             offset: off,
                             size: SLOT_SECTORS,
                         };
-                        engine.submit(req, &buf);
+                        engine.submit(req, &buf).unwrap();
                         last[slot] = Some(gen);
                     }
                     last
@@ -330,7 +330,7 @@ fn many_clients_through_one_io_worker_preserve_every_byte() {
     for w in 0..CLIENTS {
         for slot in 0..C_SLOTS {
             let gen = last_gen[w][slot].expect("every slot was rewritten");
-            engine.read(file_of(w), slot_offset(slot), &mut buf);
+            engine.read(file_of(w), slot_offset(slot), &mut buf).unwrap();
             payload::fill_gen(file_of(w), slot_offset(slot) as i64, gen, &mut expect);
             assert_eq!(
                 buf, expect,
