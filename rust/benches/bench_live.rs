@@ -17,7 +17,10 @@ use std::time::Instant;
 
 use std::sync::Arc;
 
-use ssdup::live::{self, payload, Backend, LiveConfig, LiveEngine, MemBackend, MemStore, SyntheticLatency};
+use ssdup::live::{
+    self, payload, Backend, FileBackend, LiveConfig, LiveEngine, MemBackend, MemStore,
+    SyntheticLatency,
+};
 use ssdup::server::metrics::LatencyHistogram;
 use ssdup::server::SystemKind;
 use ssdup::types::{Request, DEFAULT_REQ_SECTORS, SECTOR_BYTES};
@@ -113,6 +116,94 @@ fn read_latency(samples: usize) -> LatencyHistogram {
     });
     engine.shutdown();
     hist
+}
+
+/// Modeled spindle bandwidth of the shared HDD tier in the
+/// flush-scheduling A/B: ~35 MB/s, slow enough that flushing — not
+/// ingest — bounds the run.
+const PACED_HDD_US_PER_MIB: u64 = 30_000;
+
+/// Shared slow HDD tier for the flush-scheduling A/B: a real file per
+/// shard behind ONE pacing gate, so however many flushers run at once
+/// they contend for a single spindle's bandwidth. The gate fixes the
+/// aggregate flush rate; what coordination can change is how many
+/// already-superseded bytes reach the device at all.
+struct PacedHdd {
+    inner: FileBackend,
+    gate: Arc<std::sync::Mutex<()>>,
+}
+
+impl PacedHdd {
+    /// Take the spindle and dwell for the modeled service time of a
+    /// `bytes`-sized transfer; the caller holds the guard across the
+    /// real (page-cached, ~free) file write.
+    fn pace(&self, bytes: usize) -> std::sync::MutexGuard<'_, ()> {
+        let spindle = self.gate.lock().unwrap();
+        std::thread::sleep(std::time::Duration::from_micros(
+            (bytes as u64 * PACED_HDD_US_PER_MIB) >> 20,
+        ));
+        spindle
+    }
+}
+
+impl Backend for PacedHdd {
+    fn write_at(&self, offset: u64, data: &[u8]) -> std::io::Result<()> {
+        let _spindle = self.pace(data.len());
+        self.inner.write_at(offset, data)
+    }
+
+    fn write_vectored_at(&self, offset: u64, bufs: &[&[u8]]) -> std::io::Result<()> {
+        let _spindle = self.pace(bufs.iter().map(|b| b.len()).sum());
+        self.inner.write_vectored_at(offset, bufs)
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        self.inner.read_at(offset, buf)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn sync(&self) -> std::io::Result<()> {
+        self.inner.sync()
+    }
+
+    fn kind(&self) -> &'static str {
+        "paced-hdd"
+    }
+}
+
+/// One run of the flush-scheduling A/B: 4 shards on real files, the HDD
+/// tier shared through [`PacedHdd`], SSD budget small enough that sealed
+/// regions queue for flush mid-run. `budget = 0` disables the
+/// coordinator (and the hot-defer window that rides with it). Returns
+/// (drained MB/s, queued-for-flush bytes, superseded-at-flush bytes).
+fn run_flush_sched(dir: &std::path::Path, w: &Workload, budget: usize) -> (f64, u64, u64) {
+    std::fs::remove_dir_all(dir).ok();
+    let mut cfg = LiveConfig::new(SystemKind::OrangeFsBB)
+        .with_shards(4)
+        .with_ssd_mib(4)
+        .with_flush_concurrency(budget);
+    if budget > 0 {
+        cfg = cfg.with_hot_defer_window(std::time::Duration::from_millis(10));
+    }
+    let gate = Arc::new(std::sync::Mutex::new(()));
+    let base = dir.to_path_buf();
+    let engine = LiveEngine::with_backends(&cfg, move |i| {
+        let ssd = FileBackend::create(&base.join(format!("ssd-{i}.img"))).expect("ssd image");
+        let hdd = FileBackend::create(&base.join(format!("hdd-{i}.img"))).expect("hdd image");
+        (
+            Box::new(ssd) as Box<dyn Backend>,
+            Box::new(PacedHdd { inner: hdd, gate: Arc::clone(&gate) }) as Box<dyn Backend>,
+        )
+    });
+    let report = live::run_load_with(&engine, w, 4, true);
+    let stats = engine.shutdown();
+    let queued: u64 = stats.iter().map(|s| s.queued_for_flush_bytes).sum();
+    let at_flush: u64 = stats.iter().map(|s| s.superseded_at_flush_bytes).sum();
+    std::fs::remove_dir_all(dir).ok();
+    (report.drained_throughput_mbps(), queued, at_flush)
 }
 
 fn main() {
@@ -421,6 +512,73 @@ fn main() {
                 ("mbps", Json::Num(last)),
                 ("superseded_mib", Json::Num((skipped / (1 << 20)) as f64)),
             ]),
+        );
+    }
+
+    section("flush scheduling: coordinated vs uncoordinated, 4 shards on one shared HDD tier");
+    if Bench::should_run("live/flush-sched") {
+        // A/B the array-level flush coordinator on the rewrite workload
+        // with all four shards' HDD files behind one pacing gate (a
+        // single ~35 MB/s spindle). The burst outruns the per-shard SSD
+        // budget, so sealed regions queue for flush while the second
+        // rewrite pass keeps superseding their extents. The gate fixes
+        // aggregate flush bandwidth — running four flushers at once buys
+        // nothing — but every byte superseded *while queued* is a byte
+        // the spindle never absorbs, and the coordinator's token wait
+        // plus the hot-defer window widen exactly that window.
+        let fs_sectors = if fast { 8 * 2048 } else { 16 * 2048 };
+        let wfs = checkpoint_rewrite(4, fs_sectors, DEFAULT_REQ_SECTORS, 1_000, 59);
+        let fs_bytes = wfs.total_bytes() as f64;
+        // (drained mbps, queued-for-flush bytes, superseded-at-flush bytes)
+        let mut off = (0.0f64, 0u64, 0u64);
+        let mut on = (0.0f64, 0u64, 0u64);
+        for coordinated in [false, true] {
+            let label = if coordinated { "on" } else { "off" };
+            let dir = std::env::temp_dir()
+                .join(format!("ssdup-bench-flushsched-{label}-{}", std::process::id()));
+            let budget = if coordinated { 2 } else { 0 };
+            let mut last = (0.0f64, 0u64, 0u64);
+            b.run(&format!("live/flush-sched-{label}"), fs_bytes, || {
+                last = run_flush_sched(&dir, &wfs, budget);
+                bb(last.0)
+            });
+            if coordinated {
+                on = last;
+            } else {
+                off = last;
+            }
+        }
+        let at_flush_ratio = if on.1 == 0 { 0.0 } else { on.2 as f64 / on.1 as f64 };
+        println!(
+            "\nflush scheduling: uncoordinated {:.1} MB/s -> coordinated {:.1} MB/s drained \
+             ({:.1} MiB superseded while queued, {:.1}% of queued bytes)",
+            off.0,
+            on.0,
+            on.2 as f64 / (1u64 << 20) as f64,
+            at_flush_ratio * 100.0,
+        );
+        out.insert(
+            "flush_sched".into(),
+            Json::obj(vec![
+                ("uncoordinated_mbps", Json::Num(off.0)),
+                ("coordinated_mbps", Json::Num(on.0)),
+                ("superseded_at_flush", Json::Num(at_flush_ratio)),
+                ("queued_for_flush_mib", Json::Num(on.1 as f64 / (1u64 << 20) as f64)),
+            ]),
+        );
+        // the smoke contract (blocking in CI's SSDUP_BENCH_FAST=1 step):
+        // staggering flushers on a shared tier must not cost throughput,
+        // and the rewrite pass must supersede bytes while they queue
+        assert!(
+            on.0 >= off.0,
+            "coordinated drain slower than uncoordinated on a shared tier: {:.1} vs {:.1} MB/s",
+            on.0,
+            off.0
+        );
+        assert!(
+            on.2 > 0,
+            "rewrite burst superseded nothing while queued for flush (queued {} bytes)",
+            on.1
         );
     }
 

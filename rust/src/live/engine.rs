@@ -21,6 +21,7 @@ use crate::device::SeekModel;
 use crate::fs::StripeLayout;
 use crate::live::backend::{Backend, FileBackend, MemBackend, SyntheticLatency};
 use crate::live::fault::FaultSpec;
+use crate::live::flushsched::FlushCoordinator;
 use crate::live::payload;
 use crate::live::shard::{ReadError, Shard, ShardConfig, ShardRecovery, ShardStats, SubmitError};
 use crate::obs::{StageSet, TraceCollector, DEFAULT_RING_EVENTS};
@@ -64,6 +65,17 @@ pub struct LiveConfig {
     /// per-device submission-queue depth (`--io-depth`): max
     /// admitted-but-incomplete requests before enqueue backpressure
     pub io_depth: usize,
+    /// how many shards may run flush copy runs concurrently against the
+    /// shared HDD tier (`--flush-concurrency`). The flush coordinator
+    /// grants tokens to the fullest/stalest logs first; `0` disables
+    /// coordination entirely (every flusher free-runs, the pre-scheduler
+    /// baseline)
+    pub flush_concurrency: usize,
+    /// bounded age window (`--hot-defer-window`) inside which a flusher
+    /// defers a region whose queued extents are mostly *hot* (recently
+    /// rewritten), betting the next rewrite supersedes them in the
+    /// buffer. `Duration::ZERO` (the default) disables deferral
+    pub hot_defer_window: Duration,
 }
 
 impl Default for LiveConfig {
@@ -89,6 +101,8 @@ impl LiveConfig {
             trace: false,
             io_workers: 4,
             io_depth: 64,
+            flush_concurrency: 2,
+            hot_defer_window: Duration::ZERO,
         }
     }
 
@@ -141,6 +155,19 @@ impl LiveConfig {
         self
     }
 
+    /// Concurrent-flush budget over the shared HDD tier (`0` = no
+    /// coordinator, uncoordinated free-running flushers).
+    pub fn with_flush_concurrency(mut self, budget: usize) -> Self {
+        self.flush_concurrency = budget;
+        self
+    }
+
+    /// Hot-extent deferral window (`Duration::ZERO` = off).
+    pub fn with_hot_defer_window(mut self, window: Duration) -> Self {
+        self.hot_defer_window = window;
+        self
+    }
+
     fn shard_config(&self, shard_id: usize) -> ShardConfig {
         ShardConfig {
             system: self.system,
@@ -155,6 +182,7 @@ impl LiveConfig {
             group_commit_window: self.group_commit_window,
             io_workers: self.io_workers,
             io_depth: self.io_depth,
+            hot_defer_window: self.hot_defer_window,
         }
     }
 }
@@ -238,6 +266,9 @@ pub struct LiveEngine {
     /// one collector for all shards (and their group-commit sequencers);
     /// clone the `Arc` before `shutdown` to drain events afterwards
     obs: Arc<TraceCollector>,
+    /// the shared flush coordinator (`None` when `flush_concurrency = 0`)
+    /// — held for telemetry: token holders and the occupancy map
+    sched: Option<Arc<FlushCoordinator>>,
 }
 
 impl LiveEngine {
@@ -247,6 +278,11 @@ impl LiveEngine {
         obs
     }
 
+    fn coordinator(cfg: &LiveConfig) -> Option<Arc<FlushCoordinator>> {
+        (cfg.flush_concurrency > 0)
+            .then(|| Arc::new(FlushCoordinator::new(cfg.flush_concurrency, cfg.shards)))
+    }
+
     /// Build an engine over caller-provided `(ssd, hdd)` backend pairs.
     pub fn with_backends(
         cfg: &LiveConfig,
@@ -254,17 +290,17 @@ impl LiveEngine {
     ) -> Self {
         assert!(cfg.shards >= 1, "need at least one shard");
         let obs = Self::collector(cfg);
+        let sched = Self::coordinator(cfg);
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let (ssd, hdd) = backends(i);
-            shards.push(Arc::new(Shard::new_with_obs(
-                &cfg.shard_config(i),
-                ssd,
-                hdd,
-                Arc::clone(&obs),
-            )));
+            let mut shard = Shard::new_with_obs(&cfg.shard_config(i), ssd, hdd, Arc::clone(&obs));
+            if let Some(co) = &sched {
+                shard = shard.with_coordinator(Arc::clone(co));
+            }
+            shards.push(Arc::new(shard));
         }
-        Self::spawn_flushers(cfg, shards, obs)
+        Self::spawn_flushers(cfg, shards, obs, sched)
     }
 
     /// Reopen an engine over backends holding a previous run's state —
@@ -282,19 +318,28 @@ impl LiveEngine {
     ) -> io::Result<(Self, RecoveryReport)> {
         assert!(cfg.shards >= 1, "need at least one shard");
         let obs = Self::collector(cfg);
+        let sched = Self::coordinator(cfg);
         let mut shards = Vec::with_capacity(cfg.shards);
         let mut report = RecoveryReport::default();
         for i in 0..cfg.shards {
             let (ssd, hdd) = backends(i);
-            let (shard, rec) =
+            let (mut shard, rec) =
                 Shard::recover_with_obs(&cfg.shard_config(i), ssd, hdd, Arc::clone(&obs))?;
+            if let Some(co) = &sched {
+                shard = shard.with_coordinator(Arc::clone(co));
+            }
             report.shards.push(rec);
             shards.push(Arc::new(shard));
         }
-        Ok((Self::spawn_flushers(cfg, shards, obs), report))
+        Ok((Self::spawn_flushers(cfg, shards, obs, sched), report))
     }
 
-    fn spawn_flushers(cfg: &LiveConfig, shards: Vec<Arc<Shard>>, obs: Arc<TraceCollector>) -> Self {
+    fn spawn_flushers(
+        cfg: &LiveConfig,
+        shards: Vec<Arc<Shard>>,
+        obs: Arc<TraceCollector>,
+        sched: Option<Arc<FlushCoordinator>>,
+    ) -> Self {
         let stripe = StripeLayout { stripe_sectors: cfg.stripe_sectors, n_nodes: cfg.shards };
         let mut flushers = Vec::with_capacity(shards.len());
         for (i, shard) in shards.iter().enumerate() {
@@ -306,7 +351,7 @@ impl LiveEngine {
                     .expect("spawn flusher thread"),
             );
         }
-        Self { shards, flushers, stripe, obs }
+        Self { shards, flushers, stripe, obs, sched }
     }
 
     /// Per-shard fault seed: one base seed fans out into independent but
@@ -634,6 +679,18 @@ impl LiveEngine {
     /// export the trace afterwards.
     pub fn trace(&self) -> &Arc<TraceCollector> {
         &self.obs
+    }
+
+    /// The shared flush coordinator, if coordination is enabled
+    /// (`flush_concurrency >= 1`).
+    pub fn flush_coordinator(&self) -> Option<&Arc<FlushCoordinator>> {
+        self.sched.as_ref()
+    }
+
+    /// Shard ids currently holding a flush token (empty when
+    /// uncoordinated) — the live view of flush staggering.
+    pub fn flush_token_holders(&self) -> Vec<u32> {
+        self.sched.as_ref().map(|co| co.holders()).unwrap_or_default()
     }
 
     /// Merged per-stage ack-latency attribution across all shards.

@@ -1,0 +1,493 @@
+//! Array-aware flush scheduling: a global token budget over the HDD
+//! tier's bandwidth.
+//!
+//! Each shard's flusher owns its own SSD log, but every flusher drains
+//! into the *same* HDD array. Left uncoordinated, they open their
+//! traffic gates at once and their copy runs interleave on the disk —
+//! exactly the unsynchronized-maintenance collapse Zheng et al. describe
+//! for GC in SSD arrays. The [`FlushCoordinator`] is the array-wide
+//! antidote: one instance is shared by every shard of a
+//! [`crate::live::LiveEngine`], and a flusher must hold a [`FlushToken`]
+//! before it starts a flush cycle's copy runs. At most `budget` tokens
+//! are outstanding at a time, so flush cycles stagger instead of
+//! colliding.
+//!
+//! # Grant order
+//!
+//! When a token frees up it goes to the *most urgent* waiter, not the
+//! first one: higher SSD-log occupancy wins, ties break toward the
+//! waiter that has been queued longest (staleness), then toward the
+//! lower shard id for determinism. A waiter that gives up a timed
+//! [`FlushCoordinator::acquire`] slice (to re-check its own shutdown
+//! flag) stays registered, so seniority survives the caller's retry
+//! loop; a flusher that stops trying altogether must call
+//! [`FlushCoordinator::abandon`] so it cannot shadow-block the queue.
+//!
+//! # Starvation bound
+//!
+//! A strict budget could wedge a nearly-full log behind a slow peer:
+//! the shard would stall ingest (writers block on log space) while its
+//! token request sits in queue. Two escape hatches bound that wait —
+//! a waiter whose reported occupancy is at or above
+//! `starve_occupancy`, or one that has waited at least `starve_wait`,
+//! is granted *beyond* the budget. Such grants are counted
+//! ([`FlushCoordinator::beyond_budget_grants`]) so tests and telemetry
+//! can tell a healthy stagger from a budget that is simply too small.
+//!
+//! # Ingest-side signal
+//!
+//! Shards report their log occupancy on every acquire, so the
+//! coordinator doubles as the array's cheapest load map. The ingest
+//! path uses [`FlushCoordinator::is_hot`] to steer *new* streams on a
+//! standout-full shard away from its SSD log (LBICA's load-balancer
+//! framing): existing streams keep their stable route, but a shard
+//! whose log is both meaningfully full and clearly above the array
+//! mean starts new streams direct-to-HDD until it cools off.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Occupancy floor below which a shard is never considered hot for the
+/// ingest-bias signal, no matter how idle its peers are: steering
+/// streams off a half-empty log would only throw buffer hits away.
+const HOT_FLOOR: f32 = 0.5;
+
+/// A registered token request. `since` is the waiter's first enqueue
+/// for its current flush cycle and persists across timed-out acquire
+/// slices — it is the staleness half of the grant priority.
+#[derive(Clone, Copy, Debug)]
+struct Waiter {
+    shard: u32,
+    occupancy: f32,
+    since: Instant,
+}
+
+#[derive(Debug)]
+struct State {
+    /// Shards currently holding a token (length may exceed the budget
+    /// only via the starvation escape hatch).
+    holders: Vec<u32>,
+    /// Registered waiters, unordered (priority is computed at grant
+    /// time so occupancy refreshes take effect immediately).
+    waiters: Vec<Waiter>,
+    /// Last log occupancy each shard reported, in `[0, 1]`; indexed by
+    /// shard id. Drives both grant priority and the ingest-bias map.
+    occupancy: Vec<f32>,
+    /// Escape-hatch grants issued while the budget was exhausted.
+    beyond_budget_grants: u64,
+}
+
+/// Shared token/budget scheduler over the HDD tier's bandwidth. See the
+/// module docs for the model; see [`FlushToken`] for the RAII grant.
+#[derive(Debug)]
+pub struct FlushCoordinator {
+    budget: usize,
+    starve_occupancy: f32,
+    starve_wait: Duration,
+    state: Mutex<State>,
+    grants: Condvar,
+}
+
+impl FlushCoordinator {
+    /// A coordinator for `shards` shards granting at most `budget`
+    /// concurrent flush tokens. The starvation bound defaults to
+    /// occupancy ≥ 0.85 or 250 ms of queueing, whichever trips first.
+    pub fn new(budget: usize, shards: usize) -> Self {
+        assert!(budget >= 1, "flush budget must admit at least one shard");
+        Self {
+            budget,
+            starve_occupancy: 0.85,
+            starve_wait: Duration::from_millis(250),
+            state: Mutex::new(State {
+                holders: Vec::new(),
+                waiters: Vec::new(),
+                occupancy: vec![0.0; shards],
+                beyond_budget_grants: 0,
+            }),
+            grants: Condvar::new(),
+        }
+    }
+
+    /// Override the starvation escape hatch (tests pin it; `--ssd-mib`
+    /// extremes may want a different occupancy trip point).
+    pub fn with_starvation(mut self, occupancy: f32, wait: Duration) -> Self {
+        self.starve_occupancy = occupancy;
+        self.starve_wait = wait;
+        self
+    }
+
+    /// Wait up to `patience` for a flush token. `occupancy` is the
+    /// caller's current SSD-log fill fraction; it is recorded for the
+    /// load map and used as this waiter's grant priority. Returns
+    /// `None` on timeout — the waiter *stays queued* (seniority kept),
+    /// so callers loop `acquire` in short slices around their own
+    /// shutdown checks and call [`FlushCoordinator::abandon`] if they
+    /// stop trying.
+    pub fn acquire(self: &Arc<Self>, shard: u32, occupancy: f32, patience: Duration) -> Option<FlushToken> {
+        let deadline = Instant::now() + patience;
+        let mut st = self.state.lock().unwrap();
+        st.occupancy[shard as usize] = occupancy;
+        match st.waiters.iter_mut().find(|w| w.shard == shard) {
+            Some(w) => w.occupancy = occupancy,
+            None => {
+                let since = Instant::now();
+                st.waiters.push(Waiter { shard, occupancy, since });
+            }
+        }
+        loop {
+            if self.grantable(&st, shard) {
+                st.waiters.retain(|w| w.shard != shard);
+                if st.holders.len() >= self.budget {
+                    st.beyond_budget_grants += 1;
+                }
+                st.holders.push(shard);
+                // a grant can free the "best waiter" slot for the next
+                // queued shard while budget remains — wake them to check
+                self.grants.notify_all();
+                return Some(FlushToken { co: Arc::clone(self), shard });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st = self.grants.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Deregister `shard`'s pending token request (no-op when absent).
+    /// Required when a flusher exits its acquire loop without a grant —
+    /// a shut-down shard left in the queue would out-rank live waiters
+    /// forever.
+    pub fn abandon(&self, shard: u32) {
+        let mut st = self.state.lock().unwrap();
+        st.waiters.retain(|w| w.shard != shard);
+        self.grants.notify_all();
+    }
+
+    /// Grant check, under the state lock. Within budget only the single
+    /// highest-priority waiter may take the token (its grant re-wakes
+    /// the rest, so multiple free slots drain the queue in priority
+    /// order); past budget only the starvation escape hatch applies.
+    fn grantable(&self, st: &State, shard: u32) -> bool {
+        let Some(me) = st.waiters.iter().find(|w| w.shard == shard) else {
+            return false;
+        };
+        if st.holders.len() < self.budget {
+            let best = st.waiters.iter().min_by(|a, b| Self::rank(a, b));
+            best.map(|w| w.shard) == Some(shard)
+        } else {
+            me.occupancy >= self.starve_occupancy || me.since.elapsed() >= self.starve_wait
+        }
+    }
+
+    /// Priority order: `Less` = granted first. Fullest log, then the
+    /// longest-queued waiter, then the lowest shard id.
+    fn rank(a: &Waiter, b: &Waiter) -> std::cmp::Ordering {
+        b.occupancy
+            .total_cmp(&a.occupancy)
+            .then(a.since.cmp(&b.since))
+            .then(a.shard.cmp(&b.shard))
+    }
+
+    fn release(&self, shard: u32) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(i) = st.holders.iter().position(|&h| h == shard) {
+            st.holders.swap_remove(i);
+        }
+        self.grants.notify_all();
+    }
+
+    /// Update the load map outside an acquire (e.g. after a flush cycle
+    /// settles, when occupancy just dropped).
+    pub fn report_occupancy(&self, shard: u32, occupancy: f32) {
+        self.state.lock().unwrap().occupancy[shard as usize] = occupancy;
+    }
+
+    /// Last occupancy `shard` reported (0.0 until its first report).
+    pub fn occupancy_of(&self, shard: u32) -> f32 {
+        self.state.lock().unwrap().occupancy[shard as usize]
+    }
+
+    /// Mean of the last-reported occupancies across all shards.
+    pub fn mean_occupancy(&self) -> f32 {
+        let st = self.state.lock().unwrap();
+        if st.occupancy.is_empty() {
+            return 0.0;
+        }
+        st.occupancy.iter().sum::<f32>() / st.occupancy.len() as f32
+    }
+
+    /// Ingest-bias signal: is `shard`'s log both meaningfully full
+    /// (≥ 0.5) and at least `margin` above the array mean? New streams
+    /// arriving on a hot shard are started direct-to-HDD.
+    pub fn is_hot(&self, shard: u32, margin: f32) -> bool {
+        let st = self.state.lock().unwrap();
+        let occ = st.occupancy[shard as usize];
+        let mean = st.occupancy.iter().sum::<f32>() / st.occupancy.len().max(1) as f32;
+        occ >= HOT_FLOOR && occ >= mean + margin
+    }
+
+    /// Shards currently holding a flush token (snapshot, telemetry).
+    pub fn holders(&self) -> Vec<u32> {
+        self.state.lock().unwrap().holders.clone()
+    }
+
+    /// Number of outstanding tokens (snapshot, telemetry).
+    pub fn holder_count(&self) -> usize {
+        self.state.lock().unwrap().holders.len()
+    }
+
+    /// Grants issued past the budget by the starvation escape hatch.
+    pub fn beyond_budget_grants(&self) -> u64 {
+        self.state.lock().unwrap().beyond_budget_grants
+    }
+
+    /// The configured concurrency budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    #[cfg(test)]
+    fn waiter_count(&self) -> usize {
+        self.state.lock().unwrap().waiters.len()
+    }
+}
+
+/// RAII flush grant: holding one entitles the shard's flusher to run
+/// its copy runs against the HDD tier; dropping it releases the token
+/// and wakes the queue.
+#[derive(Debug)]
+pub struct FlushToken {
+    co: Arc<FlushCoordinator>,
+    shard: u32,
+}
+
+impl FlushToken {
+    /// The shard this token was granted to.
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+}
+
+impl Drop for FlushToken {
+    fn drop(&mut self) {
+        self.co.release(self.shard);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    const SLICE: Duration = Duration::from_millis(5);
+    const LONG: Duration = Duration::from_secs(10);
+
+    /// A starvation bound far beyond test runtimes, so only the budget
+    /// and priority rules are in play.
+    fn strict(budget: usize, shards: usize) -> Arc<FlushCoordinator> {
+        Arc::new(FlushCoordinator::new(budget, shards).with_starvation(2.0, LONG))
+    }
+
+    /// Spin until `pred` holds (10 s cap — the suite's poll-deadline
+    /// idiom for cross-thread state).
+    fn wait_for(mut pred: impl FnMut() -> bool) {
+        let deadline = Instant::now() + LONG;
+        while !pred() {
+            assert!(Instant::now() < deadline, "condition never held");
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn uncontended_acquire_is_immediate_and_drop_releases() {
+        let co = strict(2, 4);
+        let tok = co.acquire(3, 0.1, Duration::ZERO).expect("budget free");
+        assert_eq!(tok.shard(), 3);
+        assert_eq!(co.holders(), vec![3]);
+        assert_eq!(co.holder_count(), 1);
+        drop(tok);
+        assert_eq!(co.holder_count(), 0);
+        assert_eq!(co.beyond_budget_grants(), 0);
+    }
+
+    #[test]
+    fn budget_caps_concurrent_holders() {
+        let co = strict(1, 2);
+        let held = co.acquire(0, 0.5, Duration::ZERO).expect("first grant");
+        // the second shard cannot get in while the token is held ...
+        assert!(co.acquire(1, 0.5, SLICE).is_none());
+        assert_eq!(co.holder_count(), 1);
+        let (tx, rx) = mpsc::channel();
+        let co2 = Arc::clone(&co);
+        let waiter = thread::spawn(move || {
+            let tok = loop {
+                if let Some(t) = co2.acquire(1, 0.5, SLICE) {
+                    break t;
+                }
+            };
+            tx.send(()).unwrap();
+            tok
+        });
+        // ... and stays blocked until the holder releases
+        assert!(rx.recv_timeout(Duration::from_millis(50)).is_err());
+        drop(held);
+        rx.recv_timeout(LONG).expect("waiter granted after release");
+        assert_eq!(co.holders(), vec![1]);
+        drop(waiter.join().unwrap());
+        assert_eq!(co.holder_count(), 0);
+    }
+
+    #[test]
+    fn fullest_log_wins_the_next_token() {
+        let co = strict(1, 3);
+        let held = co.acquire(0, 0.3, Duration::ZERO).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let mut threads = Vec::new();
+        for (shard, occ) in [(1u32, 0.2f32), (2, 0.9)] {
+            let co = Arc::clone(&co);
+            let tx = tx.clone();
+            threads.push(thread::spawn(move || {
+                let tok = loop {
+                    if let Some(t) = co.acquire(shard, occ, SLICE) {
+                        break t;
+                    }
+                };
+                tx.send(shard).unwrap();
+                // hold briefly so the grants arrive strictly in turn
+                thread::sleep(Duration::from_millis(10));
+                drop(tok);
+            }));
+        }
+        wait_for(|| co.waiter_count() == 2);
+        drop(held);
+        assert_eq!(rx.recv_timeout(LONG).unwrap(), 2, "fullest log first");
+        assert_eq!(rx.recv_timeout(LONG).unwrap(), 1);
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn timed_out_waiter_keeps_seniority() {
+        let co = strict(1, 3);
+        let held = co.acquire(0, 0.5, Duration::ZERO).unwrap();
+        // shard 1 starts waiting first and keeps timing out in slices
+        let (tx1, rx1) = mpsc::channel();
+        let co1 = Arc::clone(&co);
+        let t1 = thread::spawn(move || {
+            let tok = loop {
+                if let Some(t) = co1.acquire(1, 0.5, SLICE) {
+                    break t;
+                }
+            };
+            tx1.send(()).unwrap();
+            tok
+        });
+        wait_for(|| co.waiter_count() == 1);
+        thread::sleep(Duration::from_millis(25)); // let at least one slice expire
+        // shard 2 joins later with the same occupancy
+        let (tx2, rx2) = mpsc::channel();
+        let co2 = Arc::clone(&co);
+        let t2 = thread::spawn(move || {
+            let tok = loop {
+                if let Some(t) = co2.acquire(2, 0.5, SLICE) {
+                    break t;
+                }
+            };
+            tx2.send(()).unwrap();
+            tok
+        });
+        wait_for(|| co.waiter_count() == 2);
+        drop(held);
+        // seniority survived shard 1's timed-out slices: it wins the tie
+        rx1.recv_timeout(LONG).expect("senior waiter granted first");
+        assert!(rx2.recv_timeout(Duration::from_millis(50)).is_err());
+        drop(t1.join().unwrap());
+        rx2.recv_timeout(LONG).expect("junior waiter granted after release");
+        drop(t2.join().unwrap());
+    }
+
+    #[test]
+    fn abandon_unblocks_junior_waiters() {
+        let co = strict(1, 3);
+        let held = co.acquire(0, 0.5, Duration::ZERO).unwrap();
+        // shard 1 queues with the higher occupancy, then gives up
+        assert!(co.acquire(1, 0.9, SLICE).is_none());
+        assert_eq!(co.waiter_count(), 1);
+        let (tx, rx) = mpsc::channel();
+        let co2 = Arc::clone(&co);
+        let t = thread::spawn(move || {
+            let tok = loop {
+                if let Some(t) = co2.acquire(2, 0.1, SLICE) {
+                    break t;
+                }
+            };
+            tx.send(()).unwrap();
+            tok
+        });
+        wait_for(|| co.waiter_count() == 2);
+        drop(held);
+        // shard 1 out-ranks shard 2 but is not actually waiting: until
+        // it abandons, shard 2 must not be granted
+        assert!(rx.recv_timeout(Duration::from_millis(50)).is_err());
+        co.abandon(1);
+        rx.recv_timeout(LONG).expect("granted once the senior ghost left");
+        drop(t.join().unwrap());
+    }
+
+    #[test]
+    fn starving_shard_is_granted_beyond_the_budget() {
+        let co =
+            Arc::new(FlushCoordinator::new(1, 2).with_starvation(0.85, Duration::from_secs(60)));
+        let _held = co.acquire(0, 0.5, Duration::ZERO).unwrap();
+        // occupancy at the trip point bypasses the exhausted budget
+        let tok = co.acquire(1, 0.9, SLICE).expect("escape hatch fires");
+        assert_eq!(co.holder_count(), 2);
+        assert_eq!(co.beyond_budget_grants(), 1);
+        drop(tok);
+        assert_eq!(co.holders(), vec![0]);
+    }
+
+    #[test]
+    fn long_wait_trips_the_starvation_hatch_too() {
+        let co =
+            Arc::new(FlushCoordinator::new(1, 2).with_starvation(2.0, Duration::from_millis(20)));
+        let _held = co.acquire(0, 0.5, Duration::ZERO).unwrap();
+        let t0 = Instant::now();
+        let tok = loop {
+            if let Some(t) = co.acquire(1, 0.1, SLICE) {
+                break t;
+            }
+            assert!(t0.elapsed() < LONG, "wait-based hatch never fired");
+        };
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert_eq!(co.beyond_budget_grants(), 1);
+        drop(tok);
+    }
+
+    #[test]
+    fn occupancy_map_feeds_the_ingest_bias() {
+        let co = strict(1, 4);
+        for (shard, occ) in [(0u32, 0.9f32), (1, 0.2), (2, 0.2), (3, 0.2)] {
+            co.report_occupancy(shard, occ);
+        }
+        assert_eq!(co.occupancy_of(0), 0.9);
+        assert!((co.mean_occupancy() - 0.375).abs() < 1e-6);
+        // shard 0 stands out above the mean and above the 0.5 floor
+        assert!(co.is_hot(0, 0.25));
+        assert!(!co.is_hot(1, 0.25), "cold shard is never hot");
+        // a full-but-uniform array has no standout to steer away from
+        for shard in 0..4 {
+            co.report_occupancy(shard, 0.9);
+        }
+        assert!(!co.is_hot(0, 0.25));
+        // below the floor, standing out is not enough
+        for shard in 0..4 {
+            co.report_occupancy(shard, 0.05);
+        }
+        co.report_occupancy(0, 0.45);
+        assert!(!co.is_hot(0, 0.25));
+    }
+}

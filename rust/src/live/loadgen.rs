@@ -322,10 +322,12 @@ pub fn run_reported(
                     std::thread::sleep(chunk);
                     slept += chunk;
                 }
-                let line = snapper.tick(
-                    Counters::from_stats(&engine.stats(), engine.trace().dropped_events()),
-                    t0.elapsed(),
-                );
+                let mut counters =
+                    Counters::from_stats(&engine.stats(), engine.trace().dropped_events());
+                // the holders gauge lives on the coordinator, not in
+                // the per-shard stats
+                counters.flush_token_holders = engine.flush_token_holders().len() as u64;
+                let line = snapper.tick(counters, t0.elapsed());
                 let _ = writeln!(out, "{line}");
                 // the last line is always a fresh end-of-run snapshot
                 if stop.load(Ordering::Acquire) {
@@ -561,7 +563,15 @@ mod tests {
             let j = crate::util::json::Json::parse(line).unwrap_or_else(|e| {
                 panic!("snapshot line must be valid JSON ({e:?}): {line}")
             });
-            for key in ["seq", "mbps", "writes_per_sync", "ssd_occupancy_bytes"] {
+            for key in [
+                "seq",
+                "mbps",
+                "writes_per_sync",
+                "ssd_occupancy_bytes",
+                "superseded_at_flush",
+                "flush_token_holders",
+                "hot_defers",
+            ] {
                 assert!(j.get(key).is_some(), "snapshot line missing {key}: {line}");
             }
         }

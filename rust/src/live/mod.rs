@@ -31,6 +31,10 @@
 //!   paper's traffic-aware pause gate (§2.4.2);
 //! * [`engine`] — N shards behind OrangeFS-style striping, wall-clock
 //!   drain, and byte-exact verification;
+//! * [`flushsched`] — the **array-level flush coordinator**
+//!   ([`FlushCoordinator`]): a token budget over the shared HDD tier
+//!   that staggers the per-shard flushers instead of letting them
+//!   collide (see *Flushing* below);
 //! * [`loadgen`] — closed-loop concurrent load generator over the
 //!   `workload::*` patterns, recording p50/p95/p99 request latency;
 //! * [`ownership`] — the per-shard **sector-ownership extent map**: which
@@ -124,6 +128,45 @@
 //!    [`LiveEngine::shutdown`] (drain + clean superblock), reopening
 //!    short-circuits without any log scan.
 //!
+//! # Flushing
+//!
+//! Each shard runs one flusher thread, but the HDD tier they drain into
+//! is *shared* — uncoordinated, N flushers opening their gates at once
+//! interfere on it exactly the way unsynchronized per-device maintenance
+//! wrecks array throughput. Three mechanisms keep the array side sane:
+//!
+//! * **Coordinator** ([`flushsched::FlushCoordinator`], on by default
+//!   with `--flush-concurrency 2`): before a flush cycle's copy runs, a
+//!   flusher acquires an HDD-bandwidth token; at most the budget's worth
+//!   of shards copy concurrently, and among waiters the coordinator
+//!   grants strictly by need — highest SSD-log occupancy first, then
+//!   longest wait, so the fullest/stalest log always drains next. The
+//!   wait is booked as the `flush_token_wait` stage. The token covers
+//!   copy runs and the covering HDD barrier only; superblock writes and
+//!   settling happen after release. `--flush-concurrency 0` disables
+//!   coordination (free-running flushers, the pre-scheduler baseline).
+//! * **Starvation bound**: a waiter whose log occupancy crosses the
+//!   starvation threshold (default 85%) or that has waited past the
+//!   starvation window (default 250 ms) is granted a token *beyond* the
+//!   budget — a nearly-full log is never blocked behind it (counted in
+//!   `FlushCoordinator::beyond_budget_grants`, asserted zero in tests
+//!   that expect the budget to hold). The same occupancy map closes the
+//!   loop on the ingest side: a shard whose log is markedly fuller than
+//!   the array mean stops *attracting new* SSD-routed streams (they are
+//!   biased to the HDD route; stable assignment of existing streams is
+//!   preserved — `ShardStats::biased_streams`).
+//! * **Hot/cold deferral** (`--hot-defer-window MS`, off by default):
+//!   the ownership map tracks per-extent rewrite heat; when a queued
+//!   region's surviving extents are mostly *hot* (recently superseded
+//!   LBAs — likely to be rewritten again), the flusher defers the region
+//!   within the bounded window, betting the next rewrite supersedes them
+//!   in the buffer so the HDD never sees the doomed copy. Deferral ends
+//!   early on drain, ingest backpressure, or high occupancy — it trades
+//!   *idle* time only, never blocks a writer. Effectiveness is measured
+//!   by `ShardStats::superseded_at_flush` (bytes superseded while
+//!   queued-for-flush / bytes queued): the flush-amplification the
+//!   deferral removed.
+//!
 //! Recovery replays surviving records in their claim (sequence) order,
 //! so the newest-copy-wins semantics above carry across a restart:
 //! rewrites recover to exactly the version an uncrashed run would have
@@ -188,9 +231,9 @@
 //!   `route` → `reserve` → `io_submit` → `queue_wait` →
 //!   `ssd_write`/`hdd_write` → `barrier_wait` → `publish`; reads into
 //!   `read_resolve` → `read_device`; the flusher
-//!   reports `flush_run` (SSD→HDD copy time) and `flush_pause` (gate
-//!   time); `sb_write` and `replay` cover superblock rewrites and
-//!   recovery.
+//!   reports `flush_run` (SSD→HDD copy time), `flush_pause` (gate
+//!   time), and `flush_token_wait` (coordinator queueing); `sb_write`
+//!   and `replay` cover superblock rewrites and recovery.
 //! * **Per-stage latency attribution** — each shard folds every span
 //!   into per-stage [`crate::server::metrics::LatencyHistogram`]s;
 //!   [`LiveReport::stage_summary`] prints the p50/p95/p99 decomposition
@@ -212,6 +255,7 @@ pub mod backend;
 pub mod commit;
 pub mod engine;
 pub mod fault;
+pub mod flushsched;
 pub mod loadgen;
 pub mod ownership;
 pub mod payload;
@@ -225,6 +269,7 @@ pub use backend::{
 pub use commit::GroupSync;
 pub use engine::{LiveConfig, LiveEngine, RecoveryReport, VerifyReport};
 pub use fault::{FaultBackend, FaultSpec, IoFault, RetryPolicy};
+pub use flushsched::{FlushCoordinator, FlushToken};
 pub use loadgen::{
     run as run_load, run_reported as run_load_reported, run_with as run_load_with, LiveReport,
     SnapshotOptions,

@@ -40,6 +40,7 @@
 //! ticket — never a newer claim that landed inside the same range.
 
 use crate::buffer::avl::AvlTree;
+use std::time::{Duration, Instant};
 
 /// Which tier holds the newest copy of a sector range.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,6 +65,15 @@ struct SsdExtent {
     /// write is still in flight. Trims preserve this, so every surviving
     /// fragment of a pending claim stays attributable to its writer.
     pending: u64,
+    /// Rewrite heat: how many buffered generations of this LBA range
+    /// this copy has superseded (0 for a first write). Carried onto the
+    /// newest copy at supersede time and preserved by trims, so the
+    /// flusher can tell a churning checkpoint range from cold data.
+    heat: u32,
+    /// When this copy last superseded an older one (`None` for a first
+    /// write). Bounds hot/cold deferral: a hot extent older than the
+    /// defer window flushes like any other.
+    hot_since: Option<Instant>,
 }
 
 /// Extent map over absolute disk LBAs (sectors). See the module docs.
@@ -200,9 +210,12 @@ impl OwnershipMap {
     /// Supersede the overlapped parts of any extents in `[lba, end)`:
     /// they are trimmed or removed, with slot offsets (and pending
     /// tickets) carried onto the remainders. Returns the superseded
-    /// sector count — exactly the stale sectors a flush will now skip.
-    fn supersede(&mut self, lba: i64, end: i64) -> i64 {
+    /// sector count — exactly the stale sectors a flush will now skip —
+    /// plus the hottest superseded extent's rewrite heat, so the caller
+    /// can carry the range's churn history onto the newest copy.
+    fn supersede(&mut self, lba: i64, end: i64) -> (i64, u32) {
         let mut superseded = 0;
+        let mut heat = 0;
         for (k, e) in self.overlapping(lba, end) {
             self.map.remove(k);
             let e_end = k + e.size;
@@ -219,8 +232,20 @@ impl OwnershipMap {
                 );
             }
             superseded += e_end.min(end) - k.max(lba);
+            heat = heat.max(e.heat);
         }
-        superseded
+        (superseded, heat)
+    }
+
+    /// Heat for a claim that just superseded `superseded` sectors whose
+    /// hottest prior copy had `prior` rewrites: a rewrite bumps the
+    /// count and stamps the moment; a first write is cold.
+    fn next_heat(superseded: i64, prior: u32) -> (u32, Option<Instant>) {
+        if superseded > 0 {
+            (prior.saturating_add(1), Some(Instant::now()))
+        } else {
+            (0, None)
+        }
     }
 
     /// Record that the newest copy of `[lba, lba+size)` now lives at
@@ -230,9 +255,13 @@ impl OwnershipMap {
     /// synchronous path). Returns the superseded sector count.
     pub fn claim(&mut self, lba: i64, size: i64, tier: Tier) -> i64 {
         debug_assert!(size > 0, "empty claim");
-        let superseded = self.supersede(lba, lba + size);
+        let (superseded, prior) = self.supersede(lba, lba + size);
         if let Tier::Ssd { region, ssd_offset } = tier {
-            self.map.insert(lba, SsdExtent { size, region, ssd_offset, pending: PUBLISHED });
+            let (heat, hot_since) = Self::next_heat(superseded, prior);
+            self.map.insert(
+                lba,
+                SsdExtent { size, region, ssd_offset, pending: PUBLISHED, heat, hot_since },
+            );
         }
         superseded
     }
@@ -245,9 +274,11 @@ impl OwnershipMap {
     pub fn reserve(&mut self, lba: i64, size: i64, region: usize, ssd_offset: i64) -> (i64, u64) {
         debug_assert!(size > 0, "empty reserve");
         debug_assert!(!self.direct_overlaps(lba, size), "reserve over in-flight direct write");
-        let superseded = self.supersede(lba, lba + size);
+        let (superseded, prior) = self.supersede(lba, lba + size);
         let ticket = self.alloc_ticket();
-        self.map.insert(lba, SsdExtent { size, region, ssd_offset, pending: ticket });
+        let (heat, hot_since) = Self::next_heat(superseded, prior);
+        self.map
+            .insert(lba, SsdExtent { size, region, ssd_offset, pending: ticket, heat, hot_since });
         (superseded, ticket)
     }
 
@@ -377,6 +408,28 @@ impl OwnershipMap {
             }
         }
         out
+    }
+
+    /// Hot/cold split of a region's queued data, in sectors: `(total,
+    /// hot)` where *hot* means the extent has superseded at least one
+    /// older buffered copy (`heat > 0`) and did so within `window`. The
+    /// flusher defers a predominantly hot region briefly so churn keeps
+    /// superseding in the buffer instead of costing HDD copies; the age
+    /// bound keeps a once-hot extent from dodging the flush forever.
+    /// `window == 0` classifies nothing as hot (deferral disabled).
+    pub fn region_heat(&self, region: usize, window: Duration) -> (i64, i64) {
+        let mut total = 0;
+        let mut hot = 0;
+        for (_, e) in self.map.in_order() {
+            if e.region != region {
+                continue;
+            }
+            total += e.size;
+            if e.heat > 0 && e.hot_since.is_some_and(|t| t.elapsed() < window) {
+                hot += e.size;
+            }
+        }
+        (total, hot)
     }
 
     /// A region's flush completed: every extent it still owns is settled
@@ -637,6 +690,44 @@ mod tests {
         m.finish_direct(t);
         assert_eq!(m.direct_in_flight(), 0);
         assert!(!m.pending_overlaps(1000, 50));
+    }
+
+    #[test]
+    fn rewrite_heat_rides_the_newest_copy() {
+        let hour = Duration::from_secs(3600);
+        let mut m = OwnershipMap::new();
+        m.claim(0, 100, ssd(0, 0));
+        assert_eq!(m.region_heat(0, hour), (100, 0), "first write is cold");
+        // full rewrite: the new copy carries heat 1
+        m.claim(0, 100, ssd(0, 100));
+        assert_eq!(m.region_heat(0, hour), (100, 100));
+        assert_eq!(m.region_heat(0, Duration::ZERO), (100, 0), "zero window disables heat");
+        // rewrite the middle into the other region: the remainders keep
+        // their heat, the middle gets hotter still
+        m.claim(30, 40, ssd(1, 0));
+        assert_eq!(m.region_heat(0, hour), (60, 60));
+        assert_eq!(m.region_heat(1, hour), (40, 40));
+        // a disjoint first write stays cold next to the hot extents
+        m.claim(500, 10, ssd(1, 40));
+        assert_eq!(m.region_heat(1, hour), (50, 40));
+    }
+
+    #[test]
+    fn heat_survives_reserve_publish_and_release_clears_it() {
+        let hour = Duration::from_secs(3600);
+        let mut m = OwnershipMap::new();
+        let (_, a) = m.reserve(0, 20, 0, 0);
+        m.publish(a, 0, 20);
+        let (stale, b) = m.reserve(0, 20, 0, 20);
+        assert_eq!(stale, 20);
+        assert_eq!(m.region_heat(0, hour), (20, 20), "pending rewrites count as hot");
+        m.publish(b, 0, 20);
+        assert_eq!(m.region_heat(0, hour), (20, 20), "publish preserves heat");
+        assert_eq!(m.release_region(0), 20);
+        assert_eq!(m.region_heat(0, hour), (0, 0));
+        // the settled range starts cold again on its next buffered write
+        m.claim(0, 20, ssd(0, 40));
+        assert_eq!(m.region_heat(0, hour), (20, 0));
     }
 
     #[test]

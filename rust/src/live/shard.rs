@@ -99,6 +99,7 @@ use crate::fs::{FileTable, SubRequest};
 use crate::live::backend::{Backend, IoQueue, IoReq};
 use crate::live::commit::GroupSync;
 use crate::live::fault::{retry_transient, RetryPolicy};
+use crate::live::flushsched::{FlushCoordinator, FlushToken};
 use crate::live::ownership::{OwnershipMap, Tier};
 use crate::live::record::{
     scan_region, LiveRecord, RecordHeader, Superblock, HEADER_SECTORS, MAX_SB_FILES,
@@ -114,6 +115,19 @@ const REGIONS: usize = 2;
 /// Flusher copy-buffer size: also the upper bound of one coalesced copy
 /// run, and thus the granularity of traffic-gate re-checks.
 const CHUNK_BYTES: usize = 1 << 20;
+
+/// Ingest-bias margin: a shard counts as *array-hot* when its SSD-log
+/// occupancy exceeds the array mean by this much (on top of the
+/// absolute floor in [`crate::live::flushsched`]). New detection
+/// streams assigned to a hot shard's SSD start direct-to-HDD instead,
+/// so the fullest log stops attracting more load while it drains.
+const HOT_BIAS_MARGIN: f32 = 0.15;
+
+/// Deferral pressure valve: a flusher holding back a hot region stops
+/// deferring the moment the shard's live occupancy reaches this
+/// fraction — buffer space is about to run out, and reclaiming the
+/// region outranks concentrating supersession.
+const DEFER_OCCUPANCY_CEILING: f32 = 0.75;
 
 /// Per-shard configuration (the engine derives one from its `LiveConfig`).
 #[derive(Clone, Copy, Debug)]
@@ -144,6 +158,12 @@ pub struct ShardConfig {
     /// submission-queue depth per device: max admitted-but-incomplete
     /// requests before `submit` exerts backpressure
     pub io_depth: usize,
+    /// hot/cold deferral bound: how long the flusher may hold back a
+    /// queued region whose surviving extents are predominantly *hot*
+    /// (recently rewritten), so further rewrites supersede in the
+    /// buffer instead of costing HDD copies. `Duration::ZERO` disables
+    /// deferral entirely.
+    pub hot_defer_window: Duration,
 }
 
 /// What [`Shard::recover`] found and rebuilt — per shard.
@@ -230,6 +250,28 @@ pub struct ShardStats {
     /// sticky degraded mode: the SSD refused a write (or filled up) and
     /// every new write now routes direct to the HDD
     pub degraded: bool,
+    /// bytes the flusher took up for flushing, snapshotted when it
+    /// claimed their region — the denominator of
+    /// [`ShardStats::superseded_at_flush`]
+    pub queued_for_flush_bytes: u64,
+    /// bytes superseded *while queued for flush*: between the flusher
+    /// taking up a region and its copy-run snapshot (the hot-defer
+    /// window sits in between), newer writes landed over queued
+    /// extents. This is supersession that deferral concentrated in the
+    /// buffer — HDD copies that never had to happen.
+    pub superseded_at_flush_bytes: u64,
+    /// flush cycles the hot/cold deferral actually held back (at least
+    /// one deferral wait taken before the copy runs started)
+    pub hot_defers: u64,
+    /// flush-coordinator token acquisitions (one per flush cycle when
+    /// the shard runs coordinated; 0 when uncoordinated)
+    pub flush_token_waits: u64,
+    /// wall time spent waiting for HDD-bandwidth tokens from the flush
+    /// coordinator (0 when uncontended: grants are immediate)
+    pub flush_token_wait_us: u64,
+    /// detection streams steered direct-to-HDD by the array-aware
+    /// ingest bias because this shard's log stood out as hot
+    pub biased_streams: u64,
     pub pct_sum: f64,
 }
 
@@ -262,6 +304,17 @@ impl ShardStats {
             0.0
         } else {
             self.flush_run_us as f64 / total as f64
+        }
+    }
+
+    /// Fraction of queued-for-flush bytes that were superseded while
+    /// they waited for the copy runs to start — the hot/cold deferral
+    /// payoff. 0.0 before any region was taken up.
+    pub fn superseded_at_flush(&self) -> f64 {
+        if self.queued_for_flush_bytes == 0 {
+            0.0
+        } else {
+            self.superseded_at_flush_bytes as f64 / self.queued_for_flush_bytes as f64
         }
     }
 }
@@ -428,6 +481,14 @@ pub struct Shard {
     max_buffer_sectors: i64,
     use_ssd: bool,
     flush_check: Duration,
+    /// engine-shared flush coordinator: the flusher holds one of its
+    /// HDD-bandwidth tokens across a flush cycle's copy runs, and the
+    /// ingest path consults its occupancy map to steer new streams off
+    /// an array-hot log. `None` = uncoordinated (standalone shards,
+    /// `--flush-concurrency 0`).
+    coordinator: Option<Arc<FlushCoordinator>>,
+    /// hot/cold deferral bound (see [`ShardConfig::hot_defer_window`])
+    hot_defer_window: Duration,
     shard_id: u32,
     /// byte offset of the superblock slots (just past both region logs)
     sb_base: u64,
@@ -631,11 +692,37 @@ impl Shard {
             max_buffer_sectors: half - HEADER_SECTORS,
             use_ssd: cfg.system.uses_ssd(),
             flush_check: cfg.flush_check,
+            coordinator: None,
+            hot_defer_window: cfg.hot_defer_window,
             shard_id: cfg.shard_id,
             sb_base: 2 * half as u64 * SECTOR_BYTES,
             sb_lock: Mutex::new(sb_writer),
             obs,
             stage_lat: Mutex::new(StageSet::new()),
+        }
+    }
+
+    /// Attach the engine's shared flush coordinator. Builder-style: the
+    /// coordinator spans every shard of an array and must be wired
+    /// before the flusher thread spawns, while the engine still owns
+    /// the shard by value. Standalone shards stay uncoordinated.
+    pub fn with_coordinator(mut self, co: Arc<FlushCoordinator>) -> Self {
+        self.coordinator = Some(co);
+        self
+    }
+
+    /// Live SSD-log occupancy in `[0, 1]`: bytes buffered and not yet
+    /// flushed or superseded, over the whole log capacity. This is the
+    /// priority the flush coordinator ranks waiters by, and the signal
+    /// behind its ingest-bias load map.
+    fn occupancy(&self, core: &ShardCore) -> f32 {
+        let s = &core.stats;
+        let live = s.ssd_bytes_buffered.saturating_sub(s.flushed_bytes + s.superseded_bytes);
+        let cap = sectors_to_bytes(2 * self.half_sectors);
+        if cap == 0 {
+            0.0
+        } else {
+            (live as f64 / cap as f64) as f32
         }
     }
 
@@ -1061,6 +1148,21 @@ impl Shard {
                 {
                     let det = core.detector.detect(&stream.reqs);
                     core.account_stream(&det);
+                    // array-aware ingest bias: when this shard's log
+                    // stands out as the array's hot spot, a *new* stream
+                    // the policy would buffer starts direct-to-HDD
+                    // instead — the fullest log stops attracting load
+                    // while it drains. Only the route decided here for
+                    // the next stream window is overridden; streams
+                    // already assigned keep their stable placement.
+                    if core.route == Route::Ssd && !core.degraded {
+                        if let Some(co) = &self.coordinator {
+                            if co.is_hot(self.shard_id, HOT_BIAS_MARGIN) {
+                                core.route = Route::Hdd;
+                                core.stats.biased_streams += 1;
+                            }
+                        }
+                    }
                     // a route change can unpause the traffic-aware flusher
                     self.work.notify_all();
                 }
@@ -1432,7 +1534,7 @@ impl Shard {
     pub(crate) fn flusher_loop(&self) {
         loop {
             // ---- acquire the next region to flush (or exit) ----
-            let (region, runs) = {
+            let (region, queued_sectors, occupancy) = {
                 let mut core = self.core.lock().unwrap();
                 let region = loop {
                     if core.shutdown || core.failed.is_some() {
@@ -1456,13 +1558,104 @@ impl Shard {
                 // reserve→publish: wait for the region's in-flight
                 // reserved slots to publish before snapshotting. The
                 // region stopped accepting appends when it was queued, so
-                // the count only falls — and the map state we snapshot
-                // below is final for this region.
+                // the count only falls — and the extent set this cycle
+                // works from can only shrink (supersession) from here.
                 while core.pending_slots[region] > 0 {
                     if core.shutdown || core.failed.is_some() {
                         return;
                     }
                     core = self.published.wait_timeout(core, self.flush_check).unwrap().0;
+                }
+                // the region is taken up now: everything surviving in it
+                // is queued-for-flush. Whatever vanishes between this
+                // snapshot and the copy-run snapshot below was
+                // superseded *while queued* — the superseded_at_flush
+                // numerator.
+                let queued_sectors = core.own.region_heat(region, Duration::ZERO).0;
+                // ---- hot/cold deferral: while the queued data is
+                // predominantly hot (recently rewritten), hold the copy
+                // runs back so the next rewrite generation supersedes in
+                // the buffer instead of costing HDD copies. Strictly
+                // bounded: the age window caps the wait, and drain,
+                // blocked ingest, or high occupancy end it immediately —
+                // nothing is ever skipped, only delayed, so recovery and
+                // drain semantics are untouched. ----
+                if self.hot_defer_window > Duration::ZERO {
+                    let t_defer = Instant::now();
+                    let blocked0 = core.stats.blocked_waits;
+                    let mut counted = false;
+                    loop {
+                        if core.shutdown || core.failed.is_some() {
+                            return;
+                        }
+                        // a drain flushes everything now; a blocked
+                        // writer or a filling log needs the region back
+                        if core.drained
+                            || core.stats.blocked_waits > blocked0
+                            || self.occupancy(&core) >= DEFER_OCCUPANCY_CEILING
+                        {
+                            break;
+                        }
+                        let elapsed = t_defer.elapsed();
+                        if elapsed >= self.hot_defer_window {
+                            break;
+                        }
+                        let (total, hot) = core.own.region_heat(region, self.hot_defer_window);
+                        // flush once the region is mostly cold (or fully
+                        // superseded — releasing it is then free space)
+                        if total == 0 || hot * 2 < total {
+                            break;
+                        }
+                        if !counted {
+                            // count each deferring cycle once, before its
+                            // first wait (observable while deferring)
+                            counted = true;
+                            core.stats.hot_defers += 1;
+                        }
+                        let slice = self.flush_check.min(self.hot_defer_window - elapsed);
+                        core = self.work.wait_timeout(core, slice).unwrap().0;
+                    }
+                }
+                (region, queued_sectors, self.occupancy(&core))
+            };
+
+            // ---- flush-token acquire, no lock held: at most the
+            // coordinator's budget of shards run copy runs against the
+            // shared HDD tier at once. Short acquire slices keep the
+            // shutdown check live; a timed-out slice keeps the waiter's
+            // seniority, so the loop must abandon the request on exit.
+            // The wait is booked on every acquisition (zero-length when
+            // uncontended) so coordinated runs always trace the stage. ----
+            let t_token = Instant::now();
+            let token: Option<FlushToken> = match &self.coordinator {
+                Some(co) => loop {
+                    if let Some(t) = co.acquire(self.shard_id, occupancy, self.flush_check) {
+                        break Some(t);
+                    }
+                    let core = self.core.lock().unwrap();
+                    if core.shutdown || core.failed.is_some() {
+                        drop(core);
+                        co.abandon(self.shard_id);
+                        return;
+                    }
+                },
+                None => None,
+            };
+            let t_granted = Instant::now();
+            if self.coordinator.is_some() {
+                self.book_spans(&[(Stage::FlushTokenWait, t_token, t_granted)], None);
+            }
+
+            // ---- copy-run snapshot ----
+            let runs = {
+                let mut core = self.core.lock().unwrap();
+                if core.shutdown || core.failed.is_some() {
+                    return; // the token (if any) releases by RAII
+                }
+                if self.coordinator.is_some() {
+                    core.stats.flush_token_waits += 1;
+                    core.stats.flush_token_wait_us +=
+                        t_granted.duration_since(t_token).as_micros() as u64;
                 }
                 let region_base = region as u64 * self.half_sectors as u64 * SECTOR_BYTES;
                 // reset the region's append metadata; what actually gets
@@ -1473,22 +1666,29 @@ impl Shard {
                 // suppression by construction
                 core.pipeline.reset_flushing();
                 core.stats.flushes += 1;
+                let remaining = core.own.region_heat(region, Duration::ZERO).0;
+                core.stats.queued_for_flush_bytes += sectors_to_bytes(queued_sectors);
+                core.stats.superseded_at_flush_bytes +=
+                    sectors_to_bytes(queued_sectors - remaining);
                 let runs = copy_runs(core.own.region_extents(region), region_base, CHUNK_BYTES);
                 core.stats.flush_runs += runs.len() as u64;
-                (region, runs)
+                runs
             };
 
             // ---- gate + copy, no lock held: one gate check per
             // coalesced run, gathered from the log with cheap SSD reads;
-            // up to `flush_window` runs are enqueued on the HDD
-            // submission queue as ONE batch, so byte-adjacent runs (an
-            // extent split at chunk granularity) coalesce into single
-            // vectored HDD writes and the batch completes under one
-            // covering ticket ----
+            // up to `flush_window` *disjoint* runs are enqueued on the
+            // HDD submission queue as ONE batch, completing under one
+            // covering ticket. Byte-adjacent runs are the sub-runs of an
+            // extent split at `CHUNK_BYTES` — they are submitted in
+            // separate batches, or the queue's vectored coalescing would
+            // recombine them into one oversized device write and defeat
+            // the cap the split exists to enforce. ----
             let mut run_us = 0u64;
             let mut max_ticket = 0u64;
             let mut batch: Vec<IoReq> = Vec::with_capacity(self.flush_window);
             let mut t_batch: Option<Instant> = None;
+            let mut batch_end = 0u64;
             let mut runs = runs.into_iter().peekable();
             while let Some(run) = runs.next() {
                 if !self.gate_run() {
@@ -1515,22 +1715,22 @@ impl Shard {
                     self.fail(format!("flusher: ssd backend read: {e}"));
                     return;
                 }
+                // chunk-cap boundary: this run continues the previous
+                // one byte-for-byte, so keep them in separate device
+                // submissions (see the block comment above)
+                if !batch.is_empty()
+                    && batch_end == run.hdd_byte
+                    && !self.submit_flush_batch(&mut batch, &mut t_batch, &mut run_us, &mut max_ticket)
+                {
+                    return;
+                }
                 t_batch.get_or_insert(t_run);
+                batch_end = run.hdd_byte + run.len as u64;
                 batch.push(IoReq::owned(run.hdd_byte, buf.into_boxed_slice()));
-                if batch.len() >= self.flush_window || runs.peek().is_none() {
-                    let t0 = t_batch.take().expect("batch start stamped with its first run");
-                    match self.hdd_q.submit(std::mem::take(&mut batch)).wait() {
-                        Ok(c) => {
-                            max_ticket = max_ticket.max(c.ticket);
-                            let t_done = Instant::now();
-                            run_us += t_done.duration_since(t0).as_micros() as u64;
-                            self.book_spans(&[(Stage::FlushRun, t0, t_done)], None);
-                        }
-                        Err(e) => {
-                            self.fail(format!("flusher: hdd backend write: {e}"));
-                            return;
-                        }
-                    }
+                if (batch.len() >= self.flush_window || runs.peek().is_none())
+                    && !self.submit_flush_batch(&mut batch, &mut t_batch, &mut run_us, &mut max_ticket)
+                {
+                    return;
                 }
             }
 
@@ -1552,6 +1752,11 @@ impl Shard {
                 self.fail(format!("flusher: hdd sync: {e}"));
                 return;
             }
+            // the HDD-bandwidth token covers exactly the copy runs plus
+            // their covering barrier; the superblock write and the
+            // settle phase below are SSD-side and lock-side work — no
+            // reason to keep a peer shard off the HDD for them
+            drop(token);
             let sb = {
                 let mut core = self.core.lock().unwrap();
                 core.sb.epoch += 1;
@@ -1577,7 +1782,7 @@ impl Shard {
             // ---- complete: settle the surviving extents (their newest
             // copy is the HDD one now), wait out readers still pinning
             // the region, free it, wake blocked ingest ----
-            {
+            let occ_after = {
                 let mut core = self.core.lock().unwrap();
                 core.stats.flush_run_us += run_us;
                 core.region_max_seq[region] = 0;
@@ -1599,8 +1804,44 @@ impl Shard {
                     core = self.work.wait_timeout(core, self.flush_check).unwrap().0;
                 }
                 core.pipeline.flush_done();
+                self.occupancy(&core)
+            };
+            if let Some(co) = &self.coordinator {
+                // refresh the load map the moment occupancy drops, so
+                // the ingest bias and grant priority track reality
+                // between this shard's acquires
+                co.report_occupancy(self.shard_id, occ_after);
             }
             self.space.notify_all();
+        }
+    }
+
+    /// Submit the flusher's pending batch (if any) and park on its
+    /// completion. Books one `FlushRun` span per batch. Returns `false`
+    /// after recording a fatal HDD failure — the flush cycle must stop.
+    fn submit_flush_batch(
+        &self,
+        batch: &mut Vec<IoReq>,
+        t_batch: &mut Option<Instant>,
+        run_us: &mut u64,
+        max_ticket: &mut u64,
+    ) -> bool {
+        if batch.is_empty() {
+            return true;
+        }
+        let t0 = t_batch.take().expect("batch start stamped with its first run");
+        match self.hdd_q.submit(std::mem::take(batch)).wait() {
+            Ok(c) => {
+                *max_ticket = (*max_ticket).max(c.ticket);
+                let t_done = Instant::now();
+                *run_us += t_done.duration_since(t0).as_micros() as u64;
+                self.book_spans(&[(Stage::FlushRun, t0, t_done)], None);
+                true
+            }
+            Err(e) => {
+                self.fail(format!("flusher: hdd backend write: {e}"));
+                false
+            }
         }
     }
 
@@ -1746,6 +1987,7 @@ mod tests {
             group_commit_window: Duration::ZERO,
             io_workers: 4,
             io_depth: 64,
+            hot_defer_window: Duration::ZERO,
         }
     }
 
@@ -2204,6 +2446,156 @@ mod tests {
     }
 
     #[test]
+    fn copy_runs_cap_boundary_arithmetic() {
+        let sb = SECTOR_BYTES;
+        let cap_sectors = (CHUNK_BYTES as u64 / sb) as i64;
+        // an extent of exactly chunk_cap is one run — no empty trailer
+        let runs = copy_runs(vec![(0, cap_sectors, 0)], 0, CHUNK_BYTES);
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].len, CHUNK_BYTES);
+        assert_eq!(runs[0].segs, vec![(0, CHUNK_BYTES)]);
+        // one sector over: split into [cap, 1] with exact boundaries on
+        // both the HDD side and the log side
+        let runs = copy_runs(vec![(0, cap_sectors + 1, 0)], 0, CHUNK_BYTES);
+        assert_eq!(runs.len(), 2);
+        assert_eq!((runs[0].len, runs[1].len), (CHUNK_BYTES, sb as usize));
+        assert_eq!(runs[1].hdd_byte, CHUNK_BYTES as u64);
+        assert_eq!(runs[1].segs, vec![(CHUNK_BYTES as u64, sb as usize)]);
+        // an adjacent extent fills the run exactly to the cap, never
+        // past it; the remainder starts its own run at the boundary
+        let runs = copy_runs(
+            vec![(0, cap_sectors - 4, 0), (cap_sectors - 4, 8, cap_sectors - 4)],
+            0,
+            CHUNK_BYTES,
+        );
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].len, CHUNK_BYTES, "first run fills exactly to the cap");
+        assert_eq!(
+            runs[0].segs,
+            vec![
+                (0, ((cap_sectors - 4) * sb as i64) as usize),
+                (((cap_sectors - 4) * sb as i64) as u64, 4 * sb as usize),
+            ]
+        );
+        assert_eq!(runs[1].hdd_byte, CHUNK_BYTES as u64);
+        assert_eq!(runs[1].len, 4 * sb as usize);
+        assert_eq!(runs[1].segs, vec![(CHUNK_BYTES as u64, 4 * sb as usize)]);
+    }
+
+    #[test]
+    fn oversized_extent_flushes_as_separate_capped_device_writes() {
+        // five contiguous 512-sector records merge into one 2560-sector
+        // extent — larger than the 2048-sector copy chunk. The flusher
+        // must issue the split sub-runs as separate device submissions:
+        // batched together, the queue's byte-adjacent coalescing would
+        // recombine them into a single oversized HDD write, defeating
+        // the cap the split exists to enforce.
+        let shard = mem_shard(SystemKind::OrangeFsBB, 8192);
+        for k in 0..5 {
+            let off = k * 512;
+            shard.submit(&sub(1, off, 512), &gen_payload(1, off, 512, 1)).unwrap();
+        }
+        shard.begin_drain();
+        shard.flusher_loop();
+        let stats = shard.stats();
+        assert_eq!(stats.flush_runs, 2, "2560 sectors split at the 2048-sector chunk cap");
+        // OrangeFsBB routes nothing direct, so the HDD queue carries
+        // exactly the flusher's copy runs
+        let hdd = shard.hdd_q.stats();
+        assert_eq!(hdd.reqs, 2, "one request per copy run");
+        assert_eq!(hdd.device_writes, 2, "sub-runs of an over-cap extent must not recombine");
+        let mut got = vec![0u8; 2560 * SECTOR_BYTES as usize];
+        shard.read_hdd(1, 0, &mut got).unwrap();
+        assert_eq!(got, gen_payload(1, 0, 2560, 1), "split flush must stay byte-exact");
+    }
+
+    #[test]
+    fn hot_deferral_concentrates_supersession_in_the_buffer() {
+        // each region holds exactly four 17-sector records; the defer
+        // window is effectively unbounded so only the test's own events
+        // (supersession emptying the region, then the drain) end it
+        let mut c = cfg(SystemKind::OrangeFsBB, 136);
+        c.hot_defer_window = Duration::from_secs(3600);
+        let shard = Arc::new(Shard::new(
+            &c,
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+        ));
+        // fill region 0 with two extents and their immediate rewrites:
+        // every surviving extent is hot (heat 1) when the region queues
+        shard.submit(&sub(1, 0, 16), &gen_payload(1, 0, 16, 1)).unwrap();
+        shard.submit(&sub(1, 16, 16), &gen_payload(1, 16, 16, 1)).unwrap();
+        shard.submit(&sub(1, 0, 16), &gen_payload(1, 0, 16, 2)).unwrap();
+        shard.submit(&sub(1, 16, 16), &gen_payload(1, 16, 16, 2)).unwrap();
+        let flusher = Arc::clone(&shard);
+        let handle = std::thread::spawn(move || flusher.flusher_loop());
+        // the flusher takes region 0 up (32 queued sectors, all hot)
+        // and defers instead of copying
+        let t0 = Instant::now();
+        let deadline = Duration::from_secs(10);
+        while shard.stats().hot_defers == 0 {
+            assert!(t0.elapsed() < deadline, "flusher never deferred the hot region");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(shard.stats().flushed_bytes, 0, "deferral held the copy runs back");
+        // rewrite the queued extents while the flusher waits: the new
+        // copies land in region 1 and supersede the queued ones in the
+        // buffer — the HDD never sees generation 2
+        shard.submit(&sub(1, 0, 16), &gen_payload(1, 0, 16, 3)).unwrap();
+        shard.submit(&sub(1, 16, 16), &gen_payload(1, 16, 16, 3)).unwrap();
+        shard.begin_drain();
+        handle.join().unwrap();
+        let stats = shard.stats();
+        assert_eq!(
+            stats.superseded_at_flush_bytes,
+            32 * SECTOR_BYTES,
+            "both queued extents superseded while the flusher deferred"
+        );
+        // region 0 queued 32 sectors; region 1's drain flush queued the
+        // 32 replacement sectors (none of which superseded in queue)
+        assert_eq!(stats.queued_for_flush_bytes, 64 * SECTOR_BYTES);
+        assert!((stats.superseded_at_flush() - 0.5).abs() < 1e-9);
+        assert!(stats.hot_defers >= 1);
+        assert_eq!(stats.flush_token_waits, 0, "uncoordinated shard takes no tokens");
+        assert_eq!(
+            stats.flushed_bytes + stats.superseded_bytes,
+            stats.ssd_bytes_buffered,
+            "conservation: buffered == flushed + superseded"
+        );
+        // the drain settles generation 3 byte-exactly
+        let mut hdd = vec![0u8; 32 * SECTOR_BYTES as usize];
+        shard.read_hdd(1, 0, &mut hdd).unwrap();
+        assert_eq!(hdd, gen_payload(1, 0, 32, 3));
+    }
+
+    #[test]
+    fn coordinated_flush_books_token_stats_and_stage() {
+        let co = Arc::new(FlushCoordinator::new(1, 1));
+        let shard = Shard::new(
+            &cfg(SystemKind::OrangeFsBB, 4096),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+        )
+        .with_coordinator(Arc::clone(&co));
+        shard.submit(&sub(1, 0, 64), &gen_payload(1, 0, 64, 1)).unwrap();
+        shard.begin_drain();
+        shard.flusher_loop();
+        let stats = shard.stats();
+        assert_eq!(stats.flush_token_waits, 1, "one token per flush cycle");
+        assert_eq!(co.holder_count(), 0, "token released after the covering barrier");
+        assert_eq!(co.beyond_budget_grants(), 0);
+        // the wait is booked even when the grant was immediate, so a
+        // coordinated run always carries the stage
+        let lat = shard.stage_latency();
+        assert_eq!(lat.get(Stage::FlushTokenWait).count(), 1);
+        // the settle phase refreshed the load map: drained log = cold
+        assert_eq!(co.occupancy_of(0), 0.0);
+        let mut hdd = vec![0u8; 64 * SECTOR_BYTES as usize];
+        shard.read_hdd(1, 0, &mut hdd).unwrap();
+        assert_eq!(hdd, gen_payload(1, 0, 64, 1));
+    }
+
+    #[test]
     fn recover_replays_a_dirty_log_and_preserves_rewrites() {
         use crate::live::backend::MemStore;
         // build a shard over shared stores, buffer data (including a
@@ -2392,9 +2784,11 @@ mod tests {
         assert_eq!(stats.mean_percentage(), 0.0);
         assert_eq!(stats.writes_per_sync(), 0.0);
         assert_eq!(stats.flush_duty_cycle(), 0.0);
+        assert_eq!(stats.superseded_at_flush(), 0.0);
         assert!(stats.mean_percentage().is_finite());
         assert!(stats.writes_per_sync().is_finite());
         assert!(stats.flush_duty_cycle().is_finite());
+        assert!(stats.superseded_at_flush().is_finite());
         assert_eq!(ssd_ratio(&[]), 0.0);
         assert_eq!(ssd_ratio(&[stats]), 0.0);
         // a freshly constructed shard reports the same zeros
@@ -2403,6 +2797,7 @@ mod tests {
         assert_eq!(live.mean_percentage(), 0.0);
         assert_eq!(live.writes_per_sync(), 0.0);
         assert_eq!(live.flush_duty_cycle(), 0.0);
+        assert_eq!(live.superseded_at_flush(), 0.0);
     }
 
     /// [`MemBackend`] wrapper whose writes block on a shared gate while

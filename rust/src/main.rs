@@ -23,6 +23,7 @@ const VALUE_OPTS: &[&str] = &[
     "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
     "queue", "shards", "backend", "clients", "dir", "crash-at", "group-commit-window",
     "trace", "stats-interval", "require", "io-workers", "io-depth", "fault-spec",
+    "flush-concurrency", "hot-defer-window",
 ];
 
 fn main() {
@@ -64,6 +65,10 @@ fn main() {
                  \x20          [--no-group-commit]         per-record fsync baseline\n\
                  \x20          [--io-workers N]  I/O worker threads per device queue (default 4)\n\
                  \x20          [--io-depth N]    submission-queue depth per device (default 64)\n\
+                 \x20          [--flush-concurrency N]  shards flushing the shared HDD tier at\n\
+                 \x20                           once (default 2; 0 = uncoordinated flushers)\n\
+                 \x20          [--hot-defer-window MS]  defer flushing mostly-hot log regions\n\
+                 \x20                           up to MS ms (default 0 = off)\n\
                  \x20          [--trace OUT.json]     record spans, export chrome://tracing JSON\n\
                  \x20          [--stats-interval MS]  emit JSON-line telemetry snapshots on stderr\n\
                  \x20          [--crash-at N]   kill the process (no shutdown) after N acked requests\n\
@@ -269,6 +274,8 @@ fn cmd_live(args: &Args) -> i32 {
     let window_us: u64 = args.get_parse("group-commit-window", 0).unwrap_or(0);
     let io_workers: usize = args.get_parse("io-workers", 4).unwrap_or(4).max(1);
     let io_depth: usize = args.get_parse("io-depth", 64).unwrap_or(64).max(1);
+    let flush_concurrency: usize = args.get_parse("flush-concurrency", 2).unwrap_or(2);
+    let hot_defer_ms: u64 = args.get_parse("hot-defer-window", 0).unwrap_or(0);
     let cfg = LiveConfig::new(system)
         .with_shards(shards)
         .with_ssd_mib(ssd_mib)
@@ -276,6 +283,8 @@ fn cmd_live(args: &Args) -> i32 {
         .with_group_commit_window(std::time::Duration::from_micros(window_us))
         .with_io_workers(io_workers)
         .with_io_depth(io_depth)
+        .with_flush_concurrency(flush_concurrency)
+        .with_hot_defer_window(std::time::Duration::from_millis(hot_defer_ms))
         .with_trace(trace_path.is_some());
 
     // --recover: reopen a previous `--backend file` run's images (same

@@ -33,6 +33,13 @@ pub struct Counters {
     pub io_retries: u64,
     pub transient_faults: u64,
     pub degraded_shards: u64,
+    pub queued_for_flush_bytes: u64,
+    pub superseded_at_flush_bytes: u64,
+    pub hot_defers: u64,
+    /// gauge, not a counter: shards holding a flush token right now.
+    /// `from_stats` cannot see the coordinator, so the sampler fills
+    /// this in (stays 0 when uncoordinated)
+    pub flush_token_holders: u64,
 }
 
 impl Counters {
@@ -55,6 +62,9 @@ impl Counters {
             c.io_retries += s.io_retries;
             c.transient_faults += s.transient_faults;
             c.degraded_shards += s.degraded as u64;
+            c.queued_for_flush_bytes += s.queued_for_flush_bytes;
+            c.superseded_at_flush_bytes += s.superseded_at_flush_bytes;
+            c.hot_defers += s.hot_defers;
         }
         c
     }
@@ -135,6 +145,20 @@ impl Snapshotter {
                 Json::Num(d(cur.transient_faults, self.prev.transient_faults) as f64),
             ),
             ("degraded_shards".to_string(), Json::Num(cur.degraded_shards as f64)),
+            // flush-amplification saved this interval: of the bytes that
+            // were queued for flushing, how many a rewrite superseded in
+            // the buffer before the copy ran
+            (
+                "superseded_at_flush".to_string(),
+                Json::Num(ratio(
+                    d(cur.superseded_at_flush_bytes, self.prev.superseded_at_flush_bytes) as f64,
+                    d(cur.queued_for_flush_bytes, self.prev.queued_for_flush_bytes) as f64,
+                )),
+            ),
+            ("hot_defers".to_string(), Json::Num(d(cur.hot_defers, self.prev.hot_defers) as f64)),
+            // gauge: how many shards hold a flush token right now — the
+            // live view of coordinator staggering
+            ("flush_token_holders".to_string(), Json::Num(cur.flush_token_holders as f64)),
         ]);
         self.prev = cur;
         self.elapsed = since_start;
@@ -197,6 +221,39 @@ mod tests {
     }
 
     #[test]
+    fn superseded_at_flush_is_an_interval_ratio_and_holders_a_gauge() {
+        let mut s = Snapshotter::new();
+        let a = Counters {
+            queued_for_flush_bytes: 1_000,
+            superseded_at_flush_bytes: 100,
+            flush_token_holders: 2,
+            hot_defers: 1,
+            ..Default::default()
+        };
+        let j = s.tick(a, Duration::from_secs(1));
+        assert!((get_num(&j, "superseded_at_flush") - 0.1).abs() < 1e-9);
+        assert_eq!(get_num(&j, "flush_token_holders"), 2.0);
+        assert_eq!(get_num(&j, "hot_defers"), 1.0);
+        // second interval: 1000 more bytes queued, 500 superseded in
+        // queue — the ratio covers this interval only, not the total
+        let b = Counters {
+            queued_for_flush_bytes: 2_000,
+            superseded_at_flush_bytes: 600,
+            flush_token_holders: 0,
+            hot_defers: 1,
+            ..Default::default()
+        };
+        let j = s.tick(b, Duration::from_secs(2));
+        assert!((get_num(&j, "superseded_at_flush") - 0.5).abs() < 1e-9);
+        assert_eq!(get_num(&j, "flush_token_holders"), 0.0, "gauge, not diffed");
+        assert_eq!(get_num(&j, "hot_defers"), 0.0, "counter, diffed");
+        // an idle interval divides zero by zero and reports 0.0
+        let j = s.tick(b, Duration::from_secs(3));
+        assert_eq!(get_num(&j, "superseded_at_flush"), 0.0);
+        assert!(get_num(&j, "superseded_at_flush").is_finite());
+    }
+
+    #[test]
     fn zero_everything_is_all_zeros_not_nan() {
         let mut s = Snapshotter::new();
         let j = s.tick(Counters::default(), Duration::ZERO);
@@ -214,12 +271,20 @@ mod tests {
         a.flush_run_us = 7;
         a.io_retries = 4;
         a.degraded = true;
+        a.queued_for_flush_bytes = 80;
+        a.superseded_at_flush_bytes = 20;
         let mut b = ShardStats::default();
         b.bytes_in = 50;
         b.flush_pause_us = 3;
         b.transient_faults = 2;
+        b.queued_for_flush_bytes = 40;
+        b.hot_defers = 5;
         let c = Counters::from_stats(&[a, b], 9);
         assert_eq!(c.bytes_in, 150);
+        assert_eq!(c.queued_for_flush_bytes, 120);
+        assert_eq!(c.superseded_at_flush_bytes, 20);
+        assert_eq!(c.hot_defers, 5);
+        assert_eq!(c.flush_token_holders, 0, "the sampler fills the gauge in");
         assert_eq!(c.flush_run_us, 7);
         assert_eq!(c.flush_pause_us, 3);
         assert_eq!(c.dropped_trace_events, 9);

@@ -64,10 +64,16 @@ pub enum Stage {
     /// *not* an ack component — it attributes how much of the device
     /// stage was fault recovery.
     FaultRetry = 15,
+    /// Wait for an HDD-bandwidth token from the global flush coordinator
+    /// before a flush cycle's copy runs start. Booked on *every*
+    /// acquisition (zero-length when uncontended) so coordinated runs
+    /// always trace the stage; a flusher-side span like `FlushRun`, not
+    /// an ack component.
+    FlushTokenWait = 16,
 }
 
 /// Number of stages (length of [`Stage::ALL`]).
-pub const N_STAGES: usize = 16;
+pub const N_STAGES: usize = 17;
 
 impl Stage {
     /// Every stage, in discriminant order.
@@ -88,6 +94,7 @@ impl Stage {
         Stage::IoSubmit,
         Stage::QueueWait,
         Stage::FaultRetry,
+        Stage::FlushTokenWait,
     ];
 
     /// The additive components of an acknowledged write: these spans are
@@ -122,6 +129,7 @@ impl Stage {
             Stage::IoSubmit => "io_submit",
             Stage::QueueWait => "queue_wait",
             Stage::FaultRetry => "fault_retry",
+            Stage::FlushTokenWait => "flush_token_wait",
         }
     }
 

@@ -1,0 +1,217 @@
+//! Array-level flush coordination stress test: 4 shards drain into a
+//! shared HDD tier while the coordinator's token budget of 2 staggers
+//! their flushers.
+//!
+//! The 4 per-shard HDD backends share one in-flight counter (they model
+//! one array tier) and dwell ~1 ms inside every write, so flush runs
+//! that *did* overlap would be observed overlapping. Invariants:
+//!
+//! * **budget** — the shared tier never sees more concurrent flush
+//!   writers than `flush_concurrency`, and no starvation-hatch grant
+//!   fired (the run never legitimately needed one);
+//! * **final byte-exactness** — after the drain every slot holds its
+//!   last written generation, coordinator or no coordinator;
+//! * **conservation** — `ssd_bytes_buffered == flushed_bytes +
+//!   superseded_bytes` per shard, with hot/cold deferral enabled.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ssdup::live::{payload, Backend, LiveConfig, LiveEngine, MemBackend, SyntheticLatency};
+use ssdup::server::SystemKind;
+use ssdup::types::{Request, SECTOR_BYTES};
+
+/// writer threads; each owns one file
+const WRITERS: usize = 4;
+/// slots per file; one slot = one 128-sector stripe, so consecutive
+/// slots land on consecutive shards
+const SLOTS: usize = 16;
+/// sectors per slot write (exactly the stripe width)
+const SLOT_SECTORS: i32 = 128;
+/// full passes over the slots; every pass rewrites every slot
+const PASSES: usize = 4;
+
+const FLUSH_BUDGET: usize = 2;
+
+/// HDD wrapper: all four shards' HDD backends share one in-flight
+/// counter (they model a single array tier) and dwell inside the write
+/// so concurrent flush runs are reliably observed as concurrent.
+struct SharedHddProbe {
+    inner: MemBackend,
+    in_flight: Arc<AtomicU64>,
+    high_water: Arc<AtomicU64>,
+}
+
+impl SharedHddProbe {
+    fn enter(&self) {
+        let now = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.high_water.fetch_max(now, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    fn exit(&self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Backend for SharedHddProbe {
+    fn write_at(&self, offset: u64, data: &[u8]) -> std::io::Result<()> {
+        self.enter();
+        let r = self.inner.write_at(offset, data);
+        self.exit();
+        r
+    }
+
+    fn write_vectored_at(&self, offset: u64, bufs: &[&[u8]]) -> std::io::Result<()> {
+        self.enter();
+        let r = self.inner.write_vectored_at(offset, bufs);
+        self.exit();
+        r
+    }
+
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        self.inner.read_at(offset, buf)
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn sync(&self) -> std::io::Result<()> {
+        self.inner.sync()
+    }
+
+    fn kind(&self) -> &'static str {
+        "probe-hdd"
+    }
+}
+
+fn file_of(writer: usize) -> u32 {
+    writer as u32 + 1
+}
+
+#[test]
+fn coordinated_drain_stays_within_the_flush_budget_and_preserves_every_byte() {
+    // a liveness bug would otherwise hang CI forever: abort loudly instead
+    let done = Arc::new(AtomicBool::new(false));
+    {
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            for _ in 0..180 {
+                std::thread::sleep(Duration::from_secs(1));
+                if done.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            eprintln!("flush_coordination: deadlock suspected (180 s timeout), aborting");
+            std::process::abort();
+        });
+    }
+
+    // OrangeFS-BB buffers every write, and a roomy SSD keeps all
+    // flushing in the drain — so the drain is the moment all four
+    // flushers hit the shared tier at once and the budget must hold.
+    let mut cfg = LiveConfig::new(SystemKind::OrangeFsBB)
+        .with_shards(WRITERS)
+        .with_ssd_mib(16)
+        .with_flush_concurrency(FLUSH_BUDGET)
+        .with_hot_defer_window(Duration::from_millis(25));
+    cfg.flush_check = Duration::from_millis(2);
+
+    let in_flight = Arc::new(AtomicU64::new(0));
+    let high_water = Arc::new(AtomicU64::new(0));
+    let engine = LiveEngine::with_backends(&cfg, |_| {
+        (
+            Box::new(MemBackend::new(SyntheticLatency::ZERO)),
+            Box::new(SharedHddProbe {
+                inner: MemBackend::new(SyntheticLatency::ZERO),
+                in_flight: Arc::clone(&in_flight),
+                high_water: Arc::clone(&high_water),
+            }),
+        )
+    });
+
+    // 4 concurrent writers, PASSES rewrite sweeps each: every slot's
+    // earlier copies are superseded in the buffer
+    let sector = SECTOR_BYTES as usize;
+    std::thread::scope(|s| {
+        let engine = &engine;
+        for w in 0..WRITERS {
+            s.spawn(move || {
+                let mut buf = vec![0u8; SLOT_SECTORS as usize * sector];
+                for i in 0..PASSES * SLOTS {
+                    let slot = i % SLOTS;
+                    let off = slot as i32 * SLOT_SECTORS;
+                    let gen = payload::write_gen(w as u32, i as u32);
+                    payload::fill_gen(file_of(w), off as i64, gen, &mut buf);
+                    let req = Request {
+                        app: w as u16,
+                        proc_id: w as u32,
+                        file: file_of(w),
+                        offset: off,
+                        size: SLOT_SECTORS,
+                    };
+                    engine.submit(req, &buf).unwrap();
+                }
+            });
+        }
+    });
+    engine.drain();
+
+    // ---- budget: the shared tier never saw more than 2 flush writers ----
+    let hw = high_water.load(Ordering::SeqCst);
+    assert!(hw >= 1, "the drain moved data through the shared HDD tier");
+    assert!(
+        hw <= FLUSH_BUDGET as u64,
+        "coordinator budget violated: {hw} concurrent flush writers on the shared tier \
+         (budget {FLUSH_BUDGET})"
+    );
+    let co = engine.flush_coordinator().expect("flush_concurrency > 0 builds a coordinator");
+    assert_eq!(
+        co.beyond_budget_grants(),
+        0,
+        "a short, low-occupancy drain must never trip the starvation hatch"
+    );
+    assert_eq!(co.holder_count(), 0, "every token was released");
+
+    // ---- byte-exactness: every slot holds its final generation ----
+    let mut got = vec![0u8; SLOT_SECTORS as usize * sector];
+    let mut expect = vec![0u8; SLOT_SECTORS as usize * sector];
+    for w in 0..WRITERS {
+        for slot in 0..SLOTS {
+            let off = slot as i32 * SLOT_SECTORS;
+            let gen = payload::write_gen(w as u32, ((PASSES - 1) * SLOTS + slot) as u32);
+            engine.read(file_of(w), off, &mut got).unwrap();
+            payload::fill_gen(file_of(w), off as i64, gen, &mut expect);
+            assert_eq!(
+                got, expect,
+                "writer {w} slot {slot}: post-drain contents must be the last generation"
+            );
+        }
+    }
+
+    // ---- conservation, with deferral enabled ----
+    let stats = engine.shutdown();
+    let per_writer = (PASSES * SLOTS * SLOT_SECTORS as usize) as u64 * SECTOR_BYTES;
+    let rewritten = per_writer - per_writer / PASSES as u64;
+    for (i, st) in stats.iter().enumerate() {
+        assert_eq!(
+            st.ssd_bytes_buffered,
+            st.flushed_bytes + st.superseded_bytes,
+            "shard {i}: conservation after drain (buffered == flushed + superseded)"
+        );
+        assert!(st.flush_token_waits >= 1, "shard {i}: every flush cycle takes a token");
+        assert_eq!(
+            st.superseded_at_flush_bytes, 0,
+            "shard {i}: nothing superseded while queued — supersession all preceded the drain"
+        );
+    }
+    // the slots are dealt round-robin onto the shards, so the totals are
+    // exact even though the per-shard split depends on the stripe map
+    let buffered: u64 = stats.iter().map(|s| s.ssd_bytes_buffered).sum();
+    let superseded: u64 = stats.iter().map(|s| s.superseded_bytes).sum();
+    assert_eq!(buffered, WRITERS as u64 * per_writer, "everything routed through the log");
+    assert_eq!(superseded, WRITERS as u64 * rewritten, "every earlier pass was superseded");
+    done.store(true, Ordering::Relaxed);
+}
