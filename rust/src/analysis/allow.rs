@@ -1,0 +1,173 @@
+//! Zero-dep parser for the checked-in lint allow-list
+//! (`rust/src/analysis/allow.toml`). The accepted grammar is the TOML
+//! subset the file actually needs: `[[allow]]` table headers, bare
+//! `key = "string"` pairs, `#` comments, blank lines. Anything else is
+//! a hard parse error — the allow-list is code, not prose.
+//!
+//! Every entry must be *used* by at least one suppressed diagnostic;
+//! stale entries are themselves reported (`allow-unused`), so the file
+//! can only shrink when the code improves.
+
+use std::cell::Cell;
+
+use crate::analysis::diag::Diagnostic;
+
+/// One `[[allow]]` entry. Empty `file`/`context`/`callee` match
+/// anything; `note` is mandatory so every exception carries its why.
+#[derive(Clone, Debug, Default)]
+pub struct AllowEntry {
+    pub lint: String,
+    pub file: String,
+    pub context: String,
+    pub callee: String,
+    pub note: String,
+    /// Line of the `[[allow]]` header in the allow file.
+    pub line: u32,
+}
+
+pub struct AllowList {
+    /// Path label used in `allow-unused` diagnostics.
+    pub path: String,
+    pub entries: Vec<AllowEntry>,
+    used: Vec<Cell<bool>>,
+}
+
+impl AllowList {
+    pub fn empty() -> Self {
+        AllowList { path: String::new(), entries: Vec::new(), used: Vec::new() }
+    }
+
+    /// Parse the allow file; `path` labels error messages.
+    pub fn parse(path: &str, text: &str) -> Result<AllowList, String> {
+        let mut entries: Vec<AllowEntry> = Vec::new();
+        let mut cur: Option<AllowEntry> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = (i + 1) as u32;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[[allow]]" {
+                if let Some(e) = cur.take() {
+                    entries.push(finish(path, e)?);
+                }
+                cur = Some(AllowEntry { line: lineno, ..Default::default() });
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                return Err(format!("{path}:{lineno}: expected `key = \"value\"`, got `{line}`"));
+            };
+            let key = key.trim();
+            let val = val.trim();
+            if !(val.starts_with('"') && val.ends_with('"') && val.len() >= 2) {
+                return Err(format!("{path}:{lineno}: value for `{key}` must be a quoted string"));
+            }
+            let val = val[1..val.len() - 1].to_string();
+            let Some(e) = cur.as_mut() else {
+                return Err(format!("{path}:{lineno}: `{key}` outside an [[allow]] table"));
+            };
+            match key {
+                "lint" => e.lint = val,
+                "file" => e.file = val,
+                "context" => e.context = val,
+                "callee" => e.callee = val,
+                "note" => e.note = val,
+                other => {
+                    return Err(format!("{path}:{lineno}: unknown allow key `{other}`"));
+                }
+            }
+        }
+        if let Some(e) = cur.take() {
+            entries.push(finish(path, e)?);
+        }
+        let used = entries.iter().map(|_| Cell::new(false)).collect();
+        Ok(AllowList { path: path.to_string(), entries, used })
+    }
+
+    /// Does any entry cover this diagnostic? Marks the entry used.
+    pub fn permits(&self, d: &Diagnostic) -> bool {
+        for (e, used) in self.entries.iter().zip(&self.used) {
+            let hit = e.lint == d.lint
+                && (e.file.is_empty() || d.file.ends_with(&e.file))
+                && (e.context.is_empty() || e.context == d.context)
+                && (e.callee.is_empty() || e.callee == d.callee);
+            if hit {
+                used.set(true);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Diagnostics for entries that suppressed nothing this run.
+    pub fn unused(&self) -> Vec<Diagnostic> {
+        self.entries
+            .iter()
+            .zip(&self.used)
+            .filter(|(_, u)| !u.get())
+            .map(|(e, _)| Diagnostic {
+                lint: "allow-unused",
+                file: self.path.clone(),
+                line: e.line,
+                context: e.context.clone(),
+                callee: e.callee.clone(),
+                message: format!(
+                    "allow entry (lint `{}`, context `{}`) matched no diagnostic — delete it",
+                    e.lint, e.context
+                ),
+                hint: "the code no longer trips this lint; the exception is stale".to_string(),
+            })
+            .collect()
+    }
+}
+
+fn finish(path: &str, e: AllowEntry) -> Result<AllowEntry, String> {
+    if e.lint.is_empty() {
+        return Err(format!("{path}:{}: [[allow]] entry missing `lint`", e.line));
+    }
+    if e.note.is_empty() {
+        return Err(format!(
+            "{path}:{}: [[allow]] entry missing `note` — every exception documents its why",
+            e.line
+        ));
+    }
+    Ok(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(lint: &'static str, file: &str, context: &str, callee: &str) -> Diagnostic {
+        Diagnostic {
+            lint,
+            file: file.to_string(),
+            line: 1,
+            context: context.to_string(),
+            callee: callee.to_string(),
+            message: String::new(),
+            hint: String::new(),
+        }
+    }
+
+    #[test]
+    fn parse_match_and_unused() {
+        let text = "# header\n[[allow]]\nlint = \"lock-io\"\nfile = \"live/shard.rs\"\ncontext = \"degrade\"\ncallee = \"write_superblock\"\nnote = \"first-touch superblock\"\n\n[[allow]]\nlint = \"panic-free\"\ncontext = \"nobody\"\nnote = \"stale\"\n";
+        let a = AllowList::parse("allow.toml", text).unwrap();
+        assert_eq!(a.entries.len(), 2);
+        assert!(a.permits(&diag("lock-io", "rust/src/live/shard.rs", "degrade", "write_superblock")));
+        assert!(!a.permits(&diag("lock-io", "rust/src/live/shard.rs", "sync", "write_superblock")));
+        let unused = a.unused();
+        assert_eq!(unused.len(), 1);
+        assert_eq!(unused[0].context, "nobody");
+        assert_eq!(unused[0].line, 9);
+    }
+
+    #[test]
+    fn note_is_mandatory_and_junk_rejected() {
+        assert!(AllowList::parse("a", "[[allow]]\nlint = \"lock-io\"\n").is_err());
+        assert!(AllowList::parse("a", "[[allow]]\nlint = lock-io\nnote = \"x\"\n").is_err());
+        assert!(AllowList::parse("a", "lint = \"x\"\n").is_err());
+        assert!(AllowList::parse("a", "[[allow]]\nwhat = \"x\"\nlint = \"l\"\nnote = \"n\"\n").is_err());
+    }
+}

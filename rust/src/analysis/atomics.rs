@@ -1,0 +1,112 @@
+//! Lint `atomic-ordering`: every non-test `Ordering::` use must carry
+//! an adjacent required-ordering comment (the PR 3 convention: each
+//! relaxed atomic states why that ordering suffices — "stats counter,
+//! no synchronization" / "Release store pairs with the Acquire load in
+//! …"). `SeqCst` is held to the same bar: in engine code it is almost
+//! always a missing justification, not a stronger guarantee.
+//!
+//! A comment covers a use if it sits on the same line or within
+//! [`COMMENT_WINDOW`] lines above and mentions an ordering keyword;
+//! consecutive uses within [`RUN_GAP`] lines share one comment (the
+//! common `stats()`-style block of loads under a single header).
+
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::{SourceFile, TokKind};
+
+const MEMBERS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// How far above a use a justification comment may sit.
+const COMMENT_WINDOW: u32 = 3;
+/// Max line gap for two uses to share one justification comment.
+const RUN_GAP: u32 = 2;
+
+const KEYWORDS: &[&str] = &[
+    "ordering",
+    "relaxed",
+    "acquire",
+    "release",
+    "acqrel",
+    "acq-rel",
+    "seqcst",
+    "happens-before",
+    "synchroniz",
+    "fence",
+    "monotonic",
+];
+
+fn comment_covers(f: &SourceFile, line: u32) -> bool {
+    let lo = line.saturating_sub(COMMENT_WINDOW);
+    f.comments_in(lo, line).any(|c| {
+        let c = c.to_ascii_lowercase();
+        KEYWORDS.iter().any(|k| c.contains(k))
+    })
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in files {
+        // (line, member, fn_name) per non-test atomic-ordering use
+        let mut uses: Vec<(u32, String, String)> = Vec::new();
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            if t.kind != TokKind::Ident || t.text != "Ordering" || t.in_test {
+                continue;
+            }
+            // skip `cmp::Ordering` paths (sort comparators, not atomics)
+            if i >= 2 && toks[i - 1].text == "::" && toks[i - 2].text == "cmp" {
+                continue;
+            }
+            let Some(sep) = toks.get(i + 1) else { continue };
+            let Some(member) = toks.get(i + 2) else { continue };
+            if sep.text == "::" && MEMBERS.contains(&member.text.as_str()) {
+                let ctx = f.fn_name(t).unwrap_or("").to_string();
+                uses.push((t.line, member.text.clone(), ctx));
+            }
+        }
+        uses.sort();
+        uses.dedup();
+        let mut prev_covered_line: Option<u32> = None;
+        for (line, member, ctx) in uses {
+            let covered = comment_covers(f, line)
+                || prev_covered_line.is_some_and(|p| line.saturating_sub(p) <= RUN_GAP);
+            if covered {
+                prev_covered_line = Some(line);
+                continue;
+            }
+            prev_covered_line = None;
+            let (message, hint) = if member == "SeqCst" {
+                (
+                    format!(
+                        "Ordering::SeqCst without an adjacent justification comment (in `{}`)",
+                        if ctx.is_empty() { "module scope" } else { &ctx }
+                    ),
+                    "relax to the weakest ordering that works and say why, or justify SeqCst \
+                     in a comment within 3 lines"
+                        .to_string(),
+                )
+            } else {
+                (
+                    format!(
+                        "Ordering::{member} without an adjacent required-ordering comment \
+                         (in `{}`)",
+                        if ctx.is_empty() { "module scope" } else { &ctx }
+                    ),
+                    "state the pairing (what this synchronizes with) or why no \
+                     synchronization is needed, within 3 lines of the use"
+                        .to_string(),
+                )
+            };
+            out.push(Diagnostic {
+                lint: "atomic-ordering",
+                file: f.path.clone(),
+                line,
+                context: ctx,
+                callee: format!("Ordering::{member}"),
+                message,
+                hint,
+            });
+        }
+    }
+    out
+}

@@ -1,0 +1,82 @@
+//! Diagnostic model for `ssdup check`: stable `file:line: [lint]`
+//! text rendering plus a machine-readable JSON form (`--json`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One lint finding, addressable by the allow-list via
+/// `(lint, file, context, callee)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Lint slug: `lock-io`, `stats-wiring`, `stage-taxonomy`,
+    /// `atomic-ordering`, `panic-free`, `allow-unused`.
+    pub lint: &'static str,
+    /// Repo-relative path of the offending file.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// Allow-list key: enclosing fn for code lints, `field.check` /
+    /// `stage.check` for the wiring lints. Empty when not applicable.
+    pub context: String,
+    /// Allow-list key: the offending callee/token. Empty when N/A.
+    pub callee: String,
+    pub message: String,
+    /// Suggested fix, shown under `--fix-hints` (always present in JSON).
+    pub hint: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self, fix_hints: bool) -> String {
+        let mut s = format!("{}:{}: [{}] {}", self.file, self.line, self.lint, self.message);
+        if fix_hints && !self.hint.is_empty() {
+            s.push_str(&format!("\n    hint: {}", self.hint));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(BTreeMap::from([
+            ("lint".to_string(), Json::Str(self.lint.to_string())),
+            ("file".to_string(), Json::Str(self.file.clone())),
+            ("line".to_string(), Json::Num(self.line as f64)),
+            ("context".to_string(), Json::Str(self.context.clone())),
+            ("callee".to_string(), Json::Str(self.callee.clone())),
+            ("message".to_string(), Json::Str(self.message.clone())),
+            ("hint".to_string(), Json::Str(self.hint.clone())),
+        ]))
+    }
+}
+
+/// Sort diagnostics for stable output: file, then line, then lint.
+pub fn sort(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.lint).cmp(&(b.file.as_str(), b.line, b.lint))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_json() {
+        let d = Diagnostic {
+            lint: "lock-io",
+            file: "rust/src/live/shard.rs".into(),
+            line: 42,
+            context: "submit".into(),
+            callee: "write_at".into(),
+            message: "device I/O under the core lock".into(),
+            hint: "drop the guard first".into(),
+        };
+        assert_eq!(
+            d.render(false),
+            "rust/src/live/shard.rs:42: [lock-io] device I/O under the core lock"
+        );
+        assert!(d.render(true).contains("hint: drop the guard first"));
+        let j = d.to_json();
+        assert_eq!(j.get("line").and_then(|v| v.as_i64()), Some(42));
+        assert_eq!(j.get("callee").and_then(|v| v.as_str()), Some("write_at"));
+    }
+}

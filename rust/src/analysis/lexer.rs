@@ -1,0 +1,456 @@
+//! Line-aware Rust tokenizer + scope tracker for the invariant lints.
+//!
+//! This is not a compiler front end: it produces a flat token stream
+//! (identifiers, punctuation, string-literal payloads) with, per token,
+//! the source line, the brace depth, the enclosing `fn` item, and
+//! whether the token sits inside a `#[cfg(test)]` / `#[test]` region.
+//! Comments are stripped from the stream but recorded per line so lints
+//! can check for adjacent justification comments (the atomic-ordering
+//! convention). That is exactly the resolution the lints in this module
+//! need — no type information, no expansion, zero dependencies.
+//!
+//! Handled so the scope tracking stays honest on real sources:
+//! line/block comments (nested), string/char/byte literals, raw strings
+//! (`r#"…"#`), lifetimes vs char literals, numeric literals, and `::`
+//! as a single token. Attribute groups (`#[…]`) are consumed and do not
+//! appear in the stream.
+
+/// Token kind: identifier/keyword, single punctuation char (plus the
+/// merged `::`), or the payload of a string literal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Str,
+}
+
+/// One token with its scope context.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub text: String,
+    pub kind: TokKind,
+    /// 1-based source line.
+    pub line: u32,
+    /// Brace depth: for `{` the depth of the scope it opens into is
+    /// `depth + 1`; for `}` the depth of the scope it returns to.
+    pub depth: u32,
+    /// Inside a `#[test]` item or `#[cfg(test)]` region.
+    pub in_test: bool,
+    /// Index into [`SourceFile::fns`] of the innermost enclosing `fn`,
+    /// or `u32::MAX` at module scope.
+    pub fn_id: u32,
+}
+
+pub const NO_FN: u32 = u32::MAX;
+
+/// A lexed file: token stream plus the per-line comment record.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Repo-relative path, forward slashes (e.g. `rust/src/live/shard.rs`).
+    pub path: String,
+    pub toks: Vec<Tok>,
+    /// `(line, text)` — block comments contribute one entry per line.
+    pub comments: Vec<(u32, String)>,
+    /// Names of `fn` items in definition order; [`Tok::fn_id`] indexes here.
+    pub fns: Vec<String>,
+}
+
+impl SourceFile {
+    /// Name of the `fn` enclosing `tok`, if any.
+    pub fn fn_name(&self, tok: &Tok) -> Option<&str> {
+        self.fns.get(tok.fn_id as usize).map(String::as_str)
+    }
+
+    /// Iterate comment texts recorded on lines `lo..=hi` (1-based).
+    pub fn comments_in(&self, lo: u32, hi: u32) -> impl Iterator<Item = &str> {
+        self.comments
+            .iter()
+            .filter(move |(l, _)| *l >= lo && *l <= hi)
+            .map(|(_, t)| t.as_str())
+    }
+}
+
+/// Lex `src` (UTF-8 Rust source) into a [`SourceFile`].
+pub fn lex_source(path: &str, src: &str) -> SourceFile {
+    let raw = raw_tokens(src);
+    scope_pass(path, raw)
+}
+
+struct RawTok {
+    text: String,
+    kind: TokKind,
+    line: u32,
+}
+
+struct RawOut {
+    toks: Vec<RawTok>,
+    comments: Vec<(u32, String)>,
+}
+
+fn raw_tokens(src: &str) -> RawOut {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut toks = Vec::new();
+    let mut comments: Vec<(u32, String)> = Vec::new();
+
+    let is_ident_start = |c: char| c.is_ascii_alphabetic() || c == '_';
+    let is_ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            // line comment (incl. doc comments): record text to newline
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            let text: String = b[start..j].iter().collect();
+            comments.push((line, text.trim_start_matches(['/', '!']).trim().to_string()));
+            i = j;
+        } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            // nested block comment: one comment entry per line it spans
+            let mut depth = 1;
+            let mut j = i + 2;
+            let mut seg = String::new();
+            while j < n && depth > 0 {
+                if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == '\n' {
+                        comments.push((line, seg.trim().trim_start_matches('*').trim().to_string()));
+                        seg = String::new();
+                        line += 1;
+                    } else {
+                        seg.push(b[j]);
+                    }
+                    j += 1;
+                }
+            }
+            comments.push((line, seg.trim().trim_start_matches('*').trim().to_string()));
+            i = j;
+        } else if c == '"' {
+            let (text, ni, nl) = scan_string(&b, i, line);
+            toks.push(RawTok { text, kind: TokKind::Str, line });
+            line = nl;
+            i = ni;
+        } else if c == '\'' {
+            // lifetime ('a) vs char literal ('x', '\n', '\u{..}')
+            if i + 2 < n && (is_ident_start(b[i + 1])) && b[i + 2] != '\'' {
+                let mut j = i + 1;
+                while j < n && is_ident(b[j]) {
+                    j += 1;
+                }
+                i = j; // lifetime: drop it
+            } else {
+                let mut j = i + 1;
+                while j < n {
+                    if b[j] == '\\' {
+                        j += 2;
+                    } else if b[j] == '\'' {
+                        j += 1;
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+        } else if c.is_ascii_digit() {
+            // numeric literal (no dotted floats: `1.5` lexes as num . num,
+            // which is fine — numbers are dropped from the stream anyway)
+            let mut j = i + 1;
+            while j < n && is_ident(b[j]) {
+                j += 1;
+            }
+            i = j;
+        } else if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident(b[j]) {
+                j += 1;
+            }
+            let text: String = b[i..j].iter().collect();
+            // raw / byte string prefixes fused to a quote: r"…", r#"…"#, b"…", br#"…"#
+            if (text == "r" || text == "br") && j < n && (b[j] == '"' || b[j] == '#') {
+                let (ni, nl) = scan_raw_string(&b, j, line);
+                toks.push(RawTok { text: String::new(), kind: TokKind::Str, line });
+                line = nl;
+                i = ni;
+            } else if text == "b" && j < n && b[j] == '"' {
+                let (s, ni, nl) = scan_string(&b, j, line);
+                toks.push(RawTok { text: s, kind: TokKind::Str, line });
+                line = nl;
+                i = ni;
+            } else {
+                toks.push(RawTok { text, kind: TokKind::Ident, line });
+                i = j;
+            }
+        } else if c == ':' && i + 1 < n && b[i + 1] == ':' {
+            toks.push(RawTok { text: "::".to_string(), kind: TokKind::Punct, line });
+            i += 2;
+        } else {
+            toks.push(RawTok { text: c.to_string(), kind: TokKind::Punct, line });
+            i += 1;
+        }
+    }
+    RawOut { toks, comments }
+}
+
+/// Scan a normal (escaped) string starting at the opening quote.
+/// Returns (payload, next index, line after).
+fn scan_string(b: &[char], start: usize, mut line: u32) -> (String, usize, u32) {
+    let n = b.len();
+    let mut j = start + 1;
+    let mut s = String::new();
+    while j < n {
+        match b[j] {
+            '\\' => {
+                j += 2;
+            }
+            '"' => {
+                j += 1;
+                break;
+            }
+            '\n' => {
+                line += 1;
+                s.push('\n');
+                j += 1;
+            }
+            c => {
+                s.push(c);
+                j += 1;
+            }
+        }
+    }
+    (s, j, line)
+}
+
+/// Scan a raw string starting at the `#`s or quote after the `r`.
+/// Returns (next index, line after). Payload is dropped (raw strings in
+/// this codebase are doc/test fixtures the lints don't inspect).
+fn scan_raw_string(b: &[char], start: usize, mut line: u32) -> (usize, u32) {
+    let n = b.len();
+    let mut hashes = 0usize;
+    let mut j = start;
+    while j < n && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && b[j] == '"' {
+        j += 1;
+    }
+    while j < n {
+        if b[j] == '\n' {
+            line += 1;
+            j += 1;
+        } else if b[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return (j + 1 + hashes, line);
+            }
+            j += 1;
+        } else {
+            j += 1;
+        }
+    }
+    (j, line)
+}
+
+/// Second pass: brace depth, enclosing fn, test regions; attributes are
+/// consumed here (they never reach the lints).
+fn scope_pass(path: &str, raw: RawOut) -> SourceFile {
+    let mut toks: Vec<Tok> = Vec::with_capacity(raw.toks.len());
+    let mut fns: Vec<String> = Vec::new();
+
+    let mut depth = 0u32;
+    let mut paren = 0i32; // () and [] nesting, for `;` disambiguation
+    let mut test_stack: Vec<u32> = Vec::new(); // inner depth of each test region
+    let mut fn_stack: Vec<(u32, u32)> = Vec::new(); // (fn_id, inner depth)
+    let mut pending_test = false;
+    let mut pending_test_depth = 0u32;
+    let mut pending_fn: Option<u32> = None;
+
+    let rts = &raw.toks;
+    let mut i = 0usize;
+    while i < rts.len() {
+        let rt = &rts[i];
+        // attribute group: `#[…]` or `#![…]` — scan for a test marker,
+        // then swallow the whole group
+        if rt.kind == TokKind::Punct && rt.text == "#" {
+            let mut j = i + 1;
+            if j < rts.len() && rts[j].text == "!" {
+                j += 1;
+            }
+            if j < rts.len() && rts[j].text == "[" {
+                let mut bd = 0i32;
+                let mut idents: Vec<&str> = Vec::new();
+                while j < rts.len() {
+                    match rts[j].text.as_str() {
+                        "[" => bd += 1,
+                        "]" => {
+                            bd -= 1;
+                            if bd == 0 {
+                                break;
+                            }
+                        }
+                        _ => {
+                            if rts[j].kind == TokKind::Ident {
+                                idents.push(&rts[j].text);
+                            }
+                        }
+                    }
+                    j += 1;
+                }
+                let has = |s: &str| idents.iter().any(|t| *t == s);
+                // `#[test]` or `#[cfg(test)]`-family, but not `#[cfg(not(test))]`
+                if has("test") && !has("not") {
+                    pending_test = true;
+                    pending_test_depth = depth;
+                }
+                i = j + 1;
+                continue;
+            }
+        }
+
+        let mut tok_depth = depth;
+        match rt.text.as_str() {
+            "{" if rt.kind == TokKind::Punct => {
+                depth += 1;
+                if let Some(id) = pending_fn.take() {
+                    fn_stack.push((id, depth));
+                }
+                if pending_test && pending_test_depth + 1 == depth {
+                    test_stack.push(depth);
+                    pending_test = false;
+                }
+            }
+            "}" if rt.kind == TokKind::Punct => {
+                depth = depth.saturating_sub(1);
+                tok_depth = depth;
+            }
+            "(" | "[" if rt.kind == TokKind::Punct => paren += 1,
+            ")" | "]" if rt.kind == TokKind::Punct => paren -= 1,
+            ";" if rt.kind == TokKind::Punct && paren == 0 => {
+                // `#[cfg(test)] use …;` / trait method decl: the pending
+                // attribute or fn never got a body — cancel it
+                if pending_test && pending_test_depth == depth {
+                    pending_test = false;
+                }
+                pending_fn = None;
+            }
+            "fn" if rt.kind == TokKind::Ident => {
+                if i + 1 < rts.len() && rts[i + 1].kind == TokKind::Ident {
+                    fns.push(rts[i + 1].text.clone());
+                    pending_fn = Some((fns.len() - 1) as u32);
+                }
+            }
+            _ => {}
+        }
+
+        let in_test = !test_stack.is_empty();
+        let fn_id = fn_stack.last().map(|(id, _)| *id).unwrap_or(NO_FN);
+        toks.push(Tok {
+            text: rt.text.clone(),
+            kind: rt.kind,
+            line: rt.line,
+            depth: tok_depth,
+            in_test,
+            fn_id,
+        });
+
+        if rt.text == "}" && rt.kind == TokKind::Punct {
+            while test_stack.last().is_some_and(|d| *d > depth) {
+                test_stack.pop();
+            }
+            while fn_stack.last().is_some_and(|(_, d)| *d > depth) {
+                fn_stack.pop();
+            }
+        }
+        i += 1;
+    }
+
+    SourceFile { path: path.to_string(), toks, comments: raw.comments, fns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idents_depth_and_fns() {
+        let f = lex_source(
+            "x.rs",
+            "fn outer() {\n    let a = 1;\n    fn inner() { b(); }\n    c();\n}\n",
+        );
+        let b_call = f.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(f.fn_name(b_call), Some("inner"));
+        assert_eq!(b_call.depth, 2);
+        let c_call = f.toks.iter().find(|t| t.text == "c").unwrap();
+        assert_eq!(f.fn_name(c_call), Some("outer"));
+        assert_eq!(c_call.line, 4);
+    }
+
+    #[test]
+    fn comments_and_strings_stripped() {
+        let f = lex_source(
+            "x.rs",
+            "// top note\nfn f() {\n    let s = \"ig{nored\"; /* block\n   across */ g();\n}\n",
+        );
+        assert!(f.toks.iter().all(|t| t.text != "ig"));
+        assert!(f.comments.iter().any(|(l, t)| *l == 1 && t == "top note"));
+        assert!(f.comments.iter().any(|(l, t)| *l == 3 && t.contains("block")));
+        let g = f.toks.iter().find(|t| t.text == "g").unwrap();
+        assert_eq!(g.line, 4);
+        let s = f.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, "ig{nored");
+    }
+
+    #[test]
+    fn test_regions_marked() {
+        let src = "fn live() { a(); }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { a(); }\n}\nfn live2() { a(); }\n";
+        let f = lex_source("x.rs", src);
+        let calls: Vec<&Tok> = f.toks.iter().filter(|t| t.text == "a").collect();
+        assert_eq!(calls.len(), 3);
+        assert!(!calls[0].in_test);
+        assert!(calls[1].in_test);
+        assert!(!calls[2].in_test);
+    }
+
+    #[test]
+    fn cfg_not_test_is_live_and_attr_on_use_cancels() {
+        let src = "#[cfg(not(test))]\nfn live() { a(); }\n#[cfg(test)]\nuse x::y;\nfn live2() { b(); }\n";
+        let f = lex_source("x.rs", src);
+        assert!(f.toks.iter().filter(|t| t.text == "a" || t.text == "b").all(|t| !t.in_test));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) {\n    let r = r#\"quoted \"{ brace\"#;\n    let c = '{';\n    h();\n}\n";
+        let f = lex_source("x.rs", src);
+        let h = f.toks.iter().find(|t| t.text == "h").unwrap();
+        assert_eq!(h.depth, 1, "braces inside raw string / char literal must not nest");
+        assert_eq!(f.fn_name(h), Some("f"));
+    }
+
+    #[test]
+    fn array_semicolon_does_not_cancel_pending_fn() {
+        let src = "fn f(x: [u8; 4]) {\n    y();\n}\n";
+        let f = lex_source("x.rs", src);
+        let y = f.toks.iter().find(|t| t.text == "y").unwrap();
+        assert_eq!(f.fn_name(y), Some("f"));
+    }
+}

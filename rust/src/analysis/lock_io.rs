@@ -1,0 +1,552 @@
+//! Lint `lock-io`: no device I/O while a shard core-lock guard is live.
+//!
+//! The engine's ack-latency story (and the paper's log-structure
+//! argument) depends on device I/O happening *outside* the per-shard
+//! core mutex: ingest runs reserve→enqueue→publish, the flusher drops
+//! the guard before its copy runs. A call into the backend while the
+//! guard is held serializes every writer behind one device service
+//! time — the exact regression this lint makes impossible to land
+//! silently.
+//!
+//! Mechanics: device I/O entry points (`Backend::{write_at, read_at,
+//! sync, …}`, `IoQueue::submit`, barrier waits) seed a taint set that
+//! propagates up the same-crate call graph to a fixpoint. Call keys
+//! separate method calls (`m:name`, the receiver has `self`) from
+//! free/associated calls; the latter are qualified by the impl'd type
+//! when the qualifier names one (`f:IoQueue::new` vs `f:Vec::new`,
+//! `Self::` resolved through the enclosing `impl`), so std constructor
+//! and container names don't inherit the crate's I/O taint. Same-name
+//! methods still merge — an over-approximation that taints more, never
+//! less.
+//!
+//! Guard liveness is tracked per function body: `let g =
+//! …core.lock().unwrap();` bindings (the RHS must *end* with the
+//! acquisition — a trailing field access or `.clone()` makes it a
+//! temporary that dies at the `;`), `MutexGuard`/`&mut ShardCore`
+//! parameters (the caller holds the lock; a by-value `ShardCore` is
+//! just data), `drop(g)`, scope exit, liveness-preserving condvar
+//! reassignment (`core = self.wait_or_err(…, core)?`), and move-out as
+//! a bare call argument at the binding's own depth (deeper moves sit in
+//! diverging error branches). Calls to tainted functions while a guard
+//! is live — outside `#[cfg(test)]` — are diagnostics; the few
+//! deliberate sites (the first-touch superblock write, `degrade`) live
+//! in `allow.toml`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::{SourceFile, Tok, TokKind, NO_FN};
+
+/// Device-I/O entry points: taint seeds, by bare method name.
+const SEEDS: &[&str] = &[
+    "write_at",
+    "read_at",
+    "sync",
+    "write_vectored_at",
+    "write_vectored_raw",
+    "submit",
+    "barrier",
+    "barrier_for",
+];
+
+/// Per-fn signature facts, aligned with [`SourceFile::fns`].
+struct SigInfo {
+    /// Any `self` in the parameter list — calls resolve as `m:name`.
+    has_self: bool,
+    /// `MutexGuard` or `&mut ShardCore` parameter: the caller holds the
+    /// core lock for the whole body.
+    guard_param: bool,
+}
+
+/// Scan every `fn` signature in keyword order (matching how the lexer
+/// fills `fns`, which includes body-less trait method declarations).
+fn sig_info(f: &SourceFile) -> Vec<SigInfo> {
+    let toks = &f.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Ident
+            && toks[i].text == "fn"
+            && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident)
+        {
+            // find the param-list `(` outside generic `<…>` brackets
+            // (`>` preceded by `-` is a return arrow, not a close)
+            let mut j = i + 2;
+            let mut angle = 0i32;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "<" => angle += 1,
+                    ">" if toks[j - 1].text != "-" => angle = (angle - 1).max(0),
+                    "(" if angle == 0 => break,
+                    "{" => break,
+                    ";" if angle == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let mut has_self = false;
+            let mut guard_param = false;
+            if toks.get(j).is_some_and(|t| t.text == "(") {
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    let t = &toks[j];
+                    if t.kind == TokKind::Punct {
+                        match t.text.as_str() {
+                            "(" => depth += 1,
+                            ")" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    } else if t.kind == TokKind::Ident {
+                        match t.text.as_str() {
+                            "self" => has_self = true,
+                            "MutexGuard" => guard_param = true,
+                            "ShardCore"
+                                if j >= 2
+                                    && toks[j - 1].text == "mut"
+                                    && toks[j - 2].text == "&" =>
+                            {
+                                guard_param = true
+                            }
+                            _ => {}
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            out.push(SigInfo { has_self, guard_param });
+            i = j;
+        }
+        i += 1;
+    }
+    debug_assert_eq!(out.len(), f.fns.len(), "sig scan out of step in {}", f.path);
+    out
+}
+
+/// Parse `impl<…> Type<…>` / `impl<…> Trait<…> for Type<…>` starting at
+/// the `impl` token: the impl'd type name and its `{` token index.
+fn impl_target(toks: &[Tok], i: usize) -> (Option<&str>, Option<usize>) {
+    let mut j = i + 1;
+    let mut angle = 0i32;
+    let mut first: Option<&str> = None;
+    let mut target: Option<&str> = None;
+    let mut after_for = false;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "<" => angle += 1,
+                ">" if toks[j - 1].text != "-" => angle = (angle - 1).max(0),
+                "{" | ";" if angle == 0 => break,
+                _ => {}
+            }
+        } else if t.kind == TokKind::Ident && angle == 0 {
+            match t.text.as_str() {
+                "for" => after_for = true,
+                "dyn" | "mut" => {}
+                _ if after_for => {
+                    if target.is_none() {
+                        target = Some(&t.text);
+                    }
+                }
+                _ => {
+                    if first.is_none() {
+                        first = Some(&t.text);
+                    }
+                }
+            }
+        }
+        j += 1;
+    }
+    let brace = (j < toks.len() && toks[j].text == "{").then_some(j);
+    (target.or(first), brace)
+}
+
+/// Every type name with an `impl` block anywhere in the crate.
+fn crate_impl_types(files: &[SourceFile]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for f in files {
+        for i in 0..f.toks.len() {
+            if f.toks[i].kind == TokKind::Ident && f.toks[i].text == "impl" {
+                if let (Some(name), _) = impl_target(&f.toks, i) {
+                    out.insert(name.to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-file call-graph facts: signature info, the taint key of each
+/// defined fn, and the taint key of every call site by token index.
+struct FileInfo {
+    sig: Vec<SigInfo>,
+    fn_keys: Vec<String>,
+    calls: BTreeMap<usize, String>,
+}
+
+fn file_call_info(f: &SourceFile, impl_types: &BTreeSet<String>) -> FileInfo {
+    let sig = sig_info(f);
+    let toks = &f.toks;
+    // (impl'd type, depth carried by its `{`/`}` tokens)
+    let mut impl_stack: Vec<(String, u32)> = Vec::new();
+    let mut fn_impl: Vec<Option<String>> = vec![None; f.fns.len()];
+    let mut fn_idx = 0usize;
+    let mut calls: BTreeMap<usize, String> = BTreeMap::new();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct
+            && t.text == "}"
+            && impl_stack.last().is_some_and(|(_, d)| *d == t.depth)
+        {
+            impl_stack.pop();
+            continue;
+        }
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        if t.text == "impl" {
+            if let (Some(name), Some(brace)) = impl_target(toks, i) {
+                impl_stack.push((name.to_string(), toks[brace].depth));
+            }
+        } else if t.text == "fn" && toks.get(i + 1).is_some_and(|n| n.kind == TokKind::Ident) {
+            if fn_idx < fn_impl.len() {
+                fn_impl[fn_idx] = impl_stack.last().map(|(n, _)| n.clone());
+            }
+            fn_idx += 1;
+        } else if toks.get(i + 1).is_some_and(|n| n.kind == TokKind::Punct && n.text == "(")
+            && !(i > 0 && toks[i - 1].kind == TokKind::Ident && toks[i - 1].text == "fn")
+        {
+            let prev = if i > 0 { toks[i - 1].text.as_str() } else { "" };
+            let key = if prev == "." {
+                format!("m:{}", t.text)
+            } else if prev == "::" {
+                let mut qual = (i >= 2 && toks[i - 2].kind == TokKind::Ident)
+                    .then(|| toks[i - 2].text.as_str());
+                if qual == Some("Self") {
+                    qual = impl_stack.last().map(|(n, _)| n.as_str());
+                }
+                match qual {
+                    Some(q) if impl_types.contains(q) => format!("f:{q}::{}", t.text),
+                    _ => format!("f:{}", t.text),
+                }
+            } else {
+                format!("f:{}", t.text)
+            };
+            calls.insert(i, key);
+        }
+    }
+    let mut fn_keys = Vec::with_capacity(f.fns.len());
+    for (k, name) in f.fns.iter().enumerate() {
+        fn_keys.push(if sig[k].has_self {
+            format!("m:{name}")
+        } else if let Some(ty) = &fn_impl[k] {
+            format!("f:{ty}::{name}")
+        } else {
+            format!("f:{name}")
+        });
+    }
+    FileInfo { sig, fn_keys, calls }
+}
+
+/// Build the tainted-function key set: seeds plus every fn whose body
+/// calls a tainted key, to a fixpoint.
+fn tainted_fns(files: &[SourceFile]) -> (BTreeSet<String>, Vec<FileInfo>) {
+    let impl_types = crate_impl_types(files);
+    let mut infos = Vec::with_capacity(files.len());
+    let mut calls: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for f in files {
+        let info = file_call_info(f, &impl_types);
+        for (&i, key) in &info.calls {
+            let fid = f.toks[i].fn_id;
+            if fid != NO_FN {
+                calls
+                    .entry(info.fn_keys[fid as usize].clone())
+                    .or_default()
+                    .insert(key.clone());
+            }
+        }
+        infos.push(info);
+    }
+    let mut tainted: BTreeSet<String> = SEEDS.iter().map(|s| format!("m:{s}")).collect();
+    loop {
+        let mut grew = false;
+        for (fname, callees) in &calls {
+            if !tainted.contains(fname) && callees.iter().any(|c| tainted.contains(c)) {
+                tainted.insert(fname.clone());
+                grew = true;
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    (tainted, infos)
+}
+
+struct Guard {
+    name: String,
+    /// Depth of the `let`; dead once depth drops below this.
+    depth: u32,
+    /// Token index before which moves of `name` are ignored (the RHS of
+    /// a liveness-preserving reassignment like `core = wait_or_err(core)`).
+    ignore_moves_until: usize,
+}
+
+/// Scan one file for tainted calls under a live core guard.
+fn scan_file(f: &SourceFile, tainted: &BTreeSet<String>, info: &FileInfo, out: &mut Vec<Diagnostic>) {
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut cur_fn = NO_FN;
+
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        if t.fn_id != cur_fn {
+            cur_fn = t.fn_id;
+            guards.clear();
+        }
+        guards.retain(|g| t.depth >= g.depth);
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+
+        // new binding: `let [mut] name = …core.lock().unwrap();`
+        if t.text == "let" {
+            let mut j = i + 1;
+            if f.toks.get(j).is_some_and(|t| t.text == "mut") {
+                j += 1;
+            }
+            if let (Some(name_t), Some(eq)) = (f.toks.get(j), f.toks.get(j + 1)) {
+                if name_t.kind == TokKind::Ident && eq.text == "=" {
+                    let end = stmt_end(f, j + 2, t.depth);
+                    if rhs_is_guard(&f.toks[j + 2..end]) {
+                        guards.push(Guard {
+                            name: name_t.text.clone(),
+                            depth: t.depth,
+                            ignore_moves_until: end,
+                        });
+                    }
+                }
+            }
+        }
+
+        // explicit release / liveness-preserving reassignment / move-out
+        if let Some(gi) = guards.iter().position(|g| g.name == t.text) {
+            let prev = i.checked_sub(1).map(|p| f.toks[p].text.as_str()).unwrap_or("");
+            let next = f.toks.get(i + 1).map(|t| t.text.as_str()).unwrap_or("");
+            if prev == "(" && i >= 2 && f.toks[i - 2].text == "drop" && next == ")" {
+                guards.remove(gi);
+            } else if next == "=" && f.toks.get(i + 2).map(|t| t.text.as_str()) != Some("=") {
+                // `g = rhs;` — stays live if the rhs re-locks or re-waits
+                // (condvar loops: `core = self.wait_or_err(core, …)`)
+                let end = stmt_end(f, i + 2, f.toks[i].depth);
+                let live = f.toks[i + 2..end].iter().any(|t| {
+                    t.kind == TokKind::Ident && (t.text.starts_with("wait") || t.text == "lock")
+                });
+                if live {
+                    guards[gi].ignore_moves_until = end;
+                } else {
+                    guards.remove(gi);
+                }
+            } else if i >= guards[gi].ignore_moves_until
+                && (prev == "(" || prev == ",")
+                && (next == "," || next == ")")
+                && t.depth == guards[gi].depth
+            {
+                // moved out as a bare argument at the binding's own
+                // depth: ownership (and release responsibility) went to
+                // the callee. Deeper moves sit in diverging branches
+                // (`return Err(self.fail_core(core, …))`) — the guard
+                // stays live on the fall-through path.
+                guards.remove(gi);
+            }
+        }
+
+        // the actual check: tainted call while a guard is live
+        let under_guard = !guards.is_empty()
+            || (t.fn_id != NO_FN && info.sig[t.fn_id as usize].guard_param);
+        if under_guard && !t.in_test {
+            if let Some(key) = info.calls.get(&i) {
+                if tainted.contains(key) {
+                    let callee = key.rsplit(':').next().unwrap_or(key).to_string();
+                    let ctx = f.fn_name(t).unwrap_or("?").to_string();
+                    out.push(Diagnostic {
+                        lint: "lock-io",
+                        file: f.path.clone(),
+                        line: t.line,
+                        context: ctx.clone(),
+                        callee: callee.clone(),
+                        message: format!(
+                            "`{callee}` reaches device I/O while the shard core lock is held (in `{ctx}`)"
+                        ),
+                        hint: "drop the core guard before device I/O (reserve under the lock, \
+                               write outside it), or add an allow entry with the why"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Index of the `;` ending the statement starting at `start`
+/// (same-depth semicolon; nested parens/brackets are skipped).
+fn stmt_end(f: &SourceFile, start: usize, depth: u32) -> usize {
+    let mut paren = 0i32;
+    for (off, t) in f.toks[start..].iter().enumerate() {
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        match t.text.as_str() {
+            "(" | "[" => paren += 1,
+            ")" | "]" => paren -= 1,
+            ";" if paren <= 0 && t.depth == depth => return start + off,
+            _ => {}
+        }
+    }
+    f.toks.len()
+}
+
+/// Is this `let` RHS a core-lock *guard* acquisition — not a temporary?
+/// It must mention `core.lock(` and **end** with the `.unwrap()` /
+/// `.expect("…")` of that acquisition: `self.core.lock().unwrap().stats
+/// .clone()` and `let sb = { let core = …lock().unwrap(); … }` both
+/// fail the suffix test, and rightly so — their guards die at the `;`
+/// (or inside the block), not at the binding's scope end.
+fn rhs_is_guard(toks: &[Tok]) -> bool {
+    let mentions_core_lock = toks.windows(4).any(|w| {
+        w[0].kind == TokKind::Ident
+            && w[0].text == "core"
+            && w[1].text == "."
+            && w[2].text == "lock"
+            && w[3].text == "("
+    });
+    if !mentions_core_lock {
+        return false;
+    }
+    let n = toks.len();
+    let tx = |k: usize| toks[n - k].text.as_str();
+    if n >= 5 && tx(4) == "." && tx(3) == "unwrap" && tx(2) == "(" && tx(1) == ")" && tx(5) == ")" {
+        return true;
+    }
+    n >= 6
+        && tx(6) == ")"
+        && tx(5) == "."
+        && tx(4) == "expect"
+        && tx(3) == "("
+        && toks[n - 2].kind == TokKind::Str
+        && tx(1) == ")"
+}
+
+/// Run the lint: taint from all files, scan `live/` sources.
+pub fn check(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let (tainted, infos) = tainted_fns(files);
+    let mut out = Vec::new();
+    for (f, info) in files.iter().zip(&infos) {
+        if f.path.contains("live/") {
+            scan_file(f, &tainted, info, &mut out);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex_source;
+
+    fn lex(path: &str, src: &str) -> SourceFile {
+        lex_source(path, src)
+    }
+
+    #[test]
+    fn taint_propagates_through_helpers_and_guard_blocks_io() {
+        let f = lex(
+            "rust/src/live/x.rs",
+            r#"
+impl Shard {
+    fn persist(&self) { self.dev.write_at(0, b""); }
+    fn indirect(&self) { self.persist(); }
+    fn bad(&self) {
+        let mut core = self.core.lock().unwrap();
+        self.indirect();
+        core.n += 1;
+    }
+}
+"#,
+        );
+        let diags = check(&[f]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].callee, "indirect");
+        assert_eq!(diags[0].context, "bad");
+    }
+
+    #[test]
+    fn dropped_guard_and_temporaries_are_clean() {
+        let f = lex(
+            "rust/src/live/x.rs",
+            r#"
+impl Shard {
+    fn persist(&self) { self.dev.write_at(0, b""); }
+    fn ok(&self) {
+        let mut core = self.core.lock().unwrap();
+        core.n += 1;
+        drop(core);
+        self.persist();
+        let snap = self.core.lock().unwrap().stats.clone();
+        self.persist();
+    }
+}
+"#,
+        );
+        assert!(check(&[f]).is_empty());
+    }
+
+    #[test]
+    fn std_constructor_names_do_not_inherit_taint() {
+        let f = lex(
+            "rust/src/live/x.rs",
+            r#"
+impl IoQueue {
+    fn new() -> Self { spawn(|| dev.write_at(0, b"")); Self {} }
+}
+impl Shard {
+    fn ok(&self) {
+        let mut core = self.core.lock().unwrap();
+        let v = Vec::new();
+        core.push(v);
+    }
+    fn bad(&self) {
+        let mut core = self.core.lock().unwrap();
+        let q = IoQueue::new();
+        core.q = q;
+    }
+}
+"#,
+        );
+        let diags = check(&[f]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].context, "bad");
+        assert_eq!(diags[0].callee, "new");
+    }
+
+    #[test]
+    fn by_value_shard_core_param_is_not_a_guard() {
+        let f = lex(
+            "rust/src/live/x.rs",
+            r#"
+impl Shard {
+    fn assemble(core: ShardCore, dev: Dev) -> Self { dev.sync(); Self { core } }
+    fn degrade(&self, core: &mut ShardCore) { self.dev.sync(); }
+}
+"#,
+        );
+        let diags = check(&[f]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].context, "degrade");
+        assert_eq!(diags[0].callee, "sync");
+    }
+}

@@ -1,0 +1,130 @@
+//! `ssdup check` — a zero-dependency static analysis pass over this
+//! repository's own sources, encoding the live engine's documented
+//! invariants as machine-checked lints (see `live/mod.rs` §Invariants):
+//!
+//! | lint              | invariant                                                |
+//! |-------------------|----------------------------------------------------------|
+//! | `lock-io`         | no device I/O while a shard core-lock guard is live      |
+//! | `stats-wiring`    | every `ShardStats` counter reaches fold, report and emit |
+//! | `stage-taxonomy`  | every `Stage` variant is booked and trace-check-required |
+//! | `atomic-ordering` | every `Ordering::` use carries a required-ordering note  |
+//! | `panic-free`      | no `unwrap`/`expect`/`panic!` on the fault path          |
+//!
+//! The pass is lexer-based ([`lexer`]): tokens with line, brace depth,
+//! enclosing `fn`, and `#[cfg(test)]` region — deliberately not a type
+//! checker. Exceptions live in `rust/src/analysis/allow.toml`
+//! ([`allow`]): every entry carries a `note`, and entries that stop
+//! matching become `allow-unused` diagnostics, so the exception list
+//! can only shrink. CI runs `ssdup check` as a blocking job; the
+//! self-test (`tests/analysis_selftest.rs`) pins each lint to a known-bad
+//! fixture and asserts the real tree stays clean.
+
+pub mod allow;
+pub mod atomics;
+pub mod diag;
+pub mod lexer;
+pub mod lock_io;
+pub mod panic_free;
+pub mod stages_lint;
+pub mod stats_wiring;
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use allow::AllowList;
+use diag::Diagnostic;
+use lexer::SourceFile;
+
+/// Repo-relative location of the sources the pass scans.
+const SRC_DIR: &str = "rust/src";
+/// Repo-relative CI workflow parsed for `trace-check --require` lists.
+const CI_FILE: &str = ".github/workflows/ci.yml";
+/// Repo-relative allow-list.
+const ALLOW_FILE: &str = "rust/src/analysis/allow.toml";
+
+pub struct CheckOutcome {
+    /// Diagnostics that survived the allow-list, sorted by file/line.
+    pub diags: Vec<Diagnostic>,
+    pub files_scanned: usize,
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lex every source under `root/rust/src`. Paths in the returned files
+/// are repo-relative with forward slashes.
+pub fn load_sources(root: &Path) -> Result<Vec<SourceFile>, String> {
+    let src_root = root.join(SRC_DIR);
+    let mut paths = Vec::new();
+    rs_files(&src_root, &mut paths)?;
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = fs::read_to_string(&p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(lexer::lex_source(&rel, &text));
+    }
+    Ok(files)
+}
+
+/// Run every lint over the tree rooted at `root` (the repo checkout:
+/// the directory holding `Cargo.toml` and `.github/`).
+pub fn run_check(root: &Path) -> Result<CheckOutcome, String> {
+    let files = load_sources(root)?;
+
+    let ci_path = root.join(CI_FILE);
+    let ci_text = fs::read_to_string(&ci_path)
+        .map_err(|e| format!("read {} (needed for the stage drift guard): {e}", ci_path.display()))?;
+    let required: BTreeSet<String> = stages_lint::parse_required_stages(&ci_text);
+
+    let allow_path = root.join(ALLOW_FILE);
+    let allow = match fs::read_to_string(&allow_path) {
+        Ok(text) => AllowList::parse(ALLOW_FILE, &text)?,
+        Err(_) => AllowList::empty(),
+    };
+
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    raw.extend(lock_io::check(&files));
+    raw.extend(stats_wiring::check(&files));
+    raw.extend(stages_lint::check(&files, &required));
+    raw.extend(atomics::check(&files));
+    raw.extend(panic_free::check(&files));
+
+    let mut diags: Vec<Diagnostic> = raw.into_iter().filter(|d| !allow.permits(d)).collect();
+    diags.extend(allow.unused());
+    diag::sort(&mut diags);
+    Ok(CheckOutcome { diags, files_scanned: files.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_required_stages_reads_comma_lists() {
+        let yml = "run: |\n  x trace-check t.json \\\n    --require submit,route,replay\n  y trace-check u.json --require replay\n";
+        let req = stages_lint::parse_required_stages(yml);
+        assert!(req.contains("submit"));
+        assert!(req.contains("route"));
+        assert!(req.contains("replay"));
+        assert_eq!(req.len(), 3);
+    }
+}

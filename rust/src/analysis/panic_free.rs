@@ -1,0 +1,119 @@
+//! Lint `panic-free`: the fault pipeline must degrade, not die.
+//! `unwrap` / `expect` / `panic!` (and friends) are banned outside
+//! `#[cfg(test)]` in the files that sit under the ack — `live/fault.rs`,
+//! `live/backend.rs`, `live/shard.rs` — because a panic there poisons
+//! the core mutex and turns one transient EIO into a wedged shard
+//! (PR 8's typed-fault contract: every error is retried, degraded
+//! around, or surfaced as `IoFault`).
+//!
+//! Built-in exemption: `.unwrap()` directly on `lock()` / `wait()` /
+//! `wait_timeout()` results. Lock poisoning only happens after another
+//! thread already panicked — unwrapping there is the idiomatic
+//! poison-propagation pattern, not a new failure mode. Everything else
+//! needs an `allow.toml` entry naming its why (context = enclosing fn).
+
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::{SourceFile, TokKind};
+
+const FILES: &[&str] = &["live/fault.rs", "live/backend.rs", "live/shard.rs"];
+
+const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Poison-propagation receivers exempt from the `.unwrap()` ban.
+const POISON_FNS: &[&str] = &["lock", "wait", "wait_timeout", "wait_while"];
+
+/// If token `i` is `.`, and `i+1`/`i+2` are `unwrap|expect (`, check the
+/// receiver: exempt when it is a direct `lock()`/`wait*()` call.
+fn poison_exempt(f: &SourceFile, dot: usize) -> bool {
+    // receiver ends at dot-1; exempt iff it is `name( … )` with a
+    // poison-returning name
+    let toks = &f.toks;
+    if dot == 0 || toks[dot - 1].text != ")" {
+        return false;
+    }
+    // walk back to the matching `(`
+    let mut depth = 0i32;
+    let mut j = dot - 1;
+    loop {
+        match toks[j].text.as_str() {
+            ")" | "]" if toks[j].kind == TokKind::Punct => depth += 1,
+            "(" | "[" if toks[j].kind == TokKind::Punct => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+    j > 0
+        && toks[j - 1].kind == TokKind::Ident
+        && POISON_FNS.contains(&toks[j - 1].text.as_str())
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in files {
+        if !FILES.iter().any(|s| f.path.ends_with(s)) {
+            continue;
+        }
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            if t.in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            let ctx = || f.fn_name(t).unwrap_or("module scope").to_string();
+            // `panic!(…)` and friends
+            if MACROS.contains(&t.text.as_str())
+                && toks.get(i + 1).is_some_and(|n| n.text == "!")
+            {
+                out.push(Diagnostic {
+                    lint: "panic-free",
+                    file: f.path.clone(),
+                    line: t.line,
+                    context: ctx(),
+                    callee: format!("{}!", t.text),
+                    message: format!(
+                        "`{}!` on the fault path (in `{}`) — a panic here poisons the shard \
+                         instead of degrading it",
+                        t.text,
+                        ctx()
+                    ),
+                    hint: "return a typed `IoFault`/`io::Error` and let the retry/degrade \
+                           machinery absorb it"
+                        .to_string(),
+                });
+            }
+            // `.unwrap()` / `.expect(`
+            if (t.text == "unwrap" || t.text == "expect")
+                && i > 0
+                && toks[i - 1].text == "."
+                && toks.get(i + 1).is_some_and(|n| n.text == "(")
+                && !poison_exempt(f, i - 1)
+            {
+                out.push(Diagnostic {
+                    lint: "panic-free",
+                    file: f.path.clone(),
+                    line: t.line,
+                    context: ctx(),
+                    callee: t.text.clone(),
+                    message: format!(
+                        "`.{}()` on the fault path (in `{}`) — convert to a typed error or \
+                         allow-list the invariant it asserts",
+                        t.text,
+                        ctx()
+                    ),
+                    hint: "poison-propagating `.lock()/.wait*()` unwraps are exempt; anything \
+                           else returns `IoFault` or documents itself in allow.toml"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,157 @@
+//! Lint `stage-taxonomy`: every `obs/stages.rs` `Stage::` variant must
+//! (a) be booked at at least one non-test call site in the engine, and
+//! (b) appear in a `trace-check --require` list in the CI workflow —
+//! the drift guard that makes "added a stage, forgot the smoke"
+//! a lint error instead of a review catch. Scheduling-dependent stages
+//! that CI cannot require deterministically (`flush_pause`,
+//! `fault_retry`) are allow-listed with their why.
+//!
+//! Context keys for the allow-list: `<Variant>.booked` and
+//! `<snake_name>.require`.
+
+use std::collections::BTreeSet;
+
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::{SourceFile, TokKind};
+
+const STAGES_FILE: &str = "obs/stages.rs";
+
+struct Variant {
+    name: String,
+    line: u32,
+    /// snake_case wire name from the `Stage::name()` match arm.
+    snake: Option<String>,
+}
+
+/// Parse the `enum Stage` variants and their `name()` string mapping.
+fn parse_variants(f: &SourceFile) -> Vec<Variant> {
+    let toks = &f.toks;
+    let mut out: Vec<Variant> = Vec::new();
+    if let Some(start) = toks.windows(3).position(|w| {
+        w[0].kind == TokKind::Ident
+            && w[0].text == "enum"
+            && w[1].text == "Stage"
+            && w[2].text == "{"
+    }) {
+        let body_depth = toks[start + 2].depth + 1;
+        for i in start + 3..toks.len() {
+            let t = &toks[i];
+            if t.text == "}" && t.depth < body_depth {
+                break;
+            }
+            // a variant is `Name ,` / `Name }` / `Name = <discr>` at
+            // body depth (the lexer skips number literals, so the
+            // discriminant shows up as the bare `=`)
+            if t.kind == TokKind::Ident && t.depth == body_depth {
+                let next = toks.get(i + 1).map(|n| n.text.as_str()).unwrap_or("");
+                if next == "," || next == "}" || next == "=" {
+                    out.push(Variant { name: t.text.clone(), line: t.line, snake: None });
+                }
+            }
+        }
+    }
+    // match arms: `Stage::Variant => "snake_name"`
+    for i in 0..toks.len() {
+        if toks[i].text == "Stage"
+            && toks.get(i + 1).is_some_and(|t| t.text == "::")
+            && toks.get(i + 2).is_some_and(|t| t.kind == TokKind::Ident)
+            && toks.get(i + 3).is_some_and(|t| t.text == "=")
+            && toks.get(i + 4).is_some_and(|t| t.text == ">")
+            && toks.get(i + 5).is_some_and(|t| t.kind == TokKind::Str)
+        {
+            let vname = &toks[i + 2].text;
+            let sname = &toks[i + 5].text;
+            if let Some(v) = out.iter_mut().find(|v| &v.name == vname) {
+                v.snake = Some(sname.clone());
+            }
+        }
+    }
+    out
+}
+
+/// Union of every `--require a,b,c` list in the CI workflow text.
+pub fn parse_required_stages(ci_yml: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in ci_yml.lines() {
+        let mut words = line.split_whitespace().peekable();
+        while let Some(w) = words.next() {
+            if w == "--require" {
+                if let Some(list) = words.peek() {
+                    for name in list.split(',') {
+                        let name = name.trim().trim_end_matches('\\');
+                        if !name.is_empty() {
+                            out.insert(name.to_string());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn check(files: &[SourceFile], ci_required: &BTreeSet<String>) -> Vec<Diagnostic> {
+    let Some(stages) = files.iter().find(|f| f.path.ends_with(STAGES_FILE)) else {
+        return Vec::new();
+    };
+    let variants = parse_variants(stages);
+    let mut out = Vec::new();
+    for v in &variants {
+        let booked = files.iter().filter(|f| !f.path.ends_with(STAGES_FILE)).any(|f| {
+            f.toks.iter().enumerate().any(|(i, t)| {
+                t.text == "Stage"
+                    && !t.in_test
+                    && f.toks.get(i + 1).is_some_and(|n| n.text == "::")
+                    && f.toks.get(i + 2).is_some_and(|n| n.text == v.name)
+            })
+        });
+        if !booked {
+            out.push(Diagnostic {
+                lint: "stage-taxonomy",
+                file: stages.path.clone(),
+                line: v.line,
+                context: format!("{}.booked", v.name),
+                callee: String::new(),
+                message: format!(
+                    "Stage::{} is declared but never booked at a non-test call site — \
+                     dead taxonomy skews every per-stage report",
+                    v.name
+                ),
+                hint: "book it with `book_spans`/`span` on the path it describes, or delete it"
+                    .to_string(),
+            });
+        }
+        match &v.snake {
+            None => out.push(Diagnostic {
+                lint: "stage-taxonomy",
+                file: stages.path.clone(),
+                line: v.line,
+                context: format!("{}.booked", v.name),
+                callee: String::new(),
+                message: format!("Stage::{} has no `name()` match arm", v.name),
+                hint: "add the snake_case wire name so traces and trace-check can see it"
+                    .to_string(),
+            }),
+            Some(snake) => {
+                if !ci_required.contains(snake) {
+                    out.push(Diagnostic {
+                        lint: "stage-taxonomy",
+                        file: stages.path.clone(),
+                        line: v.line,
+                        context: format!("{snake}.require"),
+                        callee: String::new(),
+                        message: format!(
+                            "stage `{snake}` is missing from every `trace-check --require` \
+                             list in .github/workflows/ci.yml — the trace smoke would not \
+                             notice it going silent"
+                        ),
+                        hint: "add it to the traced-live-run --require list, or allow-list it \
+                               with the reason CI cannot observe it deterministically"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}

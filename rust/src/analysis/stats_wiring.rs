@@ -1,0 +1,126 @@
+//! Lint `stats-wiring`: every `ShardStats` counter must be wired end to
+//! end — booked/folded in the shard (`fold`), surfaced in the run report
+//! (`report`: `LiveReport` aggregation or the `ssdup live` per-shard
+//! print), and emitted by the snapshot telemetry (`emit`:
+//! `obs/snapshot.rs`). The conservation story (`buffered == flushed +
+//! superseded`) only holds if a new counter cannot be declared and then
+//! silently dropped on one of those paths — that exact drift happened
+//! twice in review during PRs 7–9.
+//!
+//! Context key for the allow-list: `<field>.<check>` (e.g. `pct_sum.report`).
+
+use std::collections::BTreeSet;
+
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::{SourceFile, TokKind};
+
+/// Where each check looks (path suffixes).
+const FOLD_FILES: &[&str] = &["live/shard.rs"];
+const REPORT_FILES: &[&str] = &["live/loadgen.rs", "src/main.rs"];
+const EMIT_FILES: &[&str] = &["obs/snapshot.rs"];
+
+struct Field {
+    name: String,
+    line: u32,
+}
+
+/// Parse `struct ShardStats { … }` field names out of the shard file.
+/// Returns the fields and the token range of the declaration (so field
+/// reads elsewhere in the same file can be told apart from the decl).
+fn shard_stats_fields(f: &SourceFile) -> Option<(Vec<Field>, std::ops::Range<usize>)> {
+    let toks = &f.toks;
+    let start = toks.windows(3).position(|w| {
+        w[0].kind == TokKind::Ident
+            && w[0].text == "struct"
+            && w[1].text == "ShardStats"
+            && w[2].text == "{"
+    })?;
+    let body_depth = toks[start + 2].depth + 1;
+    let mut fields = Vec::new();
+    let mut i = start + 3;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.text == "}" && t.depth < body_depth {
+            break;
+        }
+        // a field is `name :` at body depth, not preceded by a path sep
+        if t.kind == TokKind::Ident
+            && t.depth == body_depth
+            && t.text != "pub"
+            && toks.get(i + 1).is_some_and(|n| n.text == ":")
+            && (i == 0 || toks[i - 1].text != "::")
+        {
+            fields.push(Field { name: t.text.clone(), line: t.line });
+        }
+        i += 1;
+    }
+    Some((fields, start..i))
+}
+
+/// Does `name` occur as a non-test identifier in `f`, outside `skip`?
+fn mentions(f: &SourceFile, name: &str, skip: Option<&std::ops::Range<usize>>) -> bool {
+    f.toks.iter().enumerate().any(|(i, t)| {
+        t.kind == TokKind::Ident
+            && t.text == name
+            && !t.in_test
+            && skip.map_or(true, |r| !r.contains(&i))
+    })
+}
+
+pub fn check(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let Some((shard, (fields, decl_range))) = files
+        .iter()
+        .find(|f| FOLD_FILES.iter().any(|s| f.path.ends_with(s)))
+        .and_then(|f| shard_stats_fields(f).map(|r| (f, r)))
+    else {
+        return Vec::new();
+    };
+
+    let in_set = |f: &&SourceFile, set: &[&str]| set.iter().any(|s| f.path.ends_with(s));
+    let report_files: Vec<&SourceFile> =
+        files.iter().filter(|f| in_set(f, REPORT_FILES)).collect();
+    let emit_files: Vec<&SourceFile> = files.iter().filter(|f| in_set(f, EMIT_FILES)).collect();
+
+    let mut out = Vec::new();
+    let mut seen = BTreeSet::new();
+    for field in &fields {
+        if !seen.insert(field.name.clone()) {
+            continue;
+        }
+        let checks: [(&str, bool, &str); 3] = [
+            (
+                "fold",
+                mentions(shard, &field.name, Some(&decl_range)),
+                "book it on the hot path and sum it in `Shard::stats`",
+            ),
+            (
+                "report",
+                report_files.iter().any(|f| mentions(f, &field.name, None)),
+                "aggregate it on `LiveReport` or print it in the `ssdup live` per-shard line",
+            ),
+            (
+                "emit",
+                emit_files.iter().any(|f| mentions(f, &field.name, None)),
+                "fold it into `Counters::from_stats` and emit it from `Snapshotter::tick`",
+            ),
+        ];
+        for (check, ok, hint) in checks {
+            if !ok {
+                out.push(Diagnostic {
+                    lint: "stats-wiring",
+                    file: shard.path.clone(),
+                    line: field.line,
+                    context: format!("{}.{check}", field.name),
+                    callee: String::new(),
+                    message: format!(
+                        "ShardStats counter `{}` never reaches the {check} path — it would \
+                         accumulate and silently vanish",
+                        field.name
+                    ),
+                    hint: hint.to_string(),
+                });
+            }
+        }
+    }
+    out
+}

@@ -33,7 +33,11 @@
 //!   crates.io;
 //! * [`obs`] — zero-dependency observability for the live engine:
 //!   lock-free tracing (Chrome-trace export), per-stage ack-latency
-//!   attribution, and interval snapshot telemetry.
+//!   attribution, and interval snapshot telemetry;
+//! * [`analysis`] — `ssdup check`, a lexer-based static analyzer that
+//!   enforces the live engine's invariants (lock discipline, stats
+//!   wiring, stage taxonomy, atomic-ordering notes, panic-free fault
+//!   path) over this repository's own sources, run as a blocking CI job.
 //!
 //! Start at [`live`] for the running system, [`server`] for the simulated
 //! I/O node, or [`experiments`] for the paper's tables and figures.
@@ -48,6 +52,7 @@ pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }
 
+pub mod analysis;
 pub mod buffer;
 pub mod detector;
 pub mod experiments;

@@ -350,9 +350,12 @@ impl MemBackend {
     /// Run `op` with the in-flight depth counted around the modeled
     /// service sleep.
     fn timed<R>(&self, bytes: usize, op: impl FnOnce() -> R) -> R {
+        // Relaxed: advisory depth gauge feeding the latency model — an
+        // off-by-one race only nudges a modeled sleep, orders nothing
         let depth = self.inflight.fetch_add(1, Ordering::Relaxed) + 1;
         self.latency.apply(bytes, depth);
         let r = op();
+        // Relaxed: same gauge, decrement side
         self.inflight.fetch_sub(1, Ordering::Relaxed);
         r
     }
@@ -374,6 +377,7 @@ impl Backend for MemBackend {
         // writers overlap their sleeps (a deep device queue), then only
         // touch per-page locks for the memcpy
         self.timed(data.len(), || self.store.write(offset, data));
+        // Relaxed: throughput stats counter, folded after the run
         self.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
         Ok(())
     }
@@ -394,11 +398,13 @@ impl Backend for MemBackend {
                 off += buf.len() as u64;
             }
         });
+        // Relaxed: throughput stats counter, folded after the run
         self.bytes_written.fetch_add(total as u64, Ordering::Relaxed);
         Ok(())
     }
 
     fn bytes_written(&self) -> u64 {
+        // Relaxed: stats read — totals only need to be eventually exact
         self.bytes_written.load(Ordering::Relaxed)
     }
 
@@ -466,6 +472,7 @@ impl Backend for FileBackend {
     fn write_at(&self, offset: u64, data: &[u8]) -> io::Result<()> {
         use std::os::unix::fs::FileExt;
         self.file.write_all_at(data, offset)?;
+        // Relaxed: throughput stats counter, folded after the run
         self.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
         Ok(())
     }
@@ -492,6 +499,7 @@ impl Backend for FileBackend {
         let mut f = &self.file;
         f.seek(SeekFrom::Start(offset))?;
         f.write_all(data)?;
+        // Relaxed: throughput stats counter, folded after the run
         self.bytes_written.fetch_add(data.len() as u64, Ordering::Relaxed);
         Ok(())
     }
@@ -514,6 +522,7 @@ impl Backend for FileBackend {
     }
 
     fn bytes_written(&self) -> u64 {
+        // Relaxed: stats read — totals only need to be eventually exact
         self.bytes_written.load(Ordering::Relaxed)
     }
 
@@ -825,6 +834,8 @@ impl IoQueue {
         let depth_now = st.outstanding as u64;
         st.queue.push_back(Batch { reqs, token: cell });
         drop(st);
+        // Relaxed: queue stats counters (reqs/batches/depth gauges) —
+        // sampled by `stats()` after the fact, synchronize nothing
         sh.reqs.fetch_add(n as u64, Ordering::Relaxed);
         sh.batches.fetch_add(1, Ordering::Relaxed);
         sh.depth_high_water.fetch_max(depth_now, Ordering::Relaxed);
@@ -835,6 +846,8 @@ impl IoQueue {
 
     pub fn stats(&self) -> IoQueueStats {
         let sh = &*self.shared;
+        // Relaxed throughout: point-in-time stats snapshot; the counters
+        // are independent and slight skew between them is acceptable
         IoQueueStats {
             reqs: sh.reqs.load(Ordering::Relaxed),
             batches: sh.batches.load(Ordering::Relaxed),
@@ -880,9 +893,11 @@ impl IoQueue {
                 }
             }
             if retries > 0 {
+                // Relaxed: fault-accounting counters, read by stats()
                 sh.retries.fetch_add(retries as u64, Ordering::Relaxed);
             }
             if faults > 0 {
+                // Relaxed: fault-accounting counter (as above)
                 sh.transient_faults.fetch_add(faults, Ordering::Relaxed);
             }
             let ticket = sh.dev.note_write(n);
@@ -909,6 +924,7 @@ impl IoQueue {
                 j += 1;
             }
             let bufs: Vec<&[u8]> = reqs[i..j].iter().map(|r| r.as_slice()).collect();
+            // Relaxed: coalescing-effectiveness counter, read by stats()
             sh.device_writes.fetch_add(1, Ordering::Relaxed);
             sh.dev.write_vectored_raw(reqs[i].offset, &bufs)?;
             i = j;

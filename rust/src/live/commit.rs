@@ -141,21 +141,25 @@ impl GroupSync {
 
     /// Device syncs issued so far.
     pub fn syncs(&self) -> u64 {
+        // Relaxed: stats counter read, no synchronization implied
         self.syncs.load(Ordering::Relaxed)
     }
 
     /// Barriers requested so far (each a would-be fsync without grouping).
     pub fn barriers(&self) -> u64 {
+        // Relaxed: stats counter read, no synchronization implied
         self.barriers.load(Ordering::Relaxed)
     }
 
     /// Sync re-attempts taken after transient faults.
     pub fn sync_retries(&self) -> u64 {
+        // Relaxed: stats counter read, no synchronization implied
         self.sync_retries.load(Ordering::Relaxed)
     }
 
     /// Transient faults observed during device syncs.
     pub fn sync_transient_faults(&self) -> u64 {
+        // Relaxed: stats counter read, no synchronization implied
         self.sync_transient_faults.load(Ordering::Relaxed)
     }
 
@@ -163,6 +167,8 @@ impl GroupSync {
     /// policy; the `syncs` counter advances once whatever the attempt
     /// count, so the sync-amplification metric stays comparable.
     fn sync_retried(&self) -> io::Result<()> {
+        // Relaxed: sync-amplification counter; durability ordering comes
+        // from the device sync itself, not from these stats
         self.syncs.fetch_add(1, Ordering::Relaxed);
         let (result, retries) = retry_transient(&self.retry, || self.inner.sync());
         let mut faults = u64::from(retries);
@@ -172,9 +178,11 @@ impl GroupSync {
             }
         }
         if retries > 0 {
+            // Relaxed: fault-accounting counter (as above)
             self.sync_retries.fetch_add(u64::from(retries), Ordering::Relaxed);
         }
         if faults > 0 {
+            // Relaxed: fault-accounting counter (as above)
             self.sync_transient_faults.fetch_add(faults, Ordering::Relaxed);
         }
         result
@@ -253,6 +261,8 @@ impl GroupSync {
     }
 
     fn barrier_inner(&self, ticket: Option<u64>) -> io::Result<()> {
+        // Relaxed: stats counter; the barrier's ordering guarantees come
+        // from the ticket watermark + device sync below
         self.barriers.fetch_add(1, Ordering::Relaxed);
         if !self.enabled {
             // ungrouped baseline: the caller pays its own fsync

@@ -420,20 +420,26 @@ impl FaultBackend {
 
     /// Faults injected so far (test/debug visibility).
     pub fn injected_faults(&self) -> u64 {
+        // Relaxed: debug counter read, no synchronization implied
         self.injected.load(Ordering::Relaxed)
     }
 
     /// Device operations seen so far (test/debug visibility).
     pub fn ops_seen(&self) -> u64 {
+        // Relaxed: debug counter read, no synchronization implied
         self.ops.load(Ordering::Relaxed)
     }
 
     fn inject(&self) -> u64 {
+        // Relaxed: injection tally — clause state is under the mutex
         self.injected.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Consult every clause for one device op; `Ok(())` means forward.
     fn gate(&self, op: DevOp, offset: Option<u64>) -> io::Result<()> {
+        // Relaxed: op numbering only orders faults against a single
+        // clause's `at_op` threshold; exactness across threads is not
+        // required (scripts target op counts, not interleavings)
         let op_index = self.ops.fetch_add(1, Ordering::Relaxed);
         for (i, c) in self.clauses.iter().enumerate() {
             if op_index < c.at_op || !c.applies(op, offset) {

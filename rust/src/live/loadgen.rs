@@ -318,6 +318,8 @@ pub fn run_reported(
             let chunk = interval.max(Duration::from_millis(1)).min(Duration::from_millis(10));
             loop {
                 let mut slept = Duration::ZERO;
+                // Acquire: pairs with the Release store below so the
+                // snapshotter sees the run's final stats before exiting
                 while slept < interval && !stop.load(Ordering::Acquire) {
                     std::thread::sleep(chunk);
                     slept += chunk;
@@ -330,12 +332,15 @@ pub fn run_reported(
                 let line = snapper.tick(counters, t0.elapsed());
                 let _ = writeln!(out, "{line}");
                 // the last line is always a fresh end-of-run snapshot
+                // (Acquire: same pairing as the loop condition above)
                 if stop.load(Ordering::Acquire) {
                     break;
                 }
             }
         });
         let report = run_inner(engine, workload, clients, versioned);
+        // Release: publishes the finished run's stats to the snapshotter
+        // thread's Acquire loads before it takes the final snapshot
         stop.store(true, Ordering::Release);
         report
     })

@@ -250,6 +250,46 @@
 //!   --stats-interval MS` emits one JSON line per interval (throughput,
 //!   writes/sync, blocked waits, flusher duty cycle, SSD occupancy) from
 //!   a sampler thread that only reads counters.
+//!
+//! # Invariants
+//!
+//! The rules this module's design hangs on, stated once. Each is
+//! machine-checked by `ssdup check` ([`crate::analysis`], a blocking CI
+//! job), so violating one is a lint error before it is a review comment:
+//!
+//! 1. **No device I/O under the core lock** (`lock-io`). A shard's core
+//!    mutex orders bookkeeping, never device service time: ingest is
+//!    reserve → *unlock* → enqueue/wait → relock → publish, and the
+//!    flusher snapshots its copy set under the lock but copies outside
+//!    it. The deliberate exceptions — the first-touch superblock write
+//!    and the `degrade` transition, where the flip must be atomic with
+//!    the failure observation — are enumerated in
+//!    `rust/src/analysis/allow.toml` with their reasons.
+//! 2. **Acknowledged ⇒ durable** (the durability contract above), with
+//!    its bookkeeping corollary **conservation**: per shard,
+//!    `ssd_bytes_buffered == flushed_bytes + superseded_bytes` after a
+//!    drain. Checked dynamically by the integration/property suites; the
+//!    static side is rule 3.
+//! 3. **Every `ShardStats` counter is wired end to end**
+//!    (`stats-wiring`): booked on the hot path, folded in
+//!    `Shard::stats`, surfaced in the run report, and emitted by the
+//!    snapshotter — a counter that silently vanishes on one path is how
+//!    conservation drifted twice during review in PRs 7–9.
+//! 4. **Every stage is booked and smoke-required** (`stage-taxonomy`):
+//!    a [`crate::obs::Stage`] variant must have a live call site and
+//!    appear in CI's `trace-check --require` list, so a stage going
+//!    silent fails the build instead of skewing attribution.
+//! 5. **Atomics state their ordering contract** (`atomic-ordering`):
+//!    every non-test `Ordering::` use carries an adjacent comment naming
+//!    the pairing (or why none is needed). `SeqCst` is held to the same
+//!    bar — in this engine it is almost always a missing justification,
+//!    not a stronger guarantee.
+//! 6. **The fault path degrades, never dies** (`panic-free`):
+//!    `unwrap`/`expect`/`panic!` are banned in [`fault`], [`backend`]
+//!    and [`shard`] outside tests — a panic under the ack poisons the
+//!    core mutex and turns one transient EIO into a wedged shard.
+//!    Poison-propagating `.lock()/.wait*()` unwraps are exempt; the few
+//!    real invariant assertions live in allow.toml, each with its why.
 
 pub mod backend;
 pub mod commit;

@@ -545,6 +545,8 @@ struct DirectGate<'a> {
 
 impl Drop for DirectGate<'_> {
     fn drop(&mut self) {
+        // Release: pairs with the flusher gate's Acquire load, so a
+        // gate that sees zero also sees the completed direct write
         if self.shard.direct_inflight.fetch_sub(1, Ordering::Release) == 1 {
             // direct traffic ebbed: the traffic-aware gate may open
             self.shard.work.notify_all();
@@ -1085,7 +1087,8 @@ impl Shard {
                         // the route, so the flusher's gate sees the direct
                         // traffic the moment it exists; the RAII gate
                         // restores the counter on every exit path, a
-                        // failed write's unwind included
+                        // failed write's unwind included. Release pairs
+                        // with the gate's Acquire load in `gate_run`.
                         self.direct_inflight.fetch_add(1, Ordering::Release);
                         let gate = DirectGate { shard: self };
                         let ticket = core.own.claim_direct(lba, size);
@@ -1400,6 +1403,7 @@ impl Shard {
             self.hdd.read_at(lba as u64 * SECTOR_BYTES, buf)
         });
         if retries > 0 {
+            // Relaxed: stats counter, folded into ShardStats by stats()
             self.read_retries.fetch_add(retries as u64, Ordering::Relaxed);
         }
         result.map_err(|e| ReadError::Device(format!("hdd backend read: {e}")))
@@ -1458,7 +1462,8 @@ impl Shard {
                     // pinned while still holding the core lock: the
                     // flusher checks pins under the same lock after
                     // emptying the region's map entries, so a pin taken
-                    // here is never missed
+                    // here is never missed. Release pairs with the
+                    // flusher's Acquire load in its settle wait.
                     self.read_pins[r].fetch_add(1, Ordering::Release);
                 }
             }
@@ -1482,6 +1487,7 @@ impl Shard {
                 }
             };
             if retries > 0 {
+                // Relaxed: stats counter, folded into ShardStats
                 self.read_retries.fetch_add(retries as u64, Ordering::Relaxed);
             }
             result = r;
@@ -1491,6 +1497,7 @@ impl Shard {
         }
         // unpin before surfacing any error: a flusher waiting out our
         // pins must not hang on a reader that is about to error out
+        // (Release: the flusher's Acquire sees our finished transfers)
         for (r, p) in pinned.iter().enumerate() {
             if *p && self.read_pins[r].fetch_sub(1, Ordering::Release) == 1 {
                 self.work.notify_all();
@@ -1519,6 +1526,7 @@ impl Shard {
         stats.io_mean_depth = q.mean_depth();
         // fault absorption, folded from every retrying layer: the queue
         // workers, the group-commit syncs, and the inline read paths
+        // (Relaxed: stats read, no synchronization implied)
         let read_retries = self.read_retries.load(Ordering::Relaxed);
         stats.io_retries =
             q.retries + self.ssd.sync_retries() + self.hdd.sync_retries() + read_retries;
@@ -1703,6 +1711,7 @@ impl Shard {
                         self.ssd.read_at(ssd_byte, &mut buf[pos..pos + len])
                     });
                     if retries > 0 {
+                        // Relaxed: stats counter, folded into ShardStats
                         self.read_retries.fetch_add(retries as u64, Ordering::Relaxed);
                     }
                     read = r;
@@ -1797,6 +1806,8 @@ impl Shard {
                 // with the map holding nothing for this region, no *new*
                 // reader can resolve into its log; wait out the readers
                 // that already did before the slots are recycled
+                // (Acquire: pairs with the readers' Release unpin, so a
+                // zero count means their transfers are fully done)
                 while self.read_pins[region].load(Ordering::Acquire) > 0 {
                     if core.shutdown || core.failed.is_some() {
                         return;
@@ -1856,6 +1867,9 @@ impl Shard {
                 return false;
             }
             let pct = core.policy.current_percentage().unwrap_or(1.0);
+            // Acquire: pairs with the direct writers' Release increments
+            // and the gate's Release decrement, so "no direct traffic"
+            // here means those writes have fully landed
             let direct = self.direct_inflight.load(Ordering::Acquire) > 0;
             if self.strategy.allow_flush(pct, direct, core.drained) {
                 break;

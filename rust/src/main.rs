@@ -6,6 +6,7 @@
 //!   run            run one simulation (system/pattern/procs flags)
 //!   live           run the real-time sharded engine on a live workload
 //!   trace-check    validate a --trace export (CI smoke: stages present?)
+//!   check          run the project-invariant static analyzer (blocking in CI)
 //!   runtime-info   verify artifacts + PJRT round-trip
 //!   version        print version
 
@@ -23,11 +24,18 @@ const VALUE_OPTS: &[&str] = &[
     "scale", "seed", "json", "system", "pattern", "procs", "size-mib", "req-kb", "ssd-mib",
     "queue", "shards", "backend", "clients", "dir", "crash-at", "group-commit-window",
     "trace", "stats-interval", "require", "io-workers", "io-depth", "fault-spec",
-    "flush-concurrency", "hot-defer-window",
+    "flush-concurrency", "hot-defer-window", "root",
 ];
 
 fn main() {
-    let args = match Args::from_env(VALUE_OPTS) {
+    // under `check`, --json is a boolean switch (machine-readable
+    // diagnostics), not `exp`'s `--json out.json` value option
+    let value_opts: Vec<&str> = if std::env::args().nth(1).as_deref() == Some("check") {
+        VALUE_OPTS.iter().copied().filter(|o| *o != "json").collect()
+    } else {
+        VALUE_OPTS.to_vec()
+    };
+    let args = match Args::parse(std::env::args().skip(1), &value_opts) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -45,6 +53,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("live") => cmd_live(&args),
         Some("trace-check") => cmd_trace_check(&args),
+        Some("check") => cmd_check(&args),
         Some("runtime-info") => cmd_runtime_info(),
         Some("version") => {
             println!("ssdup {}", ssdup::version());
@@ -52,7 +61,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: ssdup <exp|list|run|live|trace-check|runtime-info|version> [flags]\n\
+                "usage: ssdup <exp|list|run|live|trace-check|check|runtime-info|version> [flags]\n\
                  \n\
                  ssdup exp all [--scale 8] [--seed N] [--json out.json]\n\
                  ssdup exp fig11 --scale 4\n\
@@ -75,7 +84,8 @@ fn main() {
                  \x20          [--recover]      reopen --dir images, replay the log, drain\n\
                  \x20          [--fault-spec S] scripted fault injection, e.g.\n\
                  \x20                           ssd:eio:p=0.01:transient=3,hdd:dead@op=5000\n\
-                 ssdup trace-check OUT.json [--require submit,route,...]  validate a trace export\n"
+                 ssdup trace-check OUT.json [--require submit,route,...]  validate a trace export\n\
+                 ssdup check [--json] [--fix-hints] [--root DIR]  run the project-invariant lints\n"
             );
             2
         }
@@ -470,6 +480,17 @@ fn cmd_live(args: &Args) -> i32 {
             s.io_retries,
             if s.degraded { " | DEGRADED (direct-to-HDD)" } else { "" },
         );
+        println!(
+            "           flush sched: {} runs | queued {} MiB | superseded-at-flush {} MiB | \
+             {} hot defers | {} biased streams | {} token waits ({:.2}s)",
+            s.flush_runs,
+            s.queued_for_flush_bytes / (1 << 20),
+            s.superseded_at_flush_bytes / (1 << 20),
+            s.hot_defers,
+            s.biased_streams,
+            s.flush_token_waits,
+            s.flush_token_wait_us as f64 / 1e6,
+        );
     }
     println!("\nper-stage ack latency:\n{}", report.stage_summary());
 
@@ -618,6 +639,44 @@ fn cmd_trace_check(args: &Args) -> i32 {
         println!("trace-check: OK ({} required stages present)", required.len());
     }
     code
+}
+
+/// `ssdup check` — run the project-invariant static analyzer over the
+/// repository's own sources (see `ssdup::analysis`). Exit 0 when clean,
+/// 1 when diagnostics fire, 2 when the tree cannot be scanned at all.
+fn cmd_check(args: &Args) -> i32 {
+    let root = std::path::PathBuf::from(args.get_or("root", "."));
+    let outcome = match ssdup::analysis::run_check(&root) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    if args.has("json") {
+        let diags: Vec<Json> = outcome.diags.iter().map(|d| d.to_json()).collect();
+        let out = Json::obj(vec![
+            ("files_scanned", Json::from(outcome.files_scanned)),
+            ("diagnostics", Json::Arr(diags)),
+            ("ok", Json::from(outcome.diags.is_empty())),
+        ]);
+        println!("{out}");
+    } else {
+        let fix_hints = args.has("fix-hints");
+        for d in &outcome.diags {
+            println!("{}", d.render(fix_hints));
+        }
+        if outcome.diags.is_empty() {
+            println!("check: OK ({} files scanned)", outcome.files_scanned);
+        } else {
+            eprintln!(
+                "check: {} diagnostic(s) in {} files scanned",
+                outcome.diags.len(),
+                outcome.files_scanned
+            );
+        }
+    }
+    if outcome.diags.is_empty() { 0 } else { 1 }
 }
 
 #[cfg(feature = "pjrt")]

@@ -36,6 +36,14 @@ pub struct Counters {
     pub queued_for_flush_bytes: u64,
     pub superseded_at_flush_bytes: u64,
     pub hot_defers: u64,
+    pub hdd_direct_bytes: u64,
+    pub rerouted_writes: u64,
+    pub streams: u64,
+    pub biased_streams: u64,
+    pub io_reqs: u64,
+    pub io_device_writes: u64,
+    pub flush_token_waits: u64,
+    pub flush_token_wait_us: u64,
     /// gauge, not a counter: shards holding a flush token right now.
     /// `from_stats` cannot see the coordinator, so the sampler fills
     /// this in (stays 0 when uncoordinated)
@@ -65,6 +73,14 @@ impl Counters {
             c.queued_for_flush_bytes += s.queued_for_flush_bytes;
             c.superseded_at_flush_bytes += s.superseded_at_flush_bytes;
             c.hot_defers += s.hot_defers;
+            c.hdd_direct_bytes += s.hdd_direct_bytes;
+            c.rerouted_writes += s.rerouted_writes;
+            c.streams += s.streams;
+            c.biased_streams += s.biased_streams;
+            c.io_reqs += s.io_reqs;
+            c.io_device_writes += s.io_device_writes;
+            c.flush_token_waits += s.flush_token_waits;
+            c.flush_token_wait_us += s.flush_token_wait_us;
         }
         c
     }
@@ -156,6 +172,39 @@ impl Snapshotter {
                 )),
             ),
             ("hot_defers".to_string(), Json::Num(d(cur.hot_defers, self.prev.hot_defers) as f64)),
+            // route split this interval: bytes that bypassed the SSD
+            // buffer for the HDD, and writes the valve sent back around
+            (
+                "hdd_direct_bytes".to_string(),
+                Json::Num(d(cur.hdd_direct_bytes, self.prev.hdd_direct_bytes) as f64),
+            ),
+            (
+                "rerouted_writes".to_string(),
+                Json::Num(d(cur.rerouted_writes, self.prev.rerouted_writes) as f64),
+            ),
+            // detector activity: streams classified, and how many the
+            // hot/cold segregation biased to the cold log
+            ("streams".to_string(), Json::Num(d(cur.streams, self.prev.streams) as f64)),
+            (
+                "biased_streams".to_string(),
+                Json::Num(d(cur.biased_streams, self.prev.biased_streams) as f64),
+            ),
+            // submission-queue effectiveness: requests enqueued vs the
+            // coalesced device commands that served them
+            ("io_reqs".to_string(), Json::Num(d(cur.io_reqs, self.prev.io_reqs) as f64)),
+            (
+                "io_device_writes".to_string(),
+                Json::Num(d(cur.io_device_writes, self.prev.io_device_writes) as f64),
+            ),
+            // array-level flush staggering felt by this engine's shards
+            (
+                "flush_token_waits".to_string(),
+                Json::Num(d(cur.flush_token_waits, self.prev.flush_token_waits) as f64),
+            ),
+            (
+                "flush_token_wait_ms".to_string(),
+                Json::Num(d(cur.flush_token_wait_us, self.prev.flush_token_wait_us) as f64 / 1e3),
+            ),
             // gauge: how many shards hold a flush token right now — the
             // live view of coordinator staggering
             ("flush_token_holders".to_string(), Json::Num(cur.flush_token_holders as f64)),
@@ -273,17 +322,33 @@ mod tests {
         a.degraded = true;
         a.queued_for_flush_bytes = 80;
         a.superseded_at_flush_bytes = 20;
+        a.hdd_direct_bytes = 64;
+        a.io_reqs = 12;
+        a.io_device_writes = 3;
         let mut b = ShardStats::default();
         b.bytes_in = 50;
         b.flush_pause_us = 3;
         b.transient_faults = 2;
         b.queued_for_flush_bytes = 40;
         b.hot_defers = 5;
+        b.streams = 6;
+        b.biased_streams = 2;
+        b.rerouted_writes = 1;
+        b.flush_token_waits = 4;
+        b.flush_token_wait_us = 900;
         let c = Counters::from_stats(&[a, b], 9);
         assert_eq!(c.bytes_in, 150);
         assert_eq!(c.queued_for_flush_bytes, 120);
         assert_eq!(c.superseded_at_flush_bytes, 20);
         assert_eq!(c.hot_defers, 5);
+        assert_eq!(c.hdd_direct_bytes, 64);
+        assert_eq!(c.io_reqs, 12);
+        assert_eq!(c.io_device_writes, 3);
+        assert_eq!(c.streams, 6);
+        assert_eq!(c.biased_streams, 2);
+        assert_eq!(c.rerouted_writes, 1);
+        assert_eq!(c.flush_token_waits, 4);
+        assert_eq!(c.flush_token_wait_us, 900);
         assert_eq!(c.flush_token_holders, 0, "the sampler fills the gauge in");
         assert_eq!(c.flush_run_us, 7);
         assert_eq!(c.flush_pause_us, 3);

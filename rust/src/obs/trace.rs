@@ -88,6 +88,9 @@ impl Ring {
     /// Producer side: push or drop. Returns false when the ring was full
     /// (the caller counts the drop); never blocks.
     fn push(&self, ev: TraceEvent) -> bool {
+        // Relaxed head: this thread is the only producer, so it reads
+        // its own last store. Acquire tail: pairs with the consumer's
+        // Release in `drain_into` — a freed slot was fully copied out.
         let head = self.head.load(Ordering::Relaxed);
         let tail = self.tail.load(Ordering::Acquire);
         if head - tail >= self.slots.len() as u64 {
@@ -104,6 +107,9 @@ impl Ring {
 
     /// Consumer side: copy out everything published since the last drain.
     fn drain_into(&self, out: &mut Vec<TraceEvent>) {
+        // Acquire head: pairs with the producer's Release publish, so
+        // every slot below it holds a complete event. Relaxed tail: the
+        // single consumer reads its own last store.
         let head = self.head.load(Ordering::Acquire);
         let mut tail = self.tail.load(Ordering::Relaxed);
         while tail < head {
@@ -114,6 +120,8 @@ impl Ring {
             out.push(unsafe { *self.slots[idx].get() });
             tail += 1;
         }
+        // Release: hands the drained slots back to the producer — its
+        // Acquire tail load must see our copies as complete
         self.tail.store(tail, Ordering::Release);
     }
 }
@@ -149,6 +157,7 @@ impl TraceCollector {
     /// until [`TraceCollector::set_enabled`] turns them on.
     pub fn new(ring_events: usize) -> Self {
         Self {
+            // Relaxed: unique-id allocation needs atomicity, not ordering
             id: NEXT_COLLECTOR_ID.fetch_add(1, Ordering::Relaxed),
             enabled: AtomicBool::new(false),
             epoch: Instant::now(),
@@ -159,12 +168,15 @@ impl TraceCollector {
     }
 
     pub fn set_enabled(&self, on: bool) {
+        // Relaxed: advisory flag — a span booked around the flip may be
+        // kept or skipped either way, which is fine for tracing
         self.enabled.store(on, Ordering::Relaxed);
     }
 
     /// The one branch a disabled collector costs on the hot path.
     #[inline]
     pub fn is_enabled(&self) -> bool {
+        // Relaxed: advisory flag read (see set_enabled)
         self.enabled.load(Ordering::Relaxed)
     }
 
@@ -199,6 +211,7 @@ impl TraceCollector {
                 }
             };
             if !ring.push(TraceEvent { tid: ring.tid, ..ev }) {
+                // Relaxed: overflow tally, surfaced once per snapshot
                 self.dropped.fetch_add(1, Ordering::Relaxed);
             }
         });
@@ -213,6 +226,7 @@ impl TraceCollector {
 
     /// Events dropped to ring overflow since construction.
     pub fn dropped_events(&self) -> u64 {
+        // Relaxed: stats read, no synchronization implied
         self.dropped.load(Ordering::Relaxed)
     }
 

@@ -1,0 +1,171 @@
+//! Self-test for `ssdup check` (`ssdup::analysis`): five known-bad
+//! fixtures — one per lint — each pinned to its expected diagnostic
+//! (file, line, context, callee), plus the meta-assertion that the real
+//! tree is clean. The fixtures are the lint's contract: if a refactor
+//! of the analyzer stops flagging one of these, this test is the tripwire.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use ssdup::analysis::diag::Diagnostic;
+use ssdup::analysis::lexer::lex_source;
+use ssdup::analysis::{atomics, lock_io, panic_free, stages_lint, stats_wiring};
+
+/// (lint, line, context, callee) projection for compact assertions.
+fn keys(diags: &[Diagnostic]) -> Vec<(String, u32, String, String)> {
+    diags
+        .iter()
+        .map(|d| (d.lint.to_string(), d.line, d.context.clone(), d.callee.clone()))
+        .collect()
+}
+
+#[test]
+fn lock_io_flags_device_write_under_a_live_core_guard() {
+    let src = "impl Shard {\n\
+               \x20   fn submit_locked(&self, buf: &[u8]) -> io::Result<()> {\n\
+               \x20       let core = self.core.lock().unwrap();\n\
+               \x20       self.backend.write_at(0, buf)?;\n\
+               \x20       drop(core);\n\
+               \x20       Ok(())\n\
+               \x20   }\n\
+               }\n";
+    let files = vec![lex_source("selftest/live/shard.rs", src)];
+    let diags = lock_io::check(&files);
+    assert_eq!(
+        keys(&diags),
+        vec![(
+            "lock-io".to_string(),
+            4,
+            "submit_locked".to_string(),
+            "write_at".to_string()
+        )],
+        "exactly the guarded write_at on line 4: {diags:?}"
+    );
+    assert!(diags[0].message.contains("core lock"), "message names the invariant");
+}
+
+#[test]
+fn lock_io_stays_quiet_once_the_guard_is_dropped() {
+    let src = "impl Shard {\n\
+               \x20   fn submit_unlocked(&self, buf: &[u8]) -> io::Result<()> {\n\
+               \x20       let core = self.core.lock().unwrap();\n\
+               \x20       drop(core);\n\
+               \x20       self.backend.write_at(0, buf)\n\
+               \x20   }\n\
+               }\n";
+    let files = vec![lex_source("selftest/live/shard.rs", src)];
+    let diags = lock_io::check(&files);
+    assert!(diags.is_empty(), "dropped guard means no diagnostic: {diags:?}");
+}
+
+#[test]
+fn stats_wiring_flags_a_counter_missing_from_every_path() {
+    let src = "pub struct ShardStats {\n\
+               \x20   pub orphan_counter: u64,\n\
+               }\n";
+    let files = vec![lex_source("selftest/live/shard.rs", src)];
+    let diags = stats_wiring::check(&files);
+    let expect: Vec<(String, u32, String, String)> = ["fold", "report", "emit"]
+        .iter()
+        .map(|c| {
+            ("stats-wiring".to_string(), 2, format!("orphan_counter.{c}"), String::new())
+        })
+        .collect();
+    assert_eq!(keys(&diags), expect, "one diagnostic per unwired path: {diags:?}");
+}
+
+#[test]
+fn stage_taxonomy_flags_unbooked_and_unrequired_variants() {
+    let stages = "pub enum Stage {\n\
+                  \x20   Submit = 0,\n\
+                  \x20   Orphan = 1,\n\
+                  }\n\
+                  impl Stage {\n\
+                  \x20   pub fn name(self) -> &'static str {\n\
+                  \x20       match self {\n\
+                  \x20           Stage::Submit => \"submit\",\n\
+                  \x20           Stage::Orphan => \"orphan\",\n\
+                  \x20       }\n\
+                  \x20   }\n\
+                  }\n";
+    let booking = "fn ingest() {\n\
+                   \x20   book(Stage::Submit);\n\
+                   }\n";
+    let files = vec![
+        lex_source("selftest/obs/stages.rs", stages),
+        lex_source("selftest/live/book.rs", booking),
+    ];
+    let required: BTreeSet<String> = ["submit".to_string()].into_iter().collect();
+    let diags = stages_lint::check(&files, &required);
+    assert_eq!(
+        keys(&diags),
+        vec![
+            ("stage-taxonomy".to_string(), 3, "Orphan.booked".to_string(), String::new()),
+            ("stage-taxonomy".to_string(), 3, "orphan.require".to_string(), String::new()),
+        ],
+        "Submit is booked and required; Orphan is neither: {diags:?}"
+    );
+}
+
+#[test]
+fn atomic_ordering_requires_an_adjacent_justification_comment() {
+    let src = "fn bump(x: &AtomicU64) {\n\
+               \x20   x.fetch_add(1, Ordering::Relaxed);\n\
+               }\n\
+               fn bump_noted(x: &AtomicU64) {\n\
+               \x20   // Relaxed: stats counter, no synchronization implied\n\
+               \x20   x.fetch_add(1, Ordering::Relaxed);\n\
+               }\n";
+    let files = vec![lex_source("selftest/live/counters.rs", src)];
+    let diags = atomics::check(&files);
+    assert_eq!(
+        keys(&diags),
+        vec![(
+            "atomic-ordering".to_string(),
+            2,
+            "bump".to_string(),
+            "Ordering::Relaxed".to_string()
+        )],
+        "only the uncommented use fires; the noted one is covered: {diags:?}"
+    );
+}
+
+#[test]
+fn panic_free_bans_unwrap_but_exempts_poison_propagation() {
+    let src = "fn classify(e: Option<u32>) -> u32 {\n\
+               \x20   let m = std::sync::Mutex::new(0);\n\
+               \x20   let _g = m.lock().unwrap();\n\
+               \x20   e.unwrap()\n\
+               }\n";
+    let files = vec![lex_source("selftest/live/fault.rs", src)];
+    let diags = panic_free::check(&files);
+    assert_eq!(
+        keys(&diags),
+        vec![("panic-free".to_string(), 4, "classify".to_string(), "unwrap".to_string())],
+        "lock().unwrap() is poison propagation; e.unwrap() is the violation: {diags:?}"
+    );
+}
+
+/// The real tree must be clean: every deliberate exception is either
+/// fixed or documented in allow.toml, and no allow entry is stale.
+/// This is the same invocation CI blocks on (`ssdup check`).
+#[test]
+fn the_checked_in_tree_passes_its_own_analyzer() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let outcome = ssdup::analysis::run_check(root).expect("tree is scannable");
+    assert!(
+        outcome.diags.is_empty(),
+        "ssdup check must be clean on the checked-in tree:\n{}",
+        outcome
+            .diags
+            .iter()
+            .map(|d| d.render(true))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        outcome.files_scanned > 50,
+        "the scan saw the whole tree ({} files)",
+        outcome.files_scanned
+    );
+}
